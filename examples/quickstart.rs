@@ -1,0 +1,99 @@
+//! Quickstart: the full fusebla pipeline on the BiCGK sequence.
+//!
+//! 1. compile a script against the elementary-function library;
+//! 2. let the fusion compiler search the optimization space;
+//! 3. inspect the generated (pseudo-CUDA) fused kernel;
+//! 4. compare fused vs unfused on the GTX 480 model;
+//! 5. execute the corresponding AOT Pallas artifact through PJRT and
+//!    verify against the reference oracle.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts` for step 5; steps 1–4 work without)
+
+use fusebla::autotune;
+use fusebla::bench_support::eval_size;
+use fusebla::codegen::cuda::emit_seq;
+use fusebla::coordinator::{synth_inputs, Context, Coordinator, PlanChoice};
+use fusebla::fusion::ImplAxes;
+use fusebla::graph::DepGraph;
+use fusebla::script::compile_script;
+use fusebla::sequences;
+use fusebla::sim::simulate_seq;
+use std::path::Path;
+use std::sync::Arc;
+
+const SCRIPT: &str = "
+    # BiCGK: q = A p ; s = A' r   (paper Listing 1)
+    matrix<MxN> A;
+    vector<N> p, s;
+    vector<M> q, r;
+    input A, p, r;
+    q = sgemv(A, p);
+    s = sgemtv(A, r);
+    return q, s;
+";
+
+fn main() {
+    // --- 1. compile the script -------------------------------------------
+    let ctx = Context::new();
+    let prog = compile_script("bicgk", SCRIPT, &ctx.lib).expect("script compiles");
+    let graph = DepGraph::build(&prog, &ctx.lib);
+    println!(
+        "script 'bicgk': {} calls, {} inputs, {} outputs",
+        prog.calls.len(),
+        prog.inputs.len(),
+        prog.outputs.len()
+    );
+
+    // --- 2. search the optimization space ---------------------------------
+    let seq = sequences::by_name("bicgk").unwrap();
+    let p = eval_size(&seq);
+    let report = autotune::search(
+        &prog, &ctx.lib, &graph, &ctx.dev, &ctx.db, &ImplAxes::default(), p,
+    );
+    println!(
+        "optimization space: {} implementations; best found at rank {}",
+        report.impl_count, report.best_rank
+    );
+
+    // --- 3. show the generated kernel --------------------------------------
+    println!("\n--- generated kernel (pseudo-CUDA, cf. paper Appendix A) ---");
+    println!("{}", emit_seq(&report.best));
+
+    // --- 4. fused vs CUBLAS on the GTX 480 model ---------------------------
+    let flops = seq.flops.eval(p);
+    let ours = simulate_seq(&ctx.dev, &report.best, p, flops);
+    let cublas_prog = seq.cublas_program(&ctx.lib);
+    let baseline = autotune::baseline_plan(&cublas_prog, &ctx.lib);
+    let base = simulate_seq(&ctx.dev, &baseline, p, flops);
+    println!(
+        "GTX480 model @ {}x{}: fused {:.1} GFlops vs CUBLAS {:.1} GFlops -> {:.2}x (paper: 1.61x)",
+        p.m,
+        p.n,
+        ours.gflops,
+        base.gflops,
+        ours.gflops / base.gflops
+    );
+
+    // --- 5. run the real AOT artifact through PJRT -------------------------
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("\n(artifacts/ not built — run `make artifacts` for the PJRT step)");
+        return;
+    }
+    let mut coord = Coordinator::new(Arc::new(Context::new()), dir).expect("coordinator");
+    let (m, n) = (256, 256);
+    let inputs = synth_inputs(coord.runtime(), "bicgk", "fused", m, n, 42);
+    let (res, err) = coord
+        .run_checked("bicgk", PlanChoice::Fused, m, n, &inputs)
+        .expect("run");
+    println!(
+        "\nPJRT execution ({}): {} stage(s), {:.3} ms, max abs error vs oracle {:.2e}",
+        coord.runtime().platform(),
+        res.stages.len(),
+        res.seconds * 1e3,
+        err
+    );
+    assert!(err < 1e-3, "verification failed");
+    println!("quickstart OK");
+}

@@ -1,0 +1,85 @@
+"""AOT lowering: every catalog entry -> HLO text + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once by `make artifacts`; Python never runs on the request path.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry) -> str:
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in entry["ins"]]
+    lowered = jax.jit(entry["fn"]).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def spec_str(name, shape):
+    dims = ",".join(str(d) for d in shape)
+    return f"{name}:f32[{dims}]"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--blas2-sizes", default="")
+    ap.add_argument("--blas1-sizes", default="")
+    ap.add_argument("--only", default="", help="comma-separated sequence filter")
+    args = ap.parse_args()
+
+    blas2 = [int(s) for s in args.blas2_sizes.split(",") if s] or None
+    blas1 = [int(s) for s in args.blas1_sizes.split(",") if s] or None
+    only = {s for s in args.only.split(",") if s}
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = model.catalog(blas2, blas1)
+    if only:
+        entries = [e for e in entries if e["seq"] in only]
+
+    manifest_lines = ["# fusebla artifact manifest v1"]
+    for e in entries:
+        hlo = lower_entry(e)
+        fname = f"{e['key']}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(hlo)
+        manifest_lines.append(f"artifact {e['key']}")
+        manifest_lines.append(f"  file {fname}")
+        manifest_lines.append(f"  seq {e['seq']}")
+        manifest_lines.append(f"  variant {e['variant']}")
+        manifest_lines.append(f"  stage {e['stage']}")
+        for nm, shape in e["ins"]:
+            manifest_lines.append(f"  in {spec_str(nm, shape)}")
+        for nm, shape in e["outs"]:
+            manifest_lines.append(f"  out {spec_str(nm, shape)}")
+        manifest_lines.append(f"  m {e['m']}")
+        manifest_lines.append(f"  n {e['n']}")
+        manifest_lines.append("end")
+        print(f"lowered {e['key']} ({len(hlo)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(entries)} artifacts to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,479 @@
+"""L1: Pallas kernels for the BLAS elementary functions and their fusions.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernels tile matrices into 32x32 shared-memory tiles per threadblock.  On
+the TPU-shaped Pallas model the analogue is a *row strip per grid step*
+held in VMEM via BlockSpec, with cross-step accumulation for the
+transposed products (the sequential-grid semantics Pallas guarantees on
+TPU and in interpret mode).  ROW_TILE=32 keeps the paper's granularity;
+VMEM per step is ROW_TILE*N*4 B, far below a real TPU's ~16 MiB VMEM for
+every size in the catalog (the 48 KiB shared-memory budget of the GTX 480
+is what forced the 32x32 tiles; VMEM relaxes it to strips).
+
+Every kernel is built with interpret=True: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).  Correctness is asserted against the
+pure-jnp oracles in ref.py by the pytest/hypothesis suite.
+
+Each fused kernel corresponds to one generated kernel of the Rust fusion
+compiler; each unfused/elementary kernel is one CUBLAS-baseline kernel
+launch.  One pallas_call == one CUDA kernel == one AOT HLO executable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 32  # the paper's element granularity (sub-vector / tile edge)
+
+# Vector ops process this many elements per grid step (the analogue of
+# instances-per-block packing for BLAS-1 kernels).
+VEC_BLOCK = 1024
+
+
+def _vec_grid(n, block=VEC_BLOCK):
+    assert n % ROW_TILE == 0, f"n={n} not padded to {ROW_TILE}"
+    # largest power-of-two multiple of ROW_TILE that divides n, capped
+    b = ROW_TILE
+    while b * 2 <= min(block, n) and n % (b * 2) == 0:
+        b *= 2
+    return n // b, b
+
+
+# --------------------------------------------------------------------------
+# BLAS-1 elementary kernels (depth 1)
+# --------------------------------------------------------------------------
+
+
+def scopy(x):
+    """y <- x."""
+    g, b = _vec_grid(x.shape[0])
+
+    def kernel(x_ref, y_ref):
+        y_ref[...] = x_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def sscal(x, alpha):
+    """y <- alpha * x  (out-of-place SSCAL)."""
+    g, b = _vec_grid(x.shape[0])
+
+    def kernel(x_ref, y_ref, *, alpha):
+        y_ref[...] = alpha * x_ref[...]
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def saxpy(x, y, alpha):
+    """z <- alpha*x + y (out-of-place SAXPY)."""
+    g, b = _vec_grid(x.shape[0])
+
+    def kernel(x_ref, y_ref, z_ref, *, alpha):
+        z_ref[...] = alpha * x_ref[...] + y_ref[...]
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def waxpby(x, y, alpha, beta):
+    """w <- alpha*x + beta*y (WAXPBY; with alpha=1, beta=-a it is
+    AXPYDOT's first stage)."""
+    g, b = _vec_grid(x.shape[0])
+
+    def kernel(x_ref, y_ref, w_ref, *, alpha, beta):
+        w_ref[...] = alpha * x_ref[...] + beta * y_ref[...]
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha, beta=beta),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def vadd3(w, y, z):
+    """x <- w + y + z (the paper's VADD) as ONE fused kernel."""
+    g, b = _vec_grid(w.shape[0])
+
+    def kernel(w_ref, y_ref, z_ref, x_ref):
+        x_ref[...] = w_ref[...] + y_ref[...] + z_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))] * 3,
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=True,
+    )(w, y, z)
+
+
+def sdot(x, y):
+    """r <- x^T y. Partial sums accumulate across sequential grid steps
+    (the paper's per-block partial reduction + atomicAdd, §3.2.2)."""
+    g, b = _vec_grid(x.shape[0])
+
+    def kernel(x_ref, y_ref, r_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            r_ref[...] = jnp.zeros_like(r_ref)
+
+        r_ref[...] += jnp.sum(x_ref[...] * y_ref[...])[None]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def axpydot_fused(w, v, u, alpha):
+    """AXPYDOT fused: z = w - alpha*v and r = z^T u in ONE kernel —
+    z stays on-chip (registers in the paper's generated code)."""
+    g, b = _vec_grid(w.shape[0])
+
+    def kernel(w_ref, v_ref, u_ref, z_ref, r_ref, *, alpha):
+        i = pl.program_id(0)
+        z = w_ref[...] - alpha * v_ref[...]
+        z_ref[...] = z  # z is a program output -> still stored once
+
+        @pl.when(i == 0)
+        def _init():
+            r_ref[...] = jnp.zeros_like(r_ref)
+
+        r_ref[...] += jnp.sum(z * u_ref[...])[None]
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha),
+        grid=(g,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))] * 3,
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct((1,), w.dtype),
+        ],
+        interpret=True,
+    )(w, v, u)
+
+
+# --------------------------------------------------------------------------
+# BLAS-2 elementary kernels (depth 2: row-strip grid over the matrix)
+# --------------------------------------------------------------------------
+
+
+def _strip_grid(m):
+    assert m % ROW_TILE == 0, f"m={m} not padded to {ROW_TILE}"
+    return m // ROW_TILE
+
+
+def mcopy(a):
+    """B <- A tile-wise copy (CUBLAS-baseline helper)."""
+    m, n = a.shape
+
+    def kernel(a_ref, b_ref):
+        b_ref[...] = a_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(_strip_grid(m),),
+        in_specs=[pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a)
+
+
+def madd(a, b):
+    """C <- A + B tile-wise (MADD)."""
+    m, n = a.shape
+
+    def kernel(a_ref, b_ref, c_ref):
+        c_ref[...] = a_ref[...] + b_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(_strip_grid(m),),
+        in_specs=[pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0))] * 2,
+        out_specs=pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def sger(a, u, v, alpha):
+    """B <- A + alpha * u v^T (rank-1 update)."""
+    m, n = a.shape
+
+    def kernel(a_ref, u_ref, v_ref, b_ref, *, alpha):
+        b_ref[...] = a_ref[...] + alpha * jnp.outer(u_ref[...], v_ref[...])
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha),
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, u, v)
+
+
+def sger2(a, u1, v1, u2, v2):
+    """B <- A + u1 v1^T + u2 v2^T (GEMVER stage 1, one kernel — the tile
+    is updated twice while resident on-chip)."""
+    m, n = a.shape
+
+    def kernel(a_ref, u1_ref, v1_ref, u2_ref, v2_ref, b_ref):
+        b_ref[...] = (
+            a_ref[...]
+            + jnp.outer(u1_ref[...], v1_ref[...])
+            + jnp.outer(u2_ref[...], v2_ref[...])
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, u1, v1, u2, v2)
+
+
+def sgemv(a, x, alpha):
+    """y <- alpha * A x (row-strip per grid step, like the paper's gemv
+    with serial iterations over column tiles folded into the strip)."""
+    m, n = a.shape
+
+    def kernel(a_ref, x_ref, y_ref, *, alpha):
+        y_ref[...] = alpha * (a_ref[...] @ x_ref[...])
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha),
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def sgemvpy(a, x, y, alpha, beta):
+    """z <- alpha*A x + beta*y (CUBLAS SGEMV semantics, out-of-place)."""
+    m, n = a.shape
+
+    def kernel(a_ref, x_ref, y_ref, z_ref, *, alpha, beta):
+        z_ref[...] = alpha * (a_ref[...] @ x_ref[...]) + beta * y_ref[...]
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha, beta=beta),
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x, y)
+
+
+def sgemtv(a, r, alpha):
+    """s <- alpha * A^T r. The output is revisited every grid step —
+    cross-step accumulation is the paper's partial reduction with the
+    final combine done by the sequential grid (global atomicAdd on the
+    GTX 480, §3.2.2 option iii)."""
+    m, n = a.shape
+
+    def kernel(a_ref, r_ref, s_ref, *, alpha):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            s_ref[...] = jnp.zeros_like(s_ref)
+
+        s_ref[...] += alpha * (a_ref[...].T @ r_ref[...])
+
+    return pl.pallas_call(
+        functools.partial(kernel, alpha=alpha),
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, r)
+
+
+def sgemtvpz(a, y, z, beta):
+    """x <- beta * A^T y + z (SGEMVT / GEMVER middle stage,
+    out-of-place — no CUBLAS copy kernel needed)."""
+    m, n = a.shape
+
+    def kernel(a_ref, y_ref, z_ref, x_ref, *, beta):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            x_ref[...] = z_ref[...]
+
+        x_ref[...] += beta * (a_ref[...].T @ y_ref[...])
+
+    return pl.pallas_call(
+        functools.partial(kernel, beta=beta),
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, y, z)
+
+
+# --------------------------------------------------------------------------
+# Fused BLAS-2 kernels (the compiler's multi-function kernels)
+# --------------------------------------------------------------------------
+
+
+def bicgk_fused(a, p, r):
+    """BiCGK fused kernel (paper Algorithm 3 / Listing 3): one pass over
+    A computing q = A p and s = A^T r simultaneously. A is read ONCE —
+    the fusion's entire advantage."""
+    m, n = a.shape
+
+    def kernel(a_ref, p_ref, r_ref, q_ref, s_ref):
+        i = pl.program_id(0)
+        a_strip = a_ref[...]
+        q_ref[...] = a_strip @ p_ref[...]
+
+        @pl.when(i == 0)
+        def _init():
+            s_ref[...] = jnp.zeros_like(s_ref)
+
+        s_ref[...] += a_strip.T @ r_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), a.dtype),
+            jax.ShapeDtypeStruct((n,), a.dtype),
+        ],
+        interpret=True,
+    )(a, p, r)
+
+
+def gemver_fused_k1(a, u1, v1, u2, v2, y, z, beta):
+    """GEMVER fused kernel 1: B = A + u1 v1^T + u2 v2^T and
+    x = beta*B^T y + z in ONE pass — B is built and consumed on-chip,
+    stored once (it is a program output). The second GEMVER kernel
+    (w = alpha*B x) needs the complete x and stays separate (global
+    barrier), exactly as the fusion compiler decides."""
+    m, n = a.shape
+
+    def kernel(a_ref, u1_ref, v1_ref, u2_ref, v2_ref, y_ref, z_ref, b_ref, x_ref, *, beta):
+        i = pl.program_id(0)
+        b = (
+            a_ref[...]
+            + jnp.outer(u1_ref[...], v1_ref[...])
+            + jnp.outer(u2_ref[...], v2_ref[...])
+        )
+        b_ref[...] = b
+
+        @pl.when(i == 0)
+        def _init():
+            x_ref[...] = z_ref[...]
+
+        x_ref[...] += beta * (b.T @ y_ref[...])
+
+    return pl.pallas_call(
+        functools.partial(kernel, beta=beta),
+        grid=(_strip_grid(m),),
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((n,), a.dtype),
+        ],
+        interpret=True,
+    )(a, u1, v1, u2, v2, y, z)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every sequence — the correctness ground truth the
+Pallas kernels (and therefore the AOT artifacts and the Rust runtime) are
+validated against."""
+
+import jax.numpy as jnp
+
+
+def axpydot(w, v, u, alpha):
+    z = w - alpha * v
+    r = z @ u
+    return z, r
+
+
+def atax(a, x):
+    return a.T @ (a @ x)
+
+
+def bicgk(a, p, r):
+    return a @ p, a.T @ r
+
+
+def sgemv(a, x, y, alpha, beta):
+    return alpha * (a @ x) + beta * y
+
+
+def sgemvt(a, y, z, alpha, beta):
+    x = beta * (a.T @ y) + z
+    w = alpha * (a @ x)
+    return x, w
+
+
+def sscal(x, alpha):
+    return alpha * x
+
+
+def gemver(a, u1, v1, u2, v2, y, z, alpha, beta):
+    b = a + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+    x = beta * (b.T @ y) + z
+    w = alpha * (b @ x)
+    return b, x, w
+
+
+def gesummv(a, b, x, alpha, beta):
+    return alpha * (a @ x) + beta * (b @ x)
+
+
+def madd(a, b):
+    return a + b
+
+
+def vadd(w, y, z):
+    return w + y + z
+
+
+def waxpby(x, y, alpha, beta):
+    return alpha * x + beta * y

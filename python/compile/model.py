@@ -1,0 +1,407 @@
+"""L2: the BLAS sequences as staged JAX computations.
+
+A *stage* is one kernel launch: a jittable function closed over its
+scalar coefficients, with named tensor inputs and outputs.  The fused
+variant of a sequence uses the kernels the Rust fusion compiler selects
+(one pallas_call per generated kernel); the cublas variant reproduces the
+CUBLAS call decomposition, including the copy kernels its in-place API
+forces (S tag in the paper's Table 1).
+
+Scalar coefficients match rust/src/sequences/mod.rs exactly — the Rust
+test-suite cross-checks runtime outputs against the same oracles.
+
+`catalog(...)` enumerates every (sequence, variant, stage, size) —
+the unit `aot.py` lowers to one HLO artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import elementary as K
+
+F32 = jnp.float32
+
+# Scalar conventions (keep in sync with rust/src/sequences/mod.rs)
+AXPYDOT_ALPHA = 2.5
+SGEMV_ALPHA, SGEMV_BETA = 2.0, 0.5
+SGEMVT_ALPHA, SGEMVT_BETA = 2.0, 0.5
+SSCAL_ALPHA = 2.0
+GEMVER_ALPHA, GEMVER_BETA = 2.0, 0.5
+GESUMMV_ALPHA, GESUMMV_BETA = 2.0, 0.5
+WAXPBY_ALPHA, WAXPBY_BETA = 2.0, 0.5
+
+
+def _stage(fn, ins, outs):
+    """ins/outs: list of (name, shape_key) where shape_key in
+    {'mat', 'vm', 'vn', 'scalar'}."""
+    return {"fn": fn, "ins": ins, "outs": outs}
+
+
+def _shape(key, m, n):
+    return {
+        "mat": (m, n),
+        "vm": (m,),
+        "vn": (n,),
+        "scalar": (1,),
+    }[key]
+
+
+# --------------------------------------------------------------------------
+# Sequence definitions: name -> (is_blas2, {variant: [stages]})
+# --------------------------------------------------------------------------
+
+
+def _sequences():
+    return {
+        "axpydot": (
+            False,
+            {
+                "fused": [
+                    _stage(
+                        functools.partial(K.axpydot_fused, alpha=AXPYDOT_ALPHA),
+                        [("w", "vn"), ("v", "vn"), ("u", "vn")],
+                        [("z", "vn"), ("r", "scalar")],
+                    )
+                ],
+                "cublas": [
+                    _stage(K.scopy, [("w", "vn")], [("zc", "vn")]),
+                    _stage(
+                        functools.partial(K.saxpy, alpha=-AXPYDOT_ALPHA),
+                        [("v", "vn"), ("zc", "vn")],
+                        [("z", "vn")],
+                    ),
+                    _stage(K.sdot, [("z", "vn"), ("u", "vn")], [("r", "scalar")]),
+                ],
+            },
+        ),
+        "atax": (
+            True,
+            {
+                # no fusion possible (global barrier at t) — both variants
+                # run the same two kernels
+                "fused": [
+                    _stage(
+                        functools.partial(K.sgemv, alpha=1.0),
+                        [("A", "mat"), ("x", "vn")],
+                        [("t", "vm")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemtv, alpha=1.0),
+                        [("A", "mat"), ("t", "vm")],
+                        [("y", "vn")],
+                    ),
+                ],
+                "cublas": [
+                    _stage(
+                        functools.partial(K.sgemv, alpha=1.0),
+                        [("A", "mat"), ("x", "vn")],
+                        [("t", "vm")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemtv, alpha=1.0),
+                        [("A", "mat"), ("t", "vm")],
+                        [("y", "vn")],
+                    ),
+                ],
+            },
+        ),
+        "bicgk": (
+            True,
+            {
+                "fused": [
+                    _stage(
+                        K.bicgk_fused,
+                        [("A", "mat"), ("p", "vn"), ("r", "vm")],
+                        [("q", "vm"), ("s", "vn")],
+                    )
+                ],
+                "cublas": [
+                    _stage(
+                        functools.partial(K.sgemv, alpha=1.0),
+                        [("A", "mat"), ("p", "vn")],
+                        [("q", "vm")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemtv, alpha=1.0),
+                        [("A", "mat"), ("r", "vm")],
+                        [("s", "vn")],
+                    ),
+                ],
+            },
+        ),
+        "sgemv": (
+            True,
+            {
+                "fused": [
+                    _stage(
+                        functools.partial(K.sgemvpy, alpha=SGEMV_ALPHA, beta=SGEMV_BETA),
+                        [("A", "mat"), ("x", "vn"), ("y", "vm")],
+                        [("z", "vm")],
+                    )
+                ],
+                "cublas": [
+                    _stage(
+                        functools.partial(K.sgemvpy, alpha=SGEMV_ALPHA, beta=SGEMV_BETA),
+                        [("A", "mat"), ("x", "vn"), ("y", "vm")],
+                        [("z", "vm")],
+                    )
+                ],
+            },
+        ),
+        "sgemvt": (
+            True,
+            {
+                "fused": [
+                    _stage(
+                        functools.partial(K.sgemtvpz, beta=SGEMVT_BETA),
+                        [("A", "mat"), ("y", "vm"), ("z", "vn")],
+                        [("x", "vn")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemv, alpha=SGEMVT_ALPHA),
+                        [("A", "mat"), ("x", "vn")],
+                        [("w", "vm")],
+                    ),
+                ],
+                "cublas": [
+                    _stage(K.scopy, [("z", "vn")], [("xc", "vn")]),
+                    _stage(
+                        functools.partial(K.sgemtvpz, beta=SGEMVT_BETA),
+                        [("A", "mat"), ("y", "vm"), ("xc", "vn")],
+                        [("x", "vn")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemv, alpha=SGEMVT_ALPHA),
+                        [("A", "mat"), ("x", "vn")],
+                        [("w", "vm")],
+                    ),
+                ],
+            },
+        ),
+        "sscal": (
+            False,
+            {
+                "fused": [
+                    _stage(
+                        functools.partial(K.sscal, alpha=SSCAL_ALPHA),
+                        [("x", "vn")],
+                        [("y", "vn")],
+                    )
+                ],
+                "cublas": [
+                    _stage(
+                        functools.partial(K.sscal, alpha=SSCAL_ALPHA),
+                        [("x", "vn")],
+                        [("y", "vn")],
+                    )
+                ],
+            },
+        ),
+        "gemver": (
+            True,
+            {
+                "fused": [
+                    _stage(
+                        functools.partial(K.gemver_fused_k1, beta=GEMVER_BETA),
+                        [
+                            ("A", "mat"),
+                            ("u1", "vm"),
+                            ("v1", "vn"),
+                            ("u2", "vm"),
+                            ("v2", "vn"),
+                            ("y", "vm"),
+                            ("z", "vn"),
+                        ],
+                        [("B", "mat"), ("x", "vn")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemv, alpha=GEMVER_ALPHA),
+                        [("B", "mat"), ("x", "vn")],
+                        [("w", "vm")],
+                    ),
+                ],
+                "cublas": [
+                    _stage(K.mcopy, [("A", "mat")], [("B0", "mat")]),
+                    _stage(
+                        functools.partial(K.sger, alpha=1.0),
+                        [("B0", "mat"), ("u1", "vm"), ("v1", "vn")],
+                        [("B1", "mat")],
+                    ),
+                    _stage(
+                        functools.partial(K.sger, alpha=1.0),
+                        [("B1", "mat"), ("u2", "vm"), ("v2", "vn")],
+                        [("B", "mat")],
+                    ),
+                    _stage(K.scopy, [("z", "vn")], [("xc", "vn")]),
+                    _stage(
+                        functools.partial(K.sgemtvpz, beta=GEMVER_BETA),
+                        [("B", "mat"), ("y", "vm"), ("xc", "vn")],
+                        [("x", "vn")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemv, alpha=GEMVER_ALPHA),
+                        [("B", "mat"), ("x", "vn")],
+                        [("w", "vm")],
+                    ),
+                ],
+            },
+        ),
+        "gesummv": (
+            True,
+            {
+                "fused": [
+                    _stage(
+                        functools.partial(K.sgemv, alpha=GESUMMV_ALPHA),
+                        [("A", "mat"), ("x", "vn")],
+                        [("t", "vm")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemvpy, alpha=GESUMMV_BETA, beta=1.0),
+                        [("B", "mat"), ("x", "vn"), ("t", "vm")],
+                        [("y", "vm")],
+                    ),
+                ],
+                "cublas": [
+                    _stage(
+                        functools.partial(K.sgemv, alpha=GESUMMV_ALPHA),
+                        [("A", "mat"), ("x", "vn")],
+                        [("t", "vm")],
+                    ),
+                    _stage(
+                        functools.partial(K.sgemvpy, alpha=GESUMMV_BETA, beta=1.0),
+                        [("B", "mat"), ("x", "vn"), ("t", "vm")],
+                        [("y", "vm")],
+                    ),
+                ],
+            },
+        ),
+        "madd": (
+            True,
+            {
+                "fused": [
+                    _stage(K.madd, [("A", "mat"), ("B", "mat")], [("C", "mat")])
+                ],
+                "cublas": [
+                    _stage(K.mcopy, [("A", "mat")], [("Cc", "mat")]),
+                    _stage(K.madd, [("Cc", "mat"), ("B", "mat")], [("C", "mat")]),
+                ],
+            },
+        ),
+        "vadd": (
+            False,
+            {
+                "fused": [
+                    _stage(
+                        K.vadd3,
+                        [("w", "vn"), ("y", "vn"), ("z", "vn")],
+                        [("x", "vn")],
+                    )
+                ],
+                "cublas": [
+                    _stage(K.scopy, [("w", "vn")], [("xc", "vn")]),
+                    _stage(
+                        functools.partial(K.saxpy, alpha=1.0),
+                        [("y", "vn"), ("xc", "vn")],
+                        [("x1", "vn")],
+                    ),
+                    _stage(
+                        functools.partial(K.saxpy, alpha=1.0),
+                        [("z", "vn"), ("x1", "vn")],
+                        [("x", "vn")],
+                    ),
+                ],
+            },
+        ),
+        "waxpby": (
+            False,
+            {
+                "fused": [
+                    _stage(
+                        functools.partial(K.waxpby, alpha=WAXPBY_ALPHA, beta=WAXPBY_BETA),
+                        [("x", "vn"), ("y", "vn")],
+                        [("w", "vn")],
+                    )
+                ],
+                "cublas": [
+                    _stage(K.scopy, [("y", "vn")], [("wc", "vn")]),
+                    _stage(
+                        functools.partial(K.sscal, alpha=WAXPBY_BETA),
+                        [("wc", "vn")],
+                        [("ws", "vn")],
+                    ),
+                    _stage(
+                        functools.partial(K.saxpy, alpha=WAXPBY_ALPHA),
+                        [("x", "vn"), ("ws", "vn")],
+                        [("w", "vn")],
+                    ),
+                ],
+            },
+        ),
+    }
+
+
+# Catalog size points (BLAS-2 square; BLAS-1 vector lengths).
+BLAS2_SIZES = [256, 512, 1024]
+BLAS1_SIZES = [65536, 1048576]
+
+
+def catalog(blas2_sizes=None, blas1_sizes=None):
+    """Enumerate every artifact: one (sequence, variant, stage, size)."""
+    blas2_sizes = blas2_sizes or BLAS2_SIZES
+    blas1_sizes = blas1_sizes or BLAS1_SIZES
+    out = []
+    for seq, (is_blas2, variants) in _sequences().items():
+        sizes = blas2_sizes if is_blas2 else blas1_sizes
+        for size in sizes:
+            m, n = (size, size) if is_blas2 else (32, size)
+            for variant, stages in variants.items():
+                for si, st in enumerate(stages):
+                    key = f"{seq}.{variant}.m{m}n{n}.s{si}"
+                    out.append(
+                        {
+                            "key": key,
+                            "seq": seq,
+                            "variant": variant,
+                            "stage": si,
+                            "m": m,
+                            "n": n,
+                            "fn": st["fn"],
+                            "ins": [(nm, _shape(k, m, n)) for nm, k in st["ins"]],
+                            "outs": [(nm, _shape(k, m, n)) for nm, k in st["outs"]],
+                        }
+                    )
+    return out
+
+
+def run_variant(seq, variant, inputs, m, n):
+    """Execute all stages of a variant eagerly (test path): `inputs` is a
+    dict name -> array; returns the env including every stage output."""
+    _, variants = _sequences()[seq]
+    env = dict(inputs)
+    for st in variants[variant]:
+        args = [env[nm] for nm, _ in st["ins"]]
+        res = st["fn"](*args)
+        if not isinstance(res, (tuple, list)):
+            res = (res,)
+        for (nm, _), val in zip(st["outs"], res):
+            env[nm] = val
+    return env
+
+
+def sequence_names():
+    return list(_sequences().keys())
+
+
+def variant_outputs(seq, variant):
+    """Final output names of a variant (the sequence's results)."""
+    _, variants = _sequences()[seq]
+    produced = []
+    consumed = set()
+    for st in variants[variant]:
+        for nm, _ in st["ins"]:
+            consumed.add(nm)
+        for nm, _ in st["outs"]:
+            produced.append(nm)
+    return produced

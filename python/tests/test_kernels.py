@@ -1,0 +1,203 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against the pure-jnp
+reference, with hypothesis sweeping shapes and seeds.
+
+This is the CORE correctness signal for L1: the AOT artifacts are lowered
+from exactly these kernels, so agreement here + the Rust runtime's
+round-trip test means the whole stack computes the right numbers.
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import elementary as K
+from compile.kernels import ref
+
+RT = K.ROW_TILE
+
+
+def rng_arrays(seed, *shapes):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.uniform(-1, 1, s).astype(np.float32)) for s in shapes]
+
+
+def assert_close(a, b, tol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# n must be a multiple of 32 (the paper pads to the element size)
+n_vec = st.integers(1, 64).map(lambda k: k * RT)
+mn_mat = st.tuples(st.integers(1, 8), st.integers(1, 8)).map(
+    lambda t: (t[0] * RT, t[1] * RT)
+)
+seeds = st.integers(0, 2**31 - 1)
+scalars = st.floats(-3.0, 3.0, allow_nan=False).map(lambda v: float(np.float32(v)))
+
+
+# ---------------------------------------------------------------- BLAS-1
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=n_vec, seed=seeds)
+def test_scopy(n, seed):
+    (x,) = rng_arrays(seed, (n,))
+    assert_close(K.scopy(x), x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=n_vec, seed=seeds, alpha=scalars)
+def test_sscal(n, seed, alpha):
+    (x,) = rng_arrays(seed, (n,))
+    assert_close(K.sscal(x, alpha), ref.sscal(x, alpha))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=n_vec, seed=seeds, alpha=scalars)
+def test_saxpy(n, seed, alpha):
+    x, y = rng_arrays(seed, (n,), (n,))
+    assert_close(K.saxpy(x, y, alpha), alpha * x + y)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=n_vec, seed=seeds, alpha=scalars, beta=scalars)
+def test_waxpby(n, seed, alpha, beta):
+    x, y = rng_arrays(seed, (n,), (n,))
+    assert_close(K.waxpby(x, y, alpha, beta), ref.waxpby(x, y, alpha, beta))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=n_vec, seed=seeds)
+def test_vadd3(n, seed):
+    w, y, z = rng_arrays(seed, (n,), (n,), (n,))
+    assert_close(K.vadd3(w, y, z), ref.vadd(w, y, z))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=n_vec, seed=seeds)
+def test_sdot(n, seed):
+    x, y = rng_arrays(seed, (n,), (n,))
+    got = K.sdot(x, y)
+    assert got.shape == (1,)
+    assert_close(got[0], x @ y, tol=1e-4 * max(1, n / 256))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=n_vec, seed=seeds, alpha=scalars)
+def test_axpydot_fused(n, seed, alpha):
+    w, v, u = rng_arrays(seed, (n,), (n,), (n,))
+    z, r = K.axpydot_fused(w, v, u, alpha)
+    z_ref, r_ref = ref.axpydot(w, v, u, alpha)
+    assert_close(z, z_ref)
+    assert_close(r[0], r_ref, tol=1e-4 * max(1, n / 256))
+
+
+# ---------------------------------------------------------------- BLAS-2
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds)
+def test_mcopy(mn, seed):
+    (a,) = rng_arrays(seed, mn)
+    assert_close(K.mcopy(a), a)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds)
+def test_madd(mn, seed):
+    a, b = rng_arrays(seed, mn, mn)
+    assert_close(K.madd(a, b), ref.madd(a, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds, alpha=scalars)
+def test_sger(mn, seed, alpha):
+    m, n = mn
+    a, u, v = rng_arrays(seed, mn, (m,), (n,))
+    assert_close(K.sger(a, u, v, alpha), a + alpha * jnp.outer(u, v))
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds)
+def test_sger2(mn, seed):
+    m, n = mn
+    a, u1, v1, u2, v2 = rng_arrays(seed, mn, (m,), (n,), (m,), (n,))
+    want = a + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+    assert_close(K.sger2(a, u1, v1, u2, v2), want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds, alpha=scalars)
+def test_sgemv(mn, seed, alpha):
+    m, n = mn
+    a, x = rng_arrays(seed, mn, (n,))
+    assert_close(K.sgemv(a, x, alpha), alpha * (a @ x), tol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds, alpha=scalars, beta=scalars)
+def test_sgemvpy(mn, seed, alpha, beta):
+    m, n = mn
+    a, x, y = rng_arrays(seed, mn, (n,), (m,))
+    assert_close(K.sgemvpy(a, x, y, alpha, beta), ref.sgemv(a, x, y, alpha, beta), tol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds, alpha=scalars)
+def test_sgemtv(mn, seed, alpha):
+    m, n = mn
+    a, r = rng_arrays(seed, mn, (m,))
+    assert_close(K.sgemtv(a, r, alpha), alpha * (a.T @ r), tol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds, beta=scalars)
+def test_sgemtvpz(mn, seed, beta):
+    m, n = mn
+    a, y, z = rng_arrays(seed, mn, (m,), (n,))
+    assert_close(K.sgemtvpz(a, y, z, beta), beta * (a.T @ y) + z, tol=1e-4)
+
+
+# ---------------------------------------------------------------- fusions
+
+
+@settings(max_examples=20, deadline=None)
+@given(mn=mn_mat, seed=seeds)
+def test_bicgk_fused(mn, seed):
+    m, n = mn
+    a, p, r = rng_arrays(seed, mn, (n,), (m,))
+    q, s = K.bicgk_fused(a, p, r)
+    q_ref, s_ref = ref.bicgk(a, p, r)
+    assert_close(q, q_ref, tol=1e-4)
+    assert_close(s, s_ref, tol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(mn=mn_mat, seed=seeds, beta=scalars)
+def test_gemver_fused_k1(mn, seed, beta):
+    m, n = mn
+    a, u1, v1, u2, v2, y, z = rng_arrays(
+        seed, mn, (m,), (n,), (m,), (n,), (m,), (n,)
+    )
+    b, x = K.gemver_fused_k1(a, u1, v1, u2, v2, y, z, beta)
+    b_ref = a + jnp.outer(u1, v1) + jnp.outer(u2, v2)
+    x_ref = beta * (b_ref.T @ y) + z
+    assert_close(b, b_ref, tol=1e-4)
+    assert_close(x, x_ref, tol=1e-4)
+
+
+def test_fused_kernel_is_single_pallas_call():
+    """The BiCGK fusion must be ONE kernel: its jaxpr contains exactly
+    one pallas_call — the artifact boundary the Rust runtime sees."""
+    a = jnp.zeros((64, 64), jnp.float32)
+    p = jnp.zeros((64,), jnp.float32)
+    r = jnp.zeros((64,), jnp.float32)
+    jaxpr = jax.make_jaxpr(K.bicgk_fused)(a, p, r)
+    calls = [e for e in jaxpr.eqns if "pallas" in e.primitive.name]
+    assert len(calls) == 1, jaxpr

@@ -1,0 +1,131 @@
+//! Ablation study over the design choices DESIGN.md calls out:
+//!
+//! * **fusion off** — best unfused plan vs best overall (what fusion
+//!   alone buys, isolating it from block/iteration tuning);
+//! * **serial iterations off** (iters = 1) — the paper's grid-shrinking
+//!   trick disabled;
+//! * **single loop axis** — forcing the row axis instead of searching
+//!   both (Algorithm 3's choice matters for accumulation direction);
+//! * **pruning off** — space size without the on-chip domination rule;
+//! * **prediction-only selection** — take rank-1 by prediction without
+//!   the empirical search (Table 4's "first implementation" column).
+//!
+//! `cargo bench --bench ablation`
+
+use fusebla::autotune;
+use fusebla::bench_support::eval_size;
+use fusebla::coordinator::Context;
+use fusebla::fusion::{self, ImplAxes};
+use fusebla::sequences;
+use fusebla::sim::simulate_seq;
+use fusebla::util::Table;
+
+fn main() {
+    let ctx = Context::new();
+    let mut t = Table::new(
+        "ablation — simulated GFlops of the chosen plan per configuration",
+        &[
+            "Sequence", "full search", "no fusion", "iters=1", "row-axis only",
+            "prediction-only",
+        ],
+    );
+    for name in ["axpydot", "bicgk", "gemver", "vadd", "waxpby"] {
+        let seq = sequences::by_name(name).unwrap();
+        let p = eval_size(&seq);
+        let flops = seq.flops.eval(p);
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let gflops_of = |plan: &fusebla::ir::plan::SeqPlan| {
+            simulate_seq(&ctx.dev, plan, p, flops).gflops
+        };
+
+        let full = autotune::search(
+            &prog, &ctx.lib, &graph, &ctx.dev, &ctx.db, &ImplAxes::default(), p,
+        );
+
+        // no fusion: singletons only
+        let no_fusion = {
+            let space = fusion::space::Space::build(&prog, &ctx.lib, &graph, &[], &ImplAxes::default());
+            let mut best = f64::MAX;
+            let mut best_plan = None;
+            for (pi, choice) in space.combinations() {
+                let impls: Vec<_> = space
+                    .combination(pi, &choice)
+                    .iter()
+                    .map(|p| p.fi.clone())
+                    .collect();
+                let plan = fusebla::codegen::compile_seq(&prog, &ctx.lib, &impls, "nofusion");
+                let t = simulate_seq(&ctx.dev, &plan, p, flops).seconds;
+                if t < best {
+                    best = t;
+                    best_plan = Some(plan);
+                }
+            }
+            best_plan.unwrap()
+        };
+
+        let iters1 = autotune::search(
+            &prog,
+            &ctx.lib,
+            &graph,
+            &ctx.dev,
+            &ctx.db,
+            &ImplAxes {
+                iters: vec![1],
+                ..ImplAxes::default()
+            },
+            p,
+        );
+        let row_only = autotune::search(
+            &prog,
+            &ctx.lib,
+            &graph,
+            &ctx.dev,
+            &ctx.db,
+            &ImplAxes {
+                both_iter_dims: false,
+                ..ImplAxes::default()
+            },
+            p,
+        );
+        let pred_only = autotune::compile_first(
+            &prog, &ctx.lib, &graph, &ctx.db, &ImplAxes::default(), p,
+        );
+
+        t.row(&[
+            name.to_uppercase(),
+            format!("{:.1}", gflops_of(&full.best)),
+            format!("{:.1}", gflops_of(&no_fusion)),
+            format!("{:.1}", gflops_of(&iters1.best)),
+            format!("{:.1}", gflops_of(&row_only.best)),
+            format!("{:.1}", gflops_of(&pred_only.plan)),
+        ]);
+    }
+    t.print();
+
+    // pruning ablation: space sizes with/without domination pruning
+    let mut t2 = Table::new(
+        "ablation — pruned vs raw optimization-space size",
+        &["Sequence", "pruned combos", "raw impls (largest part)"],
+    );
+    for name in ["bicgk", "gemver", "waxpby"] {
+        let seq = sequences::by_name(name).unwrap();
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let fusions = fusion::enumerate_fusions(&prog, &ctx.lib, &graph);
+        let axes = ImplAxes::default();
+        let space = fusion::space::Space::build(&prog, &ctx.lib, &graph, &fusions, &axes);
+        let raw_largest = prog
+            .call_ids()
+            .map(|c| {
+                let s = fusion::Fusion::singleton(c, &prog, &ctx.lib);
+                fusion::gen_impls(&prog, &ctx.lib, &graph, &s, &axes).len()
+            })
+            .max()
+            .unwrap_or(0);
+        t2.row(&[
+            name.to_uppercase(),
+            space.combination_count().to_string(),
+            raw_largest.to_string(),
+        ]);
+    }
+    t2.print();
+}

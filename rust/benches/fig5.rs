@@ -1,0 +1,62 @@
+//! Regenerates the paper's Figure 5: BiCGK GFlops vs matrix size for the
+//! fused plan and the CUBLAS baseline (GTX 480 model), plus — when
+//! artifacts are built — a real-execution series on the CPU PJRT
+//! backend for the catalog sizes.
+//!
+//! `cargo bench --bench fig5`
+
+use fusebla::bench_support::figure;
+use fusebla::coordinator::{synth_inputs, Context, Coordinator};
+use fusebla::util::Table;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let ctx = Context::new();
+    let table = figure(&ctx, "bicgk");
+    table.print();
+    println!("TSV:\n{}", table.to_tsv());
+    real_series("bicgk");
+}
+
+/// Real-execution companion series (wallclock on CPU-PJRT; interpret-
+/// mode kernels — correctness substrate, not a GPU-speed proxy).
+fn real_series(seq: &str) {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("(skip real-execution series: artifacts not built)");
+        return;
+    }
+    let coord = Coordinator::new(Arc::new(Context::new()), dir).expect("coordinator");
+    let mut t = Table::new(
+        &format!("{} real execution (CPU PJRT)", seq.to_uppercase()),
+        &["n", "fused ms", "cublas ms", "speedup"],
+    );
+    for (m, n) in coord.runtime().sizes_of(seq, "fused") {
+        let time_of = |variant: &str| {
+            coord.runtime().warmup(seq, variant, m, n).unwrap();
+            let inputs = synth_inputs(coord.runtime(), seq, variant, m, n, 3);
+            // median of 5
+            let mut samples: Vec<f64> = (0..5)
+                .map(|_| {
+                    coord
+                        .runtime()
+                        .run_seq(seq, variant, m, n, &inputs)
+                        .unwrap()
+                        .seconds
+                })
+                .collect();
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            samples[2]
+        };
+        let tf = time_of("fused");
+        let tc = time_of("cublas");
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", tf * 1e3),
+            format!("{:.2}", tc * 1e3),
+            format!("{:.2}x", tc / tf),
+        ]);
+    }
+    t.print();
+}

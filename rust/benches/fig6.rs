@@ -1,0 +1,55 @@
+//! Regenerates the paper's Figure 6: GEMVER GFlops vs matrix size
+//! (fused plan vs CUBLAS baseline, GTX 480 model) + a real-execution
+//! series over the artifact catalog sizes.
+//!
+//! `cargo bench --bench fig6`
+
+use fusebla::bench_support::figure;
+use fusebla::coordinator::{synth_inputs, Context, Coordinator};
+use fusebla::util::Table;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let ctx = Context::new();
+    let table = figure(&ctx, "gemver");
+    table.print();
+    println!("TSV:\n{}", table.to_tsv());
+
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("(skip real-execution series: artifacts not built)");
+        return;
+    }
+    let coord = Coordinator::new(Arc::new(Context::new()), dir).expect("coordinator");
+    let mut t = Table::new(
+        "GEMVER real execution (CPU PJRT)",
+        &["n", "fused ms", "cublas ms", "speedup"],
+    );
+    for (m, n) in coord.runtime().sizes_of("gemver", "fused") {
+        let time_of = |variant: &str| {
+            coord.runtime().warmup("gemver", variant, m, n).unwrap();
+            let inputs = synth_inputs(coord.runtime(), "gemver", variant, m, n, 3);
+            let mut samples: Vec<f64> = (0..5)
+                .map(|_| {
+                    coord
+                        .runtime()
+                        .run_seq("gemver", variant, m, n, &inputs)
+                        .unwrap()
+                        .seconds
+                })
+                .collect();
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            samples[2]
+        };
+        let tf = time_of("fused");
+        let tc = time_of("cublas");
+        t.row(&[
+            n.to_string(),
+            format!("{:.2}", tf * 1e3),
+            format!("{:.2}", tc * 1e3),
+            format!("{:.2}x", tc / tf),
+        ]);
+    }
+    t.print();
+}

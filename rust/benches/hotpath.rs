@@ -1,0 +1,143 @@
+//! L3 hot-path microbenchmarks (the §Perf substrate): wallclock of the
+//! compiler stages and the runtime dispatch path, with mean/median over
+//! repeated runs. Criterion is unreachable offline; the in-repo harness
+//! (`util::stats`) provides warmup + sampling.
+//!
+//! `cargo bench --bench hotpath`
+
+use fusebla::autotune;
+use fusebla::coordinator::Context;
+use fusebla::fusion::{self, ImplAxes};
+use fusebla::graph::DepGraph;
+use fusebla::ir::elem::ProblemSize;
+use fusebla::predict::{predict_seq, RoutineDb};
+use fusebla::script::compile_script;
+use fusebla::sequences;
+use fusebla::sim::{simulate_seq, DeviceModel};
+use fusebla::util::stats::{bench, black_box};
+use fusebla::util::{Summary, Table};
+
+fn report(t: &mut Table, name: &str, samples: &[f64]) {
+    let s = Summary::from_samples(samples);
+    t.row(&[
+        name.to_string(),
+        format!("{:.1}", s.median * 1e6),
+        format!("{:.1}", s.mean * 1e6),
+        format!("{:.1}", s.min * 1e6),
+        format!("{:.1}", s.stddev * 1e6),
+        s.n.to_string(),
+    ]);
+}
+
+fn main() {
+    let ctx = Context::new();
+    let seq = sequences::by_name("bicgk").unwrap();
+    let (prog, graph) = seq.graph(&ctx.lib);
+    let p = ProblemSize::square(8192);
+    let mut t = Table::new(
+        "L3 hot paths (µs)",
+        &["stage", "median", "mean", "min", "stddev", "n"],
+    );
+
+    // script front-end
+    report(
+        &mut t,
+        "parse+typecheck (bicgk)",
+        &bench(10, 200, || {
+            black_box(compile_script("bicgk", seq.script, &ctx.lib).unwrap())
+        }),
+    );
+    // graph
+    report(
+        &mut t,
+        "dependency graph",
+        &bench(10, 500, || black_box(DepGraph::build(&prog, &ctx.lib))),
+    );
+    // fusion enumeration
+    report(
+        &mut t,
+        "fusion enumeration",
+        &bench(10, 500, || {
+            black_box(fusion::enumerate_fusions(&prog, &ctx.lib, &graph))
+        }),
+    );
+    // codegen of one fused kernel
+    let fusions = fusion::enumerate_fusions(&prog, &ctx.lib, &graph);
+    let fi = fusion::gen_impls(&prog, &ctx.lib, &graph, &fusions[0], &ImplAxes::minimal())
+        .into_iter()
+        .next()
+        .unwrap();
+    report(
+        &mut t,
+        "codegen (fused kernel)",
+        &bench(10, 500, || {
+            black_box(fusebla::codegen::generate(&prog, &ctx.lib, &fi))
+        }),
+    );
+    // prediction of one plan
+    let plan = fusebla::codegen::compile_seq(&prog, &ctx.lib, &[fi.clone()], "bench");
+    report(
+        &mut t,
+        "predict (1 plan)",
+        &bench(10, 1000, || black_box(predict_seq(&ctx.db, &plan, p))),
+    );
+    // simulation of one plan
+    report(
+        &mut t,
+        "simulate (1 plan)",
+        &bench(10, 1000, || {
+            black_box(simulate_seq(&ctx.dev, &plan, p, 1.0))
+        }),
+    );
+    // compile-first end-to-end
+    report(
+        &mut t,
+        "compile_first (bicgk, full axes)",
+        &bench(3, 30, || {
+            black_box(autotune::compile_first(
+                &prog,
+                &ctx.lib,
+                &graph,
+                &ctx.db,
+                &ImplAxes::default(),
+                p,
+            ))
+        }),
+    );
+    // routine DB calibration (once per architecture)
+    report(
+        &mut t,
+        "RoutineDb::calibrate",
+        &bench(1, 10, || {
+            black_box(RoutineDb::calibrate(&DeviceModel::gtx480(), &ctx.lib))
+        }),
+    );
+    t.print();
+
+    // runtime dispatch overhead (artifact execution minus kernel work):
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        use fusebla::coordinator::{synth_inputs, Coordinator};
+        use std::sync::Arc;
+        let coord = Coordinator::new(Arc::new(Context::new()), dir).unwrap();
+        let (m, n) = coord.runtime().sizes_of("sscal", "fused")[0];
+        coord.runtime().warmup("sscal", "fused", m, n).unwrap();
+        let inputs = synth_inputs(coord.runtime(), "sscal", "fused", m, n, 1);
+        let samples = bench(5, 50, || {
+            black_box(
+                coord
+                    .runtime()
+                    .run_seq("sscal", "fused", m, n, &inputs)
+                    .unwrap(),
+            )
+        });
+        let s = Summary::from_samples(&samples);
+        println!(
+            "runtime dispatch+exec sscal n={n}: median {:.1} µs (includes host<->device copies of {} KiB)",
+            s.median * 1e6,
+            2 * n * 4 / 1024
+        );
+    } else {
+        println!("(artifacts not built: skipping runtime dispatch bench)");
+    }
+}

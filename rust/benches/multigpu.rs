@@ -1,0 +1,59 @@
+//! Multi-GPU scaling study — the paper's §6 future work implemented:
+//! strong scaling of each sequence's best fused plan over 1–8 modeled
+//! GTX 480s on PCIe 2.0, showing the map-vs-reduce scaling gap and the
+//! small-problem crossover the paper anticipates.
+//!
+//! `cargo bench --bench multigpu`
+
+use fusebla::autotune;
+use fusebla::bench_support::eval_size;
+use fusebla::coordinator::Context;
+use fusebla::fusion::ImplAxes;
+use fusebla::ir::elem::ProblemSize;
+use fusebla::sequences;
+use fusebla::sim::multi::{simulate_seq_multi, Interconnect};
+use fusebla::util::Table;
+
+fn main() {
+    let ctx = Context::new();
+    let link = Interconnect::pcie2_x16();
+    let mut t = Table::new(
+        "multi-GPU strong scaling — GFlops at G devices (best fused plan)",
+        &["Sequence", "G=1", "G=2", "G=4", "G=8", "eff@4"],
+    );
+    for seq in sequences::all() {
+        let p = eval_size(&seq);
+        let flops = seq.flops.eval(p);
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let best =
+            autotune::compile_first(&prog, &ctx.lib, &graph, &ctx.db, &ImplAxes::minimal(), p);
+        let gf = |g: u32| simulate_seq_multi(&ctx.dev, &link, g, &best.plan, p, flops).gflops;
+        let g1 = gf(1);
+        let g4 = gf(4);
+        t.row(&[
+            seq.name.to_uppercase(),
+            format!("{g1:.1}"),
+            format!("{:.1}", gf(2)),
+            format!("{g4:.1}"),
+            format!("{:.1}", gf(8)),
+            format!("{:.0}%", 100.0 * g4 / g1 / 4.0),
+        ]);
+    }
+    t.print();
+
+    // small-problem crossover for BiCGK
+    let mut t2 = Table::new(
+        "BiCGK multi-GPU efficiency vs problem size (G=4)",
+        &["n", "efficiency"],
+    );
+    let seq = sequences::by_name("bicgk").unwrap();
+    let (prog, graph) = seq.graph(&ctx.lib);
+    for n in [512usize, 1024, 2048, 4096, 8192, 16384] {
+        let p = ProblemSize::square(n);
+        let best =
+            autotune::compile_first(&prog, &ctx.lib, &graph, &ctx.db, &ImplAxes::minimal(), p);
+        let eff = fusebla::sim::multi::scaling_efficiency(&ctx.dev, &link, 4, &best.plan, p);
+        t2.row(&[n.to_string(), format!("{:.0}%", eff * 100.0)]);
+    }
+    t2.print();
+}

@@ -1,0 +1,19 @@
+//! Regenerates the paper's Table 2: GFlops of the compiler's best plan
+//! vs the CUBLAS baseline for all eleven sequences, on the GTX 480
+//! model, with the paper's numbers alongside.
+//!
+//! `cargo bench --bench table2`
+
+use fusebla::bench_support::{table2, Evaluator};
+use fusebla::coordinator::Context;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let ctx = Context::new();
+    let mut ev = Evaluator::new();
+    let table = table2(&ctx, &mut ev);
+    table.print();
+    println!("(generated in {:.2} s)", t0.elapsed().as_secs_f64());
+    println!("TSV:\n{}", table.to_tsv());
+}

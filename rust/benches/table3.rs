@@ -1,0 +1,16 @@
+//! Regenerates the paper's Table 3: our speedup vs the BTO BLAS CPU
+//! speedup (quoted from the paper — BTO targets CPUs and is not
+//! reproducible here) plus the measured kernel bandwidth of our plans.
+//!
+//! `cargo bench --bench table3`
+
+use fusebla::bench_support::{table3, Evaluator};
+use fusebla::coordinator::Context;
+
+fn main() {
+    let ctx = Context::new();
+    let mut ev = Evaluator::new();
+    let table = table3(&ctx, &mut ev);
+    table.print();
+    println!("TSV:\n{}", table.to_tsv());
+}

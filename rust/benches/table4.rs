@@ -1,0 +1,16 @@
+//! Regenerates the paper's Table 4: optimization-space size, rank of the
+//! empirically best implementation in the predicted order, and the
+//! first/worst implementations' relative performance.
+//!
+//! `cargo bench --bench table4`
+
+use fusebla::bench_support::{table4, Evaluator};
+use fusebla::coordinator::Context;
+
+fn main() {
+    let ctx = Context::new();
+    let mut ev = Evaluator::new();
+    let table = table4(&ctx, &mut ev);
+    table.print();
+    println!("TSV:\n{}", table.to_tsv());
+}

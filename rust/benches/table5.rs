@@ -1,0 +1,17 @@
+//! Regenerates the paper's Table 5: wallclock of compiling the first
+//! (best-predicted) implementation, generating all implementations, and
+//! the empirical search — on this machine, with the paper's times for
+//! reference.
+//!
+//! `cargo bench --bench table5`
+
+use fusebla::bench_support::{table5, Evaluator};
+use fusebla::coordinator::Context;
+
+fn main() {
+    let ctx = Context::new();
+    let mut ev = Evaluator::new();
+    let table = table5(&ctx, &mut ev);
+    table.print();
+    println!("TSV:\n{}", table.to_tsv());
+}

@@ -1,0 +1,345 @@
+//! Shared harness regenerating every table and figure of the paper's
+//! evaluation section. Used by `cargo bench` targets and the CLI.
+
+use crate::autotune::{self, SearchReport};
+use crate::coordinator::Context;
+use crate::fusion::ImplAxes;
+use crate::ir::elem::ProblemSize;
+use crate::ir::plan::SeqPlan;
+use crate::sequences::{self, Sequence};
+use crate::sim::{simulate_seq, SeqTiming};
+use crate::util::{fmt_duration, fmt_gflops, Table};
+use std::collections::BTreeMap;
+
+/// Evaluation sizes (paper: "sized to GPU memory"; our model is
+/// analytic, so the paper-scale sizes are free).
+pub fn eval_size(seq: &Sequence) -> ProblemSize {
+    if seq.is_blas2() {
+        ProblemSize::square(8192)
+    } else {
+        ProblemSize::new(32, 1 << 24)
+    }
+}
+
+/// Full per-sequence evaluation: compiler search + baseline simulation.
+pub struct SeqEval {
+    pub seq: Sequence,
+    pub report: SearchReport,
+    pub ours: SeqTiming,
+    pub cublas: SeqTiming,
+}
+
+/// Lazy cache of per-sequence evaluations (search is the expensive part;
+/// tables 2–5 share it).
+#[derive(Default)]
+pub struct Evaluator {
+    cache: BTreeMap<String, SeqEval>,
+}
+
+impl Evaluator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Implementation axes per sequence: GEMVER's space explodes
+    /// combinatorially (the paper's 1271-implementation case takes 42 s
+    /// to generate there too) — trim the iteration axis to keep the
+    /// all-implementations path responsive while preserving the ordering
+    /// GEMVER ≫ GESUMMV ≫ rest.
+    fn axes_for(seq: &Sequence) -> ImplAxes {
+        if seq.program_calls() >= 3 {
+            ImplAxes {
+                iters: vec![1, 4, 16],
+                ipb: vec![2, 8],
+                max_orders: 4,
+                both_iter_dims: true,
+            }
+        } else {
+            ImplAxes::default()
+        }
+    }
+
+    pub fn eval(&mut self, ctx: &Context, name: &str) -> &SeqEval {
+        if !self.cache.contains_key(name) {
+            let seq = sequences::by_name(name).unwrap_or_else(|| panic!("no sequence {name}"));
+            let p = eval_size(&seq);
+            let flops = seq.flops.eval(p);
+            let (prog, graph) = seq.graph(&ctx.lib);
+            let axes = Self::axes_for(&seq);
+            let report =
+                autotune::search(&prog, &ctx.lib, &graph, &ctx.dev, &ctx.db, &axes, p);
+            let ours = simulate_seq(&ctx.dev, &report.best, p, flops);
+            let cublas_prog = seq.cublas_program(&ctx.lib);
+            let cublas_plan = autotune::baseline_plan(&cublas_prog, &ctx.lib);
+            let cublas = simulate_seq(&ctx.dev, &cublas_plan, p, flops);
+            self.cache.insert(
+                name.to_string(),
+                SeqEval {
+                    seq,
+                    report,
+                    ours,
+                    cublas,
+                },
+            );
+        }
+        &self.cache[name]
+    }
+}
+
+impl Sequence {
+    fn program_calls(&self) -> usize {
+        self.script.matches('=').count() - self.script.matches("alpha=").count()
+            - self.script.matches("beta=").count()
+    }
+}
+
+/// Table 1: the studied sequences and their tags.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — sequences used in the performance study",
+        &["Sequence", "Operation", "Tag"],
+    );
+    let ops: &[(&str, &str)] = &[
+        ("axpydot", "z = w - a*v ; r = z'u"),
+        ("atax", "y = A'Ax"),
+        ("bicgk", "q = Ap ; s = A'r"),
+        ("sgemv", "z = a*Ax + b*y"),
+        ("sgemvt", "x = b*A'y + z ; w = a*Ax"),
+        ("sscal", "x = a*x"),
+        ("gemver", "B = A + u1v1' + u2v2' ; x = b*B'y + z ; w = a*Bx"),
+        ("gesummv", "y = a*Ax + b*Bx"),
+        ("madd", "C = A + B"),
+        ("vadd", "x = w + y + z"),
+        ("waxpby", "w = a*x + b*y"),
+    ];
+    for (name, op) in ops {
+        let seq = sequences::by_name(name).unwrap();
+        t.row(&[name.to_uppercase(), op.to_string(), seq.tag.to_string()]);
+    }
+    t
+}
+
+/// Table 2: generated vs CUBLAS GFlops (model) with the paper's numbers.
+pub fn table2(ctx: &Context, ev: &mut Evaluator) -> Table {
+    let mut t = Table::new(
+        "Table 2 — performance vs CUBLAS (GTX480 model; paper values for reference)",
+        &[
+            "Sequence", "Ours", "CUBLAS", "Speedup", "Tag",
+            "Paper ours", "Paper CUBLAS", "Paper speedup",
+        ],
+    );
+    for seq in sequences::all() {
+        let e = ev.eval(ctx, seq.name);
+        let speedup = e.ours.gflops / e.cublas.gflops;
+        t.row(&[
+            seq.name.to_uppercase(),
+            fmt_gflops(e.ours.gflops),
+            fmt_gflops(e.cublas.gflops),
+            format!("{speedup:.2}x"),
+            seq.tag.to_string(),
+            fmt_gflops(seq.paper.ours_gflops),
+            fmt_gflops(seq.paper.cublas_gflops),
+            format!("{:.2}x", seq.paper.speedup),
+        ]);
+    }
+    t
+}
+
+/// Table 3: speedup comparison with BTO BLAS + our kernel bandwidth.
+pub fn table3(ctx: &Context, ev: &mut Evaluator) -> Table {
+    let mut t = Table::new(
+        "Table 3 — speedup vs BTO BLAS (CPU, quoted from paper) and kernel bandwidth",
+        &[
+            "Sequence", "Our speedup", "Paper speedup", "BTO speedup",
+            "Our bandwidth", "Paper bandwidth",
+        ],
+    );
+    for seq in sequences::all() {
+        let e = ev.eval(ctx, seq.name);
+        let speedup = e.ours.gflops / e.cublas.gflops;
+        t.row(&[
+            seq.name.to_uppercase(),
+            format!("{speedup:.2}x"),
+            format!("{:.2}x", seq.paper.speedup),
+            seq.paper
+                .bto_speedup
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "n/a".into()),
+            format!("{:.1} GB/s", e.ours.bandwidth_gbs),
+            format!("{:.1} GB/s", seq.paper.bandwidth_gbs),
+        ]);
+    }
+    t
+}
+
+/// Table 4: optimization-space size and prediction accuracy.
+pub fn table4(ctx: &Context, ev: &mut Evaluator) -> Table {
+    let mut t = Table::new(
+        "Table 4 — implementation count, rank of best, first/worst relative perf",
+        &[
+            "Sequence", "Impl count", "Best found", "First impl", "Worst impl",
+            "Paper count", "Paper best",
+        ],
+    );
+    for seq in sequences::all() {
+        let e = ev.eval(ctx, seq.name);
+        let r = &e.report;
+        t.row(&[
+            seq.name.to_uppercase(),
+            r.impl_count.to_string(),
+            format!("{}{}", r.best_rank, ordinal(r.best_rank)),
+            format!("{:.1}%", r.first_pct),
+            r.worst_pct
+                .map(|w| format!("{w:.1}%"))
+                .unwrap_or_else(|| "n/a".into()),
+            seq.paper.impl_count.to_string(),
+            format!("{}{}", seq.paper.best_rank, ordinal(seq.paper.best_rank)),
+        ]);
+    }
+    t
+}
+
+/// Table 5: compile and search wallclock.
+pub fn table5(ctx: &Context, ev: &mut Evaluator) -> Table {
+    let mut t = Table::new(
+        "Table 5 — compilation and empirical-search time (this machine vs paper's)",
+        &[
+            "Sequence", "First impl", "All impls", "Empirical search",
+            "Paper first", "Paper all", "Paper search",
+        ],
+    );
+    for seq in sequences::all() {
+        let e = ev.eval(ctx, seq.name);
+        let r = &e.report;
+        t.row(&[
+            seq.name.to_uppercase(),
+            fmt_duration(r.t_first),
+            fmt_duration(r.t_all),
+            fmt_duration(r.t_search),
+            fmt_duration(seq.paper.t_first_s),
+            fmt_duration(seq.paper.t_all_s),
+            fmt_duration(seq.paper.t_search_s),
+        ]);
+    }
+    t
+}
+
+/// Scaling figure (5: BiCGK, 6: GEMVER): GFlops vs matrix size for the
+/// fused/compiled plan and the CUBLAS baseline.
+pub fn figure(ctx: &Context, seq_name: &str) -> Table {
+    let seq = sequences::by_name(seq_name).unwrap();
+    let fig = if seq_name == "bicgk" { 5 } else { 6 };
+    let mut t = Table::new(
+        &format!(
+            "Figure {fig} — {} scaling (GFlops vs n; GTX480 model)",
+            seq_name.to_uppercase()
+        ),
+        &["n", "Ours", "CUBLAS", "Speedup"],
+    );
+    let (prog, graph) = seq.graph(&ctx.lib);
+    let cublas_prog = seq.cublas_program(&ctx.lib);
+    let cublas_plan = autotune::baseline_plan(&cublas_prog, &ctx.lib);
+    for k in 1..=16 {
+        let n = k * 1024;
+        let p = ProblemSize::square(n);
+        let flops = seq.flops.eval(p);
+        let best = autotune::compile_first(
+            &prog,
+            &ctx.lib,
+            &graph,
+            &ctx.db,
+            &ImplAxes::default(),
+            p,
+        );
+        let ours = simulate_seq(&ctx.dev, &best.plan, p, flops);
+        let base = simulate_seq(&ctx.dev, &cublas_plan, p, flops);
+        t.row(&[
+            n.to_string(),
+            fmt_gflops(ours.gflops),
+            fmt_gflops(base.gflops),
+            format!("{:.2}x", ours.gflops / base.gflops),
+        ]);
+    }
+    t
+}
+
+/// Simulated plan pair for one sequence (used by ablation benches).
+pub fn plans_for(ctx: &Context, name: &str) -> (SeqPlan, SeqPlan, ProblemSize, f64) {
+    let seq = sequences::by_name(name).unwrap();
+    let p = eval_size(&seq);
+    let flops = seq.flops.eval(p);
+    let (prog, graph) = seq.graph(&ctx.lib);
+    let best = autotune::compile_first(&prog, &ctx.lib, &graph, &ctx.db, &ImplAxes::default(), p);
+    let cublas_prog = seq.cublas_program(&ctx.lib);
+    let baseline = autotune::baseline_plan(&cublas_prog, &ctx.lib);
+    (best.plan, baseline, p, flops)
+}
+
+fn ordinal(n: usize) -> &'static str {
+    match (n % 10, n % 100) {
+        (1, 11) | (2, 12) | (3, 13) => "th",
+        (1, _) => "st",
+        (2, _) => "nd",
+        (3, _) => "rd",
+        _ => "th",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_eleven_rows() {
+        assert_eq!(table1().n_rows(), 11);
+    }
+
+    #[test]
+    fn ordinals() {
+        assert_eq!(ordinal(1), "st");
+        assert_eq!(ordinal(2), "nd");
+        assert_eq!(ordinal(3), "rd");
+        assert_eq!(ordinal(4), "th");
+        assert_eq!(ordinal(11), "th");
+        assert_eq!(ordinal(21), "st");
+        assert_eq!(ordinal(54), "th");
+    }
+
+    #[test]
+    fn evaluator_caches() {
+        let ctx = Context::new();
+        let mut ev = Evaluator::new();
+        let g1 = ev.eval(&ctx, "sscal").ours.gflops;
+        let g2 = ev.eval(&ctx, "sscal").ours.gflops;
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn table2_speedups_have_paper_shape() {
+        // The core reproduction claim: F/S sequences speed up strongly,
+        // B/untagged sequences stay near 1x. Tolerances are generous —
+        // the model reproduces shape, not authors' exact numbers.
+        let ctx = Context::new();
+        let mut ev = Evaluator::new();
+        let mut check = |name: &str, lo: f64, hi: f64| {
+            let e = ev.eval(&ctx, name);
+            let s = e.ours.gflops / e.cublas.gflops;
+            assert!(
+                (lo..=hi).contains(&s),
+                "{name}: speedup {s:.2} outside [{lo}, {hi}] (paper {:.2})",
+                e.seq.paper.speedup
+            );
+        };
+        check("vadd", 1.8, 2.9); // paper 2.26
+        check("waxpby", 1.6, 2.9); // paper 1.93
+        check("axpydot", 1.5, 2.5); // paper 1.94
+        check("bicgk", 1.25, 2.1); // paper 1.61
+        check("gemver", 2.0, 3.3); // paper 2.61
+        check("madd", 1.3, 1.8); // paper 1.47
+        check("atax", 0.95, 1.15); // paper 1.03
+        check("sgemv", 0.95, 1.25); // paper 1.05
+        check("gesummv", 0.9, 1.15); // paper 1.00
+        check("sscal", 0.95, 1.25); // paper 1.05
+        check("sgemvt", 0.95, 1.25); // paper 1.03
+    }
+}

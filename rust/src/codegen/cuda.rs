@@ -1,0 +1,157 @@
+//! Pseudo-CUDA rendering of a [`KernelPlan`] — mirrors the paper's
+//! Appendix A so a generated plan can be inspected the way the authors
+//! present their generated BiCGK kernel. This is documentation output;
+//! the executable form of a plan is the AOT HLO artifact.
+
+use crate::ir::func::RoutineKind;
+use crate::ir::plan::{Hoist, KernelPlan, SeqPlan};
+
+/// Render one kernel as pseudo-CUDA.
+pub fn emit_cuda(plan: &KernelPlan) -> String {
+    let mut out = String::new();
+    let g = &plan.grid;
+    out.push_str(&format!(
+        "// grid: depth-{} | block ({}, {}) | {} instance(s)/block | {} serial iteration(s) over {}\n",
+        g.depth, g.block.0, g.block.1, g.instances_per_block, g.iters, g.iter_dim
+    ));
+    out.push_str(&format!(
+        "// regs/thread ≈ {} | smem {} words ({} B)\n",
+        plan.regs_per_thread,
+        plan.smem_words,
+        plan.smem_bytes()
+    ));
+    out.push_str(&format!("__global__ void {}(...)\n{{\n", plan.name));
+    out.push_str("    int tx = threadIdx.x;\n    int ty = threadIdx.y;\n");
+    out.push_str("    int bx = blockIdx.x;\n    int by = blockIdx.y;\n");
+    if plan.smem_words > 0 {
+        out.push_str(&format!(
+            "    __shared__ float s_fusion[{}];\n",
+            plan.smem_words
+        ));
+        for s in &plan.smem_slots {
+            out.push_str(&format!(
+                "    float* s_{} = s_fusion + {}; // {} words, live steps {}..{}\n",
+                s.var, s.offset, s.words, s.live.0, s.live.1
+            ));
+        }
+    }
+    let emit_step = |s: &crate::ir::plan::Step, indent: &str, out: &mut String| {
+        if s.barrier_before {
+            out.push_str(&format!("{indent}__syncthreads();\n"));
+        }
+        if s.clear_before {
+            let v = s.op.var.as_deref().unwrap_or("out");
+            out.push_str(&format!(
+                "{indent}// clear output of reduction\n{indent}s_{v}[tx] = 0.0f;\n"
+            ));
+        }
+        let what = match s.op.kind {
+            RoutineKind::Load { .. } => "data loading",
+            RoutineKind::Compute => "computation",
+            RoutineKind::Store { .. } => "data storing",
+        };
+        let atomic = if s.op.uses_atomic { " [atomicAdd]" } else { "" };
+        out.push_str(&format!(
+            "{indent}// {what}{atomic}\n{indent}{}(...);\n",
+            s.op.routine_name
+        ));
+    };
+    for s in plan.steps.iter().filter(|s| s.hoist == Hoist::BeforeLoop) {
+        emit_step(s, "    ", &mut out);
+    }
+    let has_loop = plan.steps.iter().any(|s| s.hoist == Hoist::InLoop);
+    if has_loop {
+        if g.iters > 1 {
+            out.push_str(&format!(
+                "    {0} = {0} * {1};\n    int stop = min({0} + {1}, grid_{2});\n    for (; {0} < stop; {0}++) {{\n",
+                if g.depth == 2 { "by" } else { "bx" },
+                g.iters,
+                g.iter_dim
+            ));
+        } else {
+            out.push_str("    { // single iteration\n");
+        }
+        for s in plan.steps.iter().filter(|s| s.hoist == Hoist::InLoop) {
+            emit_step(s, "        ", &mut out);
+        }
+        out.push_str("    }\n");
+    }
+    for s in plan.steps.iter().filter(|s| s.hoist == Hoist::AfterLoop) {
+        emit_step(s, "    ", &mut out);
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Render the whole sequence (one pseudo-kernel per fusion).
+pub fn emit_seq(plan: &SeqPlan) -> String {
+    let mut out = format!(
+        "// sequence '{}', variant '{}': {} kernel(s)\n\n",
+        plan.seq,
+        plan.variant,
+        plan.kernels.len()
+    );
+    for k in &plan.kernels {
+        out.push_str(&emit_cuda(k));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{enumerate_fusions, gen_impls, ImplAxes};
+    use crate::graph::DepGraph;
+    use crate::library::Library;
+    use crate::script::compile_script;
+
+    #[test]
+    fn bicgk_rendering_mentions_sync_and_smem() {
+        let lib = Library::standard();
+        let prog = compile_script(
+            "bicgk",
+            "matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+             input A, p, r;
+             q = sgemv(A, p);
+             s = sgemtv(A, r);
+             return q, s;",
+            &lib,
+        )
+        .unwrap();
+        let g = DepGraph::build(&prog, &lib);
+        let f = enumerate_fusions(&prog, &lib, &g).remove(0);
+        let fi = gen_impls(&prog, &lib, &g, &f, &ImplAxes::minimal())
+            .into_iter()
+            .find(|i| i.iters > 1)
+            .unwrap();
+        let plan = crate::codegen::generate(&prog, &lib, &fi);
+        let cuda = emit_cuda(&plan);
+        assert!(cuda.contains("__global__ void"), "{cuda}");
+        assert!(cuda.contains("__shared__ float s_fusion["), "{cuda}");
+        assert!(cuda.contains("__syncthreads()"), "{cuda}");
+        assert!(cuda.contains("for ("), "{cuda}");
+        assert!(cuda.contains("d_sgemv_compute"), "{cuda}");
+        assert!(cuda.contains("d_sgemtv_compute"), "{cuda}");
+    }
+
+    #[test]
+    fn seq_rendering_counts_kernels() {
+        let lib = Library::standard();
+        let prog = compile_script(
+            "t",
+            "vector<N> x, y; input x; y = sscal(x, alpha=2.0); return y;",
+            &lib,
+        )
+        .unwrap();
+        let g = DepGraph::build(&prog, &lib);
+        let f = crate::fusion::Fusion::singleton(crate::ir::program::CallId(0), &prog, &lib);
+        let fi = gen_impls(&prog, &lib, &g, &f, &ImplAxes::minimal())
+            .into_iter()
+            .next()
+            .unwrap();
+        let sp = crate::codegen::compile_seq(&prog, &lib, &[fi], "unfused");
+        let text = emit_seq(&sp);
+        assert!(text.contains("1 kernel(s)"));
+    }
+}

@@ -1,0 +1,352 @@
+//! Command-line interface (hand-rolled; clap is unreachable offline).
+//!
+//! ```text
+//! fusebla tables [1|2|3|4|5|all]          regenerate the paper's tables
+//! fusebla figures [5|6|all]               regenerate the scaling figures
+//! fusebla compile <script> [--all] [--emit-cuda]
+//! fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
+//! fusebla autotune <seq>                  search + prediction-accuracy report
+//! fusebla serve-demo [--requests N]       coordinator request-loop demo
+//! fusebla list                            sequences + artifact catalog
+//! ```
+
+use crate::autotune;
+use crate::bench_support as bench;
+use crate::codegen;
+use crate::coordinator::{
+    synth_inputs, Context, Coordinator, PlanChoice, Request, RequestInputs,
+};
+use crate::fusion::ImplAxes;
+use crate::ir::elem::ProblemSize;
+use crate::script::compile_script;
+use crate::sequences;
+use crate::util::fmt_duration;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("FUSEBLA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn usage() -> i32 {
+    eprintln!(
+        "fusebla — kernel-fusion compiler for BLAS sequences
+usage:
+  fusebla tables [1|2|3|4|5|all]
+  fusebla figures [5|6|all]
+  fusebla compile <script-file> [--all] [--emit-cuda]
+  fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
+  fusebla autotune <seq>
+  fusebla serve-demo [--requests N]
+  fusebla list"
+    );
+    2
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+pub fn run() -> i32 {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        return usage();
+    };
+    match cmd.as_str() {
+        "tables" => cmd_tables(args.get(1).map(|s| s.as_str()).unwrap_or("all")),
+        "figures" => cmd_figures(args.get(1).map(|s| s.as_str()).unwrap_or("all")),
+        "compile" => cmd_compile(&args[1..]),
+        "run" => cmd_run(&args[1..]),
+        "autotune" => cmd_autotune(&args[1..]),
+        "serve-demo" => cmd_serve(&args[1..]),
+        "list" => cmd_list(),
+        _ => usage(),
+    }
+}
+
+fn cmd_tables(which: &str) -> i32 {
+    let ctx = Context::new();
+    let mut ev = bench::Evaluator::new();
+    let all = which == "all";
+    if all || which == "1" {
+        bench::table1().print();
+    }
+    if all || which == "2" {
+        bench::table2(&ctx, &mut ev).print();
+    }
+    if all || which == "3" {
+        bench::table3(&ctx, &mut ev).print();
+    }
+    if all || which == "4" {
+        bench::table4(&ctx, &mut ev).print();
+    }
+    if all || which == "5" {
+        bench::table5(&ctx, &mut ev).print();
+    }
+    0
+}
+
+fn cmd_figures(which: &str) -> i32 {
+    let ctx = Context::new();
+    if which == "all" || which == "5" {
+        bench::figure(&ctx, "bicgk").print();
+    }
+    if which == "all" || which == "6" {
+        bench::figure(&ctx, "gemver").print();
+    }
+    0
+}
+
+fn cmd_compile(args: &[String]) -> i32 {
+    let Some(path) = args.first().filter(|a| !a.starts_with("--")) else {
+        eprintln!("compile: need a script file");
+        return 2;
+    };
+    let src = match std::fs::read_to_string(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("compile: {path}: {e}");
+            return 1;
+        }
+    };
+    let name = PathBuf::from(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "script".into());
+    let ctx = Context::new();
+    let prog = match compile_script(&name, &src, &ctx.lib) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("compile: {e}");
+            return 1;
+        }
+    };
+    let graph = crate::graph::DepGraph::build(&prog, &ctx.lib);
+    let p = ProblemSize::square(4096);
+    let want_all = args.iter().any(|a| a == "--all");
+    let t0 = std::time::Instant::now();
+    let cands = autotune::rank_all(&prog, &ctx.lib, &graph, &ctx.db, &ImplAxes::default(), p);
+    println!(
+        "compiled '{}' — {} implementation(s) in {}",
+        name,
+        cands.len(),
+        fmt_duration(t0.elapsed().as_secs_f64())
+    );
+    let show = if want_all { cands.len() } else { 1 };
+    for (i, c) in cands.iter().take(show).enumerate() {
+        println!(
+            "#{}: {} kernel(s), predicted {:.3} ms — {}",
+            i + 1,
+            c.plan.kernels.len(),
+            c.predicted * 1e3,
+            c.plan
+                .kernels
+                .iter()
+                .map(|k| k.name.clone())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
+    if args.iter().any(|a| a == "--emit-cuda") {
+        println!("\n{}", codegen::cuda::emit_seq(&cands[0].plan));
+    }
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let Some(seq) = args.first().filter(|a| !a.starts_with("--")) else {
+        eprintln!("run: need a sequence name");
+        return 2;
+    };
+    let variant = match flag_value(args, "--variant").as_deref() {
+        Some("cublas") => PlanChoice::Cublas,
+        _ => PlanChoice::Fused,
+    };
+    let ctx = Arc::new(Context::new());
+    let mut coord = match Coordinator::new(ctx, &artifacts_dir()) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("run: {e:#}");
+            return 1;
+        }
+    };
+    let sizes = coord.runtime().sizes_of(seq, variant.as_str());
+    if sizes.is_empty() {
+        eprintln!("run: no artifacts for '{seq}'");
+        return 1;
+    }
+    let (dm, dn) = sizes[sizes.len() / 2];
+    let m: usize = flag_value(args, "--m").and_then(|v| v.parse().ok()).unwrap_or(dm);
+    let n: usize = flag_value(args, "--n").and_then(|v| v.parse().ok()).unwrap_or(dn);
+    let inputs = synth_inputs(coord.runtime(), seq, variant.as_str(), m, n, 42);
+    let check = !args.iter().any(|a| a == "--no-check");
+    println!(
+        "running {seq}.{} at m={m} n={n} on {}",
+        variant.as_str(),
+        coord.runtime().platform()
+    );
+    if check {
+        match coord.run_checked(seq, variant, m, n, &inputs) {
+            Ok((res, err)) => {
+                for s in &res.stages {
+                    println!("  stage {:40} {}", s.key, fmt_duration(s.seconds));
+                }
+                println!(
+                    "total {} | max abs error vs reference: {:.2e} {}",
+                    fmt_duration(res.seconds),
+                    err,
+                    if err < 1e-2 { "OK" } else { "FAIL" }
+                );
+                i32::from(err >= 1e-2)
+            }
+            Err(e) => {
+                eprintln!("run: {e:#}");
+                1
+            }
+        }
+    } else {
+        match coord.runtime().run_seq(seq, variant.as_str(), m, n, &inputs) {
+            Ok(res) => {
+                println!("total {}", fmt_duration(res.seconds));
+                0
+            }
+            Err(e) => {
+                eprintln!("run: {e:#}");
+                1
+            }
+        }
+    }
+}
+
+fn cmd_autotune(args: &[String]) -> i32 {
+    let Some(name) = args.first() else {
+        eprintln!("autotune: need a sequence name");
+        return 2;
+    };
+    let Some(seq) = sequences::by_name(name) else {
+        eprintln!("autotune: unknown sequence '{name}'");
+        return 1;
+    };
+    let ctx = Context::new();
+    let (prog, graph) = seq.graph(&ctx.lib);
+    let p = bench::eval_size(&seq);
+    let report = autotune::search(
+        &prog,
+        &ctx.lib,
+        &graph,
+        &ctx.dev,
+        &ctx.db,
+        &ImplAxes::default(),
+        p,
+    );
+    println!("sequence {}:", name.to_uppercase());
+    println!("  implementations     : {}", report.impl_count);
+    println!("  best found at rank  : {}", report.best_rank);
+    println!("  first impl perf     : {:.1}%", report.first_pct);
+    if let Some(w) = report.worst_pct {
+        println!("  worst impl perf     : {w:.1}%");
+    }
+    println!("  compile first       : {}", fmt_duration(report.t_first));
+    println!("  compile all         : {}", fmt_duration(report.t_all));
+    println!("  empirical search    : {}", fmt_duration(report.t_search));
+    println!(
+        "  best plan           : {} kernel(s): {}",
+        report.best.kernels.len(),
+        report
+            .best
+            .kernels
+            .iter()
+            .map(|k| k.name.clone())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let n_requests: usize = flag_value(args, "--requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    // Size discovery from the manifest alone (no PJRT on this thread —
+    // the client is !Send and lives on the worker).
+    let manifest = match crate::util::manifest::Manifest::load(&artifacts_dir().join("manifest.txt")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 1;
+        }
+    };
+    let mix = ["waxpby", "vadd", "sscal", "axpydot"];
+    let mut prepared = Vec::new();
+    for seq in mix {
+        let Some(entry) = manifest
+            .entries
+            .values()
+            .find(|e| e.seq == seq && e.variant == "fused" && e.stage == 0)
+        else {
+            eprintln!("serve-demo: missing artifacts for {seq}");
+            return 1;
+        };
+        let m: usize = entry.attrs["m"].parse().unwrap();
+        let n: usize = entry.attrs["n"].parse().unwrap();
+        prepared.push((seq, m, n));
+    }
+    let dir = artifacts_dir();
+    let (tx, rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let ctx = Arc::new(Context::new());
+        let coord = Coordinator::new(ctx, &dir).expect("coordinator");
+        coord.serve(rx)
+    });
+    let t0 = std::time::Instant::now();
+    let mut replies = Vec::new();
+    for i in 0..n_requests {
+        let (seq, m, n) = &prepared[i % prepared.len()];
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Request {
+            seq: seq.to_string(),
+            m: *m,
+            n: *n,
+            inputs: RequestInputs::Synth { seed: i as u64 },
+            variant: Some(PlanChoice::Fused),
+            reply: rtx,
+        })
+        .unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let ok = replies.iter().filter(|r| matches!(r.recv(), Ok(Ok(_)))).count();
+    let metrics = worker.join().unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{n_requests} requests in {} ({:.1} req/s)",
+        fmt_duration(dt),
+        n_requests as f64 / dt
+    );
+    for (seq, (count, secs)) in &metrics.per_seq {
+        println!("  {seq:10} {count:4} requests, mean {}", fmt_duration(secs / *count as f64));
+    }
+    i32::from(ok != n_requests)
+}
+
+fn cmd_list() -> i32 {
+    println!("sequences:");
+    for s in sequences::all() {
+        println!("  {:8} [{}]", s.name, s.tag);
+    }
+    match crate::runtime::Runtime::load(&artifacts_dir()) {
+        Ok(rt) => {
+            println!("artifacts: {} entries", rt.manifest.entries.len());
+            for s in sequences::all() {
+                let sizes = rt.sizes_of(s.name, "fused");
+                println!("  {:8} sizes {:?}", s.name, sizes);
+            }
+        }
+        Err(e) => println!("artifacts: not loaded ({e})"),
+    }
+    0
+}

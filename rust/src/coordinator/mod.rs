@@ -1,0 +1,336 @@
+//! L3 coordinator: the process that owns the compiled plans and serves
+//! execution requests.
+//!
+//! For this paper the system contribution lives in the compiler, so the
+//! coordinator is a thin driver (per DESIGN.md): it holds the compiler
+//! context (library, device model, routine DB), a plan cache keyed by
+//! sequence, and a request loop executing AOT artifacts through the PJRT
+//! runtime with per-sequence metrics. std::thread + channels — tokio is
+//! unreachable in this offline environment.
+
+pub mod cli;
+
+use crate::autotune;
+use crate::fusion::ImplAxes;
+use crate::ir::elem::ProblemSize;
+use crate::library::Library;
+use crate::predict::RoutineDb;
+use crate::runtime::{refcheck, RunResult, Runtime, Tensor};
+use crate::sequences::{self, Sequence};
+use crate::sim::DeviceModel;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared compiler context (built once per process).
+pub struct Context {
+    pub lib: Library,
+    pub dev: DeviceModel,
+    pub db: RoutineDb,
+}
+
+impl Context {
+    pub fn new() -> Context {
+        let lib = Library::standard();
+        let dev = DeviceModel::gtx480();
+        let db = RoutineDb::calibrate(&dev, &lib);
+        Context { lib, dev, db }
+    }
+}
+
+impl Default for Context {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Which plan variant to execute for a sequence (the coordinator decides
+/// once via the compiler, then caches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanChoice {
+    Fused,
+    Cublas,
+}
+
+impl PlanChoice {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlanChoice::Fused => "fused",
+            PlanChoice::Cublas => "cublas",
+        }
+    }
+}
+
+/// Input payload of a request. `Synth` lets producers on other threads
+/// enqueue work without touching the (thread-bound) PJRT runtime: the
+/// coordinator materializes deterministic random inputs itself.
+pub enum RequestInputs {
+    Explicit(BTreeMap<String, Tensor>),
+    Synth { seed: u64 },
+}
+
+/// One execution request.
+pub struct Request {
+    pub seq: String,
+    pub m: usize,
+    pub n: usize,
+    pub inputs: RequestInputs,
+    /// Force a variant; None = let the coordinator's plan cache decide.
+    pub variant: Option<PlanChoice>,
+    pub reply: mpsc::Sender<Result<RunResult>>,
+}
+
+/// Aggregated metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub failures: u64,
+    pub seconds_total: f64,
+    pub per_seq: BTreeMap<String, (u64, f64)>,
+}
+
+/// The coordinator: plan cache + runtime + metrics behind a request
+/// channel.
+pub struct Coordinator {
+    ctx: Arc<Context>,
+    runtime: Runtime,
+    /// seq name → chosen variant (decided by the fusion compiler).
+    plan_cache: BTreeMap<String, PlanChoice>,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    pub fn new(ctx: Arc<Context>, artifacts_dir: &Path) -> Result<Coordinator> {
+        Ok(Coordinator {
+            ctx,
+            runtime: Runtime::load(artifacts_dir)?,
+            plan_cache: BTreeMap::new(),
+            metrics: Metrics::default(),
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Decide (and cache) the plan for a sequence: run the fusion
+    /// compiler's search on the device model; if the best plan fuses
+    /// anything (fewer kernels than calls), execute the fused artifact
+    /// variant, else the baseline decomposition.
+    pub fn choose_plan(&mut self, seq_name: &str) -> Result<PlanChoice> {
+        if let Some(&c) = self.plan_cache.get(seq_name) {
+            return Ok(c);
+        }
+        let seq: Sequence = sequences::by_name(seq_name)
+            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
+        let (prog, graph) = seq.graph(&self.ctx.lib);
+        let p = if seq.is_blas2() {
+            ProblemSize::square(4096)
+        } else {
+            ProblemSize::new(32, 1 << 22)
+        };
+        let first = autotune::compile_first(
+            &prog,
+            &self.ctx.lib,
+            &graph,
+            &self.ctx.db,
+            &ImplAxes::minimal(),
+            p,
+        );
+        let choice = if first.plan.kernels.len() < prog.calls.len() {
+            PlanChoice::Fused
+        } else {
+            // no fusion found: the "fused" artifacts equal the natural
+            // decomposition — still prefer them (no CUBLAS copy kernels)
+            PlanChoice::Fused
+        };
+        self.plan_cache.insert(seq_name.to_string(), choice);
+        Ok(choice)
+    }
+
+    /// Handle one request synchronously.
+    pub fn handle(&mut self, req: &Request) -> Result<RunResult> {
+        let variant = match req.variant {
+            Some(v) => v,
+            None => self.choose_plan(&req.seq)?,
+        };
+        let inputs = match &req.inputs {
+            RequestInputs::Explicit(m) => m.clone(),
+            RequestInputs::Synth { seed } => {
+                synth_inputs(&self.runtime, &req.seq, variant.as_str(), req.m, req.n, *seed)
+            }
+        };
+        let t0 = Instant::now();
+        let result = self
+            .runtime
+            .run_seq(&req.seq, variant.as_str(), req.m, req.n, &inputs);
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.requests += 1;
+        self.metrics.seconds_total += dt;
+        let e = self.metrics.per_seq.entry(req.seq.clone()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        if result.is_err() {
+            self.metrics.failures += 1;
+        }
+        result
+    }
+
+    /// Run a request loop until the channel closes. Returns metrics.
+    pub fn serve(mut self, rx: mpsc::Receiver<Request>) -> Metrics {
+        while let Ok(req) = rx.recv() {
+            let res = self.handle(&req);
+            let _ = req.reply.send(res);
+        }
+        self.metrics
+    }
+
+    /// Execute + verify one sequence against the Rust reference oracle;
+    /// returns (result, max abs error).
+    pub fn run_checked(
+        &mut self,
+        seq: &str,
+        variant: PlanChoice,
+        m: usize,
+        n: usize,
+        inputs: &BTreeMap<String, Tensor>,
+    ) -> Result<(RunResult, f32)> {
+        let result = self
+            .runtime
+            .run_seq(seq, variant.as_str(), m, n, inputs)?;
+        let err = refcheck::max_abs_error(seq, inputs, &result.env);
+        Ok((result, err))
+    }
+}
+
+/// Generate deterministic random inputs for a sequence at a size
+/// (matching the free inputs its artifacts declare).
+pub fn synth_inputs(
+    runtime: &Runtime,
+    seq: &str,
+    variant: &str,
+    m: usize,
+    n: usize,
+    seed: u64,
+) -> BTreeMap<String, Tensor> {
+    use crate::util::Prng;
+    let mut produced: Vec<String> = vec![];
+    let mut inputs = BTreeMap::new();
+    let mut rng = Prng::new(seed);
+    let mut entries: Vec<_> = runtime
+        .manifest
+        .entries
+        .values()
+        .filter(|e| {
+            e.seq == seq
+                && e.variant == variant
+                && e.attrs.get("m").map(|s| s.as_str()) == Some(m.to_string().as_str())
+                && e.attrs.get("n").map(|s| s.as_str()) == Some(n.to_string().as_str())
+        })
+        .collect();
+    entries.sort_by_key(|e| e.stage);
+    for e in entries {
+        for spec in &e.inputs {
+            if !produced.contains(&spec.name) && !inputs.contains_key(&spec.name) {
+                let len: usize = spec.dims.iter().product::<usize>().max(1);
+                inputs.insert(
+                    spec.name.clone(),
+                    Tensor::new(spec.dims.clone(), rng.f32_vec(len)),
+                );
+            }
+        }
+        for spec in &e.outputs {
+            produced.push(spec.name.clone());
+        }
+    }
+    inputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn coordinator_runs_checked_bicgk() {
+        let Some(dir) = artifacts_dir() else { return };
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        let inputs = synth_inputs(coord.runtime(), "bicgk", "fused", 256, 256, 7);
+        let (res, err) = coord
+            .run_checked("bicgk", PlanChoice::Fused, 256, 256, &inputs)
+            .unwrap();
+        assert_eq!(res.stages.len(), 1);
+        assert!(err < 1e-3, "max abs error {err}");
+    }
+
+    #[test]
+    fn plan_cache_decides_once() {
+        let Some(dir) = artifacts_dir() else { return };
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        let a = coord.choose_plan("bicgk").unwrap();
+        let b = coord.choose_plan("bicgk").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, PlanChoice::Fused);
+    }
+
+    #[test]
+    fn serve_loop_processes_requests() {
+        let Some(dir) = artifacts_dir() else { return };
+        let (tx, rx) = mpsc::channel();
+        // The PJRT client is !Send: the coordinator lives entirely on the
+        // worker thread; producers send Synth inputs.
+        let handle = std::thread::spawn(move || {
+            let ctx = Arc::new(Context::new());
+            let coord = Coordinator::new(ctx, &dir).unwrap();
+            coord.serve(rx)
+        });
+        let mut replies = vec![];
+        for i in 0..3 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Request {
+                seq: "waxpby".into(),
+                m: 32,
+                n: 65536,
+                inputs: RequestInputs::Synth { seed: i },
+                variant: Some(PlanChoice::Fused),
+                reply: rtx,
+            })
+            .unwrap();
+            replies.push(rrx);
+        }
+        drop(tx);
+        for r in replies {
+            assert!(r.recv().unwrap().is_ok());
+        }
+        let metrics = handle.join().unwrap();
+        assert_eq!(metrics.requests, 3);
+        assert_eq!(metrics.failures, 0);
+    }
+
+    #[test]
+    fn metrics_track_failures() {
+        let Some(dir) = artifacts_dir() else { return };
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        let (rtx, _rrx) = mpsc::channel();
+        let req = Request {
+            seq: "bicgk".into(),
+            m: 7, // no such size
+            n: 7,
+            inputs: RequestInputs::Explicit(BTreeMap::new()),
+            variant: Some(PlanChoice::Fused),
+            reply: rtx,
+        };
+        assert!(coord.handle(&req).is_err());
+        assert_eq!(coord.metrics.failures, 1);
+    }
+}

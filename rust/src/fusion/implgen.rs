@@ -1,0 +1,235 @@
+//! Fusion-implementation generation (paper §4.2, step "generation of
+//! fusion implementations"): each fusion can be implemented many ways,
+//! differing in (i) calling order, (ii) chosen implementations of the
+//! elementary functions, (iii) block size and (iv) number of serial
+//! iterations. Depth-2 kernels additionally choose which matrix axis the
+//! serial loop walks (the BiCGK kernel of Algorithm 3 iterates rows).
+
+use super::Fusion;
+use crate::graph::DepGraph;
+use crate::ir::plan::IterDim;
+use crate::ir::program::{CallId, Program};
+use crate::library::Library;
+
+/// Enumeration knobs. Defaults mirror the paper's search ranges; benches
+/// shrink or widen them for the ablation study.
+#[derive(Clone, Debug)]
+pub struct ImplAxes {
+    /// Serial iteration counts to try (paper: "certain ranges of …
+    /// sequential iterations").
+    pub iters: Vec<u32>,
+    /// Instances per block for depth-1 kernels (block = 32·ipb threads
+    /// for the tuned variants).
+    pub ipb: Vec<u32>,
+    /// Cap on calling orders enumerated per fusion.
+    pub max_orders: usize,
+    /// Explore both serial-loop axes for depth-2 kernels.
+    pub both_iter_dims: bool,
+}
+
+impl Default for ImplAxes {
+    fn default() -> Self {
+        ImplAxes {
+            iters: vec![1, 2, 4, 8, 16],
+            ipb: vec![1, 2, 4, 8],
+            max_orders: 6,
+            both_iter_dims: true,
+        }
+    }
+}
+
+impl ImplAxes {
+    /// A minimal axis set (fast compiles; used by `--first` mode).
+    pub fn minimal() -> Self {
+        ImplAxes {
+            iters: vec![1, 8],
+            ipb: vec![4],
+            max_orders: 2,
+            both_iter_dims: true,
+        }
+    }
+}
+
+/// One concrete implementation choice for a fusion.
+#[derive(Clone, Debug)]
+pub struct FusionImpl {
+    pub fusion: Fusion,
+    /// Member calls in chosen execution order.
+    pub order: Vec<CallId>,
+    /// Variant index per member (parallel to `order`).
+    pub variant: Vec<usize>,
+    /// Instances per block (depth-1 packing; 1 for tile kernels).
+    pub ipb: u32,
+    /// Serial iterations (grid shrink factor).
+    pub iters: u32,
+    pub iter_dim: IterDim,
+}
+
+impl FusionImpl {
+    /// Stable label used in plan names and artifact keys, e.g.
+    /// `o0.v1_0.b4.i8.row`.
+    pub fn label(&self) -> String {
+        let v: Vec<String> = self.variant.iter().map(|x| x.to_string()).collect();
+        format!(
+            "v{}.b{}.i{}.{}",
+            v.join("_"),
+            self.ipb,
+            self.iters,
+            self.iter_dim
+        )
+    }
+
+    pub fn variant_of(&self, c: CallId) -> usize {
+        let i = self
+            .order
+            .iter()
+            .position(|&x| x == c)
+            .expect("call not in fusion");
+        self.variant[i]
+    }
+}
+
+fn cartesian_variants(lib: &Library, prog: &Program, order: &[CallId]) -> Vec<Vec<usize>> {
+    let counts: Vec<usize> = order
+        .iter()
+        .map(|c| lib.get(prog.call(*c).func).variants.len())
+        .collect();
+    let total: usize = counts.iter().product();
+    let mut out = Vec::with_capacity(total);
+    for mut idx in 0..total {
+        let mut choice = Vec::with_capacity(counts.len());
+        for &c in &counts {
+            choice.push(idx % c);
+            idx /= c;
+        }
+        out.push(choice);
+    }
+    out
+}
+
+/// Generate all implementations of a fusion under the given axes.
+pub fn gen_impls(
+    prog: &Program,
+    lib: &Library,
+    graph: &DepGraph,
+    fusion: &Fusion,
+    axes: &ImplAxes,
+) -> Vec<FusionImpl> {
+    let orders = graph.topo_orders_of(&fusion.calls, axes.max_orders);
+    let iter_dims: Vec<IterDim> = if fusion.depth == 1 {
+        vec![IterDim::Elem]
+    } else if axes.both_iter_dims {
+        vec![IterDim::Row, IterDim::Col]
+    } else {
+        vec![IterDim::Row]
+    };
+    let ipbs: Vec<u32> = if fusion.depth == 1 {
+        axes.ipb.clone()
+    } else {
+        vec![1] // one tile instance per block (§4.4)
+    };
+
+    let mut out = Vec::new();
+    for order in &orders {
+        for variant in cartesian_variants(lib, prog, order) {
+            for &ipb in &ipbs {
+                for &iters in &axes.iters {
+                    for &iter_dim in &iter_dims {
+                        out.push(FusionImpl {
+                            fusion: fusion.clone(),
+                            order: order.clone(),
+                            variant: variant.clone(),
+                            ipb,
+                            iters,
+                            iter_dim,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::enumerate_fusions;
+    use crate::script::compile_script;
+
+    fn setup(src: &str) -> (Program, Library, DepGraph) {
+        let lib = Library::standard();
+        let prog = compile_script("t", src, &lib).unwrap();
+        let g = DepGraph::build(&prog, &lib);
+        (prog, lib, g)
+    }
+
+    const BICGK: &str = "
+        matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+        input A, p, r;
+        q = sgemv(A, p);
+        s = sgemtv(A, r);
+        return q, s;
+    ";
+
+    #[test]
+    fn bicgk_impl_count() {
+        let (prog, lib, g) = setup(BICGK);
+        let f = &enumerate_fusions(&prog, &lib, &g)[0];
+        let axes = ImplAxes::default();
+        let impls = gen_impls(&prog, &lib, &g, f, &axes);
+        // orders(2) × variants(3·3) × ipb(1) × iters(5) × dims(2) = 180
+        assert_eq!(impls.len(), 180);
+        // depth-2 fusions never pack instances
+        assert!(impls.iter().all(|i| i.ipb == 1));
+    }
+
+    #[test]
+    fn singleton_depth1_impls() {
+        let src = "
+            vector<N> x, y; input x;
+            y = sscal(x, alpha=2.0); return y;
+        ";
+        let (prog, lib, g) = setup(src);
+        let f = Fusion::singleton(CallId(0), &prog, &lib);
+        let impls = gen_impls(&prog, &lib, &g, &f, &ImplAxes::default());
+        // variants(3) × ipb(4) × iters(5) × dims(1) = 60
+        assert_eq!(impls.len(), 60);
+        assert!(impls.iter().all(|i| i.iter_dim == IterDim::Elem));
+    }
+
+    #[test]
+    fn minimal_axes_shrink_space() {
+        let (prog, lib, g) = setup(BICGK);
+        let f = &enumerate_fusions(&prog, &lib, &g)[0];
+        let impls = gen_impls(&prog, &lib, &g, f, &ImplAxes::minimal());
+        // orders(2) × variants(9) × iters(2) × dims(2) = 72
+        assert_eq!(impls.len(), 72);
+    }
+
+    #[test]
+    fn labels_unique_within_order() {
+        let (prog, lib, g) = setup(BICGK);
+        let f = &enumerate_fusions(&prog, &lib, &g)[0];
+        let impls = gen_impls(&prog, &lib, &g, f, &ImplAxes::minimal());
+        let mut labels: Vec<String> = impls
+            .iter()
+            .map(|i| format!("{:?}{}", i.order, i.label()))
+            .collect();
+        let before = labels.len();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), before);
+    }
+
+    #[test]
+    fn variant_of_maps_by_call() {
+        let (prog, lib, g) = setup(BICGK);
+        let f = &enumerate_fusions(&prog, &lib, &g)[0];
+        let impls = gen_impls(&prog, &lib, &g, f, &ImplAxes::minimal());
+        let i = &impls[0];
+        for &c in &i.order {
+            let _ = i.variant_of(c); // must not panic
+        }
+    }
+}

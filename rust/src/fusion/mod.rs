@@ -1,0 +1,345 @@
+//! Fusion enumeration (paper §4.2, step "generation of fusions").
+//!
+//! A *fusion* is a fusible subgraph of the dependency graph: a set of
+//! elementary calls that can be glued into one kernel without changing
+//! program semantics. Fusibility rules (§3.2):
+//!
+//! * all members share one nesting depth (mixing depths repeats the
+//!   shallower function's work — the compiler refuses, §4.3.2);
+//! * no *internal* reduction edge: a reduce / mapped-reduce result needs
+//!   a global barrier, so its consumer cannot sit in the same kernel;
+//! * the set is weakly connected (otherwise nothing is shared) and
+//!   convex (no dependency path leaves and re-enters — such a set cannot
+//!   be scheduled as a single kernel);
+//! * the fusion spares global-memory transfers (step "pruning": fusions
+//!   which do not spare memory transfers are dropped) — either an
+//!   intermediate stays on-chip or a shared input is read once.
+
+pub mod implgen;
+pub mod space;
+
+pub use implgen::{gen_impls, FusionImpl, ImplAxes};
+pub use space::{enumerate_partitions, Partition};
+
+use crate::graph::DepGraph;
+use crate::ir::elem::VarType;
+use crate::ir::plan::Poly2;
+use crate::ir::program::{CallId, Program, VarId};
+use crate::library::Library;
+use std::collections::BTreeSet;
+
+/// A candidate fusion: a fusible set of calls (singletons are the
+/// degenerate case — one call, no sparing requirement).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fusion {
+    pub calls: BTreeSet<CallId>,
+    pub depth: u8,
+}
+
+impl Fusion {
+    pub fn singleton(c: CallId, prog: &Program, lib: &Library) -> Fusion {
+        let depth = lib.get(prog.call(c).func).depth();
+        Fusion {
+            calls: [c].into(),
+            depth,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.calls.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.calls.is_empty()
+    }
+
+    pub fn is_singleton(&self) -> bool {
+        self.calls.len() == 1
+    }
+
+    pub fn contains(&self, c: CallId) -> bool {
+        self.calls.contains(&c)
+    }
+
+    /// Human-readable id, e.g. `sgemv_0+sgemtv_1`.
+    pub fn label(&self, prog: &Program, lib: &Library) -> String {
+        self.calls
+            .iter()
+            .map(|c| format!("{}_{}", lib.get(prog.call(*c).func).name, c.0))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// Total words of one variable at problem scale (matrix → m·n, vector →
+/// its dim, scalar → 1).
+pub fn var_words(prog: &Program, v: VarId) -> Poly2 {
+    let decl = prog.var(v);
+    match decl.ty {
+        VarType::Scalar => Poly2::constant(1.0),
+        VarType::Vector => match decl.dims[0].0.as_str() {
+            "M" => Poly2::m(1.0),
+            _ => Poly2::n(1.0),
+        },
+        VarType::Matrix => Poly2::mn(1.0),
+    }
+}
+
+/// Words of global traffic a fusion spares relative to running its
+/// members as separate kernels (coarse, iteration-independent bound used
+/// for enumeration-stage pruning; exact per-plan traffic comes from
+/// codegen).
+pub fn spared_words(prog: &Program, graph: &DepGraph, set: &BTreeSet<CallId>) -> Poly2 {
+    let mut spared = Poly2::ZERO;
+    // (a) intermediates passed on-chip: each internal edge spares the
+    // consumer's load; if the variable dies inside the fusion it also
+    // spares the producer's store.
+    let mut counted_store: BTreeSet<VarId> = BTreeSet::new();
+    for e in graph.internal_edges(set) {
+        spared += var_words(prog, e.var);
+        let escapes = prog.is_output(e.var)
+            || prog.consumers(e.var).iter().any(|c| !set.contains(c));
+        if !escapes && counted_store.insert(e.var) {
+            spared += var_words(prog, e.var);
+        }
+    }
+    // (b) shared inputs: a variable read by k>1 members from global is
+    // loaded once instead of k times (BiCGK's matrix A).
+    let mut seen: BTreeSet<VarId> = BTreeSet::new();
+    for &c in set {
+        for &arg in &prog.call(c).args {
+            if prog.producer(arg).map(|p| set.contains(&p)) == Some(true) {
+                continue; // already counted as internal edge
+            }
+            if !seen.insert(arg) {
+                spared += var_words(prog, arg);
+            }
+        }
+    }
+    spared
+}
+
+/// Is `set` fusible under the §3.2 rules (ignoring the sparing test)?
+pub fn is_fusible(
+    prog: &Program,
+    lib: &Library,
+    graph: &DepGraph,
+    set: &BTreeSet<CallId>,
+) -> bool {
+    if set.is_empty() {
+        return false;
+    }
+    // uniform nesting depth
+    let mut depths = set.iter().map(|c| lib.get(prog.call(*c).func).depth());
+    let d0 = depths.next().unwrap();
+    if !depths.all(|d| d == d0) {
+        return false;
+    }
+    // no internal reduction edge
+    if graph.internal_edges(set).any(|e| e.reduction) {
+        return false;
+    }
+    // connected (dependency edges OR shared inputs — BiCGK's two calls
+    // are linked only through the shared matrix A) + convex
+    is_connected_with_shared_inputs(prog, graph, set) && graph.is_convex(set)
+}
+
+/// Weak connectivity over dependency edges ∪ shared-input links.
+fn is_connected_with_shared_inputs(
+    prog: &Program,
+    graph: &DepGraph,
+    set: &BTreeSet<CallId>,
+) -> bool {
+    if set.is_empty() {
+        return false;
+    }
+    let nodes: Vec<CallId> = set.iter().copied().collect();
+    let linked = |a: CallId, b: CallId| {
+        graph.successors(a).any(|s| s == b)
+            || graph.predecessors(a).any(|p| p == b)
+            || prog
+                .call(a)
+                .args
+                .iter()
+                .any(|v| prog.call(b).args.contains(v))
+    };
+    let mut seen: BTreeSet<CallId> = [nodes[0]].into();
+    let mut stack = vec![nodes[0]];
+    while let Some(c) = stack.pop() {
+        for &nb in &nodes {
+            if !seen.contains(&nb) && linked(c, nb) {
+                seen.insert(nb);
+                stack.push(nb);
+            }
+        }
+    }
+    seen.len() == set.len()
+}
+
+/// Enumerate all reasonable fusions of size ≥ 2: fusible sets that spare
+/// at least one word of transfer. Exhaustive over connected subgraphs —
+/// scripts are short (the paper's longest has 3 calls; ours ≤ 6).
+pub fn enumerate_fusions(prog: &Program, lib: &Library, graph: &DepGraph) -> Vec<Fusion> {
+    let n = prog.calls.len();
+    let mut out = Vec::new();
+    // Enumerate subsets via bitmask — n ≤ 16 by construction.
+    assert!(n <= 16, "script too long for exhaustive fusion enumeration");
+    for mask in 1u32..(1 << n) {
+        if mask.count_ones() < 2 {
+            continue;
+        }
+        let set: BTreeSet<CallId> = (0..n)
+            .filter(|i| mask & (1 << i) != 0)
+            .map(|i| CallId(i))
+            .collect();
+        if !is_fusible(prog, lib, graph, &set) {
+            continue;
+        }
+        if spared_words(prog, graph, &set).is_zero() {
+            continue; // prunes fusions that spare no transfers
+        }
+        let depth = lib
+            .get(prog.call(*set.iter().next().unwrap()).func)
+            .depth();
+        out.push(Fusion { calls: set, depth });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::script::compile_script;
+
+    fn setup(src: &str) -> (Program, Library, DepGraph) {
+        let lib = Library::standard();
+        let prog = compile_script("t", src, &lib).unwrap();
+        let g = DepGraph::build(&prog, &lib);
+        (prog, lib, g)
+    }
+
+    const BICGK: &str = "
+        matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+        input A, p, r;
+        q = sgemv(A, p);
+        s = sgemtv(A, r);
+        return q, s;
+    ";
+
+    #[test]
+    fn bicgk_fuses_on_shared_input() {
+        let (prog, lib, g) = setup(BICGK);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        assert_eq!(fusions.len(), 1);
+        assert_eq!(fusions[0].len(), 2);
+        assert_eq!(fusions[0].depth, 2);
+        // sparing = one read of A = m·n words
+        let sp = spared_words(&prog, &g, &fusions[0].calls);
+        assert_eq!(sp.mn, 1.0);
+    }
+
+    const ATAX: &str = "
+        matrix<MxN> A; subvector32 x, t, y;
+        input A, x;
+        t = sgemv(A, x);
+        y = sgemtv(A, t);
+        return y;
+    ";
+
+    #[test]
+    fn atax_cannot_fuse() {
+        // t is a reduction output consumed by the second call → global
+        // barrier → no fusion (paper §5.1: "ATAX … cannot be improved
+        // by fusion").
+        let (prog, lib, g) = setup(ATAX);
+        assert!(enumerate_fusions(&prog, &lib, &g).is_empty());
+    }
+
+    const AXPYDOT: &str = "
+        vector<N> w, v, u, z; scalar r;
+        input w, v, u;
+        z = waxpby(w, v, alpha=1.0, beta=-2.0);
+        r = sdot(z, u);
+        return z, r;
+    ";
+
+    #[test]
+    fn axpydot_fuses_map_into_reduce() {
+        let (prog, lib, g) = setup(AXPYDOT);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        assert_eq!(fusions.len(), 1);
+        // z escapes (program output) → only the consumer load is spared.
+        let sp = spared_words(&prog, &g, &fusions[0].calls);
+        assert_eq!(sp.n, 1.0);
+    }
+
+    #[test]
+    fn dying_intermediate_spares_store_too() {
+        let src = "
+            vector<N> a, b, c;
+            input a;
+            b = sscal(a, alpha=2.0);
+            c = sscal(b, alpha=3.0);
+            return c;
+        ";
+        let (prog, _, g) = setup(src);
+        let set: BTreeSet<CallId> = [CallId(0), CallId(1)].into();
+        // b dies inside → spare its store and its load: 2n words
+        assert_eq!(spared_words(&prog, &g, &set).n, 2.0);
+    }
+
+    #[test]
+    fn mixed_depth_not_fusible() {
+        let src = "
+            matrix<MxN> A; subvector32 x, t, y;
+            input A, x;
+            t = sgemv(A, x);
+            y = sscal(t, alpha=2.0);
+            return y;
+        ";
+        let (prog, lib, g) = setup(src);
+        let set: BTreeSet<CallId> = [CallId(0), CallId(1)].into();
+        assert!(!is_fusible(&prog, &lib, &g, &set));
+    }
+
+    const GEMVER: &str = "
+        matrix<MxN> A, B;
+        vector<M> u1, u2, y, w;
+        vector<N> v1, v2, z, x;
+        input A, u1, v1, u2, v2, y, z;
+        B = sger2(A, u1, v1, u2, v2);
+        x = sgemtvpz(B, y, z);
+        w = sgemv(B, x);
+        return B, x, w;
+    ";
+
+    #[test]
+    fn gemver_fusion_structure() {
+        let (prog, lib, g) = setup(GEMVER);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        // {ger2, gemtvpz} is the only legal multi-call fusion:
+        // the x edge (reduction) blocks {gemtvpz, gemv} and the triple;
+        // {ger2, gemv} is non-convex (path ger2→gemtvpz→gemv re-enters).
+        assert_eq!(fusions.len(), 1);
+        let f = &fusions[0];
+        assert!(f.contains(CallId(0)) && f.contains(CallId(1)));
+        // B escapes (program output) → sparing is B's consumer load (mn).
+        let sp = spared_words(&prog, &g, &f.calls);
+        assert!(sp.mn >= 1.0);
+    }
+
+    #[test]
+    fn label_is_stable() {
+        let (prog, lib, g) = setup(BICGK);
+        let f = &enumerate_fusions(&prog, &lib, &g)[0];
+        assert_eq!(f.label(&prog, &lib), "sgemv_0+sgemtv_1");
+    }
+
+    #[test]
+    fn singleton_helper() {
+        let (prog, lib, _) = setup(BICGK);
+        let s = Fusion::singleton(CallId(0), &prog, &lib);
+        assert!(s.is_singleton());
+        assert_eq!(s.depth, 2);
+    }
+}

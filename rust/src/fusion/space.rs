@@ -1,0 +1,334 @@
+//! Optimization-space construction (paper §4.2, step "generation of
+//! combinations of fusion implementations").
+//!
+//! A *partition* selects a set of fusions plus singletons covering every
+//! call in the script. A *combination* further chooses one concrete
+//! implementation per part. The space is pruned exactly as the paper
+//! describes: fusions that spare no transfers never enter (handled at
+//! enumeration), and fusion implementations dominated by another
+//! implementation of the same fusion — no better in on-chip memory,
+//! traffic, or synchronization — are dropped.
+
+use super::implgen::{gen_impls, FusionImpl, ImplAxes};
+use super::Fusion;
+use crate::codegen;
+use crate::graph::DepGraph;
+use crate::ir::plan::KernelPlan;
+use crate::ir::program::{CallId, Program};
+use crate::library::Library;
+use std::collections::BTreeSet;
+
+/// One way of covering all calls with fusions + singletons.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub parts: Vec<Fusion>,
+}
+
+impl Partition {
+    pub fn label(&self, prog: &Program, lib: &Library) -> String {
+        self.parts
+            .iter()
+            .map(|p| p.label(prog, lib))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+
+    /// Number of multi-call parts (0 = fully unfused).
+    pub fn n_fused(&self) -> usize {
+        self.parts.iter().filter(|p| !p.is_singleton()).count()
+    }
+}
+
+/// Enumerate every partition of the calls into non-overlapping parts
+/// drawn from `fusions` ∪ singletons.
+pub fn enumerate_partitions(
+    prog: &Program,
+    lib: &Library,
+    fusions: &[Fusion],
+) -> Vec<Partition> {
+    let n = prog.calls.len();
+    let mut out = Vec::new();
+    let mut parts: Vec<Fusion> = Vec::new();
+    fn rec(
+        next: usize,
+        n: usize,
+        covered: &mut BTreeSet<CallId>,
+        parts: &mut Vec<Fusion>,
+        fusions: &[Fusion],
+        prog: &Program,
+        lib: &Library,
+        out: &mut Vec<Partition>,
+    ) {
+        if covered.len() == n {
+            out.push(Partition {
+                parts: parts.clone(),
+            });
+            return;
+        }
+        // first uncovered call
+        let c = (next..n)
+            .map(CallId)
+            .find(|c| !covered.contains(c))
+            .unwrap();
+        // option 1: c stays a singleton
+        let s = Fusion::singleton(c, prog, lib);
+        covered.insert(c);
+        parts.push(s);
+        rec(next + 1, n, covered, parts, fusions, prog, lib, out);
+        parts.pop();
+        covered.remove(&c);
+        // option 2: any fusion containing c and disjoint from covered
+        for f in fusions {
+            if !f.contains(c) || f.calls.iter().any(|x| covered.contains(x)) {
+                continue;
+            }
+            for &x in &f.calls {
+                covered.insert(x);
+            }
+            parts.push(f.clone());
+            rec(next + 1, n, covered, parts, fusions, prog, lib, out);
+            parts.pop();
+            for &x in &f.calls {
+                covered.remove(&x);
+            }
+        }
+    }
+    let mut covered = BTreeSet::new();
+    rec(0, n, &mut covered, &mut parts, fusions, prog, lib, &mut out);
+    out
+}
+
+/// An implementation with its generated plan (the unit the predictor
+/// ranks and the autotuner runs).
+#[derive(Clone, Debug)]
+pub struct PlannedImpl {
+    pub fi: FusionImpl,
+    pub plan: KernelPlan,
+}
+
+/// Generate + prune the implementations of one part.
+///
+/// Pruning follows the paper's on-chip rule: an implementation is
+/// dropped when another implementation of the same fusion **with the
+/// same calling order, block packing, iteration count and loop axis**
+/// (i.e. differing only in the chosen elementary-function variants) uses
+/// no less on-chip memory and registers while offering no better
+/// instruction efficiency — it is dominated in resources with nothing in
+/// return. Configuration axes (iterations, packing, loop axis) are left
+/// to the performance predictor, which is what ranks them in the paper.
+pub fn planned_impls(
+    prog: &Program,
+    lib: &Library,
+    graph: &DepGraph,
+    part: &Fusion,
+    axes: &ImplAxes,
+) -> Vec<PlannedImpl> {
+    let all: Vec<PlannedImpl> = gen_impls(prog, lib, graph, part, axes)
+        .into_iter()
+        .map(|fi| {
+            let plan = codegen::generate(prog, lib, &fi);
+            PlannedImpl { fi, plan }
+        })
+        .collect();
+    // Precompute group/resource keys once — the pairwise domination scan
+    // is O(n²) and cloning per pair dominated space construction
+    // (EXPERIMENTS.md §Perf).
+    let groups: Vec<(&[CallId], u32, u32, crate::ir::plan::IterDim)> = all
+        .iter()
+        .map(|p| (p.fi.order.as_slice(), p.fi.ipb, p.fi.iters, p.fi.iter_dim))
+        .collect();
+    let keys: Vec<(u32, u32, i64)> = all
+        .iter()
+        .map(|p| {
+            (
+                p.plan.smem_words,
+                p.plan.regs_per_thread,
+                // negate efficiency so "smaller is better" uniformly
+                -(p.plan.compute_efficiency * 1e6) as i64,
+            )
+        })
+        .collect();
+    let mut keep = Vec::with_capacity(all.len());
+    'outer: for i in 0..all.len() {
+        let (ga, ka) = (&groups[i], keys[i]);
+        for j in 0..all.len() {
+            if i == j || &groups[j] != ga {
+                continue;
+            }
+            let kb = keys[j];
+            let no_worse = kb.0 <= ka.0 && kb.1 <= ka.1 && kb.2 <= ka.2;
+            let strictly = kb != ka;
+            if (no_worse && strictly) || (kb == ka && j < i) {
+                continue 'outer;
+            }
+        }
+        keep.push(all[i].clone());
+    }
+    keep
+}
+
+/// The pruned optimization space of a whole script.
+pub struct Space {
+    pub partitions: Vec<Partition>,
+    /// Pruned implementations per partition part:
+    /// `impls[pi][part_idx]` = candidates for that part.
+    pub impls: Vec<Vec<Vec<PlannedImpl>>>,
+}
+
+impl Space {
+    pub fn build(
+        prog: &Program,
+        lib: &Library,
+        graph: &DepGraph,
+        fusions: &[Fusion],
+        axes: &ImplAxes,
+    ) -> Space {
+        let partitions = enumerate_partitions(prog, lib, fusions);
+        // cache per distinct fusion (parts repeat across partitions)
+        let mut cache: Vec<(Fusion, Vec<PlannedImpl>)> = Vec::new();
+        let mut impls = Vec::with_capacity(partitions.len());
+        for part_list in &partitions {
+            let mut per_part = Vec::with_capacity(part_list.parts.len());
+            for part in &part_list.parts {
+                if let Some((_, v)) = cache.iter().find(|(f, _)| f == part) {
+                    per_part.push(v.clone());
+                } else {
+                    let v = planned_impls(prog, lib, graph, part, axes);
+                    cache.push((part.clone(), v.clone()));
+                    per_part.push(v);
+                }
+            }
+            impls.push(per_part);
+        }
+        Space { partitions, impls }
+    }
+
+    /// Total number of combinations of fusion implementations
+    /// (Table 4's "Impl. count").
+    pub fn combination_count(&self) -> usize {
+        self.impls
+            .iter()
+            .map(|per_part| {
+                per_part
+                    .iter()
+                    .map(|v| v.len())
+                    .product::<usize>()
+            })
+            .sum()
+    }
+
+    /// Iterate all combinations as (partition index, per-part impl
+    /// indices). Callers materialize plans on demand.
+    pub fn combinations(&self) -> impl Iterator<Item = (usize, Vec<usize>)> + '_ {
+        self.impls.iter().enumerate().flat_map(|(pi, per_part)| {
+            let counts: Vec<usize> = per_part.iter().map(|v| v.len()).collect();
+            let total: usize = counts.iter().product();
+            (0..total).map(move |mut ix| {
+                let mut choice = Vec::with_capacity(counts.len());
+                for &c in &counts {
+                    choice.push(ix % c);
+                    ix /= c;
+                }
+                (pi, choice)
+            })
+        })
+    }
+
+    /// Materialize one combination as the per-part implementations.
+    pub fn combination(&self, pi: usize, choice: &[usize]) -> Vec<&PlannedImpl> {
+        self.impls[pi]
+            .iter()
+            .zip(choice.iter())
+            .map(|(v, &i)| &v[i])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::enumerate_fusions;
+    use crate::script::compile_script;
+
+    fn setup(src: &str) -> (Program, Library, DepGraph) {
+        let lib = Library::standard();
+        let prog = compile_script("t", src, &lib).unwrap();
+        let g = DepGraph::build(&prog, &lib);
+        (prog, lib, g)
+    }
+
+    const BICGK: &str = "
+        matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+        input A, p, r;
+        q = sgemv(A, p);
+        s = sgemtv(A, r);
+        return q, s;
+    ";
+
+    #[test]
+    fn bicgk_partitions() {
+        let (prog, lib, g) = setup(BICGK);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        let parts = enumerate_partitions(&prog, &lib, &fusions);
+        // {singleton, singleton} and {fused pair}
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts.iter().filter(|p| p.n_fused() == 1).count(), 1);
+    }
+
+    #[test]
+    fn space_counts_and_prunes() {
+        let (prog, lib, g) = setup(BICGK);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        let axes = ImplAxes::default();
+        let space = Space::build(&prog, &lib, &g, &fusions, &axes);
+        let count = space.combination_count();
+        assert!(count > 2, "space too small: {count}");
+        // pruning must keep at least one impl per part
+        for per_part in &space.impls {
+            for v in per_part {
+                assert!(!v.is_empty());
+            }
+        }
+        // iterating combinations yields exactly `count`
+        assert_eq!(space.combinations().count(), count);
+    }
+
+    #[test]
+    fn pruning_reduces_space() {
+        let (prog, lib, g) = setup(BICGK);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        let axes = ImplAxes::default();
+        let raw: usize = gen_impls(&prog, &lib, &g, &fusions[0], &axes).len();
+        let pruned = planned_impls(&prog, &lib, &g, &fusions[0], &axes).len();
+        assert!(pruned < raw, "pruning had no effect ({pruned} of {raw})");
+        assert!(pruned >= 1);
+    }
+
+    #[test]
+    fn atax_single_partition() {
+        let src = "
+            matrix<MxN> A; subvector32 x, t, y;
+            input A, x;
+            t = sgemv(A, x);
+            y = sgemtv(A, t);
+            return y;
+        ";
+        let (prog, lib, g) = setup(src);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        assert!(fusions.is_empty());
+        let parts = enumerate_partitions(&prog, &lib, &fusions);
+        assert_eq!(parts.len(), 1); // all singletons, only option
+        assert_eq!(parts[0].parts.len(), 2);
+    }
+
+    #[test]
+    fn combination_materializes() {
+        let (prog, lib, g) = setup(BICGK);
+        let fusions = enumerate_fusions(&prog, &lib, &g);
+        let space = Space::build(&prog, &lib, &g, &fusions, &ImplAxes::minimal());
+        let (pi, choice) = space.combinations().next().unwrap();
+        let combo = space.combination(pi, &choice);
+        let total_calls: usize = combo.iter().map(|p| p.fi.fusion.len()).sum();
+        assert_eq!(total_calls, prog.calls.len());
+    }
+}

@@ -1,0 +1,326 @@
+//! Data-dependency graph over elementary-function calls (paper §4.2:
+//! "vertices represent elementary function calls and edges represent
+//! data dependency between functions").
+//!
+//! Edges carry the variable they transport and whether the producer side
+//! is a reduction result (in which case a global barrier — a kernel
+//! boundary — must separate producer and consumer, §3.2.2).
+
+use crate::ir::program::{CallId, Program, VarId};
+use crate::library::Library;
+use std::collections::BTreeSet;
+
+/// One data dependency `from → to` via variable `var`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DepEdge {
+    pub from: CallId,
+    pub to: CallId,
+    pub var: VarId,
+    /// Producer's output is a reduction result: consuming it inside the
+    /// producing kernel is impossible (needs a global barrier).
+    pub reduction: bool,
+}
+
+/// The dependency graph of a program.
+#[derive(Clone, Debug)]
+pub struct DepGraph {
+    pub n: usize,
+    pub edges: Vec<DepEdge>,
+    /// `shared_inputs[i]` = calls reading input/intermediate variable i
+    /// (used to find fusions that spare *input re-reads*, e.g. BiCGK's A).
+    succ: Vec<Vec<usize>>,
+    pred: Vec<Vec<usize>>,
+}
+
+impl DepGraph {
+    pub fn build(prog: &Program, lib: &Library) -> DepGraph {
+        let n = prog.calls.len();
+        let mut edges = Vec::new();
+        let mut succ = vec![Vec::new(); n];
+        let mut pred = vec![Vec::new(); n];
+        for (ci, call) in prog.calls.iter().enumerate() {
+            for &arg in &call.args {
+                if let Some(producer) = prog.producer(arg) {
+                    let pf = lib.get(prog.call(producer).func);
+                    edges.push(DepEdge {
+                        from: producer,
+                        to: CallId(ci),
+                        var: arg,
+                        reduction: pf.hof.output_needs_global_barrier(),
+                    });
+                    succ[producer.0].push(ci);
+                    pred[ci].push(producer.0);
+                }
+            }
+        }
+        DepGraph {
+            n,
+            edges,
+            succ,
+            pred,
+        }
+    }
+
+    pub fn successors(&self, c: CallId) -> impl Iterator<Item = CallId> + '_ {
+        self.succ[c.0].iter().map(|&i| CallId(i))
+    }
+
+    pub fn predecessors(&self, c: CallId) -> impl Iterator<Item = CallId> + '_ {
+        self.pred[c.0].iter().map(|&i| CallId(i))
+    }
+
+    /// Edges internal to a set of calls.
+    pub fn internal_edges<'a>(
+        &'a self,
+        set: &'a BTreeSet<CallId>,
+    ) -> impl Iterator<Item = &'a DepEdge> {
+        self.edges
+            .iter()
+            .filter(move |e| set.contains(&e.from) && set.contains(&e.to))
+    }
+
+    /// Is the set weakly connected (treating edges as undirected)?
+    /// Fusions must be connected to spare any transfer.
+    pub fn is_connected(&self, set: &BTreeSet<CallId>) -> bool {
+        if set.is_empty() {
+            return false;
+        }
+        let mut seen = BTreeSet::new();
+        let start = *set.iter().next().unwrap();
+        let mut stack = vec![start];
+        seen.insert(start);
+        while let Some(c) = stack.pop() {
+            for nb in self
+                .successors(c)
+                .chain(self.predecessors(c))
+                .collect::<Vec<_>>()
+            {
+                if set.contains(&nb) && seen.insert(nb) {
+                    stack.push(nb);
+                }
+            }
+        }
+        seen.len() == set.len()
+    }
+
+    /// Convexity: no path leaves `set` and re-enters it. A non-convex
+    /// fusion cannot be scheduled as one kernel (some outside call needs
+    /// the fusion's output *and* feeds its input).
+    pub fn is_convex(&self, set: &BTreeSet<CallId>) -> bool {
+        // For each node reachable *from* the set through outside nodes,
+        // check it cannot reach back into the set.
+        let mut outside_reached: BTreeSet<usize> = BTreeSet::new();
+        let mut stack: Vec<usize> = Vec::new();
+        for &c in set {
+            for s in self.successors(c) {
+                if !set.contains(&s) && outside_reached.insert(s.0) {
+                    stack.push(s.0);
+                }
+            }
+        }
+        while let Some(u) = stack.pop() {
+            if set.contains(&CallId(u)) {
+                return false;
+            }
+            for &v in &self.succ[u] {
+                if set.contains(&CallId(v)) {
+                    return false;
+                }
+                if outside_reached.insert(v) {
+                    stack.push(v);
+                }
+            }
+        }
+        true
+    }
+
+    /// Topological order of all calls (scripts are already ordered, but
+    /// plans permute within fusions; used for verification).
+    pub fn topo_order(&self) -> Vec<CallId> {
+        let mut indeg: Vec<usize> = (0..self.n).map(|i| self.pred[i].len()).collect();
+        let mut queue: Vec<usize> = (0..self.n).filter(|&i| indeg[i] == 0).collect();
+        let mut out = Vec::with_capacity(self.n);
+        while let Some(u) = queue.pop() {
+            out.push(CallId(u));
+            for &v in &self.succ[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        assert_eq!(out.len(), self.n, "dependency cycle (SSA should prevent)");
+        out
+    }
+
+    /// All topological orders of a *subset* (used to enumerate calling
+    /// orders of a fusion, §4.2 "calling order of functions"). Capped to
+    /// avoid factorial blowup on large fusions.
+    pub fn topo_orders_of(&self, set: &BTreeSet<CallId>, cap: usize) -> Vec<Vec<CallId>> {
+        let nodes: Vec<CallId> = set.iter().copied().collect();
+        let mut orders = Vec::new();
+        let mut cur = Vec::new();
+        let mut used = vec![false; nodes.len()];
+        self.extend_orders(&nodes, set, &mut used, &mut cur, &mut orders, cap);
+        orders
+    }
+
+    fn extend_orders(
+        &self,
+        nodes: &[CallId],
+        set: &BTreeSet<CallId>,
+        used: &mut Vec<bool>,
+        cur: &mut Vec<CallId>,
+        orders: &mut Vec<Vec<CallId>>,
+        cap: usize,
+    ) {
+        if orders.len() >= cap {
+            return;
+        }
+        if cur.len() == nodes.len() {
+            orders.push(cur.clone());
+            return;
+        }
+        for (i, &cand) in nodes.iter().enumerate() {
+            if used[i] {
+                continue;
+            }
+            // all in-set predecessors must already be placed
+            let ready = self
+                .predecessors(cand)
+                .filter(|p| set.contains(p))
+                .all(|p| cur.contains(&p));
+            if ready {
+                used[i] = true;
+                cur.push(cand);
+                self.extend_orders(nodes, set, used, cur, orders, cap);
+                cur.pop();
+                used[i] = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::script::compile_script;
+
+    fn graph_of(src: &str) -> (Program, Library, DepGraph) {
+        let lib = Library::standard();
+        let prog = compile_script("t", src, &lib).unwrap();
+        let g = DepGraph::build(&prog, &lib);
+        (prog, lib, g)
+    }
+
+    const AXPYDOT: &str = "
+        vector<N> w, v, u, z; scalar r;
+        input w, v, u;
+        z = waxpby(w, v, alpha=1.0, beta=-2.0);
+        r = sdot(z, u);
+        return z, r;
+    ";
+
+    #[test]
+    fn axpydot_edge_is_nonreduction() {
+        let (_, _, g) = graph_of(AXPYDOT);
+        assert_eq!(g.n, 2);
+        assert_eq!(g.edges.len(), 1);
+        assert!(!g.edges[0].reduction); // waxpby output is a map result
+        assert_eq!(g.edges[0].from, CallId(0));
+    }
+
+    const ATAX: &str = "
+        matrix<MxN> A; subvector32 x, t, y;
+        input A, x;
+        t = sgemv(A, x);
+        y = sgemtv(A, t);
+        return y;
+    ";
+
+    #[test]
+    fn atax_edge_is_reduction() {
+        let (_, _, g) = graph_of(ATAX);
+        assert_eq!(g.edges.len(), 1);
+        assert!(g.edges[0].reduction); // gemv output needs global barrier
+    }
+
+    const BICGK: &str = "
+        matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+        input A, p, r;
+        q = sgemv(A, p);
+        s = sgemtv(A, r);
+        return q, s;
+    ";
+
+    #[test]
+    fn bicgk_has_no_edges_but_shares_a() {
+        let (prog, _, g) = graph_of(BICGK);
+        assert!(g.edges.is_empty()); // independent calls...
+        let a = prog.var_id("A").unwrap();
+        assert_eq!(prog.consumers(a).len(), 2); // ...sharing input A
+    }
+
+    #[test]
+    fn connectivity() {
+        let (_, _, g) = graph_of(ATAX);
+        let both: BTreeSet<CallId> = [CallId(0), CallId(1)].into();
+        assert!(g.is_connected(&both));
+        let single: BTreeSet<CallId> = [CallId(0)].into();
+        assert!(g.is_connected(&single));
+        assert!(!g.is_connected(&BTreeSet::new()));
+        // BiCGK's two calls share no edge → not connected as a set
+        let (_, _, gb) = graph_of(BICGK);
+        assert!(!gb.is_connected(&both));
+    }
+
+    #[test]
+    fn convexity_detects_sandwich() {
+        // c0 → c1 → c2 with {c0, c2} non-convex
+        let src = "
+            vector<N> a, b, c, d;
+            input a;
+            b = sscal(a, alpha=2.0);
+            c = sscal(b, alpha=3.0);
+            d = sscal(c, alpha=4.0);
+            return d;
+        ";
+        let (_, _, g) = graph_of(src);
+        let sandwich: BTreeSet<CallId> = [CallId(0), CallId(2)].into();
+        assert!(!g.is_convex(&sandwich));
+        let chain: BTreeSet<CallId> = [CallId(0), CallId(1)].into();
+        assert!(g.is_convex(&chain));
+    }
+
+    #[test]
+    fn topo_orders_of_independent_pair() {
+        let (_, _, g) = graph_of(BICGK);
+        let both: BTreeSet<CallId> = [CallId(0), CallId(1)].into();
+        let orders = g.topo_orders_of(&both, 16);
+        assert_eq!(orders.len(), 2); // both orders legal
+    }
+
+    #[test]
+    fn topo_orders_respect_deps() {
+        let (_, _, g) = graph_of(ATAX);
+        let both: BTreeSet<CallId> = [CallId(0), CallId(1)].into();
+        let orders = g.topo_orders_of(&both, 16);
+        assert_eq!(orders, vec![vec![CallId(0), CallId(1)]]);
+    }
+
+    #[test]
+    fn topo_order_full() {
+        let (_, _, g) = graph_of(ATAX);
+        let order = g.topo_order();
+        let p0 = order.iter().position(|&c| c == CallId(0)).unwrap();
+        let p1 = order.iter().position(|&c| c == CallId(1)).unwrap();
+        assert!(p0 < p1);
+    }
+
+    #[test]
+    fn order_cap_respected() {
+        let (_, _, g) = graph_of(BICGK);
+        let both: BTreeSet<CallId> = [CallId(0), CallId(1)].into();
+        assert_eq!(g.topo_orders_of(&both, 1).len(), 1);
+    }
+}

@@ -1,0 +1,186 @@
+//! Element types and symbolic dimensions.
+//!
+//! The paper fixes two "large" element granularities that make parallel
+//! first-order functions worthwhile: a 32-float sub-vector and a 32×32
+//! tile (§4.4). Scalars appear as reduction results and coefficients.
+
+use std::fmt;
+
+/// Side length of the paper's tile / sub-vector granularity.
+pub const TILE: usize = 32;
+
+/// The element granularity an elementary function consumes/produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElemType {
+    /// A single float (reduction results, coefficients).
+    Scalar,
+    /// `subvector32` — 32 consecutive floats.
+    SubVector,
+    /// `TILE32x32` — a 32×32 tile of a matrix.
+    Tile,
+}
+
+impl ElemType {
+    /// Words (f32) per element.
+    pub fn words(self) -> usize {
+        match self {
+            ElemType::Scalar => 1,
+            ElemType::SubVector => TILE,
+            ElemType::Tile => TILE * TILE,
+        }
+    }
+
+    /// Shared-memory words one element occupies, *including padding*:
+    /// tiles are stored 33-wide to avoid bank conflicts on column access
+    /// (paper §4.4: "A is allocated as array of size 33 × 32").
+    pub fn smem_words_padded(self) -> usize {
+        match self {
+            ElemType::Scalar => 1,
+            ElemType::SubVector => TILE,
+            ElemType::Tile => (TILE + 1) * TILE,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::Scalar => "scalar",
+            ElemType::SubVector => "subvector32",
+            ElemType::Tile => "TILE32x32",
+        }
+    }
+}
+
+impl fmt::Display for ElemType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Structural type of a script variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VarType {
+    /// A single scalar value.
+    Scalar,
+    /// A vector: 1-D list of [`ElemType::SubVector`] elements.
+    Vector,
+    /// A matrix: 2-D list of [`ElemType::Tile`] elements.
+    Matrix,
+}
+
+impl VarType {
+    pub fn elem(self) -> ElemType {
+        match self {
+            VarType::Scalar => ElemType::Scalar,
+            VarType::Vector => ElemType::SubVector,
+            VarType::Matrix => ElemType::Tile,
+        }
+    }
+
+    pub fn rank(self) -> usize {
+        match self {
+            VarType::Scalar => 0,
+            VarType::Vector => 1,
+            VarType::Matrix => 2,
+        }
+    }
+}
+
+/// A symbolic dimension name appearing in the script (`M`, `N`, …).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DimSym(pub String);
+
+impl DimSym {
+    pub fn new(s: &str) -> Self {
+        DimSym(s.to_string())
+    }
+}
+
+impl fmt::Display for DimSym {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Concrete problem size binding the script's symbolic dims at run /
+/// simulation time. All sizes are in *scalars* and must be multiples of
+/// [`TILE`] (the paper pads to 32 in each dimension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProblemSize {
+    /// Rows (the `M` symbol).
+    pub m: usize,
+    /// Columns (the `N` symbol).
+    pub n: usize,
+}
+
+impl ProblemSize {
+    pub fn square(n: usize) -> Self {
+        ProblemSize { m: n, n }
+    }
+
+    pub fn new(m: usize, n: usize) -> Self {
+        ProblemSize { m, n }
+    }
+
+    /// Pad both dims up to a multiple of [`TILE`], as the paper requires.
+    pub fn padded(self) -> Self {
+        let pad = |x: usize| x.div_ceil(TILE) * TILE;
+        ProblemSize {
+            m: pad(self.m),
+            n: pad(self.n),
+        }
+    }
+
+    pub fn dim(&self, sym: &DimSym) -> usize {
+        match sym.0.as_str() {
+            "M" => self.m,
+            "N" => self.n,
+            other => panic!("unbound dimension symbol '{other}'"),
+        }
+    }
+
+    /// Number of elements along one symbolic dim (in TILE units).
+    pub fn tiles(&self, sym: &DimSym) -> usize {
+        self.dim(sym).div_ceil(TILE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn element_word_counts() {
+        assert_eq!(ElemType::Scalar.words(), 1);
+        assert_eq!(ElemType::SubVector.words(), 32);
+        assert_eq!(ElemType::Tile.words(), 1024);
+    }
+
+    #[test]
+    fn tile_padding_avoids_bank_conflicts() {
+        assert_eq!(ElemType::Tile.smem_words_padded(), 33 * 32);
+        assert_eq!(ElemType::SubVector.smem_words_padded(), 32);
+    }
+
+    #[test]
+    fn var_types_map_to_elements() {
+        assert_eq!(VarType::Matrix.elem(), ElemType::Tile);
+        assert_eq!(VarType::Vector.elem(), ElemType::SubVector);
+        assert_eq!(VarType::Scalar.rank(), 0);
+        assert_eq!(VarType::Matrix.rank(), 2);
+    }
+
+    #[test]
+    fn problem_size_padding() {
+        let p = ProblemSize::new(100, 33).padded();
+        assert_eq!(p.m, 128);
+        assert_eq!(p.n, 64);
+        assert_eq!(p.tiles(&DimSym::new("M")), 4);
+        assert_eq!(p.tiles(&DimSym::new("N")), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound dimension symbol")]
+    fn unknown_dim_panics() {
+        ProblemSize::square(32).dim(&DimSym::new("K"));
+    }
+}

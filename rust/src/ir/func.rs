@@ -1,0 +1,407 @@
+//! Elementary functions: the paper's fusible kernel unit (§4.3).
+//!
+//! An elementary function implements one higher-order function (map,
+//! reduce, or their nesting) applying a possibly-parallel first-order
+//! function to elements. It is decomposed into `load` / `compute` /
+//! `store` *routines* and carries metadata: required parallelism,
+//! thread-to-data mapping, per-parameter index behaviour, flop and word
+//! counts. The compiler never parses kernel bodies — it glues routines,
+//! exactly as the paper's compiler does.
+
+use super::elem::ElemType;
+use std::fmt;
+
+/// Index into [`crate::library::Library`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FuncId(pub usize);
+
+/// The higher-order function an elementary function implements.
+///
+/// Nesting level 2 means "mapped X": the outer map runs over rows (or
+/// columns) of a matrix, the inner function over the elements of that
+/// row. A map cannot be a reduction operator (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HigherOrder {
+    /// `map(f, L…)` over vector elements. Depth 1.
+    Map,
+    /// `reduce(⊕, L)` (possibly with a fused element-wise pre-map, e.g.
+    /// DOT's multiply). Produces a scalar after a global barrier. Depth 1.
+    Reduce,
+    /// `map(map(f))` over matrix tiles (e.g. `C = A + B`, rank-1 update).
+    /// Depth 2.
+    NestedMap,
+    /// `map(reduce(⊕, map(f)))` — per-row (or per-column) reduction over
+    /// matrix tiles, e.g. GEMV. Produces a vector; every element is a
+    /// reduction result. Depth 2.
+    NestedReduce,
+}
+
+impl HigherOrder {
+    pub fn depth(self) -> u8 {
+        match self {
+            HigherOrder::Map | HigherOrder::Reduce => 1,
+            HigherOrder::NestedMap | HigherOrder::NestedReduce => 2,
+        }
+    }
+
+    /// Does the function's *output* require a global barrier before use
+    /// (i.e. is it a reduction result)? Such outputs may never be
+    /// consumed inside the fusion that produces them (§3.2.2).
+    pub fn output_needs_global_barrier(self) -> bool {
+        matches!(self, HigherOrder::Reduce | HigherOrder::NestedReduce)
+    }
+}
+
+impl fmt::Display for HigherOrder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            HigherOrder::Map => "map",
+            HigherOrder::Reduce => "reduce",
+            HigherOrder::NestedMap => "map∘map",
+            HigherOrder::NestedReduce => "map∘reduce",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// How a parameter's element index depends on the kernel's grid axes.
+///
+/// For depth-2 functions the grid is 2-D: `Row` is the outer (row-tile)
+/// axis, `Col` the inner (column-tile) axis. For depth-1 functions the
+/// only axis is `Elem`. `None` marks scalars / full-reduction results.
+///
+/// Hoisting (Algorithm 1 lines 4–5, 10) is derived from this: when the
+/// kernel serially iterates axis `d`, a parameter not indexed by `d` is
+/// *invariant* (load hoisted before the loop) and an output not indexed
+/// by `d` is *accumulable* (cleared before, stored after the loop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Ix {
+    None,
+    Elem,
+    Row,
+    Col,
+    Both,
+}
+
+impl Ix {
+    /// Is the parameter's index varying along the given iteration axis?
+    pub fn varies_along(self, iter_over_rows: bool) -> bool {
+        match self {
+            Ix::None => false,
+            Ix::Elem => true, // depth-1 kernels iterate their only axis
+            Ix::Row => iter_over_rows,
+            Ix::Col => !iter_over_rows,
+            Ix::Both => true,
+        }
+    }
+}
+
+/// Thread-to-data mapping identifier (§3.2.3). Two routines exchanging an
+/// element can keep it in *registers* only when their mappings are equal
+/// and indexing is compile-time static; otherwise the element lives in
+/// shared memory and a local barrier separates them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ThreadMap {
+    /// One thread owns the whole (scalar) element.
+    Single,
+    /// 32 consecutive threads own 32 consecutive words (sub-vector).
+    Vec32,
+    /// 2-D block owns a tile row-major: thread (x,y) owns words
+    /// `A[y + k·by][x]`.
+    TileRowMajor,
+    /// 2-D block reads a tile column-major (transposed access).
+    TileColMajor,
+    /// Block-wide tree reduction (mapping varies across phases).
+    BlockReduce,
+}
+
+/// Role of a routine within an elementary function.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutineKind {
+    /// Load input `idx` (function-local input ordinal) global → on-chip.
+    Load { input: usize },
+    /// Compute over on-chip data.
+    Compute,
+    /// Store output `idx` on-chip → global.
+    Store { output: usize },
+}
+
+impl RoutineKind {
+    pub fn is_load(self) -> bool {
+        matches!(self, RoutineKind::Load { .. })
+    }
+    pub fn is_store(self) -> bool {
+        matches!(self, RoutineKind::Store { .. })
+    }
+    pub fn is_transfer(self) -> bool {
+        !matches!(self, RoutineKind::Compute)
+    }
+}
+
+/// One `__device__` routine of an elementary function.
+#[derive(Clone, Debug)]
+pub struct Routine {
+    pub kind: RoutineKind,
+    /// Human name, mirrors the paper's `d_sgemv_1_load_1` style.
+    pub name: String,
+    /// Threads one instance of this routine uses, `(x, y)`.
+    pub threads: (u32, u32),
+    /// Thread-to-data mapping of the element(s) it touches.
+    pub mapping: ThreadMap,
+    /// Global-memory words moved per instance (loads + stores; 0 for
+    /// compute routines).
+    pub global_words: u64,
+    /// Flops per instance (compute routines; 0 for transfers).
+    pub flops: u64,
+    /// Whether the routine ends in an atomic global accumulation (the
+    /// paper's partial-reduction stores, Listing 2 `atomicAdd`).
+    pub uses_atomic: bool,
+}
+
+impl Routine {
+    pub fn threads_total(&self) -> u32 {
+        self.threads.0 * self.threads.1
+    }
+}
+
+/// One parameter (input or output) of an elementary function.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub elem: ElemType,
+    /// Index behaviour (drives invariance/accumulability, §4.3.2).
+    pub ix: Ix,
+}
+
+/// An alternative implementation of an elementary function (the library
+/// may hold several, §4.1: "different performance characteristics").
+#[derive(Clone, Debug)]
+pub struct FuncVariant {
+    pub name: String,
+    /// Thread block shape used per *instance*, `(x, y)`.
+    pub threads: (u32, u32),
+    /// Registers per thread (occupancy input).
+    pub regs_per_thread: u32,
+    /// Extra scratch shared-memory words per instance beyond the
+    /// exchanged elements (e.g. reduction staging buffers).
+    pub scratch_smem_words: u32,
+    /// Relative instruction efficiency (1.0 = the tuned reference; a
+    /// variant trading registers for fewer instructions may exceed it).
+    pub compute_efficiency: f64,
+    /// Whether instances may share a block (unnested functions pack
+    /// several instances per block; nested tile functions run one
+    /// instance per block — paper §4.4).
+    pub multi_instance: bool,
+}
+
+/// An elementary function: metadata + routines + implementation variants.
+#[derive(Clone, Debug)]
+pub struct ElemFunc {
+    pub name: String,
+    pub hof: HigherOrder,
+    pub inputs: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+    /// Names of scalar coefficients (α, β) — free at kernel launch,
+    /// no memory traffic.
+    pub scalars: Vec<String>,
+    /// Flops one instance performs.
+    pub flops_per_instance: u64,
+    pub routines: Vec<Routine>,
+    pub variants: Vec<FuncVariant>,
+}
+
+impl ElemFunc {
+    pub fn depth(&self) -> u8 {
+        self.hof.depth()
+    }
+
+    pub fn load_routine(&self, input: usize) -> &Routine {
+        self.routines
+            .iter()
+            .find(|r| r.kind == RoutineKind::Load { input })
+            .unwrap_or_else(|| panic!("{}: no load routine for input {input}", self.name))
+    }
+
+    pub fn compute_routine(&self) -> &Routine {
+        self.routines
+            .iter()
+            .find(|r| r.kind == RoutineKind::Compute)
+            .unwrap_or_else(|| panic!("{}: no compute routine", self.name))
+    }
+
+    pub fn store_routine(&self, output: usize) -> &Routine {
+        self.routines
+            .iter()
+            .find(|r| r.kind == RoutineKind::Store { output })
+            .unwrap_or_else(|| panic!("{}: no store routine for output {output}", self.name))
+    }
+
+    /// Validate internal consistency; called by library unit tests for
+    /// every registered function.
+    pub fn validate(&self) -> Result<(), String> {
+        let e = |msg: String| Err(format!("{}: {}", self.name, msg));
+        if self.outputs.is_empty() {
+            return e("no outputs".into());
+        }
+        for (i, _) in self.inputs.iter().enumerate() {
+            if !self
+                .routines
+                .iter()
+                .any(|r| r.kind == RoutineKind::Load { input: i })
+            {
+                return e(format!("missing load routine for input {i}"));
+            }
+        }
+        for (i, _) in self.outputs.iter().enumerate() {
+            if !self
+                .routines
+                .iter()
+                .any(|r| r.kind == RoutineKind::Store { output: i })
+            {
+                return e(format!("missing store routine for output {i}"));
+            }
+        }
+        if !self.routines.iter().any(|r| r.kind == RoutineKind::Compute) {
+            return e("missing compute routine".into());
+        }
+        if self.variants.is_empty() {
+            return e("no implementation variants".into());
+        }
+        // Depth-1 params must use Elem/None indexing; depth-2 must not
+        // use Elem.
+        for p in self.inputs.iter().chain(self.outputs.iter()) {
+            match (self.depth(), p.ix) {
+                (1, Ix::Row | Ix::Col | Ix::Both) => {
+                    return e(format!("param {} uses 2-D index in depth-1 func", p.name))
+                }
+                (2, Ix::Elem) => {
+                    return e(format!("param {} uses 1-D index in depth-2 func", p.name))
+                }
+                _ => {}
+            }
+        }
+        // Reduction outputs must not be indexed along both axes.
+        if self.hof == HigherOrder::NestedReduce {
+            for o in &self.outputs {
+                if o.ix == Ix::Both {
+                    return e(format!("reduction output {} indexed by both axes", o.name));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_func() -> ElemFunc {
+        ElemFunc {
+            name: "dummy".into(),
+            hof: HigherOrder::Map,
+            inputs: vec![ParamSpec {
+                name: "x".into(),
+                elem: ElemType::SubVector,
+                ix: Ix::Elem,
+            }],
+            outputs: vec![ParamSpec {
+                name: "y".into(),
+                elem: ElemType::SubVector,
+                ix: Ix::Elem,
+            }],
+            scalars: vec![],
+            flops_per_instance: 32,
+            routines: vec![
+                Routine {
+                    kind: RoutineKind::Load { input: 0 },
+                    name: "d_dummy_load_1".into(),
+                    threads: (32, 1),
+                    mapping: ThreadMap::Vec32,
+                    global_words: 32,
+                    flops: 0,
+                    uses_atomic: false,
+                },
+                Routine {
+                    kind: RoutineKind::Compute,
+                    name: "d_dummy_compute".into(),
+                    threads: (32, 1),
+                    mapping: ThreadMap::Vec32,
+                    global_words: 0,
+                    flops: 32,
+                    uses_atomic: false,
+                },
+                Routine {
+                    kind: RoutineKind::Store { output: 0 },
+                    name: "d_dummy_save".into(),
+                    threads: (32, 1),
+                    mapping: ThreadMap::Vec32,
+                    global_words: 32,
+                    flops: 0,
+                    uses_atomic: false,
+                },
+            ],
+            variants: vec![FuncVariant {
+                name: "v1".into(),
+                threads: (32, 1),
+                regs_per_thread: 16,
+                scratch_smem_words: 0,
+                compute_efficiency: 1.0,
+                multi_instance: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn valid_function_passes() {
+        assert!(dummy_func().validate().is_ok());
+    }
+
+    #[test]
+    fn missing_compute_fails() {
+        let mut f = dummy_func();
+        f.routines.retain(|r| r.kind != RoutineKind::Compute);
+        assert!(f.validate().unwrap_err().contains("compute"));
+    }
+
+    #[test]
+    fn missing_load_fails() {
+        let mut f = dummy_func();
+        f.routines.retain(|r| !r.kind.is_load());
+        assert!(f.validate().unwrap_err().contains("load"));
+    }
+
+    #[test]
+    fn depth_mismatch_detected() {
+        let mut f = dummy_func();
+        f.inputs[0].ix = Ix::Row;
+        assert!(f.validate().unwrap_err().contains("2-D index"));
+    }
+
+    #[test]
+    fn barrier_semantics() {
+        assert!(HigherOrder::Reduce.output_needs_global_barrier());
+        assert!(HigherOrder::NestedReduce.output_needs_global_barrier());
+        assert!(!HigherOrder::Map.output_needs_global_barrier());
+        assert!(!HigherOrder::NestedMap.output_needs_global_barrier());
+    }
+
+    #[test]
+    fn ix_variance() {
+        assert!(Ix::Row.varies_along(true));
+        assert!(!Ix::Row.varies_along(false));
+        assert!(Ix::Col.varies_along(false));
+        assert!(!Ix::Col.varies_along(true));
+        assert!(Ix::Both.varies_along(true) && Ix::Both.varies_along(false));
+        assert!(!Ix::None.varies_along(true));
+    }
+
+    #[test]
+    fn routine_accessors() {
+        let f = dummy_func();
+        assert_eq!(f.load_routine(0).name, "d_dummy_load_1");
+        assert_eq!(f.compute_routine().flops, 32);
+        assert_eq!(f.store_routine(0).global_words, 32);
+        assert_eq!(f.compute_routine().threads_total(), 32);
+    }
+}

@@ -1,0 +1,33 @@
+//! Intermediate representation of the fusion compiler.
+//!
+//! Mirrors the paper's vocabulary (§3–§4):
+//!
+//! * [`elem`] — element types (`scalar`, `subvector32`, `TILE32x32`) and
+//!   symbolic dimensions. A *variable* in the script is a list (vector)
+//!   or 2-D list (matrix) of elements.
+//! * [`func`] — *elementary functions*: a higher-order kind
+//!   (map / reduce / nested map / mapped reduce), per-parameter index
+//!   behaviour, and the `load`/`compute`/`store` *routine* decomposition
+//!   with thread-to-data mappings — everything the paper keeps in kernel
+//!   metadata.
+//! * [`program`] — a parsed script: variable declarations, the ordered
+//!   list of elementary-function calls, input/output marks.
+//! * [`plan`] — the compiler's output: `SeqPlan` (ordered kernels) where
+//!   each `KernelPlan` is the Algorithm-1 schema made explicit (grid,
+//!   shared-memory layout, ordered routine steps with barrier/clear
+//!   flags, hoisting classes) plus symbolic traffic/flop accounting used
+//!   by the predictor, the simulator and the benchmark harness.
+
+pub mod elem;
+pub mod func;
+pub mod plan;
+pub mod program;
+
+pub use elem::{DimSym, ElemType, ProblemSize, VarType};
+pub use func::{
+    FuncId, FuncVariant, HigherOrder, Ix, ParamSpec, Routine, RoutineKind, ThreadMap,
+};
+pub use plan::{
+    GridPlan, Hoist, IterDim, KernelPlan, Poly2, SeqPlan, SmemSlot, Step, StepOp, Traffic,
+};
+pub use program::{Call, CallId, Program, VarDecl, VarId};

@@ -1,0 +1,346 @@
+//! Compiler output: kernel plans.
+//!
+//! A [`SeqPlan`] is the compiled form of a script: an ordered list of
+//! [`KernelPlan`]s (kernel boundaries = global barriers). A `KernelPlan`
+//! is the paper's Algorithm-1 schema made explicit — grid configuration,
+//! shared-memory layout (with overlap), the ordered routine steps with
+//! their barrier/clear flags and hoisting classes — plus symbolic
+//! traffic/flop accounting consumed by the predictor, the GTX 480
+//! simulator and the benchmark harness.
+
+use super::elem::ProblemSize;
+use super::func::{RoutineKind, ThreadMap};
+use super::program::CallId;
+use std::fmt;
+
+/// A polynomial count `a·m·n + b·m + c·n + d` over the two symbolic
+/// problem dimensions. Coefficients are f64 so per-tile quantities
+/// (`m·n/1024`) stay exact enough for accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Poly2 {
+    pub mn: f64,
+    pub m: f64,
+    pub n: f64,
+    pub c: f64,
+}
+
+impl Poly2 {
+    pub const ZERO: Poly2 = Poly2 {
+        mn: 0.0,
+        m: 0.0,
+        n: 0.0,
+        c: 0.0,
+    };
+
+    pub fn constant(c: f64) -> Self {
+        Poly2 { c, ..Self::ZERO }
+    }
+    pub fn m(k: f64) -> Self {
+        Poly2 { m: k, ..Self::ZERO }
+    }
+    pub fn n(k: f64) -> Self {
+        Poly2 { n: k, ..Self::ZERO }
+    }
+    pub fn mn(k: f64) -> Self {
+        Poly2 { mn: k, ..Self::ZERO }
+    }
+
+    pub fn eval(&self, p: ProblemSize) -> f64 {
+        self.mn * (p.m as f64) * (p.n as f64)
+            + self.m * p.m as f64
+            + self.n * p.n as f64
+            + self.c
+    }
+
+    pub fn scale(&self, k: f64) -> Poly2 {
+        Poly2 {
+            mn: self.mn * k,
+            m: self.m * k,
+            n: self.n * k,
+            c: self.c * k,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Self::ZERO
+    }
+}
+
+impl std::ops::Add for Poly2 {
+    type Output = Poly2;
+    fn add(self, o: Poly2) -> Poly2 {
+        Poly2 {
+            mn: self.mn + o.mn,
+            m: self.m + o.m,
+            n: self.n + o.n,
+            c: self.c + o.c,
+        }
+    }
+}
+
+impl std::ops::AddAssign for Poly2 {
+    fn add_assign(&mut self, o: Poly2) {
+        *self = *self + o;
+    }
+}
+
+impl fmt::Display for Poly2 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts = vec![];
+        if self.mn != 0.0 {
+            parts.push(format!("{:.6}·mn", self.mn));
+        }
+        if self.m != 0.0 {
+            parts.push(format!("{:.4}·m", self.m));
+        }
+        if self.n != 0.0 {
+            parts.push(format!("{:.4}·n", self.n));
+        }
+        if self.c != 0.0 || parts.is_empty() {
+            parts.push(format!("{:.1}", self.c));
+        }
+        write!(f, "{}", parts.join(" + "))
+    }
+}
+
+/// Global-memory traffic of one kernel, in f32 words.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    pub loads: Poly2,
+    pub stores: Poly2,
+    /// Words moved by atomic global accumulations (counted in `stores`
+    /// too; tracked separately because atomics serialize).
+    pub atomic_words: Poly2,
+}
+
+impl Traffic {
+    pub fn total_words(&self) -> Poly2 {
+        self.loads + self.stores
+    }
+
+    pub fn total_bytes(&self, p: ProblemSize) -> f64 {
+        self.total_words().eval(p) * 4.0
+    }
+}
+
+/// Which axis the kernel's serial-iteration loop walks (Algorithm 1
+/// line 6). Depth-1 kernels iterate their only axis (`Elem`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IterDim {
+    Elem,
+    Row,
+    Col,
+}
+
+impl fmt::Display for IterDim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IterDim::Elem => write!(f, "elem"),
+            IterDim::Row => write!(f, "row"),
+            IterDim::Col => write!(f, "col"),
+        }
+    }
+}
+
+/// Grid / block configuration of a kernel.
+#[derive(Clone, Copy, Debug)]
+pub struct GridPlan {
+    /// Nesting depth (1 → 1-D grid, 2 → 2-D grid).
+    pub depth: u8,
+    /// Block shape in threads.
+    pub block: (u32, u32),
+    /// Instances of the member functions executed per block (unnested
+    /// functions may pack several; nested tile functions use 1).
+    pub instances_per_block: u32,
+    /// Serial iterations per block (grid shrink factor, Algorithm 1).
+    pub iters: u32,
+    /// Axis walked by the serial loop.
+    pub iter_dim: IterDim,
+}
+
+impl GridPlan {
+    pub fn threads_per_block(&self) -> u32 {
+        self.block.0 * self.block.1
+    }
+
+    /// Number of thread blocks launched for a given problem size, given
+    /// the total instance count of the kernel.
+    pub fn blocks(&self, instances: f64) -> f64 {
+        (instances / (self.instances_per_block as f64 * self.iters as f64)).max(1.0)
+    }
+}
+
+/// When a step executes relative to the serial loop (Algorithm 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hoist {
+    /// Invariant load / reduction clear — before the loop (lines 4–5).
+    BeforeLoop,
+    /// Inside the loop (line 7).
+    InLoop,
+    /// Accumulated-reduction store — after the loop (line 10).
+    AfterLoop,
+}
+
+/// What a step does (self-contained copy of the routine facts the
+/// simulator and pretty-printer need; no back-reference into the library
+/// required on the hot path).
+#[derive(Clone, Debug)]
+pub struct StepOp {
+    pub kind: RoutineKind,
+    pub routine_name: String,
+    /// Script variable the step moves (loads/stores) or `None` (compute).
+    pub var: Option<String>,
+    pub mapping: ThreadMap,
+    /// Threads participating, total for the block.
+    pub threads: u32,
+    /// Global words moved per block-iteration by this step.
+    pub global_words: u64,
+    /// Flops per block-iteration.
+    pub flops: u64,
+    pub uses_atomic: bool,
+}
+
+/// One generated routine call (Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub call: CallId,
+    pub op: StepOp,
+    /// `__syncthreads()` emitted before this step (§4.3.3 conditions).
+    pub barrier_before: bool,
+    /// Reduction-output clear emitted before this step.
+    pub clear_before: bool,
+    pub hoist: Hoist,
+}
+
+/// A shared-memory slot in the kernel's one big allocation. Slots may
+/// overlap when live ranges permit (paper §4.3.2: "elements in shared
+/// memory can overlap … one large array and pointers into this array").
+#[derive(Clone, Debug)]
+pub struct SmemSlot {
+    /// Script variable (or internal temp) the slot holds.
+    pub var: String,
+    /// Word offset within the kernel's shared array.
+    pub offset: u32,
+    /// Padded size in words.
+    pub words: u32,
+    /// Step index of first/last use (live range over `steps`).
+    pub live: (usize, usize),
+}
+
+/// A compiled kernel.
+#[derive(Clone, Debug)]
+pub struct KernelPlan {
+    /// e.g. `cu_sgemv_0_sgemtv_2` — mirrors the paper's generated names.
+    pub name: String,
+    /// Elementary calls fused into this kernel, in execution order.
+    pub members: Vec<CallId>,
+    pub grid: GridPlan,
+    /// Total shared memory allocated per block, in words (after overlap).
+    pub smem_words: u32,
+    pub regs_per_thread: u32,
+    pub smem_slots: Vec<SmemSlot>,
+    pub steps: Vec<Step>,
+    /// Instance count of the kernel as a polynomial over (m, n).
+    pub instances: Poly2,
+    pub traffic: Traffic,
+    pub flops: Poly2,
+    /// Mean instruction-efficiency of the member compute routines
+    /// (weighted by flops) — feeds the simulator's issue model.
+    pub compute_efficiency: f64,
+    /// Number of in-loop local barriers per iteration (sync overhead).
+    pub barriers_per_iter: u32,
+}
+
+impl KernelPlan {
+    pub fn smem_bytes(&self) -> u32 {
+        self.smem_words * 4
+    }
+
+    /// Blocks launched at a problem size.
+    pub fn blocks(&self, p: ProblemSize) -> f64 {
+        self.grid.blocks(self.instances.eval(p))
+    }
+
+    /// Arithmetic intensity in flops/byte at a problem size.
+    pub fn intensity(&self, p: ProblemSize) -> f64 {
+        let bytes = self.traffic.total_bytes(p);
+        if bytes == 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops.eval(p) / bytes
+        }
+    }
+}
+
+/// The compiled form of a whole script.
+#[derive(Clone, Debug)]
+pub struct SeqPlan {
+    /// Script name (e.g. `bicgk`).
+    pub seq: String,
+    /// Plan variant label (e.g. `fused`, `unfused`, `f2.o1.b128.i8`).
+    pub variant: String,
+    pub kernels: Vec<KernelPlan>,
+}
+
+impl SeqPlan {
+    /// Total flops of the sequence at a problem size.
+    pub fn flops(&self, p: ProblemSize) -> f64 {
+        self.kernels.iter().map(|k| k.flops.eval(p)).sum()
+    }
+
+    /// Total global traffic in bytes.
+    pub fn bytes(&self, p: ProblemSize) -> f64 {
+        self.kernels.iter().map(|k| k.traffic.total_bytes(p)).sum()
+    }
+
+    /// Catalog key for the runtime artifact registry.
+    pub fn artifact_key(&self, p: ProblemSize) -> String {
+        format!("{}.{}.m{}n{}", self.seq, self.variant, p.m, p.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poly_eval_and_ops() {
+        let p = Poly2::mn(1.0) + Poly2::m(2.0) + Poly2::n(3.0) + Poly2::constant(4.0);
+        let v = p.eval(ProblemSize::new(10, 100));
+        assert_eq!(v, 1000.0 + 20.0 + 300.0 + 4.0);
+        assert_eq!(p.scale(2.0).eval(ProblemSize::new(10, 100)), 2.0 * v);
+        assert!(Poly2::ZERO.is_zero());
+        assert!(!p.is_zero());
+    }
+
+    #[test]
+    fn traffic_bytes() {
+        let t = Traffic {
+            loads: Poly2::n(3.0),
+            stores: Poly2::n(1.0),
+            atomic_words: Poly2::ZERO,
+        };
+        // 4 words/elem * 4 bytes * n=1024 → 16 KiB
+        assert_eq!(t.total_bytes(ProblemSize::new(1, 1024)), 16384.0);
+    }
+
+    #[test]
+    fn grid_blocks() {
+        let g = GridPlan {
+            depth: 1,
+            block: (128, 1),
+            instances_per_block: 4,
+            iters: 2,
+            iter_dim: IterDim::Elem,
+        };
+        assert_eq!(g.threads_per_block(), 128);
+        assert_eq!(g.blocks(64.0), 8.0);
+        assert_eq!(g.blocks(1.0), 1.0); // floor at one block
+    }
+
+    #[test]
+    fn poly_display_nonempty() {
+        assert!(!Poly2::ZERO.to_string().is_empty());
+        assert!(Poly2::mn(0.5).to_string().contains("mn"));
+    }
+}

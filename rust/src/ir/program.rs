@@ -1,0 +1,163 @@
+//! A parsed script: variables, ordered elementary-function calls and
+//! input/output marks (the paper's Listing 1 level).
+
+use super::elem::{DimSym, VarType};
+use super::func::FuncId;
+use std::collections::BTreeMap;
+
+/// Index into [`Program::vars`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarId(pub usize);
+
+/// Index into [`Program::calls`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CallId(pub usize);
+
+/// A declared script variable.
+#[derive(Clone, Debug)]
+pub struct VarDecl {
+    pub name: String,
+    pub ty: VarType,
+    /// Symbolic dims: `[]` scalar, `[N]` vector, `[M, N]` matrix.
+    pub dims: Vec<DimSym>,
+}
+
+/// One elementary-function call in the script.
+#[derive(Clone, Debug)]
+pub struct Call {
+    pub func: FuncId,
+    /// Variables bound to the function's inputs, in signature order.
+    pub args: Vec<VarId>,
+    /// Variables bound to the function's outputs, in signature order.
+    pub outs: Vec<VarId>,
+    /// Scalar coefficient values bound by name (α, β …).
+    pub scalar_args: BTreeMap<String, f32>,
+}
+
+/// A full parsed + typechecked script.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub name: String,
+    pub vars: Vec<VarDecl>,
+    pub inputs: Vec<VarId>,
+    pub outputs: Vec<VarId>,
+    pub calls: Vec<Call>,
+}
+
+impl Program {
+    pub fn var(&self, id: VarId) -> &VarDecl {
+        &self.vars[id.0]
+    }
+
+    pub fn call(&self, id: CallId) -> &Call {
+        &self.calls[id.0]
+    }
+
+    pub fn var_id(&self, name: &str) -> Option<VarId> {
+        self.vars.iter().position(|v| v.name == name).map(VarId)
+    }
+
+    pub fn call_ids(&self) -> impl Iterator<Item = CallId> {
+        (0..self.calls.len()).map(CallId)
+    }
+
+    /// The call that produces `v`, if any (scripts are SSA-like: each
+    /// variable is produced by at most one call — enforced by the
+    /// typechecker).
+    pub fn producer(&self, v: VarId) -> Option<CallId> {
+        self.calls
+            .iter()
+            .position(|c| c.outs.contains(&v))
+            .map(CallId)
+    }
+
+    /// All calls consuming `v` as an input.
+    pub fn consumers(&self, v: VarId) -> Vec<CallId> {
+        self.calls
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.args.contains(&v))
+            .map(|(i, _)| CallId(i))
+            .collect()
+    }
+
+    /// Is `v` live-out of the program (marked `return`)?
+    pub fn is_output(&self, v: VarId) -> bool {
+        self.outputs.contains(&v)
+    }
+
+    pub fn is_input(&self, v: VarId) -> bool {
+        self.inputs.contains(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::elem::VarType;
+
+    fn tiny_program() -> Program {
+        // z = f(x); w = g(z)   — f,g fictitious ids
+        Program {
+            name: "tiny".into(),
+            vars: vec![
+                VarDecl {
+                    name: "x".into(),
+                    ty: VarType::Vector,
+                    dims: vec![DimSym::new("N")],
+                },
+                VarDecl {
+                    name: "z".into(),
+                    ty: VarType::Vector,
+                    dims: vec![DimSym::new("N")],
+                },
+                VarDecl {
+                    name: "w".into(),
+                    ty: VarType::Vector,
+                    dims: vec![DimSym::new("N")],
+                },
+            ],
+            inputs: vec![VarId(0)],
+            outputs: vec![VarId(2)],
+            calls: vec![
+                Call {
+                    func: FuncId(0),
+                    args: vec![VarId(0)],
+                    outs: vec![VarId(1)],
+                    scalar_args: BTreeMap::new(),
+                },
+                Call {
+                    func: FuncId(1),
+                    args: vec![VarId(1)],
+                    outs: vec![VarId(2)],
+                    scalar_args: BTreeMap::new(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn producer_consumer_links() {
+        let p = tiny_program();
+        assert_eq!(p.producer(VarId(1)), Some(CallId(0)));
+        assert_eq!(p.producer(VarId(0)), None);
+        assert_eq!(p.consumers(VarId(1)), vec![CallId(1)]);
+        assert!(p.consumers(VarId(2)).is_empty());
+    }
+
+    #[test]
+    fn io_marks() {
+        let p = tiny_program();
+        assert!(p.is_input(VarId(0)));
+        assert!(p.is_output(VarId(2)));
+        assert!(!p.is_output(VarId(1)));
+    }
+
+    #[test]
+    fn var_lookup() {
+        let p = tiny_program();
+        assert_eq!(p.var_id("z"), Some(VarId(1)));
+        assert_eq!(p.var_id("nope"), None);
+        assert_eq!(p.var(VarId(2)).name, "w");
+    }
+}

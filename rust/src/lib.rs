@@ -1,0 +1,33 @@
+//! # fusebla — kernel-fusion compiler for BLAS sequences
+//!
+//! Reproduction of *“Optimizing CUDA Code By Kernel Fusion — Application
+//! on BLAS”* (Filipovič et al., 2013) as a three-layer Rust + JAX/Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a source-to-source
+//!   fusion compiler over a library of elementary map/reduce functions,
+//!   an optimization-space search with empirical performance prediction,
+//!   a calibrated GTX 480 timing model standing in for the paper's
+//!   testbed, and a PJRT runtime + coordinator executing AOT-compiled
+//!   artifacts.
+//! * **L2 (python/compile)** — JAX definitions of each BLAS sequence.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (fused and
+//!   elementary) mirroring the paper's 32×32-tile scheme.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod autotune;
+pub mod bench_support;
+pub mod codegen;
+pub mod coordinator;
+pub mod fusion;
+pub mod graph;
+pub mod ir;
+pub mod library;
+pub mod predict;
+pub mod runtime;
+pub mod script;
+pub mod sequences;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,412 @@
+//! BLAS-1 elementary functions: depth-1 map/reduce over `subvector32`
+//! elements. One instance = 32 threads processing one 32-float element
+//! (first-order functions are parallel — the paper's key generality).
+
+use crate::ir::elem::{ElemType, TILE};
+use crate::ir::func::{
+    ElemFunc, FuncVariant, HigherOrder, Ix, ParamSpec, Routine, RoutineKind, ThreadMap,
+};
+
+const W: u64 = TILE as u64; // words per subvector element
+
+fn vparam(name: &str) -> ParamSpec {
+    ParamSpec {
+        name: name.into(),
+        elem: ElemType::SubVector,
+        ix: Ix::Elem,
+    }
+}
+
+fn sparam(name: &str) -> ParamSpec {
+    ParamSpec {
+        name: name.into(),
+        elem: ElemType::Scalar,
+        ix: Ix::None,
+    }
+}
+
+fn vec_load(func: &str, input: usize) -> Routine {
+    Routine {
+        kind: RoutineKind::Load { input },
+        name: format!("d_{func}_load_{}", input + 1),
+        threads: (TILE as u32, 1),
+        mapping: ThreadMap::Vec32,
+        global_words: W,
+        flops: 0,
+        uses_atomic: false,
+    }
+}
+
+fn vec_store(func: &str, output: usize) -> Routine {
+    Routine {
+        kind: RoutineKind::Store { output },
+        name: format!("d_{func}_save_{}", output + 1),
+        threads: (TILE as u32, 1),
+        mapping: ThreadMap::Vec32,
+        global_words: W,
+        flops: 0,
+        uses_atomic: false,
+    }
+}
+
+fn vec_compute(func: &str, flops: u64) -> Routine {
+    Routine {
+        kind: RoutineKind::Compute,
+        name: format!("d_{func}_compute"),
+        threads: (TILE as u32, 1),
+        mapping: ThreadMap::Vec32,
+        global_words: 0,
+        flops,
+        uses_atomic: false,
+    }
+}
+
+/// Standard variant set for register-light vector maps: the tuned
+/// 32-thread version plus a 16-thread/2-words-per-thread version that
+/// trades registers for issue efficiency (ILP), mirroring the paper's
+/// "several alternative implementations".
+fn vec_variants(base_regs: u32) -> Vec<FuncVariant> {
+    vec![
+        FuncVariant {
+            name: "t32".into(),
+            threads: (TILE as u32, 1),
+            regs_per_thread: base_regs,
+            scratch_smem_words: 0,
+            compute_efficiency: 1.0,
+            multi_instance: true,
+        },
+        FuncVariant {
+            name: "t16x2".into(),
+            threads: (TILE as u32 / 2, 1),
+            regs_per_thread: base_regs + 4,
+            scratch_smem_words: 0,
+            compute_efficiency: 1.08, // 2-way ILP per thread
+            multi_instance: true,
+        },
+        FuncVariant {
+            name: "t8x4".into(),
+            threads: (TILE as u32 / 4, 1),
+            regs_per_thread: base_regs + 10,
+            scratch_smem_words: 0,
+            compute_efficiency: 1.12,
+            multi_instance: true,
+        },
+    ]
+}
+
+/// `y ← x` (CUBLAS `scopy`; used by baseline plans for the copies the
+/// in-place CUBLAS API forces — the paper's S-tag analysis).
+pub fn scopy() -> ElemFunc {
+    ElemFunc {
+        name: "scopy".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("x")],
+        outputs: vec![vparam("y")],
+        scalars: vec![],
+        flops_per_instance: 0,
+        routines: vec![
+            vec_load("scopy", 0),
+            vec_compute("scopy", 0),
+            vec_store("scopy", 0),
+        ],
+        variants: vec_variants(8),
+    }
+}
+
+/// `y ← αx` (out-of-place SSCAL; the in-place CUBLAS form is the same
+/// kernel with `y = x`).
+pub fn sscal() -> ElemFunc {
+    ElemFunc {
+        name: "sscal".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("x")],
+        outputs: vec![vparam("y")],
+        scalars: vec!["alpha".into()],
+        flops_per_instance: W,
+        routines: vec![
+            vec_load("sscal", 0),
+            vec_compute("sscal", W),
+            vec_store("sscal", 0),
+        ],
+        variants: vec_variants(10),
+    }
+}
+
+/// `z ← αx + y` (out-of-place SAXPY).
+pub fn saxpy() -> ElemFunc {
+    ElemFunc {
+        name: "saxpy".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("x"), vparam("y")],
+        outputs: vec![vparam("z")],
+        scalars: vec!["alpha".into()],
+        flops_per_instance: 2 * W,
+        routines: vec![
+            vec_load("saxpy", 0),
+            vec_load("saxpy", 1),
+            vec_compute("saxpy", 2 * W),
+            vec_store("saxpy", 0),
+        ],
+        variants: vec_variants(12),
+    }
+}
+
+/// `w ← αx + βy` (updated-BLAS WAXPBY; with α=1, β=−α it is AXPYDOT's
+/// first stage `z = w − αv`).
+pub fn waxpby() -> ElemFunc {
+    ElemFunc {
+        name: "waxpby".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("x"), vparam("y")],
+        outputs: vec![vparam("w")],
+        scalars: vec!["alpha".into(), "beta".into()],
+        flops_per_instance: 3 * W,
+        routines: vec![
+            vec_load("waxpby", 0),
+            vec_load("waxpby", 1),
+            vec_compute("waxpby", 3 * W),
+            vec_store("waxpby", 0),
+        ],
+        variants: vec_variants(12),
+    }
+}
+
+/// `x ← w + y + z` (the paper's VADD).
+pub fn vadd3() -> ElemFunc {
+    ElemFunc {
+        name: "vadd3".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("w"), vparam("y"), vparam("z")],
+        outputs: vec![vparam("x")],
+        scalars: vec![],
+        flops_per_instance: 2 * W,
+        routines: vec![
+            vec_load("vadd3", 0),
+            vec_load("vadd3", 1),
+            vec_load("vadd3", 2),
+            vec_compute("vadd3", 2 * W),
+            vec_store("vadd3", 0),
+        ],
+        variants: vec_variants(14),
+    }
+}
+
+/// `x ← y + z`.
+pub fn vadd2() -> ElemFunc {
+    ElemFunc {
+        name: "vadd2".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("y"), vparam("z")],
+        outputs: vec![vparam("x")],
+        scalars: vec![],
+        flops_per_instance: W,
+        routines: vec![
+            vec_load("vadd2", 0),
+            vec_load("vadd2", 1),
+            vec_compute("vadd2", W),
+            vec_store("vadd2", 0),
+        ],
+        variants: vec_variants(12),
+    }
+}
+
+/// `r ← xᵀy` — DOT: element-wise multiply (map part) feeding a block
+/// reduction; partial sums land in global memory via `atomicAdd`
+/// (§3.2.2 option iii). The scalar result is a *reduction output*: it
+/// needs a global barrier before any consumer.
+pub fn sdot() -> ElemFunc {
+    ElemFunc {
+        name: "sdot".into(),
+        hof: HigherOrder::Reduce,
+        inputs: vec![vparam("x"), vparam("y")],
+        outputs: vec![sparam("r")],
+        scalars: vec![],
+        flops_per_instance: 2 * W,
+        routines: vec![
+            vec_load("sdot", 0),
+            vec_load("sdot", 1),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sdot_compute".into(),
+                threads: (TILE as u32, 1),
+                mapping: ThreadMap::BlockReduce,
+                global_words: 0,
+                flops: 2 * W, // mul + tree-add per element
+                uses_atomic: false,
+            },
+            Routine {
+                kind: RoutineKind::Store { output: 0 },
+                name: "d_sdot_save".into(),
+                threads: (1, 1),
+                mapping: ThreadMap::Single,
+                global_words: 1,
+                flops: 0,
+                uses_atomic: true,
+            },
+        ],
+        variants: vec![
+            FuncVariant {
+                name: "t32".into(),
+                threads: (TILE as u32, 1),
+                regs_per_thread: 14,
+                scratch_smem_words: TILE as u32, // tree-reduction staging
+                compute_efficiency: 1.0,
+                multi_instance: true,
+            },
+            FuncVariant {
+                name: "t32u2".into(),
+                threads: (TILE as u32, 1),
+                regs_per_thread: 18,
+                scratch_smem_words: TILE as u32,
+                compute_efficiency: 1.06, // thread-local pre-accumulation
+                multi_instance: true,
+            },
+        ],
+    }
+}
+
+/// `r ← Σ x·x` — squared 2-norm partial (SNRM2's reduction; the final
+/// sqrt is host-side scalar work). Fusible like DOT: library-extension
+/// future work of the paper ("more functions from the BLAS standard").
+pub fn snrm2sq() -> ElemFunc {
+    ElemFunc {
+        name: "snrm2sq".into(),
+        hof: HigherOrder::Reduce,
+        inputs: vec![vparam("x")],
+        outputs: vec![sparam("r")],
+        scalars: vec![],
+        flops_per_instance: 2 * W,
+        routines: vec![
+            vec_load("snrm2sq", 0),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_snrm2sq_compute".into(),
+                threads: (TILE as u32, 1),
+                mapping: ThreadMap::BlockReduce,
+                global_words: 0,
+                flops: 2 * W,
+                uses_atomic: false,
+            },
+            Routine {
+                kind: RoutineKind::Store { output: 0 },
+                name: "d_snrm2sq_save".into(),
+                threads: (1, 1),
+                mapping: ThreadMap::Single,
+                global_words: 1,
+                flops: 0,
+                uses_atomic: true,
+            },
+        ],
+        variants: vec![
+            FuncVariant {
+                name: "t32".into(),
+                threads: (TILE as u32, 1),
+                regs_per_thread: 12,
+                scratch_smem_words: TILE as u32,
+                compute_efficiency: 1.0,
+                multi_instance: true,
+            },
+        ],
+    }
+}
+
+/// `r ← Σ |x|` — SASUM's reduction.
+pub fn sasum() -> ElemFunc {
+    ElemFunc {
+        name: "sasum".into(),
+        hof: HigherOrder::Reduce,
+        inputs: vec![vparam("x")],
+        outputs: vec![sparam("r")],
+        scalars: vec![],
+        flops_per_instance: 2 * W,
+        routines: vec![
+            vec_load("sasum", 0),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sasum_compute".into(),
+                threads: (TILE as u32, 1),
+                mapping: ThreadMap::BlockReduce,
+                global_words: 0,
+                flops: 2 * W,
+                uses_atomic: false,
+            },
+            Routine {
+                kind: RoutineKind::Store { output: 0 },
+                name: "d_sasum_save".into(),
+                threads: (1, 1),
+                mapping: ThreadMap::Single,
+                global_words: 1,
+                flops: 0,
+                uses_atomic: true,
+            },
+        ],
+        variants: vec![
+            FuncVariant {
+                name: "t32".into(),
+                threads: (TILE as u32, 1),
+                regs_per_thread: 12,
+                scratch_smem_words: TILE as u32,
+                compute_efficiency: 1.0,
+                multi_instance: true,
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_blas1_validate() {
+        for f in [scopy(), sscal(), saxpy(), waxpby(), vadd3(), vadd2(), sdot()] {
+            f.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn word_counts_per_instance() {
+        // vadd3: 3 loads + 1 store of a 32-word element.
+        let f = vadd3();
+        let loads: u64 = f
+            .routines
+            .iter()
+            .filter(|r| r.kind.is_load())
+            .map(|r| r.global_words)
+            .sum();
+        let stores: u64 = f
+            .routines
+            .iter()
+            .filter(|r| r.kind.is_store())
+            .map(|r| r.global_words)
+            .sum();
+        assert_eq!(loads, 96);
+        assert_eq!(stores, 32);
+    }
+
+    #[test]
+    fn dot_reduction_shape() {
+        let f = sdot();
+        assert!(f.hof.output_needs_global_barrier());
+        assert_eq!(f.outputs[0].elem, ElemType::Scalar);
+        assert_eq!(f.outputs[0].ix, Ix::None);
+        assert!(f.store_routine(0).uses_atomic);
+        assert_eq!(f.store_routine(0).global_words, 1);
+    }
+
+    #[test]
+    fn variants_are_distinct() {
+        let f = waxpby();
+        assert!(f.variants.len() >= 2);
+        let names: Vec<_> = f.variants.iter().map(|v| v.name.clone()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names, dedup);
+    }
+
+    #[test]
+    fn copy_has_zero_flops() {
+        assert_eq!(scopy().flops_per_instance, 0);
+        assert_eq!(scopy().compute_routine().flops, 0);
+    }
+}

@@ -1,0 +1,432 @@
+//! BLAS-2 elementary functions: depth-2 (nested map / mapped-reduce)
+//! over `TILE32x32` matrix elements, mirroring the paper's §4.4 tile
+//! scheme. One instance = a (32, BY) thread block processing one 32×32
+//! tile; row/column sub-vectors are the Row/Col-indexed parameters.
+//!
+//! Tiles live in shared memory padded to 33 columns (bank-conflict-free
+//! column access); transposed compute routines read the tile
+//! column-major, so a local barrier always separates tile load from
+//! transposed compute (§3.2.3 — the fused BiCGK of Listing 3).
+
+use crate::ir::elem::{ElemType, TILE};
+use crate::ir::func::{
+    ElemFunc, FuncVariant, HigherOrder, Ix, ParamSpec, Routine, RoutineKind, ThreadMap,
+};
+
+const TW: u64 = (TILE * TILE) as u64; // words per tile
+const W: u64 = TILE as u64; // words per subvector
+
+fn tparam(name: &str) -> ParamSpec {
+    ParamSpec {
+        name: name.into(),
+        elem: ElemType::Tile,
+        ix: Ix::Both,
+    }
+}
+
+fn rowvec(name: &str) -> ParamSpec {
+    ParamSpec {
+        name: name.into(),
+        elem: ElemType::SubVector,
+        ix: Ix::Row,
+    }
+}
+
+fn colvec(name: &str) -> ParamSpec {
+    ParamSpec {
+        name: name.into(),
+        elem: ElemType::SubVector,
+        ix: Ix::Col,
+    }
+}
+
+fn tile_load(func: &str, input: usize) -> Routine {
+    Routine {
+        kind: RoutineKind::Load { input },
+        name: format!("d_{func}_load_{}", input + 1),
+        threads: (TILE as u32, 4), // strided over rows by BY (macro)
+        mapping: ThreadMap::TileRowMajor,
+        global_words: TW,
+        flops: 0,
+        uses_atomic: false,
+    }
+}
+
+fn subvec_load(func: &str, input: usize) -> Routine {
+    Routine {
+        kind: RoutineKind::Load { input },
+        name: format!("d_{func}_load_{}", input + 1),
+        threads: (TILE as u32, 1),
+        mapping: ThreadMap::Vec32,
+        global_words: W,
+        flops: 0,
+        uses_atomic: false,
+    }
+}
+
+fn tile_store(func: &str, output: usize) -> Routine {
+    Routine {
+        kind: RoutineKind::Store { output },
+        name: format!("d_{func}_save_{}", output + 1),
+        threads: (TILE as u32, 4),
+        mapping: ThreadMap::TileRowMajor,
+        global_words: TW,
+        flops: 0,
+        uses_atomic: false,
+    }
+}
+
+/// Atomic sub-vector store used by partial reductions (Listing 2's
+/// `d_sgemv_1_save` with `atomicAdd`).
+fn subvec_store_atomic(func: &str, output: usize) -> Routine {
+    Routine {
+        kind: RoutineKind::Store { output },
+        name: format!("d_{func}_save_{}", output + 1),
+        threads: (TILE as u32, 1),
+        mapping: ThreadMap::Vec32,
+        global_words: W,
+        flops: 0,
+        uses_atomic: true,
+    }
+}
+
+#[allow(dead_code)] // kept for future non-accumulating BLAS-2 outputs
+fn subvec_store(func: &str, output: usize) -> Routine {
+    Routine {
+        kind: RoutineKind::Store { output },
+        name: format!("d_{func}_save_{}", output + 1),
+        threads: (TILE as u32, 1),
+        mapping: ThreadMap::Vec32,
+        global_words: W,
+        flops: 0,
+        uses_atomic: false,
+    }
+}
+
+/// Tile-kernel variant set: block (32, BY) for BY ∈ {4, 8, 16} — the
+/// paper's `SGEMV_1_BY` macro choices. Smaller BY → fewer threads, more
+/// serial work per thread, fewer registers total per block.
+fn tile_variants(base_regs: u32, scratch: u32) -> Vec<FuncVariant> {
+    [4u32, 8, 16]
+        .iter()
+        .map(|&by| FuncVariant {
+            name: format!("t32x{by}"),
+            threads: (TILE as u32, by),
+            regs_per_thread: base_regs + by / 4,
+            scratch_smem_words: scratch,
+            // Mid block sizes issue best on Fermi-class SMs: full-size
+            // blocks bottleneck the two warp schedulers.
+            compute_efficiency: match by {
+                4 => 1.0,
+                8 => 1.02,
+                _ => 0.97,
+            },
+            multi_instance: false, // one tile instance per block (§4.4)
+        })
+        .collect()
+}
+
+/// `B ← A` tile-wise matrix copy. Used by CUBLAS-baseline plans: the
+/// in-place CUBLAS API forces an explicit copy before GER/MADD-style
+/// updates (the paper's S-tag analysis).
+pub fn mcopy() -> ElemFunc {
+    ElemFunc {
+        name: "mcopy".into(),
+        hof: HigherOrder::NestedMap,
+        inputs: vec![tparam("A")],
+        outputs: vec![tparam("B")],
+        scalars: vec![],
+        flops_per_instance: 0,
+        routines: vec![
+            tile_load("mcopy", 0),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_mcopy_compute".into(),
+                threads: (TILE as u32, 4),
+                mapping: ThreadMap::TileRowMajor,
+                global_words: 0,
+                flops: 0,
+                uses_atomic: false,
+            },
+            tile_store("mcopy", 0),
+        ],
+        variants: tile_variants(12, 0),
+    }
+}
+
+/// `C ← A + B` tile-wise (the paper's MADD). Nested map.
+pub fn madd() -> ElemFunc {
+    ElemFunc {
+        name: "madd".into(),
+        hof: HigherOrder::NestedMap,
+        inputs: vec![tparam("A"), tparam("B")],
+        outputs: vec![tparam("C")],
+        scalars: vec![],
+        flops_per_instance: TW,
+        routines: vec![
+            tile_load("madd", 0),
+            tile_load("madd", 1),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_madd_compute".into(),
+                threads: (TILE as u32, 4),
+                mapping: ThreadMap::TileRowMajor,
+                global_words: 0,
+                flops: TW,
+                uses_atomic: false,
+            },
+            tile_store("madd", 0),
+        ],
+        variants: tile_variants(16, 0),
+    }
+}
+
+/// `B ← A + αuvᵀ` tile-wise rank-1 update (GER). Nested map.
+pub fn sger() -> ElemFunc {
+    ElemFunc {
+        name: "sger".into(),
+        hof: HigherOrder::NestedMap,
+        inputs: vec![tparam("A"), rowvec("u"), colvec("v")],
+        outputs: vec![tparam("B")],
+        scalars: vec!["alpha".into()],
+        flops_per_instance: 3 * TW,
+        routines: vec![
+            tile_load("sger", 0),
+            subvec_load("sger", 1),
+            subvec_load("sger", 2),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sger_compute".into(),
+                threads: (TILE as u32, 4),
+                mapping: ThreadMap::TileRowMajor,
+                global_words: 0,
+                flops: 3 * TW,
+                uses_atomic: false,
+            },
+            tile_store("sger", 0),
+        ],
+        variants: tile_variants(20, 0),
+    }
+}
+
+/// `B ← A + u₁v₁ᵀ + u₂v₂ᵀ` — GEMVER's first stage as one elementary
+/// function (two rank-1 updates on the tile while it sits in shared
+/// memory). Nested map.
+pub fn sger2() -> ElemFunc {
+    ElemFunc {
+        name: "sger2".into(),
+        hof: HigherOrder::NestedMap,
+        inputs: vec![
+            tparam("A"),
+            rowvec("u1"),
+            colvec("v1"),
+            rowvec("u2"),
+            colvec("v2"),
+        ],
+        outputs: vec![tparam("B")],
+        scalars: vec![],
+        flops_per_instance: 4 * TW,
+        routines: vec![
+            tile_load("sger2", 0),
+            subvec_load("sger2", 1),
+            subvec_load("sger2", 2),
+            subvec_load("sger2", 3),
+            subvec_load("sger2", 4),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sger2_compute".into(),
+                threads: (TILE as u32, 4),
+                mapping: ThreadMap::TileRowMajor,
+                global_words: 0,
+                flops: 4 * TW,
+                uses_atomic: false,
+            },
+            tile_store("sger2", 0),
+        ],
+        variants: tile_variants(24, 0),
+    }
+}
+
+/// `y ← y + αAx` per tile — GEMV partial: the tile's rows dot the
+/// x sub-vector; partial sums accumulate into `y` atomically (Listing 2).
+/// Mapped reduce: `y = map(reduce(+, map(·, Aᵢ, x)), A)`.
+pub fn sgemv() -> ElemFunc {
+    ElemFunc {
+        name: "sgemv".into(),
+        hof: HigherOrder::NestedReduce,
+        inputs: vec![tparam("A"), colvec("x")],
+        outputs: vec![rowvec("y")],
+        scalars: vec!["alpha".into()],
+        flops_per_instance: 2 * TW,
+        routines: vec![
+            tile_load("sgemv", 0),
+            subvec_load("sgemv", 1),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sgemv_compute".into(),
+                threads: (TILE as u32, 4),
+                // Listing 2 reads `s_A[tx*33+ty+j]` — transposed access:
+                // each thread-column accumulates one output row.
+                mapping: ThreadMap::TileColMajor,
+                global_words: 0,
+                flops: 2 * TW,
+                uses_atomic: false,
+            },
+            subvec_store_atomic("sgemv", 0),
+        ],
+        variants: tile_variants(22, TILE as u32),
+    }
+}
+
+/// `z ← αAx + βy` per tile — GEMV with the BLAS `βy` term (CUBLAS
+/// SGEMV semantics; out-of-place).
+pub fn sgemvpy() -> ElemFunc {
+    ElemFunc {
+        name: "sgemvpy".into(),
+        hof: HigherOrder::NestedReduce,
+        inputs: vec![tparam("A"), colvec("x"), rowvec("y")],
+        outputs: vec![rowvec("z")],
+        scalars: vec!["alpha".into(), "beta".into()],
+        flops_per_instance: 2 * TW + 2 * W,
+        routines: vec![
+            tile_load("sgemvpy", 0),
+            subvec_load("sgemvpy", 1),
+            subvec_load("sgemvpy", 2),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sgemvpy_compute".into(),
+                threads: (TILE as u32, 4),
+                mapping: ThreadMap::TileColMajor,
+                global_words: 0,
+                flops: 2 * TW + 2 * W,
+                uses_atomic: false,
+            },
+            subvec_store_atomic("sgemvpy", 0),
+        ],
+        variants: tile_variants(24, TILE as u32),
+    }
+}
+
+/// `s ← s + αAᵀr` per tile — transposed GEMV partial (Listing 2's
+/// `sgemtv`): the tile's *columns* dot the r sub-vector; output indexed
+/// by column.
+pub fn sgemtv() -> ElemFunc {
+    ElemFunc {
+        name: "sgemtv".into(),
+        hof: HigherOrder::NestedReduce,
+        inputs: vec![tparam("A"), rowvec("r")],
+        outputs: vec![colvec("s")],
+        scalars: vec!["alpha".into()],
+        flops_per_instance: 2 * TW,
+        routines: vec![
+            tile_load("sgemtv", 0),
+            subvec_load("sgemtv", 1),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sgemtv_compute".into(),
+                threads: (TILE as u32, 4),
+                // Transposed product reads the row-major tile directly
+                // (row index is the reduction axis).
+                mapping: ThreadMap::TileRowMajor,
+                global_words: 0,
+                flops: 2 * TW,
+                uses_atomic: false,
+            },
+            subvec_store_atomic("sgemtv", 0),
+        ],
+        variants: tile_variants(22, TILE as u32),
+    }
+}
+
+/// `x ← βAᵀy + z` per tile — transposed GEMV with additive input
+/// (SGEMVT/GEMVER middle stage; out-of-place, no CUBLAS copy needed).
+pub fn sgemtvpz() -> ElemFunc {
+    ElemFunc {
+        name: "sgemtvpz".into(),
+        hof: HigherOrder::NestedReduce,
+        inputs: vec![tparam("A"), rowvec("y"), colvec("z")],
+        outputs: vec![colvec("x")],
+        scalars: vec!["beta".into()],
+        flops_per_instance: 2 * TW + 2 * W,
+        routines: vec![
+            tile_load("sgemtvpz", 0),
+            subvec_load("sgemtvpz", 1),
+            subvec_load("sgemtvpz", 2),
+            Routine {
+                kind: RoutineKind::Compute,
+                name: "d_sgemtvpz_compute".into(),
+                threads: (TILE as u32, 4),
+                mapping: ThreadMap::TileRowMajor,
+                global_words: 0,
+                flops: 2 * TW + 2 * W,
+                uses_atomic: false,
+            },
+            subvec_store_atomic("sgemtvpz", 0),
+        ],
+        variants: tile_variants(24, TILE as u32),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_blas2_validate() {
+        for f in [
+            madd(),
+            sger(),
+            sger2(),
+            sgemv(),
+            sgemvpy(),
+            sgemtv(),
+            sgemtvpz(),
+        ] {
+            f.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn gemv_reduction_output_is_row_indexed() {
+        let f = sgemv();
+        assert_eq!(f.outputs[0].ix, Ix::Row);
+        assert!(f.hof.output_needs_global_barrier());
+        assert!(f.store_routine(0).uses_atomic);
+    }
+
+    #[test]
+    fn gemtv_reduction_output_is_col_indexed() {
+        let f = sgemtv();
+        assert_eq!(f.outputs[0].ix, Ix::Col);
+        // gemtv reads the row-major tile straight; gemv reads transposed.
+        assert_eq!(f.compute_routine().mapping, ThreadMap::TileRowMajor);
+        assert_eq!(sgemv().compute_routine().mapping, ThreadMap::TileColMajor);
+    }
+
+    #[test]
+    fn tile_traffic_per_instance() {
+        let f = sgemv();
+        assert_eq!(f.load_routine(0).global_words, 1024); // the tile
+        assert_eq!(f.load_routine(1).global_words, 32); // x subvector
+        assert_eq!(f.store_routine(0).global_words, 32); // y partial
+    }
+
+    #[test]
+    fn variants_cover_by_4_8_16() {
+        let f = sgemtv();
+        let names: Vec<_> = f.variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, vec!["t32x4", "t32x8", "t32x16"]);
+        assert!(f.variants.iter().all(|v| !v.multi_instance));
+    }
+
+    #[test]
+    fn ger2_reads_four_subvectors() {
+        let f = sger2();
+        assert_eq!(f.inputs.len(), 5);
+        assert_eq!(
+            f.routines.iter().filter(|r| r.kind.is_load()).count(),
+            5
+        );
+        assert_eq!(f.flops_per_instance, 4 * 1024);
+    }
+}

@@ -1,0 +1,152 @@
+//! The library of elementary functions (paper §4.1): hand-"tuned" BLAS
+//! building blocks with the metadata the fusion compiler needs.
+//!
+//! Every function is decomposed into `load`/`compute`/`store` routines
+//! with explicit thread-to-data mappings and word/flop counts; each has
+//! one or more implementation variants with different block shapes and
+//! register pressure ("several alternative implementations … with
+//! different performance characteristics").
+//!
+//! BLAS-1 functions operate on `subvector32` elements; BLAS-2 functions
+//! on `TILE32x32` elements with nested map/reduce semantics (§3.3).
+
+mod blas1;
+mod blas2;
+
+use crate::ir::func::{ElemFunc, FuncId};
+use std::collections::BTreeMap;
+
+pub use blas1::*;
+pub use blas2::*;
+
+/// The function registry handed to the compiler.
+#[derive(Clone, Debug, Default)]
+pub struct Library {
+    funcs: Vec<ElemFunc>,
+    by_name: BTreeMap<String, FuncId>,
+}
+
+impl Library {
+    pub fn new() -> Self {
+        Library::default()
+    }
+
+    /// The standard library used by every sequence in the paper's
+    /// evaluation (plus the CUBLAS-baseline helpers).
+    pub fn standard() -> Self {
+        let mut lib = Library::new();
+        // BLAS-1 (depth 1, subvector32 elements)
+        lib.register(blas1::scopy());
+        lib.register(blas1::sscal());
+        lib.register(blas1::saxpy());
+        lib.register(blas1::waxpby());
+        lib.register(blas1::vadd3());
+        lib.register(blas1::vadd2());
+        lib.register(blas1::sdot());
+        lib.register(blas1::snrm2sq());
+        lib.register(blas1::sasum());
+        // BLAS-2 (depth 2, TILE32x32 elements)
+        lib.register(blas2::mcopy());
+        lib.register(blas2::madd());
+        lib.register(blas2::sger());
+        lib.register(blas2::sger2());
+        lib.register(blas2::sgemv());
+        lib.register(blas2::sgemvpy());
+        lib.register(blas2::sgemtv());
+        lib.register(blas2::sgemtvpz());
+        lib
+    }
+
+    pub fn register(&mut self, f: ElemFunc) -> FuncId {
+        if let Err(e) = f.validate() {
+            panic!("library function invalid: {e}");
+        }
+        assert!(
+            !self.by_name.contains_key(&f.name),
+            "duplicate library function '{}'",
+            f.name
+        );
+        let id = FuncId(self.funcs.len());
+        self.by_name.insert(f.name.clone(), id);
+        self.funcs.push(f);
+        id
+    }
+
+    pub fn get(&self, id: FuncId) -> &ElemFunc {
+        &self.funcs[id.0]
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<FuncId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn by_name(&self, name: &str) -> &ElemFunc {
+        let id = self
+            .lookup(name)
+            .unwrap_or_else(|| panic!("no library function '{name}'"));
+        self.get(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.funcs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.funcs.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.funcs.iter().map(|f| f.name.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::func::HigherOrder;
+
+    #[test]
+    fn standard_library_is_complete() {
+        let lib = Library::standard();
+        for name in [
+            "scopy", "sscal", "saxpy", "waxpby", "vadd3", "vadd2", "sdot", "snrm2sq",
+            "sasum", "mcopy", "madd", "sger", "sger2", "sgemv", "sgemvpy", "sgemtv",
+            "sgemtvpz",
+        ] {
+            assert!(lib.lookup(name).is_some(), "missing {name}");
+        }
+        assert_eq!(lib.len(), 17);
+    }
+
+    #[test]
+    fn every_function_validates() {
+        let lib = Library::standard();
+        for name in lib.names().map(|s| s.to_string()).collect::<Vec<_>>() {
+            lib.by_name(&name).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn depths_are_as_designed() {
+        let lib = Library::standard();
+        assert_eq!(lib.by_name("sdot").hof, HigherOrder::Reduce);
+        assert_eq!(lib.by_name("waxpby").hof, HigherOrder::Map);
+        assert_eq!(lib.by_name("madd").hof, HigherOrder::NestedMap);
+        assert_eq!(lib.by_name("sgemv").hof, HigherOrder::NestedReduce);
+        assert_eq!(lib.by_name("sgemv").depth(), 2);
+        assert_eq!(lib.by_name("sdot").depth(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate library function")]
+    fn duplicate_registration_panics() {
+        let mut lib = Library::new();
+        lib.register(blas1::scopy());
+        lib.register(blas1::scopy());
+    }
+
+    #[test]
+    fn lookup_unknown_is_none() {
+        assert!(Library::standard().lookup("sgemm").is_none());
+    }
+}

@@ -1,0 +1,5 @@
+//! CLI entrypoint — subcommands are wired in `coordinator::cli`.
+
+fn main() {
+    std::process::exit(fusebla::coordinator::cli::run());
+}

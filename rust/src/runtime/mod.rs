@@ -1,0 +1,327 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them from Rust.
+//!
+//! One artifact = one kernel = one PJRT executable. Executing a sequence
+//! runs its stages back-to-back with host-visible buffers between — the
+//! executable boundary models the CUDA kernel boundary (a forced global
+//! memory round trip), so a fused variant with fewer stages is exactly a
+//! fused kernel with fewer passes over memory.
+//!
+//! Python is never on this path: artifacts are HLO text produced once by
+//! `make artifacts`; this module compiles them on first use and caches
+//! the executables.
+
+pub mod refcheck;
+
+use crate::util::manifest::{ArtifactEntry, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// A host tensor (f32, row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            dims.iter().product::<usize>().max(1),
+            data.len(),
+            "dims/data mismatch"
+        );
+        Tensor { dims, data }
+    }
+
+    pub fn vector(data: Vec<f32>) -> Tensor {
+        Tensor {
+            dims: vec![data.len()],
+            data,
+        }
+    }
+
+    pub fn matrix(m: usize, n: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), m * n);
+        Tensor {
+            dims: vec![m, n],
+            data,
+        }
+    }
+}
+
+/// Timing of one executed stage.
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub key: String,
+    pub seconds: f64,
+}
+
+/// Result of running a sequence variant.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// All produced tensors by name (sequence outputs included).
+    pub env: BTreeMap<String, Tensor>,
+    pub stages: Vec<StageStats>,
+    pub seconds: f64,
+}
+
+/// The PJRT-backed executor.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the artifact manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest_path = artifacts_dir.join("manifest.txt");
+        let manifest = Manifest::load(&manifest_path)
+            .map_err(|e| anyhow!("{e} — run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: std::sync::Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact key.
+    pub fn executable(&self, key: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(key) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact '{key}' in manifest (rebuild artifacts?)"))?;
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile all stages of a (seq, variant, size) so timing runs
+    /// measure execution only.
+    pub fn warmup(&self, seq: &str, variant: &str, m: usize, n: usize) -> Result<usize> {
+        let stages = self.stages_of(seq, variant, m, n);
+        if stages.is_empty() {
+            bail!("no artifacts for {seq}.{variant} m{m} n{n}");
+        }
+        let keys: Vec<String> = stages.iter().map(|e| e.key.clone()).collect();
+        for key in &keys {
+            self.executable(key)?;
+        }
+        Ok(keys.len())
+    }
+
+    fn stages_of(&self, seq: &str, variant: &str, m: usize, n: usize) -> Vec<ArtifactEntry> {
+        let mut v: Vec<ArtifactEntry> = self
+            .manifest
+            .entries
+            .values()
+            .filter(|e| {
+                e.seq == seq
+                    && e.variant == variant
+                    && e.attrs.get("m").map(|s| s.as_str()) == Some(m.to_string().as_str())
+                    && e.attrs.get("n").map(|s| s.as_str()) == Some(n.to_string().as_str())
+            })
+            .cloned()
+            .collect();
+        v.sort_by_key(|e| e.stage);
+        v
+    }
+
+    /// Available (m, n) size points of a sequence variant in the catalog.
+    pub fn sizes_of(&self, seq: &str, variant: &str) -> Vec<(usize, usize)> {
+        let mut sizes: Vec<(usize, usize)> = self
+            .manifest
+            .entries
+            .values()
+            .filter(|e| e.seq == seq && e.variant == variant && e.stage == 0)
+            .filter_map(|e| {
+                Some((
+                    e.attrs.get("m")?.parse().ok()?,
+                    e.attrs.get("n")?.parse().ok()?,
+                ))
+            })
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    /// Execute one stage: bind named inputs from `env`, run, put named
+    /// outputs back into `env`.
+    pub fn run_stage(&self, entry: &ArtifactEntry, env: &mut BTreeMap<String, Tensor>) -> Result<f64> {
+        let exe = self.executable(&entry.key)?;
+        let mut literals = Vec::with_capacity(entry.inputs.len());
+        for spec in &entry.inputs {
+            let t = env
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("stage {} needs '{}' (not in env)", entry.key, spec.name))?;
+            if t.dims != spec.dims {
+                bail!(
+                    "stage {}: '{}' has dims {:?}, artifact expects {:?}",
+                    entry.key,
+                    spec.name,
+                    t.dims,
+                    spec.dims
+                );
+            }
+            let lit = xla::Literal::vec1(&t.data);
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims)?);
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let seconds = t0.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True → always a tuple.
+        let outs = result.to_tuple()?;
+        if outs.len() != entry.outputs.len() {
+            bail!(
+                "stage {}: got {} outputs, manifest says {}",
+                entry.key,
+                outs.len(),
+                entry.outputs.len()
+            );
+        }
+        for (spec, lit) in entry.outputs.iter().zip(outs) {
+            let data = lit.to_vec::<f32>()?;
+            env.insert(spec.name.clone(), Tensor::new(spec.dims.clone(), data));
+        }
+        Ok(seconds)
+    }
+
+    /// Execute all stages of a sequence variant.
+    pub fn run_seq(
+        &self,
+        seq: &str,
+        variant: &str,
+        m: usize,
+        n: usize,
+        inputs: &BTreeMap<String, Tensor>,
+    ) -> Result<RunResult> {
+        let stages = self.stages_of(seq, variant, m, n);
+        if stages.is_empty() {
+            bail!(
+                "no artifacts for {seq}.{variant} at m{m} n{n}; available: {:?}",
+                self.sizes_of(seq, variant)
+            );
+        }
+        let mut env = inputs.clone();
+        let mut stats = Vec::with_capacity(stages.len());
+        let t0 = Instant::now();
+        for entry in &stages {
+            let secs = self.run_stage(entry, &mut env)?;
+            stats.push(StageStats {
+                key: entry.key.clone(),
+                seconds: secs,
+            });
+        }
+        Ok(RunResult {
+            env,
+            stages: stats,
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping runtime test: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime"))
+    }
+
+    fn inputs_for(rt: &Runtime, seq: &str, variant: &str, m: usize, n: usize) -> BTreeMap<String, Tensor> {
+        // free inputs = names consumed before production
+        let stages = rt.stages_of(seq, variant, m, n);
+        let mut produced: Vec<String> = vec![];
+        let mut inputs = BTreeMap::new();
+        let mut rng = Prng::new(42);
+        for e in &stages {
+            for spec in &e.inputs {
+                if !produced.contains(&spec.name) && !inputs.contains_key(&spec.name) {
+                    let len: usize = spec.dims.iter().product::<usize>().max(1);
+                    inputs.insert(spec.name.clone(), Tensor::new(spec.dims.clone(), rng.f32_vec(len)));
+                }
+            }
+            for spec in &e.outputs {
+                produced.push(spec.name.clone());
+            }
+        }
+        inputs
+    }
+
+    #[test]
+    fn bicgk_fused_matches_cublas_variant() {
+        let Some(rt) = runtime() else { return };
+        let (m, n) = (256, 256);
+        let inputs = inputs_for(&rt, "bicgk", "fused", m, n);
+        let fused = rt.run_seq("bicgk", "fused", m, n, &inputs).unwrap();
+        let cublas = rt.run_seq("bicgk", "cublas", m, n, &inputs).unwrap();
+        let qf = &fused.env["q"];
+        let qc = &cublas.env["q"];
+        for (a, b) in qf.data.iter().zip(qc.data.iter()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert_eq!(fused.stages.len(), 1, "fused BiCGK must be one kernel");
+        assert_eq!(cublas.stages.len(), 2);
+    }
+
+    #[test]
+    fn missing_artifact_reports_cleanly() {
+        let Some(rt) = runtime() else { return };
+        let err = rt
+            .run_seq("bicgk", "fused", 31, 31, &BTreeMap::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no artifacts"), "{err}");
+    }
+
+    #[test]
+    fn missing_input_reports_name() {
+        let Some(rt) = runtime() else { return };
+        let err = rt
+            .run_seq("bicgk", "fused", 256, 256, &BTreeMap::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("needs"), "{err}");
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let Some(rt) = runtime() else { return };
+        let n = rt.warmup("vadd", "fused", 32, 65536).unwrap();
+        assert_eq!(n, 1);
+        let t0 = Instant::now();
+        let _ = rt.executable("vadd.fused.m32n65536.s0").unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.01, "cache miss on second lookup");
+    }
+}

@@ -1,0 +1,265 @@
+//! Rust-side reference implementations of all eleven sequences — the
+//! runtime's independent correctness oracle (mirrors python ref.py, so
+//! the AOT artifacts are validated twice: pytest against jnp and here
+//! against naive Rust).
+//!
+//! Scalar conventions must match `python/compile/model.py` and
+//! `rust/src/sequences/mod.rs`.
+
+use super::Tensor;
+use std::collections::BTreeMap;
+
+pub const AXPYDOT_ALPHA: f32 = 2.5;
+pub const SGEMV_ALPHA: f32 = 2.0;
+pub const SGEMV_BETA: f32 = 0.5;
+pub const SGEMVT_ALPHA: f32 = 2.0;
+pub const SGEMVT_BETA: f32 = 0.5;
+pub const SSCAL_ALPHA: f32 = 2.0;
+pub const GEMVER_ALPHA: f32 = 2.0;
+pub const GEMVER_BETA: f32 = 0.5;
+pub const GESUMMV_ALPHA: f32 = 2.0;
+pub const GESUMMV_BETA: f32 = 0.5;
+pub const WAXPBY_ALPHA: f32 = 2.0;
+pub const WAXPBY_BETA: f32 = 0.5;
+
+fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (a.dims[0], a.dims[1]);
+    assert_eq!(x.len(), n);
+    (0..m)
+        .map(|i| {
+            let row = &a.data[i * n..(i + 1) * n];
+            row.iter().zip(x).map(|(r, v)| r * v).sum()
+        })
+        .collect()
+}
+
+fn matvec_t(a: &Tensor, y: &[f32]) -> Vec<f32> {
+    let (m, n) = (a.dims[0], a.dims[1]);
+    assert_eq!(y.len(), m);
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        let row = &a.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            out[j] += row[j] * y[i];
+        }
+    }
+    out
+}
+
+/// Compute the reference outputs of a sequence from its free inputs.
+/// Returns name → tensor for every final output.
+pub fn reference(seq: &str, inputs: &BTreeMap<String, Tensor>) -> BTreeMap<String, Tensor> {
+    let v = |k: &str| -> &Tensor { &inputs[k] };
+    let mut out = BTreeMap::new();
+    match seq {
+        "axpydot" => {
+            let z: Vec<f32> = v("w")
+                .data
+                .iter()
+                .zip(&v("v").data)
+                .map(|(w, vv)| w - AXPYDOT_ALPHA * vv)
+                .collect();
+            let r: f32 = z.iter().zip(&v("u").data).map(|(a, b)| a * b).sum();
+            out.insert("z".into(), Tensor::vector(z));
+            out.insert("r".into(), Tensor::new(vec![1], vec![r]));
+        }
+        "atax" => {
+            let t = matvec(v("A"), &v("x").data);
+            out.insert("y".into(), Tensor::vector(matvec_t(v("A"), &t)));
+        }
+        "bicgk" => {
+            out.insert("q".into(), Tensor::vector(matvec(v("A"), &v("p").data)));
+            out.insert("s".into(), Tensor::vector(matvec_t(v("A"), &v("r").data)));
+        }
+        "sgemv" => {
+            let ax = matvec(v("A"), &v("x").data);
+            let z: Vec<f32> = ax
+                .iter()
+                .zip(&v("y").data)
+                .map(|(a, y)| SGEMV_ALPHA * a + SGEMV_BETA * y)
+                .collect();
+            out.insert("z".into(), Tensor::vector(z));
+        }
+        "sgemvt" => {
+            let aty = matvec_t(v("A"), &v("y").data);
+            let x: Vec<f32> = aty
+                .iter()
+                .zip(&v("z").data)
+                .map(|(a, z)| SGEMVT_BETA * a + z)
+                .collect();
+            let w: Vec<f32> = matvec(v("A"), &x)
+                .into_iter()
+                .map(|a| SGEMVT_ALPHA * a)
+                .collect();
+            out.insert("x".into(), Tensor::vector(x));
+            out.insert("w".into(), Tensor::vector(w));
+        }
+        "sscal" => {
+            out.insert(
+                "y".into(),
+                Tensor::vector(v("x").data.iter().map(|x| SSCAL_ALPHA * x).collect()),
+            );
+        }
+        "gemver" => {
+            let a = v("A");
+            let (m, n) = (a.dims[0], a.dims[1]);
+            let (u1, v1) = (&v("u1").data, &v("v1").data);
+            let (u2, v2) = (&v("u2").data, &v("v2").data);
+            let mut b = a.data.clone();
+            for i in 0..m {
+                for j in 0..n {
+                    b[i * n + j] += u1[i] * v1[j] + u2[i] * v2[j];
+                }
+            }
+            let bt = Tensor::matrix(m, n, b);
+            let bty = matvec_t(&bt, &v("y").data);
+            let x: Vec<f32> = bty
+                .iter()
+                .zip(&v("z").data)
+                .map(|(a, z)| GEMVER_BETA * a + z)
+                .collect();
+            let w: Vec<f32> = matvec(&bt, &x)
+                .into_iter()
+                .map(|a| GEMVER_ALPHA * a)
+                .collect();
+            out.insert("B".into(), bt);
+            out.insert("x".into(), Tensor::vector(x));
+            out.insert("w".into(), Tensor::vector(w));
+        }
+        "gesummv" => {
+            let ax = matvec(v("A"), &v("x").data);
+            let bx = matvec(v("B"), &v("x").data);
+            let y: Vec<f32> = ax
+                .iter()
+                .zip(&bx)
+                .map(|(a, b)| GESUMMV_ALPHA * a + GESUMMV_BETA * b)
+                .collect();
+            out.insert("y".into(), Tensor::vector(y));
+        }
+        "madd" => {
+            let c: Vec<f32> = v("A")
+                .data
+                .iter()
+                .zip(&v("B").data)
+                .map(|(a, b)| a + b)
+                .collect();
+            out.insert("C".into(), Tensor::new(v("A").dims.clone(), c));
+        }
+        "vadd" => {
+            let x: Vec<f32> = v("w")
+                .data
+                .iter()
+                .zip(&v("y").data)
+                .zip(&v("z").data)
+                .map(|((w, y), z)| w + y + z)
+                .collect();
+            out.insert("x".into(), Tensor::vector(x));
+        }
+        "waxpby" => {
+            let w: Vec<f32> = v("x")
+                .data
+                .iter()
+                .zip(&v("y").data)
+                .map(|(x, y)| WAXPBY_ALPHA * x + WAXPBY_BETA * y)
+                .collect();
+            out.insert("w".into(), Tensor::vector(w));
+        }
+        other => panic!("no reference for sequence '{other}'"),
+    }
+    out
+}
+
+/// Max |a−b| across the outputs the reference defines. `got` may contain
+/// extra intermediates — only reference keys are compared.
+pub fn max_abs_error(
+    seq: &str,
+    inputs: &BTreeMap<String, Tensor>,
+    got: &BTreeMap<String, Tensor>,
+) -> f32 {
+    let want = reference(seq, inputs);
+    let mut worst: f32 = 0.0;
+    for (name, w) in &want {
+        let g = got
+            .get(name)
+            .unwrap_or_else(|| panic!("output '{name}' missing from run result"));
+        assert_eq!(g.dims, w.dims, "dims of '{name}'");
+        for (a, b) in g.data.iter().zip(&w.data) {
+            worst = worst.max((a - b).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn env(pairs: &[(&str, Tensor)]) -> BTreeMap<String, Tensor> {
+        pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn bicgk_reference_small() {
+        // A = [[1,2],[3,4]], p = [1,1], r = [1,2]
+        let a = Tensor::matrix(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let inputs = env(&[
+            ("A", a),
+            ("p", Tensor::vector(vec![1.0, 1.0])),
+            ("r", Tensor::vector(vec![1.0, 2.0])),
+        ]);
+        let out = reference("bicgk", &inputs);
+        assert_eq!(out["q"].data, vec![3.0, 7.0]); // A p
+        assert_eq!(out["s"].data, vec![7.0, 10.0]); // Aᵀ r
+    }
+
+    #[test]
+    fn axpydot_reference_small() {
+        let inputs = env(&[
+            ("w", Tensor::vector(vec![1.0, 2.0])),
+            ("v", Tensor::vector(vec![0.0, 1.0])),
+            ("u", Tensor::vector(vec![1.0, 1.0])),
+        ]);
+        let out = reference("axpydot", &inputs);
+        // z = w − 2.5 v = [1, −0.5]; r = 0.5
+        assert_eq!(out["z"].data, vec![1.0, -0.5]);
+        assert!((out["r"].data[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gemver_reference_shapes() {
+        let mut rng = Prng::new(1);
+        let (m, n) = (4, 3);
+        let inputs = env(&[
+            ("A", Tensor::matrix(m, n, rng.f32_vec(m * n))),
+            ("u1", Tensor::vector(rng.f32_vec(m))),
+            ("v1", Tensor::vector(rng.f32_vec(n))),
+            ("u2", Tensor::vector(rng.f32_vec(m))),
+            ("v2", Tensor::vector(rng.f32_vec(n))),
+            ("y", Tensor::vector(rng.f32_vec(m))),
+            ("z", Tensor::vector(rng.f32_vec(n))),
+        ]);
+        let out = reference("gemver", &inputs);
+        assert_eq!(out["B"].dims, vec![m, n]);
+        assert_eq!(out["x"].dims, vec![n]);
+        assert_eq!(out["w"].dims, vec![m]);
+    }
+
+    #[test]
+    fn max_abs_error_detects_mismatch() {
+        let inputs = env(&[("x", Tensor::vector(vec![1.0, 2.0]))]);
+        let mut got = BTreeMap::new();
+        got.insert("y".to_string(), Tensor::vector(vec![2.0, 4.5]));
+        let err = max_abs_error("sscal", &inputs, &got);
+        assert!((err - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "no reference")]
+    fn unknown_sequence_panics() {
+        reference("nope", &BTreeMap::new());
+    }
+}

@@ -1,0 +1,229 @@
+//! Tokenizer for the script DSL. Hash comments run to end of line.
+
+use super::ScriptError;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokenKind {
+    Ident(String),
+    Number(f32),
+    LParen,
+    RParen,
+    LAngle,
+    RAngle,
+    Comma,
+    Semi,
+    Eq,
+    Eof,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: usize,
+}
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Lexer {
+            src: src.as_bytes(),
+            pos: 0,
+            line: 1,
+        }
+    }
+
+    pub fn tokenize(mut self) -> Result<Vec<Token>, ScriptError> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_token()?;
+            let eof = t.kind == TokenKind::Eof;
+            out.push(t);
+            if eof {
+                return Ok(out);
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn skip_trivia(&mut self) {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'#') => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    fn next_token(&mut self) -> Result<Token, ScriptError> {
+        self.skip_trivia();
+        let line = self.line;
+        let tok = |kind| Ok(Token { kind, line });
+        let c = match self.peek() {
+            None => return tok(TokenKind::Eof),
+            Some(c) => c,
+        };
+        match c {
+            b'(' => {
+                self.bump();
+                tok(TokenKind::LParen)
+            }
+            b')' => {
+                self.bump();
+                tok(TokenKind::RParen)
+            }
+            b'<' => {
+                self.bump();
+                tok(TokenKind::LAngle)
+            }
+            b'>' => {
+                self.bump();
+                tok(TokenKind::RAngle)
+            }
+            b',' => {
+                self.bump();
+                tok(TokenKind::Comma)
+            }
+            b';' => {
+                self.bump();
+                tok(TokenKind::Semi)
+            }
+            b'=' => {
+                self.bump();
+                tok(TokenKind::Eq)
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = self.pos;
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_alphanumeric() || c == b'_' {
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                let s = std::str::from_utf8(&self.src[start..self.pos])
+                    .unwrap()
+                    .to_string();
+                tok(TokenKind::Ident(s))
+            }
+            c if c.is_ascii_digit() || c == b'-' || c == b'.' => {
+                let start = self.pos;
+                self.bump();
+                while let Some(c) = self.peek() {
+                    if c.is_ascii_digit() || c == b'.' || c == b'e' || c == b'E' {
+                        self.bump();
+                    } else if (c == b'-' || c == b'+')
+                        && matches!(self.src.get(self.pos - 1), Some(b'e') | Some(b'E'))
+                    {
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+                let v: f32 = text
+                    .parse()
+                    .map_err(|_| ScriptError::new(line, format!("bad number '{text}'")))?;
+                tok(TokenKind::Number(v))
+            }
+            other => Err(ScriptError::new(
+                line,
+                format!("unexpected character '{}'", other as char),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        Lexer::new(src)
+            .tokenize()
+            .unwrap()
+            .into_iter()
+            .map(|t| t.kind)
+            .collect()
+    }
+
+    #[test]
+    fn lexes_declaration() {
+        let k = kinds("matrix<MxN> A;");
+        assert_eq!(
+            k,
+            vec![
+                TokenKind::Ident("matrix".into()),
+                TokenKind::LAngle,
+                TokenKind::Ident("MxN".into()),
+                TokenKind::RAngle,
+                TokenKind::Ident("A".into()),
+                TokenKind::Semi,
+                TokenKind::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_call_with_scalars() {
+        let k = kinds("z = waxpby(w, v, beta=-2.5);");
+        assert!(k.contains(&TokenKind::Number(-2.5)));
+        assert!(k.contains(&TokenKind::Eq));
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let k = kinds("# a comment\nx; # trailing\n");
+        assert_eq!(
+            k,
+            vec![
+                TokenKind::Ident("x".into()),
+                TokenKind::Semi,
+                TokenKind::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn line_numbers_advance() {
+        let toks = Lexer::new("a\nb\n\nc").tokenize().unwrap();
+        let lines: Vec<usize> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4, 4]);
+    }
+
+    #[test]
+    fn scientific_notation() {
+        assert_eq!(kinds("1.5e-3")[0], TokenKind::Number(0.0015));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Lexer::new("a @ b").tokenize().is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! The input script language (paper Listing 1).
+//!
+//! A script declares typed variables, marks inputs, calls elementary
+//! functions from the [`crate::library::Library`], and returns results:
+//!
+//! ```text
+//! # BiCGK sequence
+//! matrix<MxN> A;
+//! vector<N> p, s;
+//! vector<M> q, r;
+//!
+//! input A, p, r;
+//! q = sgemv(A, p);
+//! s = sgemtv(A, r);
+//! return q, s;
+//! ```
+//!
+//! The paper's surface syntax (`TILE32x32 A; subvector32 p;`) is accepted
+//! as aliases; vector dimensions are then inferred from the function
+//! signatures (GEMV forces its input to `N` and output to `M`, etc.).
+//!
+//! Scalar coefficients are bound by name inside calls:
+//! `z = waxpby(w, v, alpha=1.0, beta=-2.5);`.
+
+mod lexer;
+mod parser;
+mod typecheck;
+
+pub use lexer::{Lexer, Token, TokenKind};
+pub use parser::{parse, Ast, AstCall, AstDecl, AstType};
+pub use typecheck::typecheck;
+
+use crate::ir::program::Program;
+use crate::library::Library;
+
+/// Parse and typecheck a script against a library.
+pub fn compile_script(name: &str, src: &str, lib: &Library) -> Result<Program, ScriptError> {
+    let ast = parse(src)?;
+    typecheck(name, &ast, lib)
+}
+
+/// A script-level error with a line number.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScriptError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl ScriptError {
+    pub fn new(line: usize, msg: impl Into<String>) -> Self {
+        ScriptError {
+            line,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl std::fmt::Display for ScriptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "script line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ScriptError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::elem::VarType;
+
+    const BICGK: &str = "
+        matrix<MxN> A;
+        vector<N> p, s;
+        vector<M> q, r;
+        input A, p, r;
+        q = sgemv(A, p);
+        s = sgemtv(A, r);
+        return q, s;
+    ";
+
+    #[test]
+    fn bicgk_compiles() {
+        let lib = Library::standard();
+        let p = compile_script("bicgk", BICGK, &lib).unwrap();
+        assert_eq!(p.calls.len(), 2);
+        assert_eq!(p.inputs.len(), 3);
+        assert_eq!(p.outputs.len(), 2);
+        assert_eq!(p.var(p.var_id("A").unwrap()).ty, VarType::Matrix);
+    }
+
+    #[test]
+    fn paper_style_aliases() {
+        let lib = Library::standard();
+        let src = "
+            TILE32x32 A;
+            subvector32 p, q, r, s;
+            input A, p, r;
+            q = sgemv(A, p);
+            s = sgemtv(A, r);
+            return q, s;
+        ";
+        let p = compile_script("bicgk", src, &lib).unwrap();
+        // Dims inferred: q is M-dim (gemv output), s is N-dim.
+        let q = p.var(p.var_id("q").unwrap());
+        let s = p.var(p.var_id("s").unwrap());
+        assert_eq!(q.dims[0].0, "M");
+        assert_eq!(s.dims[0].0, "N");
+    }
+
+    #[test]
+    fn scalar_binding() {
+        let lib = Library::standard();
+        let src = "
+            vector<N> w, v, z;
+            input w, v;
+            z = waxpby(w, v, alpha=1.0, beta=-2.5);
+            return z;
+        ";
+        let p = compile_script("t", src, &lib).unwrap();
+        assert_eq!(p.calls[0].scalar_args["beta"], -2.5);
+    }
+
+    #[test]
+    fn undeclared_variable_rejected() {
+        let lib = Library::standard();
+        let src = "
+            vector<N> x;
+            input x;
+            y = sscal(x, alpha=2.0);
+            return y;
+        ";
+        let err = compile_script("t", src, &lib).unwrap_err();
+        assert!(err.msg.contains("undeclared"), "{err}");
+    }
+
+    #[test]
+    fn use_before_def_rejected() {
+        let lib = Library::standard();
+        let src = "
+            vector<N> x, y, z;
+            input x;
+            z = vadd2(x, y);
+            return z;
+        ";
+        let err = compile_script("t", src, &lib).unwrap_err();
+        assert!(err.msg.contains("neither an input nor produced"), "{err}");
+    }
+
+    #[test]
+    fn dim_conflict_rejected() {
+        let lib = Library::standard();
+        // q declared N-dim but gemv output must be M-dim.
+        let src = "
+            matrix<MxN> A;
+            vector<N> p, q;
+            input A, p;
+            q = sgemv(A, p);
+            return q;
+        ";
+        let err = compile_script("t", src, &lib).unwrap_err();
+        assert!(err.msg.contains("dimension"), "{err}");
+    }
+}

@@ -1,0 +1,326 @@
+//! Recursive-descent parser producing a raw AST (resolution against the
+//! library happens in [`super::typecheck`]).
+
+use super::lexer::{Lexer, Token, TokenKind};
+use super::ScriptError;
+
+/// Declared surface type of a variable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AstType {
+    Scalar,
+    /// `vector<M>` / `vector<N>`; `None` = `subvector32` (dims inferred).
+    Vector(Option<String>),
+    /// `matrix<MxN>`; `None` = `TILE32x32` (defaults to M×N).
+    Matrix(Option<(String, String)>),
+}
+
+#[derive(Clone, Debug)]
+pub struct AstDecl {
+    pub ty: AstType,
+    pub names: Vec<String>,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct AstCall {
+    pub out: String,
+    pub func: String,
+    pub args: Vec<String>,
+    /// `name = literal` scalar bindings, in call order.
+    pub scalars: Vec<(String, f32)>,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Ast {
+    pub decls: Vec<AstDecl>,
+    pub inputs: Vec<(String, usize)>,
+    pub calls: Vec<AstCall>,
+    pub returns: Vec<(String, usize)>,
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Token {
+        &self.toks[self.pos]
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, kind: &TokenKind, what: &str) -> Result<Token, ScriptError> {
+        let t = self.bump();
+        if std::mem::discriminant(&t.kind) == std::mem::discriminant(kind) {
+            Ok(t)
+        } else {
+            Err(ScriptError::new(
+                t.line,
+                format!("expected {what}, found {:?}", t.kind),
+            ))
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<(String, usize), ScriptError> {
+        let t = self.bump();
+        match t.kind {
+            TokenKind::Ident(s) => Ok((s, t.line)),
+            other => Err(ScriptError::new(
+                t.line,
+                format!("expected {what}, found {other:?}"),
+            )),
+        }
+    }
+
+    fn ident_list(&mut self) -> Result<Vec<(String, usize)>, ScriptError> {
+        let mut out = vec![self.ident("identifier")?];
+        while self.peek().kind == TokenKind::Comma {
+            self.bump();
+            out.push(self.ident("identifier")?);
+        }
+        Ok(out)
+    }
+
+    /// Parse `<X>` or `<XxY>` dimension annotation.
+    fn angle_dims(&mut self) -> Result<(String, usize), ScriptError> {
+        self.expect(&TokenKind::LAngle, "'<'")?;
+        let (dims, line) = self.ident("dimension")?;
+        self.expect(&TokenKind::RAngle, "'>'")?;
+        Ok((dims, line))
+    }
+
+    fn parse_decl_or_call(&mut self, ast: &mut Ast) -> Result<(), ScriptError> {
+        let (word, line) = self.ident("statement")?;
+        match word.as_str() {
+            "scalar" => {
+                let names = self.ident_list()?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.decls.push(AstDecl {
+                    ty: AstType::Scalar,
+                    names: names.into_iter().map(|(n, _)| n).collect(),
+                    line,
+                });
+            }
+            "vector" => {
+                let (d, dline) = self.angle_dims()?;
+                if d != "M" && d != "N" {
+                    return Err(ScriptError::new(
+                        dline,
+                        format!("vector dimension must be M or N, got '{d}'"),
+                    ));
+                }
+                let names = self.ident_list()?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.decls.push(AstDecl {
+                    ty: AstType::Vector(Some(d)),
+                    names: names.into_iter().map(|(n, _)| n).collect(),
+                    line,
+                });
+            }
+            "subvector32" => {
+                let names = self.ident_list()?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.decls.push(AstDecl {
+                    ty: AstType::Vector(None),
+                    names: names.into_iter().map(|(n, _)| n).collect(),
+                    line,
+                });
+            }
+            "matrix" => {
+                let (d, dline) = self.angle_dims()?;
+                let parts: Vec<&str> = d.split('x').collect();
+                if parts.len() != 2 || parts.iter().any(|p| *p != "M" && *p != "N") {
+                    return Err(ScriptError::new(
+                        dline,
+                        format!("matrix dims must be like MxN, got '{d}'"),
+                    ));
+                }
+                let names = self.ident_list()?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.decls.push(AstDecl {
+                    ty: AstType::Matrix(Some((parts[0].into(), parts[1].into()))),
+                    names: names.into_iter().map(|(n, _)| n).collect(),
+                    line,
+                });
+            }
+            "TILE32x32" => {
+                let names = self.ident_list()?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.decls.push(AstDecl {
+                    ty: AstType::Matrix(None),
+                    names: names.into_iter().map(|(n, _)| n).collect(),
+                    line,
+                });
+            }
+            "input" => {
+                let names = self.ident_list()?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.inputs.extend(names);
+            }
+            "return" => {
+                let names = self.ident_list()?;
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.returns.extend(names);
+            }
+            out_var => {
+                // assignment: out = func(args…);
+                self.expect(&TokenKind::Eq, "'='")?;
+                let (func, _) = self.ident("function name")?;
+                self.expect(&TokenKind::LParen, "'('")?;
+                let mut args = Vec::new();
+                let mut scalars = Vec::new();
+                if self.peek().kind != TokenKind::RParen {
+                    loop {
+                        let (name, aline) = self.ident("argument")?;
+                        if self.peek().kind == TokenKind::Eq {
+                            self.bump();
+                            let t = self.bump();
+                            match t.kind {
+                                TokenKind::Number(v) => scalars.push((name, v)),
+                                other => {
+                                    return Err(ScriptError::new(
+                                        t.line,
+                                        format!("scalar binding needs a number, found {other:?}"),
+                                    ))
+                                }
+                            }
+                        } else {
+                            if !scalars.is_empty() {
+                                return Err(ScriptError::new(
+                                    aline,
+                                    "positional argument after scalar binding".to_string(),
+                                ));
+                            }
+                            args.push(name);
+                        }
+                        match self.bump() {
+                            Token {
+                                kind: TokenKind::Comma,
+                                ..
+                            } => continue,
+                            Token {
+                                kind: TokenKind::RParen,
+                                ..
+                            } => break,
+                            t => {
+                                return Err(ScriptError::new(
+                                    t.line,
+                                    format!("expected ',' or ')', found {:?}", t.kind),
+                                ))
+                            }
+                        }
+                    }
+                } else {
+                    self.bump(); // ')'
+                }
+                self.expect(&TokenKind::Semi, "';'")?;
+                ast.calls.push(AstCall {
+                    out: out_var.to_string(),
+                    func,
+                    args,
+                    scalars,
+                    line,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a script source into an AST.
+pub fn parse(src: &str) -> Result<Ast, ScriptError> {
+    let toks = Lexer::new(src).tokenize()?;
+    let mut p = Parser { toks, pos: 0 };
+    let mut ast = Ast::default();
+    while p.peek().kind != TokenKind::Eof {
+        p.parse_decl_or_call(&mut ast)?;
+    }
+    if ast.calls.is_empty() {
+        return Err(ScriptError::new(0, "script has no calls"));
+    }
+    if ast.returns.is_empty() {
+        return Err(ScriptError::new(0, "script has no return statement"));
+    }
+    Ok(ast)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_bicgk() {
+        let ast = parse(
+            "matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+             input A, p, r;
+             q = sgemv(A, p);
+             s = sgemtv(A, r);
+             return q, s;",
+        )
+        .unwrap();
+        assert_eq!(ast.decls.len(), 3);
+        assert_eq!(ast.calls.len(), 2);
+        assert_eq!(ast.inputs.len(), 3);
+        assert_eq!(ast.returns.len(), 2);
+        assert_eq!(ast.calls[0].func, "sgemv");
+        assert_eq!(ast.calls[0].args, vec!["A", "p"]);
+    }
+
+    #[test]
+    fn parses_scalar_bindings() {
+        let ast = parse(
+            "vector<N> w, v, z; input w, v;
+             z = waxpby(w, v, alpha=1.0, beta=-2.5);
+             return z;",
+        )
+        .unwrap();
+        assert_eq!(
+            ast.calls[0].scalars,
+            vec![("alpha".into(), 1.0), ("beta".into(), -2.5)]
+        );
+    }
+
+    #[test]
+    fn positional_after_scalar_rejected() {
+        let err = parse(
+            "vector<N> a, b, c; input a, b;
+             c = waxpby(a, alpha=1.0, b); return c;",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("positional"), "{err}");
+    }
+
+    #[test]
+    fn empty_script_rejected() {
+        assert!(parse("").is_err());
+        assert!(parse("vector<N> x; input x;").is_err()); // no calls
+    }
+
+    #[test]
+    fn missing_return_rejected() {
+        let err = parse("vector<N> x, y; input x; y = sscal(x, alpha=2.0);").unwrap_err();
+        assert!(err.msg.contains("return"), "{err}");
+    }
+
+    #[test]
+    fn bad_matrix_dims_rejected() {
+        let err = parse("matrix<MxK> A; input A; b = f(A); return b;").unwrap_err();
+        assert!(err.msg.contains("MxN"), "{err}");
+    }
+
+    #[test]
+    fn tile_alias_accepted() {
+        let ast = parse("TILE32x32 A; subvector32 x, y; input A, x; y = sgemv(A, x); return y;")
+            .unwrap();
+        assert_eq!(ast.decls[0].ty, AstType::Matrix(None));
+        assert_eq!(ast.decls[1].ty, AstType::Vector(None));
+    }
+}

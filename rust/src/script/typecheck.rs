@@ -1,0 +1,434 @@
+//! Resolve an AST against the library: bind calls to elementary
+//! functions, check SSA discipline and element types, and infer the
+//! symbolic dimension (`M`/`N`) of every vector variable from the
+//! function signatures.
+
+use super::parser::{Ast, AstType};
+use super::ScriptError;
+use crate::ir::elem::{DimSym, VarType};
+use crate::ir::func::{ElemFunc, Ix};
+use crate::ir::program::{Call, Program, VarDecl, VarId};
+use crate::library::Library;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Local dimension slots of a function signature: depth-2 functions use
+/// Row/Col; depth-1 functions use a single Elem slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+enum Slot {
+    Row,
+    Col,
+    Elem,
+}
+
+fn param_slots(f: &ElemFunc, ix: Ix) -> Vec<Slot> {
+    match (f.depth(), ix) {
+        (_, Ix::None) => vec![],
+        (1, _) => vec![Slot::Elem],
+        (2, Ix::Row) => vec![Slot::Row],
+        (2, Ix::Col) => vec![Slot::Col],
+        (2, Ix::Both) => vec![Slot::Row, Slot::Col],
+        _ => unreachable!("validated in library"),
+    }
+}
+
+pub fn typecheck(name: &str, ast: &Ast, lib: &Library) -> Result<Program, ScriptError> {
+    let mut prog = Program {
+        name: name.to_string(),
+        ..Default::default()
+    };
+    let mut declared: BTreeMap<String, VarId> = BTreeMap::new();
+
+    // 1. Declarations. Dims may start unknown (paper-style aliases).
+    for d in &ast.decls {
+        for n in &d.names {
+            if declared.contains_key(n) {
+                return Err(ScriptError::new(d.line, format!("'{n}' declared twice")));
+            }
+            let (ty, dims) = match &d.ty {
+                AstType::Scalar => (VarType::Scalar, vec![]),
+                AstType::Vector(Some(dim)) => (VarType::Vector, vec![DimSym::new(dim)]),
+                AstType::Vector(None) => (VarType::Vector, vec![]), // inferred
+                AstType::Matrix(Some((r, c))) => {
+                    (VarType::Matrix, vec![DimSym::new(r), DimSym::new(c)])
+                }
+                AstType::Matrix(None) => {
+                    (VarType::Matrix, vec![DimSym::new("M"), DimSym::new("N")])
+                }
+            };
+            let id = VarId(prog.vars.len());
+            prog.vars.push(VarDecl {
+                name: n.clone(),
+                ty,
+                dims,
+            });
+            declared.insert(n.clone(), id);
+        }
+    }
+
+    // 2. Inputs.
+    for (n, line) in &ast.inputs {
+        let id = *declared
+            .get(n)
+            .ok_or_else(|| ScriptError::new(*line, format!("input '{n}' undeclared")))?;
+        if prog.inputs.contains(&id) {
+            return Err(ScriptError::new(*line, format!("input '{n}' listed twice")));
+        }
+        prog.inputs.push(id);
+    }
+
+    // 3. Calls: resolve, type-check, infer dims.
+    let mut produced: BTreeSet<VarId> = BTreeSet::new();
+    for c in &ast.calls {
+        let fid = lib.lookup(&c.func).ok_or_else(|| {
+            ScriptError::new(c.line, format!("unknown library function '{}'", c.func))
+        })?;
+        let f = lib.get(fid);
+
+        let out_id = *declared
+            .get(&c.out)
+            .ok_or_else(|| ScriptError::new(c.line, format!("undeclared output '{}'", c.out)))?;
+        if produced.contains(&out_id) {
+            return Err(ScriptError::new(
+                c.line,
+                format!("'{}' assigned more than once (scripts are SSA)", c.out),
+            ));
+        }
+        if prog.inputs.contains(&out_id) {
+            return Err(ScriptError::new(
+                c.line,
+                format!("'{}' is an input and cannot be assigned", c.out),
+            ));
+        }
+        if c.args.len() != f.inputs.len() {
+            return Err(ScriptError::new(
+                c.line,
+                format!(
+                    "{} takes {} arguments, got {}",
+                    f.name,
+                    f.inputs.len(),
+                    c.args.len()
+                ),
+            ));
+        }
+        if f.outputs.len() != 1 {
+            return Err(ScriptError::new(
+                c.line,
+                format!("{} must have exactly one output", f.name),
+            ));
+        }
+
+        let mut arg_ids = Vec::with_capacity(c.args.len());
+        for (a, p) in c.args.iter().zip(f.inputs.iter()) {
+            let id = *declared
+                .get(a)
+                .ok_or_else(|| ScriptError::new(c.line, format!("undeclared variable '{a}'")))?;
+            let v = prog.var(id);
+            if v.ty.elem() != p.elem {
+                return Err(ScriptError::new(
+                    c.line,
+                    format!(
+                        "argument '{a}' of {} must be {}, got {}",
+                        f.name,
+                        p.elem,
+                        v.ty.elem()
+                    ),
+                ));
+            }
+            if !prog.inputs.contains(&id) && !produced.contains(&id) {
+                return Err(ScriptError::new(
+                    c.line,
+                    format!("'{a}' is neither an input nor produced by an earlier call"),
+                ));
+            }
+            arg_ids.push(id);
+        }
+        let outp = &f.outputs[0];
+        if prog.var(out_id).ty.elem() != outp.elem {
+            return Err(ScriptError::new(
+                c.line,
+                format!(
+                    "output '{}' of {} must be {}, got {}",
+                    c.out,
+                    f.name,
+                    outp.elem,
+                    prog.var(out_id).ty.elem()
+                ),
+            ));
+        }
+
+        // Dimension inference: bind Row/Col/Elem slots from known dims,
+        // then write back to unknown dims.
+        let mut slot_bind: BTreeMap<Slot, DimSym> = BTreeMap::new();
+        let all: Vec<(VarId, Vec<Slot>)> = arg_ids
+            .iter()
+            .zip(f.inputs.iter())
+            .map(|(&id, p)| (id, param_slots(f, p.ix)))
+            .chain(std::iter::once((out_id, param_slots(f, outp.ix))))
+            .collect();
+        // pass 1: bind from knowns
+        for (id, slots) in &all {
+            let v = prog.var(*id);
+            if v.dims.len() == slots.len() {
+                for (slot, dim) in slots.iter().zip(v.dims.iter()) {
+                    if let Some(prev) = slot_bind.get(slot) {
+                        if prev != dim {
+                            return Err(ScriptError::new(
+                                c.line,
+                                format!(
+                                    "dimension mismatch in call to {}: '{}' wants {} where {} was bound",
+                                    f.name, v.name, dim, prev
+                                ),
+                            ));
+                        }
+                    } else {
+                        slot_bind.insert(*slot, dim.clone());
+                    }
+                }
+            }
+        }
+        // default unbound depth-1 elem slot to N (pure BLAS-1 scripts)
+        slot_bind.entry(Slot::Elem).or_insert_with(|| DimSym::new("N"));
+        // pass 2: write back to unknowns
+        for (id, slots) in &all {
+            if prog.var(*id).dims.is_empty() && !slots.is_empty() {
+                let mut dims = Vec::with_capacity(slots.len());
+                for slot in slots {
+                    let d = slot_bind.get(slot).ok_or_else(|| {
+                        ScriptError::new(
+                            c.line,
+                            format!(
+                                "cannot infer dimension of '{}' in call to {}",
+                                prog.var(*id).name,
+                                f.name
+                            ),
+                        )
+                    })?;
+                    dims.push(d.clone());
+                }
+                prog.vars[id.0].dims = dims;
+            }
+        }
+        // pass 3: re-verify all now-known dims agree (conflict detection
+        // for vars that were known all along)
+        for (id, slots) in &all {
+            let v = prog.var(*id);
+            if v.dims.len() != slots.len() {
+                return Err(ScriptError::new(
+                    c.line,
+                    format!(
+                        "'{}' has rank {} but {} expects rank {}",
+                        v.name,
+                        v.dims.len(),
+                        f.name,
+                        slots.len()
+                    ),
+                ));
+            }
+            for (slot, dim) in slots.iter().zip(v.dims.iter()) {
+                if slot_bind.get(slot) != Some(dim) {
+                    return Err(ScriptError::new(
+                        c.line,
+                        format!(
+                            "dimension mismatch: '{}' is {}-dimensioned, inconsistent with call to {}",
+                            v.name, dim, f.name
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // Scalar bindings: every named scalar must exist; unbound default 1.0.
+        let mut scalar_args = BTreeMap::new();
+        for (sname, val) in &c.scalars {
+            if !f.scalars.contains(sname) {
+                return Err(ScriptError::new(
+                    c.line,
+                    format!("{} has no scalar parameter '{sname}'", f.name),
+                ));
+            }
+            if scalar_args.insert(sname.clone(), *val).is_some() {
+                return Err(ScriptError::new(
+                    c.line,
+                    format!("scalar '{sname}' bound twice"),
+                ));
+            }
+        }
+        for s in &f.scalars {
+            scalar_args.entry(s.clone()).or_insert(1.0);
+        }
+
+        produced.insert(out_id);
+        prog.calls.push(Call {
+            func: fid,
+            args: arg_ids,
+            outs: vec![out_id],
+            scalar_args,
+        });
+    }
+
+    // 4. Returns.
+    for (n, line) in &ast.returns {
+        let id = *declared
+            .get(n)
+            .ok_or_else(|| ScriptError::new(*line, format!("returned '{n}' undeclared")))?;
+        if !produced.contains(&id) && !prog.inputs.contains(&id) {
+            return Err(ScriptError::new(
+                *line,
+                format!("returned '{n}' is never produced"),
+            ));
+        }
+        prog.outputs.push(id);
+    }
+
+    // 5. Dead code: every call must (transitively) feed a return.
+    let mut live: BTreeSet<VarId> = prog.outputs.iter().copied().collect();
+    for c in prog.calls.iter().rev() {
+        if c.outs.iter().any(|o| live.contains(o)) {
+            live.extend(c.args.iter().copied());
+        }
+    }
+    for (i, c) in prog.calls.iter().enumerate() {
+        if !c.outs.iter().any(|o| live.contains(o)) {
+            return Err(ScriptError::new(
+                ast.calls[i].line,
+                format!(
+                    "result of call to {} is never used",
+                    lib.get(c.func).name
+                ),
+            ));
+        }
+    }
+
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::script::parse;
+
+    fn check(src: &str) -> Result<Program, ScriptError> {
+        let lib = Library::standard();
+        typecheck("t", &parse(src).unwrap(), &lib)
+    }
+
+    #[test]
+    fn infers_vector_dims_from_gemv() {
+        let p = check(
+            "TILE32x32 A; subvector32 x, y; input A, x;
+             y = sgemv(A, x); return y;",
+        )
+        .unwrap();
+        assert_eq!(p.var(p.var_id("x").unwrap()).dims[0].0, "N");
+        assert_eq!(p.var(p.var_id("y").unwrap()).dims[0].0, "M");
+    }
+
+    #[test]
+    fn blas1_defaults_to_n() {
+        let p = check(
+            "subvector32 w, y, z, x; input w, y, z;
+             x = vadd3(w, y, z); return x;",
+        )
+        .unwrap();
+        assert_eq!(p.var(p.var_id("x").unwrap()).dims[0].0, "N");
+    }
+
+    #[test]
+    fn ssa_violation_rejected() {
+        let err = check(
+            "vector<N> x, y; input x;
+             y = sscal(x, alpha=2.0);
+             y = sscal(x, alpha=3.0);
+             return y;",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("SSA"), "{err}");
+    }
+
+    #[test]
+    fn assigning_input_rejected() {
+        let err = check(
+            "vector<N> x, y; input x, y;
+             y = sscal(x, alpha=2.0); return y;",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("cannot be assigned"), "{err}");
+    }
+
+    #[test]
+    fn elem_type_mismatch_rejected() {
+        let err = check(
+            "matrix<MxN> A, B; vector<N> x; input A, x;
+             B = sscal(A, alpha=2.0); return B;",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("must be subvector32"), "{err}");
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let err = check(
+            "vector<N> x, y; input x;
+             y = vadd2(x); return y;",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("takes 2 arguments"), "{err}");
+    }
+
+    #[test]
+    fn unknown_scalar_rejected() {
+        let err = check(
+            "vector<N> x, y; input x;
+             y = sscal(x, gamma=2.0); return y;",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("no scalar parameter"), "{err}");
+    }
+
+    #[test]
+    fn scalars_default_to_one() {
+        let p = check(
+            "matrix<MxN> A; vector<N> x; vector<M> y; input A, x;
+             y = sgemv(A, x); return y;",
+        )
+        .unwrap();
+        assert_eq!(p.calls[0].scalar_args["alpha"], 1.0);
+    }
+
+    #[test]
+    fn dead_call_rejected() {
+        let err = check(
+            "vector<N> x, y, z; input x;
+             y = sscal(x, alpha=2.0);
+             z = sscal(x, alpha=3.0);
+             return z;",
+        )
+        .unwrap_err();
+        assert!(err.msg.contains("never used"), "{err}");
+    }
+
+    #[test]
+    fn dot_produces_scalar() {
+        let p = check(
+            "vector<N> x, y; scalar r; input x, y;
+             r = sdot(x, y); return r;",
+        )
+        .unwrap();
+        assert_eq!(p.var(p.var_id("r").unwrap()).ty, VarType::Scalar);
+        assert!(p.var(p.var_id("r").unwrap()).dims.is_empty());
+    }
+
+    #[test]
+    fn transposed_dims_infer() {
+        // ATAX: t = A x (t: M), y = Aᵀ t (y: N)
+        let p = check(
+            "matrix<MxN> A; subvector32 x, t, y; input A, x;
+             t = sgemv(A, x);
+             y = sgemtv(A, t);
+             return y;",
+        )
+        .unwrap();
+        assert_eq!(p.var(p.var_id("t").unwrap()).dims[0].0, "M");
+        assert_eq!(p.var(p.var_id("y").unwrap()).dims[0].0, "N");
+    }
+}

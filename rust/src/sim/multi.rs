@@ -1,0 +1,231 @@
+//! Multi-GPU extension (the paper's §6 future work: "Support for
+//! multi-GPU computations. … While the distribution of map and reduce is
+//! quite straightforward, more complicated functions … yield
+//! significantly more difficult data exchange pattern").
+//!
+//! Model: G identical devices, operands resident (steady state), the
+//! kernel's instances split evenly along its outer axis. What does NOT
+//! split for free is exactly what the paper warns about:
+//!
+//! * **map outputs** partition cleanly — no exchange;
+//! * **reduction outputs** exist as G partials that must be combined:
+//!   the combine moves `(G−1)/G` of the output words across the
+//!   interconnect and reduces them on one device;
+//! * **invariant (broadcast) inputs** — the Col/Row-indexed sub-vectors
+//!   a fused kernel shares across instances — must be replicated; in
+//!   steady state replication of *intermediate* reduction results (e.g.
+//!   GEMVER's x between its two kernels) costs a broadcast per kernel
+//!   boundary.
+//!
+//! Launch overhead is paid per device (drivers launch concurrently but
+//! not for free), and each kernel's per-device grid shrinks — small
+//! problems stop scaling, which is the crossover the future-work section
+//! anticipates.
+
+use super::{simulate_kernel, DeviceModel, SeqTiming};
+use crate::ir::elem::ProblemSize;
+use crate::ir::plan::{KernelPlan, SeqPlan};
+
+/// Interconnect between devices (PCIe 2.0 ×16 for the paper's era).
+#[derive(Clone, Copy, Debug)]
+pub struct Interconnect {
+    /// Effective point-to-point bandwidth, B/s.
+    pub bandwidth: f64,
+    /// Per-transfer latency, s.
+    pub latency: f64,
+}
+
+impl Interconnect {
+    pub fn pcie2_x16() -> Self {
+        Interconnect {
+            bandwidth: 6.0e9,
+            latency: 10.0e-6,
+        }
+    }
+
+    fn transfer_time(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            0.0
+        } else {
+            self.latency + bytes / self.bandwidth
+        }
+    }
+}
+
+/// Per-kernel multi-device timing breakdown.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiKernelTiming {
+    pub compute_seconds: f64,
+    pub exchange_seconds: f64,
+}
+
+/// Split one kernel over `g` devices.
+pub fn simulate_kernel_multi(
+    dev: &DeviceModel,
+    link: &Interconnect,
+    g: u32,
+    plan: &KernelPlan,
+    p: ProblemSize,
+) -> MultiKernelTiming {
+    assert!(g >= 1);
+    if g == 1 {
+        let t = simulate_kernel(dev, plan, p);
+        return MultiKernelTiming {
+            compute_seconds: t.seconds,
+            exchange_seconds: 0.0,
+        };
+    }
+    // Shrink the problem along the kernel's outer axis: each device gets
+    // m/g rows (depth 2) or n/g elements (depth 1). Wave quantization
+    // and the latency floor then apply to the *per-device* grid.
+    let p_dev = if plan.grid.depth == 2 {
+        ProblemSize::new((p.m / g as usize).max(32), p.n)
+    } else {
+        ProblemSize::new(p.m, (p.n / g as usize).max(32))
+    };
+    let per_dev = simulate_kernel(dev, plan, p_dev);
+
+    // Exchange: combine reduction partials. Atomic-store outputs are the
+    // reduction outputs; their words (already counted per device) exist
+    // G times and (G-1)/G of one copy crosses the link, then a combine
+    // pass runs on the root (bandwidth-bound, tiny).
+    let reduce_words = plan.traffic.atomic_words.eval(p).max(0.0) / plan.grid.iters as f64;
+    // steady-state: one combined copy of the reduction output, sized by
+    // the *output vector*, not the per-tile partial count — bound it by
+    // the smaller of the two.
+    let out_words = reduce_words.min((p.m + p.n) as f64);
+    let exchange_bytes = out_words * 4.0 * (g as f64 - 1.0) / g as f64;
+    let exchange = if exchange_bytes > 0.0 {
+        link.transfer_time(exchange_bytes) * (g as f64).log2().ceil().max(1.0)
+    } else {
+        0.0
+    };
+    MultiKernelTiming {
+        compute_seconds: per_dev.seconds,
+        exchange_seconds: exchange,
+    }
+}
+
+/// Split a sequence over `g` devices.
+pub fn simulate_seq_multi(
+    dev: &DeviceModel,
+    link: &Interconnect,
+    g: u32,
+    plan: &SeqPlan,
+    p: ProblemSize,
+    flops_convention: f64,
+) -> SeqTiming {
+    let mut seconds = 0.0;
+    let mut kernels = Vec::with_capacity(plan.kernels.len());
+    for k in &plan.kernels {
+        let t = simulate_kernel_multi(dev, link, g, k, p);
+        seconds += t.compute_seconds + t.exchange_seconds + dev.launch_overhead;
+        kernels.push(super::KernelTiming {
+            seconds: t.compute_seconds + t.exchange_seconds,
+            t_mem: t.compute_seconds,
+            t_compute: 0.0,
+            bytes: k.traffic.total_bytes(p),
+            flops: k.flops.eval(p),
+            bandwidth_gbs: 0.0,
+            occupancy: 0.0,
+            blocks: k.blocks(p),
+        });
+    }
+    seconds += (plan.kernels.len() as f64 - 1.0).max(0.0) * dev.kernel_gap;
+    SeqTiming {
+        seconds,
+        gflops: flops_convention / seconds / 1e9,
+        bandwidth_gbs: 0.0,
+        kernels,
+    }
+}
+
+/// Strong-scaling efficiency of a plan at `g` devices (speedup / g).
+pub fn scaling_efficiency(
+    dev: &DeviceModel,
+    link: &Interconnect,
+    g: u32,
+    plan: &SeqPlan,
+    p: ProblemSize,
+) -> f64 {
+    let t1 = simulate_seq_multi(dev, link, 1, plan, p, 1.0).seconds;
+    let tg = simulate_seq_multi(dev, link, g, plan, p, 1.0).seconds;
+    (t1 / tg) / g as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotune;
+    use crate::coordinator::Context;
+    use crate::fusion::ImplAxes;
+    use crate::sequences;
+
+    fn best_plan(ctx: &Context, name: &str, p: ProblemSize) -> (SeqPlan, f64) {
+        let seq = sequences::by_name(name).unwrap();
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let c = autotune::compile_first(&prog, &ctx.lib, &graph, &ctx.db, &ImplAxes::minimal(), p);
+        (c.plan, seq.flops.eval(p))
+    }
+
+    #[test]
+    fn map_sequences_scale_nearly_linearly() {
+        let ctx = Context::new();
+        let dev = &ctx.dev;
+        let link = Interconnect::pcie2_x16();
+        let p = ProblemSize::new(32, 1 << 24);
+        let (plan, _) = best_plan(&ctx, "vadd", p);
+        let eff2 = scaling_efficiency(dev, &link, 2, &plan, p);
+        let eff4 = scaling_efficiency(dev, &link, 4, &plan, p);
+        assert!(eff2 > 0.85, "2-GPU map efficiency {eff2:.2}");
+        assert!(eff4 > 0.7, "4-GPU map efficiency {eff4:.2}");
+    }
+
+    #[test]
+    fn reductions_pay_combine_cost() {
+        // AXPYDOT's dot product must scale *worse* than pure-map VADD.
+        let ctx = Context::new();
+        let link = Interconnect::pcie2_x16();
+        let p = ProblemSize::new(32, 1 << 22);
+        let (vadd, _) = best_plan(&ctx, "vadd", p);
+        let (axpydot, _) = best_plan(&ctx, "axpydot", p);
+        let ev = scaling_efficiency(&ctx.dev, &link, 4, &vadd, p);
+        let ea = scaling_efficiency(&ctx.dev, &link, 4, &axpydot, p);
+        assert!(ea <= ev + 1e-9, "reduce ({ea:.3}) should not beat map ({ev:.3})");
+    }
+
+    #[test]
+    fn small_problems_stop_scaling() {
+        let ctx = Context::new();
+        let link = Interconnect::pcie2_x16();
+        let big = ProblemSize::square(8192);
+        let small = ProblemSize::square(512);
+        let (plan_big, _) = best_plan(&ctx, "bicgk", big);
+        let eff_big = scaling_efficiency(&ctx.dev, &link, 4, &plan_big, big);
+        let eff_small = scaling_efficiency(&ctx.dev, &link, 4, &plan_big, small);
+        assert!(
+            eff_small < eff_big,
+            "small {eff_small:.2} should scale worse than big {eff_big:.2}"
+        );
+    }
+
+    #[test]
+    fn single_device_is_identity() {
+        let ctx = Context::new();
+        let link = Interconnect::pcie2_x16();
+        let p = ProblemSize::square(4096);
+        let (plan, flops) = best_plan(&ctx, "bicgk", p);
+        let multi = simulate_seq_multi(&ctx.dev, &link, 1, &plan, p, flops);
+        let single = crate::sim::simulate_seq(&ctx.dev, &plan, p, flops);
+        let ratio = multi.seconds / single.seconds;
+        assert!((0.95..1.05).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn interconnect_transfer_model() {
+        let link = Interconnect::pcie2_x16();
+        assert_eq!(link.transfer_time(0.0), 0.0);
+        let t = link.transfer_time(6.0e9);
+        assert!((t - (1.0 + 10.0e-6)).abs() < 1e-6);
+    }
+}

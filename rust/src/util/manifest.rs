@@ -1,0 +1,308 @@
+//! Artifact manifest format shared between `python/compile/aot.py` (writer)
+//! and the Rust runtime (reader).
+//!
+//! Plain-text stanza format (serde/JSON are unreachable offline):
+//!
+//! ```text
+//! # fusebla artifact manifest v1
+//! artifact bicgk.fused.n2048
+//!   file bicgk.fused.n2048.hlo.txt
+//!   seq bicgk
+//!   variant fused
+//!   stage 0
+//!   in A:f32[2048,2048]
+//!   in p:f32[2048]
+//!   in r:f32[2048]
+//!   out q:f32[2048]
+//!   out s:f32[2048]
+//! end
+//! ```
+//!
+//! Unknown `key value` lines inside a stanza are kept in `attrs` so the
+//! format is forward-compatible.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Element dtype of an artifact parameter. Only f32 is used by the BLAS
+/// catalog, but the parser is dtype-general.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unknown dtype '{other}'")),
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::F64 => write!(f, "f64"),
+            DType::I32 => write!(f, "i32"),
+        }
+    }
+}
+
+/// A named, shaped parameter or result of an artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `name:f32[2048,2048]` (scalar: `alpha:f32[]`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (name, rest) = s
+            .split_once(':')
+            .ok_or_else(|| format!("tensor spec '{s}' missing ':'"))?;
+        let lb = rest
+            .find('[')
+            .ok_or_else(|| format!("tensor spec '{s}' missing '['"))?;
+        if !rest.ends_with(']') {
+            return Err(format!("tensor spec '{s}' missing ']'"));
+        }
+        let dtype = DType::parse(&rest[..lb])?;
+        let dims_str = &rest[lb + 1..rest.len() - 1];
+        let dims = if dims_str.is_empty() {
+            vec![]
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|e| format!("bad dim '{d}' in '{s}': {e}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        Ok(TensorSpec {
+            name: name.to_string(),
+            dtype,
+            dims,
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+}
+
+impl fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}:{}[{}]", self.name, self.dtype, dims.join(","))
+    }
+}
+
+/// One AOT-compiled HLO module in the catalog.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub key: String,
+    /// Path of the HLO text file, relative to the manifest's directory.
+    pub file: PathBuf,
+    pub seq: String,
+    pub variant: String,
+    /// Kernel index within the sequence's plan (fusions may leave several
+    /// kernels; each is a separate executable).
+    pub stage: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub attrs: BTreeMap<String, String>,
+}
+
+/// The parsed manifest: key → entry.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactEntry>,
+    /// Directory the manifest was loaded from (file paths resolve here).
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, root: &Path) -> Result<Self, String> {
+        let mut entries = BTreeMap::new();
+        let mut cur: Option<ArtifactEntry> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let err = |msg: String| format!("manifest line {}: {}", lineno + 1, msg);
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (word, rest) = match line.split_once(char::is_whitespace) {
+                Some((w, r)) => (w, r.trim()),
+                None => (line, ""),
+            };
+            match word {
+                "artifact" => {
+                    if cur.is_some() {
+                        return Err(err("nested 'artifact' (missing 'end')".into()));
+                    }
+                    if rest.is_empty() {
+                        return Err(err("'artifact' requires a key".into()));
+                    }
+                    cur = Some(ArtifactEntry {
+                        key: rest.to_string(),
+                        file: PathBuf::new(),
+                        seq: String::new(),
+                        variant: String::new(),
+                        stage: 0,
+                        inputs: vec![],
+                        outputs: vec![],
+                        attrs: BTreeMap::new(),
+                    });
+                }
+                "end" => {
+                    let e = cur.take().ok_or_else(|| err("'end' outside stanza".into()))?;
+                    if e.file.as_os_str().is_empty() {
+                        return Err(err(format!("artifact '{}' has no file", e.key)));
+                    }
+                    if entries.insert(e.key.clone(), e).is_some() {
+                        return Err(err("duplicate artifact key".into()));
+                    }
+                }
+                field => {
+                    let e = cur
+                        .as_mut()
+                        .ok_or_else(|| err(format!("'{field}' outside stanza")))?;
+                    match field {
+                        "file" => e.file = PathBuf::from(rest),
+                        "seq" => e.seq = rest.to_string(),
+                        "variant" => e.variant = rest.to_string(),
+                        "stage" => {
+                            e.stage = rest.parse().map_err(|x| err(format!("bad stage: {x}")))?
+                        }
+                        "in" => e.inputs.push(TensorSpec::parse(rest).map_err(err)?),
+                        "out" => e.outputs.push(TensorSpec::parse(rest).map_err(err)?),
+                        other => {
+                            e.attrs.insert(other.to_string(), rest.to_string());
+                        }
+                    }
+                }
+            }
+        }
+        if cur.is_some() {
+            return Err("manifest truncated inside a stanza".into());
+        }
+        Ok(Manifest {
+            entries,
+            root: root.to_path_buf(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let root = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Self::parse(&text, &root)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(key)
+    }
+
+    /// All entries of one sequence, ordered by (variant, stage).
+    pub fn for_seq(&self, seq: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> =
+            self.entries.values().filter(|e| e.seq == seq).collect();
+        v.sort_by(|a, b| (&a.variant, a.stage).cmp(&(&b.variant, b.stage)));
+        v
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.root.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+artifact bicgk.fused.n64
+  file bicgk.fused.n64.hlo.txt
+  seq bicgk
+  variant fused
+  stage 0
+  in A:f32[64,64]
+  in p:f32[64]
+  in r:f32[64]
+  out q:f32[64]
+  out s:f32[64]
+  flops 16384
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let e = m.get("bicgk.fused.n64").unwrap();
+        assert_eq!(e.seq, "bicgk");
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.outputs.len(), 2);
+        assert_eq!(e.inputs[0].dims, vec![64, 64]);
+        assert_eq!(e.attrs["flops"], "16384");
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/bicgk.fused.n64.hlo.txt"));
+    }
+
+    #[test]
+    fn tensor_spec_scalar() {
+        let t = TensorSpec::parse("alpha:f32[]").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.element_count(), 1);
+        assert_eq!(t.to_string(), "alpha:f32[]");
+    }
+
+    #[test]
+    fn tensor_spec_errors() {
+        assert!(TensorSpec::parse("noshape:f32").is_err());
+        assert!(TensorSpec::parse("nodtype[3]").is_err());
+        assert!(TensorSpec::parse("x:q8[3]").is_err());
+        assert!(TensorSpec::parse("x:f32[a]").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_stanzas() {
+        assert!(Manifest::parse("end\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("artifact a\nartifact b\n", Path::new(".")).is_err());
+        assert!(Manifest::parse("artifact a\nend\n", Path::new(".")).is_err()); // no file
+        assert!(Manifest::parse("file x\n", Path::new(".")).is_err()); // outside stanza
+        let dup = "artifact a\n file f\nend\nartifact a\n file f\nend\n";
+        assert!(Manifest::parse(dup, Path::new(".")).is_err()); // duplicate key
+    }
+
+    #[test]
+    fn truncated_stanza_is_error() {
+        assert!(Manifest::parse("artifact a\n file f\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn for_seq_ordering() {
+        let text = "\
+artifact b.unfused.s1\n file f1\n seq b\n variant unfused\n stage 1\nend
+artifact b.unfused.s0\n file f0\n seq b\n variant unfused\n stage 0\nend
+artifact b.fused.s0\n file f2\n seq b\n variant fused\n stage 0\nend
+";
+        let m = Manifest::parse(text, Path::new(".")).unwrap();
+        let v = m.for_seq("b");
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].variant, "fused");
+        assert_eq!(v[1].stage, 0);
+        assert_eq!(v[2].stage, 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! Small self-contained utilities used across the crate.
+//!
+//! The offline build environment only provides the `xla` crate's vendored
+//! dependency closure, so facilities normally pulled from crates.io
+//! (`rand`, `proptest`, `serde`, table printers) are implemented here.
+
+pub mod manifest;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;
+pub use stats::Summary;
+pub use table::Table;
+
+/// Format a byte count with binary units, e.g. `48.0 KiB`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Format seconds human-readably, matching the paper's Table 5 style
+/// (`0.133 s`, `1m 59s`, `3h 24m 36s`).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 60.0 {
+        if secs < 1.0 {
+            format!("{:.3} s", secs)
+        } else {
+            format!("{:.2} s", secs)
+        }
+    } else if secs < 3600.0 {
+        let m = (secs / 60.0).floor() as u64;
+        let s = (secs - m as f64 * 60.0).round() as u64;
+        format!("{}m {}s", m, s)
+    } else {
+        let h = (secs / 3600.0).floor() as u64;
+        let m = ((secs - h as f64 * 3600.0) / 60.0).floor() as u64;
+        let s = (secs % 60.0).round() as u64;
+        format!("{}h {}m {}s", h, m, s)
+    }
+}
+
+/// Format a GFlops value paper-style (three significant digits).
+pub fn fmt_gflops(gf: f64) -> String {
+    if gf >= 100.0 {
+        format!("{:.0}", gf)
+    } else if gf >= 10.0 {
+        format!("{:.1}", gf)
+    } else {
+        format!("{:.2}", gf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(0), "0 B");
+        assert_eq!(fmt_bytes(1023), "1023 B");
+        assert_eq!(fmt_bytes(48 * 1024), "48.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.133), "0.133 s");
+        assert_eq!(fmt_duration(42.164), "42.16 s");
+        assert_eq!(fmt_duration(119.0), "1m 59s");
+        assert_eq!(fmt_duration(3.0 * 3600.0 + 24.0 * 60.0 + 36.0), "3h 24m 36s");
+    }
+
+    #[test]
+    fn gflops_formatting() {
+        assert_eq!(fmt_gflops(115.2), "115");
+        assert_eq!(fmt_gflops(38.31), "38.3");
+        assert_eq!(fmt_gflops(7.684), "7.68");
+    }
+}

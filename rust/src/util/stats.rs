@@ -1,0 +1,124 @@
+//! Timing statistics for the in-repo benchmark harness.
+
+use std::time::Instant;
+
+/// Summary statistics over a set of timing samples (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            median,
+            min: sorted[0],
+            max: sorted[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+}
+
+/// Benchmark a closure: `warmup` unrecorded runs, then `iters` timed runs.
+/// Returns per-run seconds. The closure's return value is black-boxed to
+/// keep the optimizer from deleting the work.
+pub fn bench<T, F: FnMut() -> T>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+/// Benchmark with a time budget: runs at least `min_iters`, stops after
+/// `budget_secs` of measured time. Good for targets with wildly different
+/// costs (table5 compiles vs table2 simulations).
+pub fn bench_budget<T, F: FnMut() -> T>(
+    warmup: usize,
+    min_iters: usize,
+    budget_secs: f64,
+    mut f: F,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let mut spent = 0.0;
+    while samples.len() < min_iters || (spent < budget_secs && samples.len() < 10_000) {
+        let t0 = Instant::now();
+        black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        spent += dt;
+        if spent >= budget_secs && samples.len() >= min_iters {
+            break;
+        }
+    }
+    samples
+}
+
+/// Identity function opaque to the optimizer (std::hint::black_box exists
+/// since 1.66; wrap it so call sites read uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_samples() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn summary_empty_is_zeroed() {
+        let s = Summary::from_samples(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn bench_produces_requested_samples() {
+        let samples = bench(1, 5, || 1 + 1);
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn bench_budget_respects_min_iters() {
+        let samples = bench_budget(0, 3, 0.0, || 7);
+        assert!(samples.len() >= 3);
+    }
+}

