@@ -1,0 +1,65 @@
+//! Planner-vs-exhaustive study: for every sequence, the size of the full
+//! combination space, how little of it the pruned planner materializes,
+//! the kernel-cost memoization ratio, and the wallclock of both paths.
+//!
+//! `cargo bench --bench planner`
+
+use fusebla::autotune;
+use fusebla::bench_support::{eval_axes, eval_size};
+use fusebla::coordinator::Context;
+use fusebla::fusion::enumerate_fusions;
+use fusebla::fusion::space::Space;
+use fusebla::planner::{plan_space, PlannerConfig};
+use fusebla::sequences;
+use fusebla::util::{fmt_duration, Table};
+use std::time::Instant;
+
+fn main() {
+    let ctx = Context::new();
+    let mut t = Table::new(
+        "planner vs exhaustive — combinations materialized and wallclock",
+        &[
+            "Sequence",
+            "Space",
+            "Planner combos",
+            "Pruned",
+            "Kernel costs",
+            "Kernel refs",
+            "t_exhaustive",
+            "t_planner",
+        ],
+    );
+    for seq in sequences::all() {
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let axes = eval_axes(&seq);
+        let p = eval_size(&seq);
+        let fusions = enumerate_fusions(&prog, &ctx.lib, &graph);
+        let space = Space::build(&prog, &ctx.lib, &graph, &fusions, &axes);
+
+        let t0 = Instant::now();
+        let exhaustive = autotune::rank_all(&prog, &ctx.lib, &graph, &ctx.db, &axes, p);
+        let t_exhaustive = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let planned = plan_space(&prog, &space, &ctx.db, p, &PlannerConfig::default());
+        let t_planner = t1.elapsed().as_secs_f64();
+
+        assert!(
+            planned.predicted <= exhaustive[0].predicted,
+            "{}: planner worse than exhaustive",
+            seq.name
+        );
+        t.row(&[
+            seq.name.to_uppercase(),
+            planned.stats.space_combinations.to_string(),
+            planned.stats.combos_evaluated.to_string(),
+            planned.stats.partitions_pruned.to_string(),
+            planned.stats.kernel_evals.to_string(),
+            planned.stats.kernel_refs.to_string(),
+            fmt_duration(t_exhaustive),
+            fmt_duration(t_planner),
+        ]);
+    }
+    t.print();
+    println!("TSV:\n{}", t.to_tsv());
+}

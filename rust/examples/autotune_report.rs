@@ -6,9 +6,8 @@
 //! Run: `cargo run --release --example autotune_report`
 
 use fusebla::autotune;
-use fusebla::bench_support::eval_size;
+use fusebla::bench_support::{eval_axes, eval_size};
 use fusebla::coordinator::Context;
-use fusebla::fusion::ImplAxes;
 use fusebla::sequences;
 use fusebla::util::{fmt_duration, Table};
 
@@ -24,18 +23,9 @@ fn main() {
     for seq in sequences::all() {
         let (prog, graph) = seq.graph(&ctx.lib);
         let p = eval_size(&seq);
-        // trim the axes for the widest script (GEMVER) to keep the
-        // report interactive, as bench_support does
-        let axes = if prog.calls.len() >= 3 {
-            ImplAxes {
-                iters: vec![1, 4, 16],
-                ipb: vec![2, 8],
-                max_orders: 4,
-                both_iter_dims: true,
-            }
-        } else {
-            ImplAxes::default()
-        };
+        // trimmed axes for the widest scripts (GEMVER) keep the report
+        // interactive — same policy as bench_support
+        let axes = eval_axes(&seq);
         let r = autotune::search(&prog, &ctx.lib, &graph, &ctx.dev, &ctx.db, &axes, p);
         t.row(&[
             seq.name.to_uppercase(),

@@ -112,8 +112,9 @@ fn main() {
         b[i] = (0..N).map(|j| a.data[i * N + j]).sum::<f32>();
     }
 
-    // plan decision by the coordinator (the fusion compiler runs here)
-    let choice = coord.choose_plan("bicgk").expect("plan");
+    // plan decision by the coordinator (the pruned planner runs here,
+    // keyed by the problem size the solver will actually request)
+    let choice = coord.choose_plan("bicgk", N, N).expect("plan");
     println!("coordinator plan for bicgk: {:?}", choice);
     coord.runtime().warmup("bicgk", "fused", N, N).unwrap();
     coord.runtime().warmup("bicgk", "cublas", N, N).unwrap();

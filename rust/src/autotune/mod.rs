@@ -5,14 +5,15 @@
 //! (prediction accuracy) and Table 5 (compile/search time) data.
 
 use crate::codegen;
-use crate::fusion::{enumerate_fusions, FusionImpl, ImplAxes};
 use crate::fusion::space::Space;
+use crate::fusion::{enumerate_fusions, FusionImpl, ImplAxes};
 use crate::graph::DepGraph;
 use crate::ir::elem::ProblemSize;
-use crate::ir::plan::{IterDim, SeqPlan};
+use crate::ir::plan::{IterDim, KernelPlan, SeqPlan};
 use crate::ir::program::Program;
 use crate::library::Library;
-use crate::predict::{predict_seq, RoutineDb};
+use crate::planner::{self, PlannerConfig};
+use crate::predict::RoutineDb;
 use crate::sim::{simulate_seq, DeviceModel};
 use std::time::Instant;
 
@@ -48,6 +49,9 @@ pub struct SearchReport {
     pub t_search: f64,
     /// Best plan found.
     pub best: SeqPlan,
+    /// Work accounting of the pruned planner run behind `t_first`
+    /// (combinations materialized vs space size, memoization counts).
+    pub planner: crate::planner::PlannerStats,
 }
 
 /// Build the pruned space and rank every combination by prediction.
@@ -61,14 +65,32 @@ pub fn rank_all(
 ) -> Vec<Candidate> {
     let fusions = enumerate_fusions(prog, lib, graph);
     let space = Space::build(prog, lib, graph, &fusions, axes);
+    rank_space(prog, &space, db, p)
+}
+
+/// Rank every combination of an already-built space. Kernel costs go
+/// through the planner's memo table, so a sub-plan shared by many
+/// combinations is predicted exactly once (the exhaustive sweep used to
+/// re-predict it per combination).
+fn rank_space(prog: &Program, space: &Space, db: &RoutineDb, p: ProblemSize) -> Vec<Candidate> {
+    let mut cache = planner::CostCache::new();
     let mut cands: Vec<Candidate> = space
         .combinations()
         .map(|(pi, choice)| {
             // Reuse the kernel plans Space::build already generated --
             // re-running codegen per combination doubled compile time
             // (EXPERIMENTS.md SPerf).
-            let mut parts = space.combination(pi, &choice);
-            parts.sort_by_key(|pp| pp.fi.fusion.calls.iter().next().unwrap().0);
+            let part_list = &space.partitions[pi].parts;
+            let mut order: Vec<usize> = (0..part_list.len()).collect();
+            order.sort_by_key(|&j| part_list[j].calls.iter().next().unwrap().0);
+            let mut predicted = 0.0f64;
+            let mut kernels: Vec<KernelPlan> = Vec::with_capacity(order.len());
+            for &j in &order {
+                let pimpl = &space.impls[pi][j][choice[j]];
+                let key = (planner::part_key(&part_list[j]), choice[j]);
+                predicted += cache.kernel_cost(key, &pimpl.plan, db, p);
+                kernels.push(pimpl.plan.clone());
+            }
             let label = format!(
                 "p{pi}.{}",
                 choice
@@ -80,9 +102,8 @@ pub fn rank_all(
             let plan = SeqPlan {
                 seq: prog.name.clone(),
                 variant: label,
-                kernels: parts.iter().map(|pp| pp.plan.clone()).collect(),
+                kernels,
             };
-            let predicted = predict_seq(db, &plan, p);
             Candidate { plan, predicted, measured: None }
         })
         .collect();
@@ -91,7 +112,9 @@ pub fn rank_all(
 }
 
 /// Compile only the best-predicted combination (the paper's fast path —
-/// Table 5 "First implementation").
+/// Table 5 "First implementation"). Runs the pruned planner instead of
+/// ranking the whole space: identical result (see `crate::planner`'s
+/// separability argument), far fewer combination evaluations.
 pub fn compile_first(
     prog: &Program,
     lib: &Library,
@@ -100,9 +123,12 @@ pub fn compile_first(
     axes: &ImplAxes,
     p: ProblemSize,
 ) -> Candidate {
-    let mut cands = rank_all(prog, lib, graph, db, axes, p);
-    cands.truncate(1);
-    cands.remove(0)
+    let planned = planner::plan(prog, lib, graph, db, axes, p, &PlannerConfig::default());
+    Candidate {
+        plan: planned.best,
+        predicted: planned.predicted,
+        measured: None,
+    }
 }
 
 /// Full pipeline: build space, rank by prediction, empirically search on
@@ -117,7 +143,7 @@ pub fn search(
     p: ProblemSize,
 ) -> SearchReport {
     let t0 = Instant::now();
-    let _first = compile_first(prog, lib, graph, db, axes, p);
+    let first = planner::plan(prog, lib, graph, db, axes, p, &PlannerConfig::default());
     let t_first = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
@@ -166,6 +192,7 @@ pub fn search(
         t_all,
         t_search,
         best: cands[best_i].plan.clone(),
+        planner: first.stats,
     }
 }
 

@@ -36,27 +36,28 @@ pub struct Evaluator {
     cache: BTreeMap<String, SeqEval>,
 }
 
+/// Implementation axes per sequence: GEMVER's space explodes
+/// combinatorially (the paper's 1271-implementation case takes 42 s
+/// to generate there too) — trim the iteration axis to keep the
+/// all-implementations path responsive while preserving the ordering
+/// GEMVER ≫ GESUMMV ≫ rest. Shared by the evaluator, the planner bench
+/// and the autotune-report example.
+pub fn eval_axes(seq: &Sequence) -> ImplAxes {
+    if seq.program_calls() >= 3 {
+        ImplAxes {
+            iters: vec![1, 4, 16],
+            ipb: vec![2, 8],
+            max_orders: 4,
+            both_iter_dims: true,
+        }
+    } else {
+        ImplAxes::default()
+    }
+}
+
 impl Evaluator {
     pub fn new() -> Self {
         Self::default()
-    }
-
-    /// Implementation axes per sequence: GEMVER's space explodes
-    /// combinatorially (the paper's 1271-implementation case takes 42 s
-    /// to generate there too) — trim the iteration axis to keep the
-    /// all-implementations path responsive while preserving the ordering
-    /// GEMVER ≫ GESUMMV ≫ rest.
-    fn axes_for(seq: &Sequence) -> ImplAxes {
-        if seq.program_calls() >= 3 {
-            ImplAxes {
-                iters: vec![1, 4, 16],
-                ipb: vec![2, 8],
-                max_orders: 4,
-                both_iter_dims: true,
-            }
-        } else {
-            ImplAxes::default()
-        }
     }
 
     pub fn eval(&mut self, ctx: &Context, name: &str) -> &SeqEval {
@@ -65,7 +66,7 @@ impl Evaluator {
             let p = eval_size(&seq);
             let flops = seq.flops.eval(p);
             let (prog, graph) = seq.graph(&ctx.lib);
-            let axes = Self::axes_for(&seq);
+            let axes = eval_axes(&seq);
             let report =
                 autotune::search(&prog, &ctx.lib, &graph, &ctx.dev, &ctx.db, &axes, p);
             let ours = simulate_seq(&ctx.dev, &report.best, p, flops);

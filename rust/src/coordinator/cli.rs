@@ -245,6 +245,15 @@ fn cmd_autotune(args: &[String]) -> i32 {
     );
     println!("sequence {}:", name.to_uppercase());
     println!("  implementations     : {}", report.impl_count);
+    println!(
+        "  pruned planner      : best of {} combination(s) found by predicting {} — one per unpruned partition of {} ({} pruned) — with {} kernel cost(s) memoized over {} reference(s)",
+        report.planner.space_combinations,
+        report.planner.combos_evaluated,
+        report.planner.combos_evaluated + report.planner.partitions_pruned,
+        report.planner.partitions_pruned,
+        report.planner.kernel_evals,
+        report.planner.kernel_refs
+    );
     println!("  best found at rank  : {}", report.best_rank);
     println!("  first impl perf     : {:.1}%", report.first_pct);
     if let Some(w) = report.worst_pct {
@@ -312,7 +321,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             m: *m,
             n: *n,
             inputs: RequestInputs::Synth { seed: i as u64 },
-            variant: Some(PlanChoice::Fused),
+            variant: None, // let the coordinator's plan cache decide
             reply: rtx,
         })
         .unwrap();
@@ -330,6 +339,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     for (seq, (count, secs)) in &metrics.per_seq {
         println!("  {seq:10} {count:4} requests, mean {}", fmt_duration(secs / *count as f64));
     }
+    println!(
+        "plan cache: {} hit(s) / {} miss(es) / {} eviction(s)",
+        metrics.plan_cache_hits, metrics.plan_cache_misses, metrics.plan_cache_evictions
+    );
     i32::from(ok != n_requests)
 }
 

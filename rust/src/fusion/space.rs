@@ -16,7 +16,7 @@ use crate::graph::DepGraph;
 use crate::ir::plan::KernelPlan;
 use crate::ir::program::{CallId, Program};
 use crate::library::Library;
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// One way of covering all calls with fusions + singletons.
 #[derive(Clone, Debug)]
@@ -184,17 +184,22 @@ impl Space {
         axes: &ImplAxes,
     ) -> Space {
         let partitions = enumerate_partitions(prog, lib, fusions);
-        // cache per distinct fusion (parts repeat across partitions)
-        let mut cache: Vec<(Fusion, Vec<PlannedImpl>)> = Vec::new();
+        // One pruned impl list per distinct fusion (parts repeat across
+        // partitions), keyed by call set. This reuse is a compiler-side
+        // dedup AND a contract: `planner::CostCache` keys kernel costs
+        // by (call set, impl index), which is only sound because every
+        // occurrence of a part resolves to the same list built here.
+        let mut cache: BTreeMap<Vec<usize>, Vec<PlannedImpl>> = BTreeMap::new();
         let mut impls = Vec::with_capacity(partitions.len());
         for part_list in &partitions {
             let mut per_part = Vec::with_capacity(part_list.parts.len());
             for part in &part_list.parts {
-                if let Some((_, v)) = cache.iter().find(|(f, _)| f == part) {
+                let key: Vec<usize> = part.calls.iter().map(|c| c.0).collect();
+                if let Some(v) = cache.get(&key) {
                     per_part.push(v.clone());
                 } else {
                     let v = planned_impls(prog, lib, graph, part, axes);
-                    cache.push((part.clone(), v.clone()));
+                    cache.insert(key, v.clone());
                     per_part.push(v);
                 }
             }

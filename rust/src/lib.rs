@@ -6,10 +6,11 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: a source-to-source
 //!   fusion compiler over a library of elementary map/reduce functions,
-//!   an optimization-space search with empirical performance prediction,
-//!   a calibrated GTX 480 timing model standing in for the paper's
-//!   testbed, and a PJRT runtime + coordinator executing AOT-compiled
-//!   artifacts.
+//!   an optimization-space search with empirical performance prediction
+//!   (the [`planner`] runs it memoized, pruned and in parallel on the
+//!   hot path), a calibrated GTX 480 timing model standing in for the
+//!   paper's testbed, and a PJRT runtime + coordinator executing
+//!   AOT-compiled artifacts behind an LRU plan cache.
 //! * **L2 (python/compile)** — JAX definitions of each BLAS sequence.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (fused and
 //!   elementary) mirroring the paper's 32×32-tile scheme.
@@ -25,6 +26,7 @@ pub mod fusion;
 pub mod graph;
 pub mod ir;
 pub mod library;
+pub mod planner;
 pub mod predict;
 pub mod runtime;
 pub mod script;

@@ -1,0 +1,193 @@
+//! Memoized per-implementation kernel-cost evaluation, with an optional
+//! thread-pool fan-out for the initial sweep.
+//!
+//! Costs are keyed by (part call-set, implementation index). The key is
+//! stable across partitions because [`Space::build`] generates one
+//! pruned implementation list per *distinct fusion* and reuses it in
+//! every partition containing that part — so two occurrences of the
+//! same `(calls, index)` always denote the same `PlannedImpl`.
+
+use crate::fusion::space::Space;
+use crate::fusion::Fusion;
+use crate::ir::elem::ProblemSize;
+use crate::ir::plan::KernelPlan;
+use crate::predict::{predict_kernel, RoutineDb};
+use std::collections::BTreeMap;
+
+/// Stable identity of one part implementation: (sorted call ids of the
+/// part, index into the part's pruned implementation list).
+pub type ImplKey = (Vec<usize>, usize);
+
+/// The call-set half of an [`ImplKey`] for a partition part.
+pub fn part_key(part: &Fusion) -> Vec<usize> {
+    part.calls.iter().map(|c| c.0).collect()
+}
+
+/// Memo table of predicted kernel seconds, with hit/eval counters.
+#[derive(Debug, Default)]
+pub struct CostCache {
+    map: BTreeMap<ImplKey, f64>,
+    /// Distinct implementations actually predicted (cache misses).
+    pub evals: usize,
+    /// Lookups served from the table.
+    pub hits: usize,
+}
+
+impl CostCache {
+    pub fn new() -> CostCache {
+        CostCache::default()
+    }
+
+    /// Predicted seconds of one part implementation, memoized.
+    pub fn kernel_cost(
+        &mut self,
+        key: ImplKey,
+        plan: &KernelPlan,
+        db: &RoutineDb,
+        p: ProblemSize,
+    ) -> f64 {
+        if let Some(&c) = self.map.get(&key) {
+            self.hits += 1;
+            return c;
+        }
+        let c = predict_kernel(db, plan, p);
+        self.evals += 1;
+        self.map.insert(key, c);
+        c
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Threshold below which the parallel sweep is not worth the thread
+/// spawns (predictions are sub-microsecond table lookups).
+const PARALLEL_MIN_JOBS: usize = 32;
+
+/// Predict every distinct part implementation of a space exactly once,
+/// fanning the evaluations out over up to `threads` scoped OS threads.
+///
+/// The result is bit-identical to the serial path: each job is a pure
+/// function of `(KernelPlan, RoutineDb, ProblemSize)` and the merge goes
+/// through a `BTreeMap`, so thread interleaving cannot change anything.
+pub fn precompute(space: &Space, db: &RoutineDb, p: ProblemSize, threads: usize) -> CostCache {
+    let mut jobs: BTreeMap<ImplKey, &KernelPlan> = BTreeMap::new();
+    for (pi, per_part) in space.impls.iter().enumerate() {
+        for (part_idx, impls) in per_part.iter().enumerate() {
+            let base = part_key(&space.partitions[pi].parts[part_idx]);
+            for (j, pimpl) in impls.iter().enumerate() {
+                jobs.entry((base.clone(), j)).or_insert(&pimpl.plan);
+            }
+        }
+    }
+    let jobs: Vec<(ImplKey, &KernelPlan)> = jobs.into_iter().collect();
+    let evals = jobs.len();
+    let threads = threads.clamp(1, jobs.len().max(1));
+
+    let mut map = BTreeMap::new();
+    if threads <= 1 || jobs.len() < PARALLEL_MIN_JOBS {
+        for (key, plan) in jobs {
+            map.insert(key, predict_kernel(db, plan, p));
+        }
+    } else {
+        let chunk = jobs.len().div_ceil(threads);
+        let results: Vec<Vec<(ImplKey, f64)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .chunks(chunk)
+                .map(|c| {
+                    s.spawn(move || {
+                        c.iter()
+                            .map(|(key, plan)| (key.clone(), predict_kernel(db, plan, p)))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("cost worker panicked"))
+                .collect()
+        });
+        for part in results {
+            map.extend(part);
+        }
+    }
+    CostCache {
+        map,
+        evals,
+        hits: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{enumerate_fusions, ImplAxes};
+    use crate::graph::DepGraph;
+    use crate::library::Library;
+    use crate::script::compile_script;
+    use crate::sim::DeviceModel;
+
+    fn bicgk_space() -> (crate::ir::program::Program, Library, Space, RoutineDb) {
+        let lib = Library::standard();
+        let src = "
+            matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+            input A, p, r;
+            q = sgemv(A, p);
+            s = sgemtv(A, r);
+            return q, s;
+        ";
+        let prog = compile_script("bicgk", src, &lib).unwrap();
+        let graph = DepGraph::build(&prog, &lib);
+        let fusions = enumerate_fusions(&prog, &lib, &graph);
+        let space = Space::build(&prog, &lib, &graph, &fusions, &ImplAxes::minimal());
+        let db = RoutineDb::calibrate(&DeviceModel::gtx480(), &lib);
+        (prog, lib, space, db)
+    }
+
+    #[test]
+    fn kernel_cost_memoizes() {
+        let (_, _, space, db) = bicgk_space();
+        let p = ProblemSize::square(4096);
+        let mut cache = CostCache::new();
+        let base = part_key(&space.partitions[0].parts[0]);
+        let plan = &space.impls[0][0][0].plan;
+        let a = cache.kernel_cost((base.clone(), 0), plan, &db, p);
+        let b = cache.kernel_cost((base, 0), plan, &db, p);
+        assert_eq!(a, b);
+        assert_eq!(cache.evals, 1);
+        assert_eq!(cache.hits, 1);
+    }
+
+    #[test]
+    fn precompute_covers_every_impl_once() {
+        let (_, _, space, db) = bicgk_space();
+        let p = ProblemSize::square(4096);
+        let cache = precompute(&space, &db, p, 1);
+        let mut distinct: std::collections::BTreeSet<ImplKey> = Default::default();
+        for (pi, per_part) in space.impls.iter().enumerate() {
+            for (part_idx, impls) in per_part.iter().enumerate() {
+                let base = part_key(&space.partitions[pi].parts[part_idx]);
+                for j in 0..impls.len() {
+                    distinct.insert((base.clone(), j));
+                }
+            }
+        }
+        assert_eq!(cache.len(), distinct.len());
+        assert_eq!(cache.evals, distinct.len());
+    }
+
+    #[test]
+    fn parallel_precompute_matches_serial() {
+        let (_, _, space, db) = bicgk_space();
+        let p = ProblemSize::square(4096);
+        let serial = precompute(&space, &db, p, 1);
+        let parallel = precompute(&space, &db, p, 4);
+        assert_eq!(serial.len(), parallel.len());
+        assert_eq!(serial.map, parallel.map);
+    }
+}

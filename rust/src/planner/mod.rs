@@ -1,0 +1,69 @@
+//! Plan-search subsystem: memoized, pruned, parallel selection of the
+//! best fusion-implementation combination.
+//!
+//! The paper's compiler (§4.2) enumerates every combination of fusion
+//! implementations and ranks them by predicted time — Table 4 counts
+//! hundreds to thousands of combinations per sequence, and the serve
+//! path used to pay that enumeration on every cold plan decision. This
+//! module replaces the serial exhaustive sweep on the hot path with
+//! three cooperating pieces:
+//!
+//! * **Memoized kernel costs** ([`CostCache`]): the same `PlannedImpl`
+//!   appears in many partitions (every singleton part is shared by every
+//!   partition that leaves its call unfused), and exhaustive ranking
+//!   re-predicted it once per combination. Each distinct implementation
+//!   is now predicted exactly once, keyed by (part call-set, impl index)
+//!   — stable because [`crate::fusion::space::Space::build`] reuses one
+//!   pruned impl list per distinct fusion.
+//! * **Thread-pool cost evaluation** ([`cost::precompute`]): the
+//!   per-implementation predictions are independent pure functions of
+//!   `(KernelPlan, RoutineDb, ProblemSize)`, so they fan out over scoped
+//!   OS threads; results merge into a `BTreeMap`, keeping the outcome
+//!   bit-identical to the serial path regardless of interleaving.
+//! * **Lower-bound-pruned search** ([`plan`] / [`plan_space`]): see the
+//!   bound below. Only partitions whose bound beats the incumbent are
+//!   materialized into [`crate::ir::plan::SeqPlan`]s, so the number of
+//!   full combinations evaluated is at most the number of partitions —
+//!   versus the product-of-list-sizes the exhaustive sweep pays.
+//!
+//! # The pruning bound, and why the planner is exact
+//!
+//! The predictor is additive over kernels:
+//! `predict_seq(plan) = Σ_k predict_kernel(k)` (paper §4.2 sums routine
+//! times per kernel and kernels per sequence). A combination of
+//! partition `P = {part_1 … part_r}` contributes exactly one kernel per
+//! part, so its predicted time separates:
+//!
+//! ```text
+//! predicted(P, i_1 … i_r) = Σ_j cost(part_j, i_j)
+//! ```
+//!
+//! Therefore the best combination *within* a partition is the per-part
+//! argmin, and `LB(P) = Σ_j min_i cost(part_j, i)` is not just a lower
+//! bound but the partition's exact optimum. Scanning partitions in
+//! enumeration order with a strict-improvement incumbent returns
+//! `min_P LB(P)` — precisely the exhaustive minimum — while skipping
+//! (pruning) every partition whose bound does not beat the incumbent.
+//! Tie-breaking also matches the exhaustive ranking's stable sort: the
+//! first index achieving each per-part minimum corresponds to the first
+//! minimal combination in the mixed-radix enumeration order
+//! [`crate::fusion::space::Space::combinations`] uses, and strict
+//! improvement keeps the earliest partition among equals. So with an
+//! unbounded beam the planner returns the *identical* plan (same label,
+//! same kernels) as exhaustive search — asserted over all eleven paper
+//! sequences in `tests/planner_equivalence.rs`.
+//!
+//! The beam width ([`PlannerConfig::beam`]) truncates each part's
+//! candidate list to its `b` cheapest implementations for ranked
+//! expansion ([`rank_top_k`]). Because any `b ≥ 1` keeps each part's
+//! argmin, the *best* plan is exact at every beam width; the beam only
+//! bounds how much of the ranked tail is explored. If the cost model
+//! ever gains cross-kernel terms (launch overlap, cache interference),
+//! separability breaks and the beam becomes the knob trading exactness
+//! for search cost — the structure is already in place.
+
+pub mod cost;
+pub mod search;
+
+pub use cost::{part_key, CostCache, ImplKey};
+pub use search::{plan, plan_space, rank_top_k, Planned, PlannerConfig, PlannerStats, RankedCombo};

@@ -1,0 +1,430 @@
+//! Lower-bound-pruned plan selection and bounded top-k ranking.
+//!
+//! See the module docs of [`crate::planner`] for the separability
+//! argument that makes [`plan_space`] exact while materializing at most
+//! one combination per partition.
+
+use super::cost::{self, CostCache};
+use crate::fusion::space::Space;
+use crate::fusion::{enumerate_fusions, ImplAxes};
+use crate::graph::DepGraph;
+use crate::ir::elem::ProblemSize;
+use crate::ir::plan::SeqPlan;
+use crate::ir::program::Program;
+use crate::library::Library;
+use crate::predict::RoutineDb;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// Search knobs.
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Per-part candidate width for ranked expansion; `None` = unbounded.
+    /// The chosen *best* plan is exact for any width ≥ 1 (module docs);
+    /// the beam bounds only how much of the ranked tail [`rank_top_k`]
+    /// explores.
+    pub beam: Option<usize>,
+    /// OS threads for the cost-evaluation fan-out (1 = serial).
+    pub threads: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            beam: None,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+}
+
+/// Work accounting of one planning run, for tests, benches and the CLI.
+#[derive(Clone, Debug, Default)]
+pub struct PlannerStats {
+    /// Size of the full combination space — the number of combination
+    /// predictions exhaustive search pays.
+    pub space_combinations: usize,
+    /// Combination predictions the planner evaluated: one per partition
+    /// whose bound beat the incumbent (the bound *is* that partition's
+    /// best combination's predicted time). Only the final winner is
+    /// materialized into a `SeqPlan`. Together with
+    /// `partitions_pruned` this sums to the partition count, which is
+    /// why it is far below `space_combinations`.
+    pub combos_evaluated: usize,
+    /// Partitions skipped because their lower bound lost to the incumbent.
+    pub partitions_pruned: usize,
+    /// Distinct kernel predictions computed (cache misses).
+    pub kernel_evals: usize,
+    /// Total implementation references across all partitions — the
+    /// number of kernel predictions a non-memoized per-partition sweep
+    /// would have paid.
+    pub kernel_refs: usize,
+}
+
+/// Result of a planning run.
+#[derive(Clone, Debug)]
+pub struct Planned {
+    /// The chosen plan, labeled identically to the exhaustive ranking
+    /// (`p<partition>.<choice indices>`).
+    pub best: SeqPlan,
+    /// Its predicted seconds (bit-identical to `predict_seq` on `best`).
+    pub predicted: f64,
+    pub stats: PlannerStats,
+}
+
+/// One ranked combination from [`rank_top_k`].
+#[derive(Clone, Debug)]
+pub struct RankedCombo {
+    pub partition: usize,
+    /// Per-part implementation indices (original list order).
+    pub choice: Vec<usize>,
+    pub predicted: f64,
+}
+
+/// Build the pruned space for a program and select the best plan.
+pub fn plan(
+    prog: &Program,
+    lib: &Library,
+    graph: &DepGraph,
+    db: &RoutineDb,
+    axes: &ImplAxes,
+    p: ProblemSize,
+    cfg: &PlannerConfig,
+) -> Planned {
+    let fusions = enumerate_fusions(prog, lib, graph);
+    let space = Space::build(prog, lib, graph, &fusions, axes);
+    plan_space(prog, &space, db, p, cfg)
+}
+
+/// Select the best plan of an already-built space.
+pub fn plan_space(
+    prog: &Program,
+    space: &Space,
+    db: &RoutineDb,
+    p: ProblemSize,
+    cfg: &PlannerConfig,
+) -> Planned {
+    assert!(
+        !space.partitions.is_empty(),
+        "optimization space has no partitions"
+    );
+    let mut cache = cost::precompute(space, db, p, cfg.threads.max(1));
+    let kernel_evals = cache.evals;
+
+    // Per-partition exact optimum (= lower bound, tight by separability):
+    // the per-part argmin, taking the first index on ties so the choice
+    // matches the first minimal combination in enumeration order.
+    struct PartitionBest {
+        bound: f64,
+        choice: Vec<usize>,
+    }
+    let mut kernel_refs = 0usize;
+    let mut per_partition: Vec<PartitionBest> = Vec::with_capacity(space.partitions.len());
+    for (pi, per_part) in space.impls.iter().enumerate() {
+        let mut bound = 0.0f64;
+        let mut choice = Vec::with_capacity(per_part.len());
+        for (part_idx, impls) in per_part.iter().enumerate() {
+            let base = cost::part_key(&space.partitions[pi].parts[part_idx]);
+            kernel_refs += impls.len();
+            let mut best_j = 0usize;
+            let mut best_c = f64::INFINITY;
+            for (j, pimpl) in impls.iter().enumerate() {
+                let c = cache.kernel_cost((base.clone(), j), &pimpl.plan, db, p);
+                if c < best_c {
+                    best_c = c;
+                    best_j = j;
+                }
+            }
+            bound += best_c;
+            choice.push(best_j);
+        }
+        per_partition.push(PartitionBest { bound, choice });
+    }
+
+    // Incumbent scan in partition enumeration order. Strict improvement
+    // keeps exhaustive search's first-minimum tie-breaking; partitions
+    // whose bound does not beat the incumbent are pruned unmaterialized.
+    let mut stats = PlannerStats {
+        space_combinations: space.combination_count(),
+        combos_evaluated: 0,
+        partitions_pruned: 0,
+        kernel_evals,
+        kernel_refs,
+    };
+    let mut best: Option<(usize, f64)> = None;
+    for (pi, pb) in per_partition.iter().enumerate() {
+        if let Some((_, incumbent)) = best {
+            if pb.bound >= incumbent {
+                stats.partitions_pruned += 1;
+                continue;
+            }
+        }
+        stats.combos_evaluated += 1;
+        best = Some((pi, pb.bound));
+    }
+    let (pi, predicted) = best.expect("non-empty space has a best partition");
+    let best_plan = materialize(prog, space, pi, &per_partition[pi].choice);
+    Planned {
+        best: best_plan,
+        predicted,
+        stats,
+    }
+}
+
+/// Build the `SeqPlan` of one combination with the same kernel order and
+/// variant label the exhaustive ranking uses.
+fn materialize(prog: &Program, space: &Space, pi: usize, choice: &[usize]) -> SeqPlan {
+    let mut parts = space.combination(pi, choice);
+    parts.sort_by_key(|pp| pp.fi.fusion.calls.iter().next().unwrap().0);
+    let label = format!(
+        "p{pi}.{}",
+        choice
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join("_")
+    );
+    SeqPlan {
+        seq: prog.name.clone(),
+        variant: label,
+        kernels: parts.iter().map(|pp| pp.plan.clone()).collect(),
+    }
+}
+
+/// Heap key ordering (sum ascending, then ranks lexicographic for
+/// deterministic ties). Costs are finite by construction.
+#[derive(PartialEq)]
+struct HeapKey(f64, Vec<usize>);
+
+impl Eq for HeapKey {}
+
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.1.cmp(&other.1))
+    }
+}
+
+/// Top-k combinations of the whole space by predicted time, without
+/// enumerating the full product: per part the impls are sorted by cost
+/// (beam-truncated), then the classic k-smallest-sums heap expansion
+/// yields each partition's best k, merged across partitions.
+pub fn rank_top_k(
+    space: &Space,
+    db: &RoutineDb,
+    p: ProblemSize,
+    k: usize,
+    cfg: &PlannerConfig,
+) -> Vec<RankedCombo> {
+    let mut cache = cost::precompute(space, db, p, cfg.threads.max(1));
+    let mut out: Vec<RankedCombo> = Vec::new();
+    for (pi, per_part) in space.impls.iter().enumerate() {
+        let sorted: Vec<Vec<(f64, usize)>> = per_part
+            .iter()
+            .enumerate()
+            .map(|(part_idx, impls)| {
+                let base = cost::part_key(&space.partitions[pi].parts[part_idx]);
+                let mut v: Vec<(f64, usize)> = impls
+                    .iter()
+                    .enumerate()
+                    .map(|(j, pimpl)| (cache.kernel_cost((base.clone(), j), &pimpl.plan, db, p), j))
+                    .collect();
+                v.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0)
+                        .unwrap_or(Ordering::Equal)
+                        .then(a.1.cmp(&b.1))
+                });
+                if let Some(b) = cfg.beam {
+                    v.truncate(b.max(1));
+                }
+                v
+            })
+            .collect();
+        out.extend(k_smallest_sums(pi, &sorted, k));
+    }
+    out.sort_by(|a, b| {
+        a.predicted
+            .partial_cmp(&b.predicted)
+            .unwrap_or(Ordering::Equal)
+            .then(a.partition.cmp(&b.partition))
+            .then(a.choice.cmp(&b.choice))
+    });
+    out.truncate(k);
+    out
+}
+
+/// K smallest sums over one choice per sorted list (heap expansion with
+/// a visited set; standard k-way generalization of pairwise merge).
+fn k_smallest_sums(pi: usize, sorted: &[Vec<(f64, usize)>], k: usize) -> Vec<RankedCombo> {
+    if k == 0 || sorted.is_empty() || sorted.iter().any(|v| v.is_empty()) {
+        return Vec::new();
+    }
+    let sum_of = |ranks: &[usize]| -> f64 {
+        ranks
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| sorted[i][r].0)
+            .sum()
+    };
+    let start = vec![0usize; sorted.len()];
+    let mut heap: BinaryHeap<Reverse<HeapKey>> = BinaryHeap::new();
+    let mut seen: BTreeSet<Vec<usize>> = BTreeSet::new();
+    heap.push(Reverse(HeapKey(sum_of(&start), start.clone())));
+    seen.insert(start);
+    let mut out = Vec::new();
+    while out.len() < k {
+        let Some(Reverse(HeapKey(sum, ranks))) = heap.pop() else {
+            break;
+        };
+        out.push(RankedCombo {
+            partition: pi,
+            choice: ranks
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| sorted[i][r].1)
+                .collect(),
+            predicted: sum,
+        });
+        for i in 0..ranks.len() {
+            if ranks[i] + 1 < sorted[i].len() {
+                let mut next = ranks.clone();
+                next[i] += 1;
+                if seen.insert(next.clone()) {
+                    heap.push(Reverse(HeapKey(sum_of(&next), next)));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::library::Library;
+    use crate::script::compile_script;
+    use crate::sim::DeviceModel;
+
+    fn setup(src: &str) -> (Program, Library, DepGraph, RoutineDb) {
+        let lib = Library::standard();
+        let prog = compile_script("t", src, &lib).unwrap();
+        let graph = DepGraph::build(&prog, &lib);
+        let db = RoutineDb::calibrate(&DeviceModel::gtx480(), &lib);
+        (prog, lib, graph, db)
+    }
+
+    const BICGK: &str = "
+        matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+        input A, p, r;
+        q = sgemv(A, p);
+        s = sgemtv(A, r);
+        return q, s;
+    ";
+
+    #[test]
+    fn plan_materializes_at_most_one_combo_per_partition() {
+        let (prog, lib, graph, db) = setup(BICGK);
+        let p = ProblemSize::square(8192);
+        let planned = plan(
+            &prog,
+            &lib,
+            &graph,
+            &db,
+            &ImplAxes::minimal(),
+            p,
+            &PlannerConfig::default(),
+        );
+        let n_partitions = 2; // {singleton, singleton} and {fused pair}
+        assert!(planned.stats.combos_evaluated <= n_partitions);
+        assert_eq!(
+            planned.stats.combos_evaluated + planned.stats.partitions_pruned,
+            n_partitions
+        );
+        assert!(planned.stats.combos_evaluated < planned.stats.space_combinations);
+        assert!(planned.predicted.is_finite() && planned.predicted > 0.0);
+        // BiCGK's best plan fuses into one kernel
+        assert_eq!(planned.best.kernels.len(), 1);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let (prog, lib, graph, db) = setup(BICGK);
+        let p = ProblemSize::square(8192);
+        let serial = plan(
+            &prog,
+            &lib,
+            &graph,
+            &db,
+            &ImplAxes::minimal(),
+            p,
+            &PlannerConfig {
+                beam: None,
+                threads: 1,
+            },
+        );
+        let parallel = plan(
+            &prog,
+            &lib,
+            &graph,
+            &db,
+            &ImplAxes::minimal(),
+            p,
+            &PlannerConfig {
+                beam: None,
+                threads: 4,
+            },
+        );
+        assert_eq!(serial.predicted, parallel.predicted);
+        assert_eq!(serial.best.variant, parallel.best.variant);
+    }
+
+    #[test]
+    fn k_smallest_sums_is_sorted_and_correct() {
+        // lists: [1, 3] and [2, 10] → sums 3, 5, 11, 13
+        let sorted = vec![vec![(1.0, 0), (3.0, 1)], vec![(2.0, 0), (10.0, 1)]];
+        let top = k_smallest_sums(0, &sorted, 3);
+        let sums: Vec<f64> = top.iter().map(|c| c.predicted).collect();
+        assert_eq!(sums, vec![3.0, 5.0, 11.0]);
+        assert_eq!(top[0].choice, vec![0, 0]);
+        assert_eq!(top[1].choice, vec![1, 0]);
+    }
+
+    #[test]
+    fn rank_top_k_head_matches_plan() {
+        let (prog, lib, graph, db) = setup(BICGK);
+        let p = ProblemSize::square(8192);
+        let axes = ImplAxes::minimal();
+        let fusions = enumerate_fusions(&prog, &lib, &graph);
+        let space = Space::build(&prog, &lib, &graph, &fusions, &axes);
+        let cfg = PlannerConfig::default();
+        let planned = plan_space(&prog, &space, &db, p, &cfg);
+        let top = rank_top_k(&space, &db, p, 5, &cfg);
+        assert!(!top.is_empty());
+        assert_eq!(top[0].predicted, planned.predicted);
+        // ranked ascending
+        for w in top.windows(2) {
+            assert!(w[0].predicted <= w[1].predicted);
+        }
+        // beam width 1 still finds the same best
+        let beamed = rank_top_k(
+            &space,
+            &db,
+            p,
+            1,
+            &PlannerConfig {
+                beam: Some(1),
+                threads: 1,
+            },
+        );
+        assert_eq!(beamed[0].predicted, planned.predicted);
+    }
+}

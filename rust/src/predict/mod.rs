@@ -230,6 +230,17 @@ mod tests {
     }
 
     #[test]
+    fn calibration_is_shareable_across_threads() {
+        // The planner's cost fan-out shares one RoutineDb and the
+        // per-impl KernelPlans across scoped worker threads; keep that
+        // contract explicit at compile time.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<RoutineDb>();
+        assert_send_sync::<KernelPlan>();
+        assert_send_sync::<crate::ir::elem::ProblemSize>();
+    }
+
+    #[test]
     fn env_bucketing() {
         assert_eq!(EnvKey::new(1, 1, 0), EnvKey::new(1, 1, 0));
         assert_ne!(EnvKey::new(1, 1, 0), EnvKey::new(2, 1, 0));

@@ -1,0 +1,211 @@
+//! Property tests over fusion-enumeration invariants (paper §3.2/§4.2),
+//! using the in-repo mini-proptest framework: every `Fusion` the
+//! enumerator emits must be single-depth, weakly connected (dependency
+//! edges ∪ shared inputs), convex, free of internal reduction edges and
+//! must spare global traffic; every partition must cover the calls
+//! exactly once with parts drawn from the fusion list ∪ singletons.
+//!
+//! Programs come from two generators: random depth-1 BLAS-1 DAG scripts
+//! (maps and reductions wired through fresh SSA variables) and the
+//! eleven paper sequences (which also exercise the depth-2 rules).
+
+use fusebla::fusion::{
+    enumerate_fusions, enumerate_partitions, is_fusible, spared_words, Fusion,
+};
+use fusebla::graph::DepGraph;
+use fusebla::ir::program::{CallId, Program};
+use fusebla::library::Library;
+use fusebla::script::compile_script;
+use fusebla::sequences;
+use fusebla::util::proptest::{check, Gen};
+use std::collections::BTreeSet;
+
+/// Weak connectivity over dependency edges ∪ shared-input links —
+/// reimplemented here, independently of the compiler's own check.
+fn connected_with_shared_inputs(
+    prog: &Program,
+    graph: &DepGraph,
+    set: &BTreeSet<CallId>,
+) -> bool {
+    let nodes: Vec<CallId> = set.iter().copied().collect();
+    if nodes.is_empty() {
+        return false;
+    }
+    let linked = |a: CallId, b: CallId| {
+        graph.successors(a).any(|s| s == b)
+            || graph.predecessors(a).any(|x| x == b)
+            || prog
+                .call(a)
+                .args
+                .iter()
+                .any(|v| prog.call(b).args.contains(v))
+    };
+    let mut seen: BTreeSet<CallId> = [nodes[0]].into();
+    let mut stack = vec![nodes[0]];
+    while let Some(c) = stack.pop() {
+        for &nb in &nodes {
+            if !seen.contains(&nb) && linked(c, nb) {
+                seen.insert(nb);
+                stack.push(nb);
+            }
+        }
+    }
+    seen.len() == set.len()
+}
+
+/// A random BLAS-1 DAG script: maps and reductions over fresh SSA
+/// variables, every call output returned (so no call is dead code).
+fn random_blas1_script(g: &mut Gen) -> String {
+    let n_calls = g.usize(1, 5);
+    let mut available = vec!["i0".to_string(), "i1".to_string(), "i2".to_string()];
+    let mut vec_decls = available.clone();
+    let mut scalar_decls: Vec<String> = Vec::new();
+    let mut calls = String::new();
+    let mut returns: Vec<String> = Vec::new();
+    for k in 0..n_calls {
+        let funcs: [(&str, usize, bool); 6] = [
+            ("sscal", 1, false),
+            ("saxpy", 2, false),
+            ("waxpby", 2, false),
+            ("vadd2", 2, false),
+            ("vadd3", 3, false),
+            ("sdot", 2, true),
+        ];
+        let &(name, arity, reduces) = g.choose(&funcs);
+        let mut pool = available.clone();
+        g.shuffle(&mut pool);
+        let args = pool[..arity].join(", ");
+        if reduces {
+            let out = format!("r{k}");
+            scalar_decls.push(out.clone());
+            calls.push_str(&format!("{out} = {name}({args});\n"));
+            returns.push(out);
+        } else {
+            let out = format!("o{k}");
+            vec_decls.push(out.clone());
+            calls.push_str(&format!("{out} = {name}({args});\n"));
+            returns.push(out.clone());
+            available.push(out);
+        }
+    }
+    let scalars = if scalar_decls.is_empty() {
+        String::new()
+    } else {
+        format!("scalar {};\n", scalar_decls.join(", "))
+    };
+    format!(
+        "vector<N> {};\n{}input i0, i1, i2;\n{}return {};\n",
+        vec_decls.join(", "),
+        scalars,
+        calls,
+        returns.join(", ")
+    )
+}
+
+/// Pick a program: a random depth-1 script or one of the paper's eleven
+/// sequences (exercising the depth-2 rules too).
+fn random_program(g: &mut Gen, lib: &Library) -> Program {
+    if g.bool() {
+        let src = random_blas1_script(g);
+        compile_script("rand", &src, lib)
+            .unwrap_or_else(|e| panic!("generator built invalid script: {e}\n{src}"))
+    } else {
+        let all = sequences::all();
+        let seq = g.choose(&all);
+        seq.program(lib)
+    }
+}
+
+#[test]
+fn prop_enumerated_fusions_satisfy_all_invariants() {
+    let lib = Library::standard();
+    check("fusion enumeration invariants", 200, |g| {
+        let prog = random_program(g, &lib);
+        let graph = DepGraph::build(&prog, &lib);
+        let fusions = enumerate_fusions(&prog, &lib, &graph);
+        for f in &fusions {
+            assert!(f.len() >= 2, "fusions are multi-call by definition");
+            // single nesting depth, consistent with the recorded depth
+            let depths: BTreeSet<u8> = f
+                .calls
+                .iter()
+                .map(|&c| lib.get(prog.call(c).func).depth())
+                .collect();
+            assert_eq!(depths.len(), 1, "mixed-depth fusion emitted");
+            assert_eq!(*depths.iter().next().unwrap(), f.depth);
+            // no internal reduction edge (would need a global barrier)
+            assert!(
+                graph.internal_edges(&f.calls).all(|e| !e.reduction),
+                "fusion consumes a reduction result internally"
+            );
+            // convex: no dependency path leaves and re-enters
+            assert!(graph.is_convex(&f.calls), "non-convex fusion emitted");
+            // weakly connected through edges or shared inputs
+            assert!(
+                connected_with_shared_inputs(&prog, &graph, &f.calls),
+                "disconnected fusion emitted"
+            );
+            // spares at least one word of global traffic
+            assert!(
+                !spared_words(&prog, &graph, &f.calls).is_zero(),
+                "fusion spares no transfers"
+            );
+            // and the compiler's own fusibility rule agrees
+            assert!(is_fusible(&prog, &lib, &graph, &f.calls));
+        }
+    });
+}
+
+#[test]
+fn prop_partitions_cover_calls_exactly_once() {
+    let lib = Library::standard();
+    check("partition cover invariants", 120, |g| {
+        let prog = random_program(g, &lib);
+        let graph = DepGraph::build(&prog, &lib);
+        let fusions = enumerate_fusions(&prog, &lib, &graph);
+        let partitions = enumerate_partitions(&prog, &lib, &fusions);
+        assert!(!partitions.is_empty(), "all-singletons is always a partition");
+        for partition in &partitions {
+            let mut seen: BTreeSet<CallId> = BTreeSet::new();
+            for part in &partition.parts {
+                assert!(!part.is_empty());
+                for &c in &part.calls {
+                    assert!(seen.insert(c), "call covered twice");
+                }
+                // multi-call parts must come from the fusion list;
+                // singletons are the degenerate complement
+                if !part.is_singleton() {
+                    assert!(
+                        fusions.contains(part),
+                        "partition invented a fusion the enumerator did not emit"
+                    );
+                }
+            }
+            assert_eq!(seen.len(), prog.calls.len(), "partition must cover all calls");
+        }
+        // partitions are pairwise distinct
+        let labels: BTreeSet<String> = partitions
+            .iter()
+            .map(|p| p.label(&prog, &lib))
+            .collect();
+        assert_eq!(labels.len(), partitions.len(), "duplicate partition emitted");
+    });
+}
+
+#[test]
+fn prop_singletons_are_never_enumerated_as_fusions() {
+    let lib = Library::standard();
+    check("no singleton fusions", 80, |g| {
+        let prog = random_program(g, &lib);
+        let graph = DepGraph::build(&prog, &lib);
+        for f in enumerate_fusions(&prog, &lib, &graph) {
+            assert!(!f.is_singleton());
+        }
+        // singleton helper stays consistent with the library's depths
+        for c in prog.call_ids() {
+            let s = Fusion::singleton(c, &prog, &lib);
+            assert!(s.is_singleton());
+            assert_eq!(s.depth, lib.get(prog.call(c).func).depth());
+        }
+    });
+}

@@ -1,0 +1,187 @@
+//! Planner-vs-exhaustive equivalence over the paper's eleven sequences:
+//! the pruned/beam planner must return a plan whose predicted time is no
+//! worse than the exhaustive ranking's best, must return the *identical*
+//! plan when the beam is unbounded, and must do so while materializing
+//! strictly fewer candidate combinations than the exhaustive sweep —
+//! the acceptance criteria of the planner subsystem.
+
+use fusebla::autotune;
+use fusebla::bench_support::eval_size;
+use fusebla::coordinator::Context;
+use fusebla::fusion::space::Space;
+use fusebla::fusion::{enumerate_fusions, ImplAxes};
+use fusebla::ir::plan::SeqPlan;
+use fusebla::planner::{plan_space, rank_top_k, PlannerConfig};
+use fusebla::sequences;
+
+fn kernel_names(plan: &SeqPlan) -> Vec<String> {
+    plan.kernels.iter().map(|k| k.name.clone()).collect()
+}
+
+#[test]
+fn planner_matches_exhaustive_on_all_eleven_sequences() {
+    let ctx = Context::new();
+    let axes = ImplAxes::minimal();
+    let all = sequences::all();
+    assert_eq!(all.len(), 11);
+    for seq in all {
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let p = eval_size(&seq);
+        let fusions = enumerate_fusions(&prog, &ctx.lib, &graph);
+        let space = Space::build(&prog, &ctx.lib, &graph, &fusions, &axes);
+        let total = space.combination_count();
+        assert!(total >= 2, "{}: space too small to exercise pruning", seq.name);
+
+        let exhaustive = autotune::rank_all(&prog, &ctx.lib, &graph, &ctx.db, &axes, p);
+        assert_eq!(exhaustive.len(), total, "{}", seq.name);
+        let best = &exhaustive[0];
+
+        // Unbounded beam: identical plan, bit-identical prediction.
+        let planned = plan_space(&prog, &space, &ctx.db, p, &PlannerConfig::default());
+        assert!(
+            planned.predicted <= best.predicted,
+            "{}: planner predicted {} > exhaustive best {}",
+            seq.name,
+            planned.predicted,
+            best.predicted
+        );
+        assert_eq!(
+            planned.best.variant, best.plan.variant,
+            "{}: planner chose a different combination",
+            seq.name
+        );
+        assert_eq!(
+            kernel_names(&planned.best),
+            kernel_names(&best.plan),
+            "{}: planner kernels differ",
+            seq.name
+        );
+
+        // Strictly fewer candidate combinations evaluated than the
+        // exhaustive sweep — the whole point of the subsystem.
+        assert!(
+            planned.stats.combos_evaluated < total,
+            "{}: planner evaluated {} combinations, space has {}",
+            seq.name,
+            planned.stats.combos_evaluated,
+            total
+        );
+        assert_eq!(
+            planned.stats.combos_evaluated + planned.stats.partitions_pruned,
+            space.partitions.len(),
+            "{}",
+            seq.name
+        );
+        assert_eq!(planned.stats.space_combinations, total, "{}", seq.name);
+
+        // A bounded beam still finds a combination no worse than the
+        // exhaustive best (any width ≥ 1 keeps each part's argmin —
+        // separability). The beam lives on the ranked-expansion path,
+        // so exercise it through rank_top_k.
+        for beam in [1usize, 2] {
+            let beamed = rank_top_k(
+                &space,
+                &ctx.db,
+                p,
+                1,
+                &PlannerConfig {
+                    beam: Some(beam),
+                    threads: 1,
+                },
+            );
+            assert!(
+                beamed[0].predicted <= best.predicted,
+                "{}: beam {} predicted {} > exhaustive best {}",
+                seq.name,
+                beam,
+                beamed[0].predicted,
+                best.predicted
+            );
+        }
+    }
+}
+
+#[test]
+fn ranked_top_k_matches_exhaustive_head() {
+    // The bounded ranked expansion must reproduce the head of the
+    // exhaustive ranking (predicted values; tie order may differ).
+    let ctx = Context::new();
+    let axes = ImplAxes::minimal();
+    for name in ["bicgk", "axpydot", "atax", "waxpby"] {
+        let seq = sequences::by_name(name).unwrap();
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let p = eval_size(&seq);
+        let fusions = enumerate_fusions(&prog, &ctx.lib, &graph);
+        let space = Space::build(&prog, &ctx.lib, &graph, &fusions, &axes);
+        let exhaustive = autotune::rank_all(&prog, &ctx.lib, &graph, &ctx.db, &axes, p);
+        let k = 8.min(exhaustive.len());
+        let top = rank_top_k(&space, &ctx.db, p, k, &PlannerConfig::default());
+        assert_eq!(top.len(), k, "{name}");
+        for (i, combo) in top.iter().enumerate() {
+            assert!(
+                (combo.predicted - exhaustive[i].predicted).abs() <= 1e-15,
+                "{name}: rank {} predicted {} vs exhaustive {}",
+                i + 1,
+                combo.predicted,
+                exhaustive[i].predicted
+            );
+        }
+    }
+}
+
+#[test]
+fn planner_memoizes_shared_parts_across_partitions() {
+    // GEMVER's singleton gemv part appears both in the all-singleton
+    // partition and next to the {ger2, gemtvpz} fusion — the memo table
+    // must predict it once, not once per partition.
+    let ctx = Context::new();
+    let seq = sequences::by_name("gemver").unwrap();
+    let (prog, graph) = seq.graph(&ctx.lib);
+    let p = eval_size(&seq);
+    let axes = ImplAxes::minimal();
+    let fusions = enumerate_fusions(&prog, &ctx.lib, &graph);
+    let space = Space::build(&prog, &ctx.lib, &graph, &fusions, &axes);
+    assert!(space.partitions.len() >= 2, "gemver must have a fused partition");
+    let planned = plan_space(&prog, &space, &ctx.db, p, &PlannerConfig::default());
+    assert!(
+        planned.stats.kernel_evals < planned.stats.kernel_refs,
+        "no sharing: {} evals for {} refs",
+        planned.stats.kernel_evals,
+        planned.stats.kernel_refs
+    );
+}
+
+#[test]
+fn parallel_planner_is_deterministic() {
+    let ctx = Context::new();
+    let seq = sequences::by_name("gemver").unwrap();
+    let (prog, graph) = seq.graph(&ctx.lib);
+    let p = eval_size(&seq);
+    let axes = ImplAxes::minimal();
+    let fusions = enumerate_fusions(&prog, &ctx.lib, &graph);
+    let space = Space::build(&prog, &ctx.lib, &graph, &fusions, &axes);
+    let serial = plan_space(
+        &prog,
+        &space,
+        &ctx.db,
+        p,
+        &PlannerConfig {
+            beam: None,
+            threads: 1,
+        },
+    );
+    for threads in [2usize, 4, 8] {
+        let parallel = plan_space(
+            &prog,
+            &space,
+            &ctx.db,
+            p,
+            &PlannerConfig {
+                beam: None,
+                threads,
+            },
+        );
+        assert_eq!(serial.predicted, parallel.predicted, "threads={threads}");
+        assert_eq!(serial.best.variant, parallel.best.variant, "threads={threads}");
+    }
+}
