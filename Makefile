@@ -1,0 +1,27 @@
+# fusebla build orchestration.
+#
+# `make artifacts` runs the L2/L1 Python side once (JAX lowering of
+# every catalog entry to HLO text + the manifest); the Rust runtime then
+# executes those artifacts without Python on the request path. The
+# calibration cache (`calibration.txt`) is written next to the catalog
+# by the first Rust process that runs.
+#
+#   make artifacts                                    # full catalog
+#   make artifacts BLAS2_SIZES=256,512 BLAS1_SIZES=65536   # small CI catalog
+#   make test-python                                  # kernel-vs-oracle pytest
+
+BLAS2_SIZES ?= 256,512,1024
+BLAS1_SIZES ?= 65536,1048576
+OUT ?= rust/artifacts
+
+.PHONY: artifacts test-python clean-artifacts
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../$(OUT) \
+		--blas2-sizes $(BLAS2_SIZES) --blas1-sizes $(BLAS1_SIZES)
+
+test-python:
+	cd python && python3 -m pytest tests -q
+
+clean-artifacts:
+	rm -rf $(OUT)

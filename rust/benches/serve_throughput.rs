@@ -1,0 +1,88 @@
+//! Serve-path throughput: the drain-and-group scheduler on a
+//! repeated-key burst vs request-at-a-time submission (same engine,
+//! batching defeated by waiting out each ticket). The delta is the
+//! dispatch amortization batching buys — per-batch manifest scans and
+//! executable-cache lookups instead of per-request.
+//!
+//! `make artifacts && cargo bench --bench serve_throughput`
+
+use fusebla::coordinator::Context;
+use fusebla::util::fmt_duration;
+use fusebla::util::manifest::Manifest;
+use fusebla::{Engine, EngineConfig, SubmitRequest};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N_REQUESTS: u64 = 64;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("(artifacts not built: skipping serve throughput bench)");
+        return;
+    }
+    // size discovery from the manifest alone; the runtime lives on the
+    // engine worker
+    let manifest = Manifest::load(&dir.join("manifest.txt")).expect("manifest");
+    let entry = manifest
+        .entries
+        .values()
+        .find(|e| e.seq == "waxpby" && e.variant == "fused" && e.stage == 0)
+        .expect("waxpby artifacts");
+    let m: usize = entry.attrs["m"].parse().unwrap();
+    let n: usize = entry.attrs["n"].parse().unwrap();
+
+    let ctx = Arc::new(Context::new());
+    println!("serve throughput: {N_REQUESTS} × waxpby @ m{m} n{n}\n");
+    for (label, window_ms, burst) in [
+        ("request-at-a-time (wait each ticket)", 0u64, false),
+        ("batched burst (10 ms window)       ", 10, true),
+    ] {
+        let cfg = EngineConfig {
+            batch_window: Duration::from_millis(window_ms),
+            max_batch: N_REQUESTS as usize,
+        };
+        let engine = Engine::with_config(ctx.clone(), dir, cfg).expect("engine");
+        let client = engine.client();
+        // warmup: compile the executables once so both modes time
+        // dispatch, not XLA compilation
+        client
+            .submit(SubmitRequest::new("waxpby", m, n).synth(u64::MAX))
+            .expect("submit")
+            .wait()
+            .expect("warmup");
+        let t0 = Instant::now();
+        if burst {
+            let tickets: Vec<_> = (0..N_REQUESTS)
+                .map(|seed| {
+                    client
+                        .submit(SubmitRequest::new("waxpby", m, n).synth(seed))
+                        .expect("submit")
+                })
+                .collect();
+            for t in tickets {
+                t.wait().expect("request");
+            }
+        } else {
+            for seed in 0..N_REQUESTS {
+                client
+                    .submit(SubmitRequest::new("waxpby", m, n).synth(seed))
+                    .expect("submit")
+                    .wait()
+                    .expect("request");
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let metrics = engine.shutdown();
+        println!(
+            "{label}: {} in {} → {:.1} req/s | {} batch(es), mean size {:.1}, max {}",
+            N_REQUESTS,
+            fmt_duration(dt),
+            N_REQUESTS as f64 / dt,
+            metrics.batches,
+            metrics.mean_batch_size(),
+            metrics.max_batch_size
+        );
+    }
+}

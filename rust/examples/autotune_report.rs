@@ -3,6 +3,11 @@
 //! search wallclock — the data behind Tables 4 and 5, printed per
 //! sequence with the chosen plan's structure.
 //!
+//! `Context::new` reloads the routine calibration from
+//! `artifacts/calibration.txt` when a catalog is present (keyed by
+//! device + library fingerprint), so repeat runs skip the per-process
+//! calibration sweep.
+//!
 //! Run: `cargo run --release --example autotune_report`
 
 use fusebla::autotune;
@@ -10,9 +15,17 @@ use fusebla::bench_support::{eval_axes, eval_size};
 use fusebla::coordinator::Context;
 use fusebla::sequences;
 use fusebla::util::{fmt_duration, Table};
+use std::time::Instant;
 
 fn main() {
+    let t_ctx = Instant::now();
     let ctx = Context::new();
+    println!(
+        "routine DB ready in {}: {} calibrated entries on {}",
+        fmt_duration(t_ctx.elapsed().as_secs_f64()),
+        ctx.db.len(),
+        ctx.dev.name
+    );
     let mut t = Table::new(
         "optimization-space report",
         &[

@@ -1,19 +1,22 @@
 //! End-to-end driver: a full BiConjugate Gradient solver whose per-
 //! iteration matrix kernels (q = A p, s = Aᵀ r̃ — the paper's BiCGK
 //! sequence, its motivating application) execute as AOT-compiled Pallas
-//! artifacts through the PJRT runtime.
+//! artifacts through the serving engine: the solver submits typed
+//! requests over a `Client`, never touching channels or the runtime.
 //!
 //! This proves all three layers compose on a real workload: the L3
-//! coordinator chooses the fused plan, the L1 fused kernel (lowered once
-//! at build time) does the matrix work, and the solver converges to the
-//! same answer the unfused (CUBLAS-decomposition) variant produces —
-//! while running fewer kernels per iteration.
+//! engine's planner chooses the fused plan (observable on the returned
+//! `RunResult::variant`), the L1 fused kernel (lowered once at build
+//! time) does the matrix work, and the solver converges to the same
+//! answer the unfused (CUBLAS-decomposition) variant produces — while
+//! running fewer kernels per iteration.
 //!
 //! Run: `make artifacts && cargo run --release --example bicg_solver`
 
-use fusebla::coordinator::{Context, Coordinator, PlanChoice};
+use fusebla::coordinator::{Context, PlanChoice};
 use fusebla::runtime::Tensor;
 use fusebla::util::Prng;
+use fusebla::{Client, Engine, SubmitRequest};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
@@ -31,10 +34,11 @@ fn norm(a: &[f32]) -> f64 {
     dot(a, a).sqrt()
 }
 
-/// One BiCG run; the matrix products go through the runtime with the
-/// given plan choice. Returns (solution, residual history, matvec time).
+/// One BiCG run; the matrix products go through the engine with the
+/// given plan choice. Returns (solution, residual history, matvec time,
+/// kernel count).
 fn bicg(
-    coord: &mut Coordinator,
+    client: &Client,
     variant: PlanChoice,
     a: &Tensor,
     b: &[f32],
@@ -58,9 +62,10 @@ fn bicg(
         inputs.insert("p".to_string(), Tensor::vector(p.clone()));
         inputs.insert("r".to_string(), Tensor::vector(pt.clone()));
         let t0 = Instant::now();
-        let res = coord
-            .runtime()
-            .run_seq("bicgk", variant.as_str(), n, n, &inputs)
+        let res = client
+            .submit(SubmitRequest::new("bicgk", n, n).inputs(inputs).variant(variant))
+            .expect("submit")
+            .wait()
             .expect("bicgk kernels");
         matvec_secs += t0.elapsed().as_secs_f64();
         kernels += res.stages.len();
@@ -95,7 +100,9 @@ fn main() {
         eprintln!("run `make artifacts` first");
         std::process::exit(1);
     }
-    let mut coord = Coordinator::new(Arc::new(Context::new()), dir).expect("coordinator");
+    let engine =
+        Engine::start(Arc::new(Context::with_calibration_cache(dir)), dir).expect("engine");
+    let client = engine.client();
 
     // A diagonally dominant system (guaranteed convergence), b = A·1.
     let mut rng = Prng::new(2024);
@@ -112,19 +119,31 @@ fn main() {
         b[i] = (0..N).map(|j| a.data[i * N + j]).sum::<f32>();
     }
 
-    // plan decision by the coordinator (the pruned planner runs here,
-    // keyed by the problem size the solver will actually request)
-    let choice = coord.choose_plan("bicgk", N, N).expect("plan");
-    println!("coordinator plan for bicgk: {:?}", choice);
-    coord.runtime().warmup("bicgk", "fused", N, N).unwrap();
-    coord.runtime().warmup("bicgk", "cublas", N, N).unwrap();
+    // Plan decision by the engine's planner (keyed by the problem size
+    // the solver will actually request) — a control query, nothing
+    // executes. This also warms the plan cache.
+    let choice = client.plan("bicgk", N, N).expect("plan");
+    println!("engine plan for bicgk: {}", choice.as_str());
+    // warm both variants' executables so the timed loops below measure
+    // dispatch + kernels, not first-use XLA compilation
+    for v in [PlanChoice::Fused, PlanChoice::Cublas] {
+        let mut w = BTreeMap::new();
+        w.insert("A".to_string(), a.clone());
+        w.insert("p".to_string(), Tensor::vector(b.clone()));
+        w.insert("r".to_string(), Tensor::vector(b.clone()));
+        client
+            .submit(SubmitRequest::new("bicgk", N, N).inputs(w).variant(v))
+            .expect("submit")
+            .wait()
+            .expect("warmup");
+    }
 
     println!("\nsolving {N}x{N} system with BiCG (tol {TOL:.0e})");
     let t0 = Instant::now();
-    let (x_fused, hist_f, mv_f, k_f) = bicg(&mut coord, PlanChoice::Fused, &a, &b);
+    let (x_fused, hist_f, mv_f, k_f) = bicg(&client, PlanChoice::Fused, &a, &b);
     let t_fused = t0.elapsed().as_secs_f64();
     let t1 = Instant::now();
-    let (x_cublas, hist_c, mv_c, k_c) = bicg(&mut coord, PlanChoice::Cublas, &a, &b);
+    let (x_cublas, hist_c, mv_c, k_c) = bicg(&client, PlanChoice::Cublas, &a, &b);
     let t_cublas = t1.elapsed().as_secs_f64();
 
     // loss-curve style convergence log
@@ -143,6 +162,12 @@ fn main() {
         hist_c.len() - 1, k_c, mv_c * 1e3, t_cublas * 1e3);
     println!("kernel launches per iteration: fused 1 vs unfused 2 (the paper's point)");
     println!("matvec speedup (this CPU, interpret-mode kernels): {:.2}x", mv_c / mv_f);
+
+    let metrics = engine.shutdown();
+    println!(
+        "engine served {} requests ({} failures, plan cache {} miss(es))",
+        metrics.requests, metrics.failures, metrics.plan_cache_misses
+    );
 
     assert!(*hist_f.last().unwrap() < TOL, "fused solve did not converge");
     assert!(*hist_c.last().unwrap() < TOL, "unfused solve did not converge");

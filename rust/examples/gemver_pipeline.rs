@@ -1,21 +1,26 @@
-//! GEMVER pipeline: the paper's biggest win (2.61×) end-to-end.
+//! GEMVER pipeline: the paper's biggest win (2.61×) end-to-end, served
+//! through the batching `Engine`/`Client` API.
 //!
 //! Runs the three-statement GEMVER sequence (B = A + u₁v₁ᵀ + u₂v₂ᵀ;
-//! x = βBᵀy + z; w = αBx) through the coordinator in both variants:
+//! x = βBᵀy + z; w = αBx) in both variants:
 //!
 //! * fused   — 2 kernels (the compiler's plan: {ger2 + gemtv} then gemv)
 //! * cublas  — 6 kernels (copy, ger, ger, copy, gemv, gemv — the
 //!             in-place CUBLAS API forces the copies)
 //!
-//! and verifies both against the Rust reference oracle, reporting the
-//! kernel-count reduction and per-stage timings.
+//! verifies both against the Rust reference oracle, reports the
+//! kernel-count reduction, then fires a same-key burst to show the
+//! engine grouping requests into multi-input batches.
 //!
 //! Run: `make artifacts && cargo run --release --example gemver_pipeline`
 
-use fusebla::coordinator::{synth_inputs, Context, Coordinator, PlanChoice};
+use fusebla::coordinator::{Context, PlanChoice};
+use fusebla::runtime::refcheck;
 use fusebla::util::fmt_duration;
+use fusebla::{Engine, EngineConfig, SubmitRequest};
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let dir = Path::new("artifacts");
@@ -23,21 +28,37 @@ fn main() {
         eprintln!("run `make artifacts` first");
         std::process::exit(1);
     }
-    let mut coord = Coordinator::new(Arc::new(Context::new()), dir).expect("coordinator");
+    let cfg = EngineConfig {
+        batch_window: Duration::from_millis(20),
+        max_batch: 64,
+    };
+    let ctx = Arc::new(Context::with_calibration_cache(dir));
+    let engine = Engine::with_config(ctx, dir, cfg).expect("engine");
+    let client = engine.client();
     let (m, n) = (512, 512);
 
+    // warm both variants so the timed runs below measure dispatch +
+    // kernels, not first-use XLA compilation
     for &variant in &[PlanChoice::Fused, PlanChoice::Cublas] {
-        let inputs = synth_inputs(coord.runtime(), "gemver", variant.as_str(), m, n, 9);
-        coord
-            .runtime()
-            .warmup("gemver", variant.as_str(), m, n)
+        client
+            .submit(SubmitRequest::new("gemver", m, n).synth(9).variant(variant))
+            .expect("submit")
+            .wait()
             .expect("warmup");
-        let (res, err) = coord
-            .run_checked("gemver", variant, m, n, &inputs)
+    }
+
+    let mut stage_counts = Vec::new();
+    for &variant in &[PlanChoice::Fused, PlanChoice::Cublas] {
+        let res = client
+            .submit(SubmitRequest::new("gemver", m, n).synth(9).variant(variant))
+            .expect("submit")
+            .wait()
             .expect("gemver run");
+        // the result env keeps the free inputs → it is its own oracle input
+        let err = refcheck::max_abs_error("gemver", &res.env, &res.env);
         println!(
             "gemver.{:7} @ {m}x{n}: {} kernel(s), total {}, max abs err {:.2e}",
-            variant.as_str(),
+            res.variant,
             res.stages.len(),
             fmt_duration(res.seconds),
             err
@@ -46,35 +67,39 @@ fn main() {
             println!("    {:42} {}", s.key, fmt_duration(s.seconds));
         }
         assert!(err < 5e-2, "verification failed: {err}");
+        stage_counts.push(res.stages.len());
     }
 
     // The structural claim of the paper, independent of wallclock:
-    let f = coord
-        .runtime()
-        .run_seq(
-            "gemver",
-            "fused",
-            m,
-            n,
-            &synth_inputs(coord.runtime(), "gemver", "fused", m, n, 9),
-        )
-        .unwrap();
-    let c = coord
-        .runtime()
-        .run_seq(
-            "gemver",
-            "cublas",
-            m,
-            n,
-            &synth_inputs(coord.runtime(), "gemver", "cublas", m, n, 9),
-        )
-        .unwrap();
     println!(
         "\nkernel launches: fused {} vs CUBLAS {} (matrix passes: 3 vs 8 — the 2.61x)",
-        f.stages.len(),
-        c.stages.len()
+        stage_counts[0], stage_counts[1]
     );
-    assert_eq!(f.stages.len(), 2);
-    assert_eq!(c.stages.len(), 6);
+    assert_eq!(stage_counts[0], 2);
+    assert_eq!(stage_counts[1], 6);
+
+    // A same-key burst: the engine drains the queue and executes one
+    // multi-input batch per (seq, padded size, device, plan) key.
+    // Snapshot the cumulative counters first so the printed numbers are
+    // the burst's own, not the singleton runs' above.
+    let before = engine.metrics();
+    let tickets: Vec<_> = (0..8u64)
+        .map(|seed| {
+            client
+                .submit(SubmitRequest::new("gemver", m, n).synth(seed))
+                .expect("submit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("burst request");
+    }
+    let metrics = engine.shutdown();
+    println!(
+        "burst of 8 same-key requests: {} batch(es) (max batch size {}); engine totals: {} batches / {} requests",
+        metrics.batches.saturating_sub(before.batches),
+        metrics.max_batch_size,
+        metrics.batches,
+        metrics.requests
+    );
     println!("gemver_pipeline OK");
 }

@@ -4,8 +4,9 @@
 //! 2. let the fusion compiler search the optimization space;
 //! 3. inspect the generated (pseudo-CUDA) fused kernel;
 //! 4. compare fused vs unfused on the GTX 480 model;
-//! 5. execute the corresponding AOT Pallas artifact through PJRT and
-//!    verify against the reference oracle.
+//! 5. execute the corresponding AOT Pallas artifact through the serving
+//!    engine (`Engine::start` + `Client::submit`) and verify against
+//!    the reference oracle.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! (needs `make artifacts` for step 5; steps 1–4 work without)
@@ -13,12 +14,14 @@
 use fusebla::autotune;
 use fusebla::bench_support::eval_size;
 use fusebla::codegen::cuda::emit_seq;
-use fusebla::coordinator::{synth_inputs, Context, Coordinator, PlanChoice};
+use fusebla::coordinator::{Context, PlanChoice};
 use fusebla::fusion::ImplAxes;
 use fusebla::graph::DepGraph;
+use fusebla::runtime::refcheck;
 use fusebla::script::compile_script;
 use fusebla::sequences;
 use fusebla::sim::simulate_seq;
+use fusebla::{Engine, SubmitRequest};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -75,25 +78,33 @@ fn main() {
         ours.gflops / base.gflops
     );
 
-    // --- 5. run the real AOT artifact through PJRT -------------------------
+    // --- 5. run the real AOT artifact through the serving engine ----------
     let dir = Path::new("artifacts");
     if !dir.join("manifest.txt").exists() {
         println!("\n(artifacts/ not built — run `make artifacts` for the PJRT step)");
         return;
     }
-    let mut coord = Coordinator::new(Arc::new(Context::new()), dir).expect("coordinator");
+    let engine =
+        Engine::start(Arc::new(Context::with_calibration_cache(dir)), dir).expect("engine");
+    let client = engine.client();
     let (m, n) = (256, 256);
-    let inputs = synth_inputs(coord.runtime(), "bicgk", "fused", m, n, 42);
-    let (res, err) = coord
-        .run_checked("bicgk", PlanChoice::Fused, m, n, &inputs)
+    let res = client
+        .submit(SubmitRequest::new("bicgk", m, n).synth(42).variant(PlanChoice::Fused))
+        .expect("submit")
+        .wait()
         .expect("run");
+    // the result env keeps the free inputs, so it doubles as the
+    // oracle's input set
+    let err = refcheck::max_abs_error("bicgk", &res.env, &res.env);
     println!(
-        "\nPJRT execution ({}): {} stage(s), {:.3} ms, max abs error vs oracle {:.2e}",
-        coord.runtime().platform(),
+        "\nengine execution ({} variant): {} stage(s), {:.3} ms, max abs error vs oracle {:.2e}",
+        res.variant,
         res.stages.len(),
         res.seconds * 1e3,
         err
     );
     assert!(err < 1e-3, "verification failed");
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.requests, 1);
     println!("quickstart OK");
 }

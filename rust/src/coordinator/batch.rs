@@ -1,0 +1,215 @@
+//! Drain-and-group batching: turn a queue of requests into multi-input
+//! batches keyed the same way the plan cache is keyed.
+//!
+//! The batch key is deliberately the same shape as
+//! [`PlanKey`](super::PlanKey) — `(seq, tile-padded size, device,
+//! resolved plan)` — so one `choose_plan` serves every request in a
+//! group (the resolver is memoized per padded key for the turn; the
+//! plan cache therefore records exactly one miss per cold batch key).
+//! Requests that force a variant skip planning entirely and still group
+//! with planner-resolved requests when the choices agree.
+//!
+//! Artifacts are catalogued at *raw* sizes, so requests whose raw sizes
+//! differ but pad identically share planning yet execute as separate
+//! dispatches ([`Batch::m`]/[`Batch::n`] carry the raw size); in
+//! practice catalog sizes are tile multiples and the two granularities
+//! coincide.
+
+use super::{PlanChoice, Request};
+use crate::ir::elem::ProblemSize;
+use anyhow::{anyhow, Error, Result};
+use std::collections::BTreeMap;
+
+/// Identity of one batch: the plan-cache key shape plus the resolved
+/// plan choice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct BatchKey {
+    pub seq: String,
+    /// Tile-padded rows (plan granularity).
+    pub m: usize,
+    /// Tile-padded columns (plan granularity).
+    pub n: usize,
+    pub device: String,
+    pub choice: PlanChoice,
+}
+
+/// A group of requests that execute as one multi-input dispatch.
+pub(crate) struct Batch {
+    pub key: BatchKey,
+    /// Raw (unpadded) rows — the granularity artifacts are keyed by.
+    pub m: usize,
+    /// Raw (unpadded) columns.
+    pub n: usize,
+    /// Members in arrival order.
+    pub reqs: Vec<Request>,
+}
+
+/// Group a drained queue into batches, resolving the plan choice once
+/// per distinct `(seq, padded size)` via `resolve` (only for requests
+/// that do not force a variant). Requests whose resolution fails are
+/// returned separately with their error. Batches come back in
+/// first-arrival order; members keep arrival order.
+pub(crate) fn group(
+    reqs: Vec<Request>,
+    device: &str,
+    mut resolve: impl FnMut(&str, usize, usize) -> Result<PlanChoice>,
+) -> (Vec<Batch>, Vec<(Request, Error)>) {
+    let mut batches: Vec<Batch> = Vec::new();
+    let mut failed: Vec<(Request, Error)> = Vec::new();
+    // One resolver call per padded key per turn — failures included, so
+    // a burst of unresolvable requests neither repeats the planner
+    // lookup nor inflates the plan cache's miss counter.
+    let mut memo: BTreeMap<(String, usize, usize), Result<PlanChoice, String>> = BTreeMap::new();
+    for req in reqs {
+        let p = ProblemSize::new(req.m, req.n).padded();
+        let choice = match req.variant {
+            Some(v) => v,
+            None => {
+                let memo_key = (req.seq.clone(), p.m, p.n);
+                let resolved = match memo.get(&memo_key).cloned() {
+                    Some(r) => r,
+                    None => {
+                        let r = resolve(&req.seq, req.m, req.n).map_err(|e| format!("{e:#}"));
+                        memo.insert(memo_key, r.clone());
+                        r
+                    }
+                };
+                match resolved {
+                    Ok(c) => c,
+                    Err(msg) => {
+                        failed.push((req, anyhow!("{msg}")));
+                        continue;
+                    }
+                }
+            }
+        };
+        let key = BatchKey {
+            seq: req.seq.clone(),
+            m: p.m,
+            n: p.n,
+            device: device.to_string(),
+            choice,
+        };
+        match batches
+            .iter()
+            .position(|b| b.key == key && b.m == req.m && b.n == req.n)
+        {
+            Some(i) => batches[i].reqs.push(req),
+            None => batches.push(Batch {
+                key,
+                m: req.m,
+                n: req.n,
+                reqs: vec![req],
+            }),
+        }
+    }
+    (batches, failed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RequestInputs;
+    use anyhow::anyhow;
+    use std::sync::mpsc;
+
+    fn req(seq: &str, m: usize, n: usize, variant: Option<PlanChoice>) -> Request {
+        // the receiver is dropped — grouping never touches the reply
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            seq: seq.into(),
+            m,
+            n,
+            inputs: RequestInputs::Synth { seed: 0 },
+            variant,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn mixed_key_burst_splits_into_per_key_batches() {
+        let reqs = vec![
+            req("waxpby", 32, 65536, None),
+            req("vadd", 32, 65536, None),
+            req("waxpby", 32, 65536, None),
+            req("waxpby", 256, 256, None),
+            req("vadd", 32, 65536, None),
+        ];
+        let mut calls = Vec::new();
+        let (batches, failed) = group(reqs, "dev0", |seq, m, n| {
+            calls.push((seq.to_string(), m, n));
+            Ok(PlanChoice::Fused)
+        });
+        assert!(failed.is_empty());
+        assert_eq!(batches.len(), 3, "three distinct keys → three batches");
+        // exactly one plan resolution per distinct (seq, padded size)
+        assert_eq!(calls.len(), 3);
+        let sizes: Vec<usize> = batches.iter().map(|b| b.reqs.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 1], "first-arrival order, members grouped");
+        assert_eq!(batches[0].key.seq, "waxpby");
+        assert_eq!(batches[1].key.seq, "vadd");
+        assert_eq!(batches[2].key.n, 256);
+    }
+
+    #[test]
+    fn variant_override_skips_planning_and_groups_by_resolved_choice() {
+        let reqs = vec![
+            req("waxpby", 32, 65536, Some(PlanChoice::Fused)),
+            req("waxpby", 32, 65536, None),
+            req("waxpby", 32, 65536, Some(PlanChoice::Cublas)),
+        ];
+        let mut calls = 0;
+        let (batches, failed) = group(reqs, "dev0", |_, _, _| {
+            calls += 1;
+            Ok(PlanChoice::Fused)
+        });
+        assert!(failed.is_empty());
+        assert_eq!(calls, 1, "only the unforced request plans");
+        // forced-Fused and planner-resolved-Fused share one batch; the
+        // forced-Cublas request is its own
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].reqs.len(), 2);
+        assert_eq!(batches[0].key.choice, PlanChoice::Fused);
+        assert_eq!(batches[1].key.choice, PlanChoice::Cublas);
+    }
+
+    #[test]
+    fn padded_sizes_share_planning_but_raw_sizes_execute_separately() {
+        let reqs = vec![req("waxpby", 32, 65530, None), req("waxpby", 32, 65536, None)];
+        let mut calls = 0;
+        let (batches, failed) = group(reqs, "dev0", |_, _, _| {
+            calls += 1;
+            Ok(PlanChoice::Fused)
+        });
+        assert!(failed.is_empty());
+        assert_eq!(calls, 1, "one choose_plan serves the shared padded key");
+        assert_eq!(batches.len(), 2, "artifact lookup stays raw-size exact");
+        assert_eq!(batches[0].key, batches[1].key);
+        assert_eq!(batches[0].n, 65530);
+        assert_eq!(batches[1].n, 65536);
+    }
+
+    #[test]
+    fn resolver_failure_fails_only_those_requests_and_resolves_once() {
+        let reqs = vec![
+            req("ghost", 32, 32, None),
+            req("waxpby", 32, 65536, None),
+            req("ghost", 32, 32, None),
+        ];
+        let mut calls = 0;
+        let (batches, failed) = group(reqs, "dev0", |seq, _, _| {
+            calls += 1;
+            if seq == "ghost" {
+                Err(anyhow!("unknown sequence '{seq}'"))
+            } else {
+                Ok(PlanChoice::Fused)
+            }
+        });
+        assert_eq!(failed.len(), 2);
+        assert_eq!(failed[0].0.seq, "ghost");
+        assert!(format!("{:#}", failed[1].1).contains("unknown sequence"));
+        assert_eq!(calls, 2, "failures are memoized too — one resolve per key");
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].key.seq, "waxpby");
+    }
+}

@@ -6,7 +6,8 @@
 //! fusebla compile <script> [--all] [--emit-cuda]
 //! fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
 //! fusebla autotune <seq>                  search + prediction-accuracy report
-//! fusebla serve-demo [--requests N]       coordinator request-loop demo
+//! fusebla serve-demo [--requests N] [--batch-window MS]
+//!                                         batched Engine/Client serve demo
 //! fusebla list                            sequences + artifact catalog
 //! ```
 
@@ -14,7 +15,7 @@ use crate::autotune;
 use crate::bench_support as bench;
 use crate::codegen;
 use crate::coordinator::{
-    synth_inputs, Context, Coordinator, PlanChoice, Request, RequestInputs,
+    synth_inputs, Context, Coordinator, Engine, EngineConfig, PlanChoice, SubmitRequest, Ticket,
 };
 use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
@@ -22,7 +23,8 @@ use crate::script::compile_script;
 use crate::sequences;
 use crate::util::fmt_duration;
 use std::path::PathBuf;
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
+use std::time::Duration;
 
 fn artifacts_dir() -> PathBuf {
     std::env::var("FUSEBLA_ARTIFACTS")
@@ -39,16 +41,35 @@ usage:
   fusebla compile <script-file> [--all] [--emit-cuda]
   fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
   fusebla autotune <seq>
-  fusebla serve-demo [--requests N]
+  fusebla serve-demo [--requests N] [--batch-window MS]
   fusebla list"
     );
     2
 }
 
-fn flag_value(args: &[String], name: &str) -> Option<String> {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1).cloned())
+/// Value of `--name` if the flag is present; an error when the flag is
+/// given without a trailing value (never a silent fallback).
+fn flag_value(args: &[String], name: &str) -> Result<Option<String>, String> {
+    match args.iter().position(|a| a == name) {
+        None => Ok(None),
+        Some(i) => match args.get(i + 1) {
+            Some(v) => Ok(Some(v.clone())),
+            None => Err(format!("{name} requires a value")),
+        },
+    }
+}
+
+/// Parse a typed flag strictly: absent → `Ok(None)`, present but
+/// missing or unparseable → an error message (commands exit 2 instead
+/// of silently falling back to a default).
+fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str) -> Result<Option<T>, String> {
+    match flag_value(args, name)? {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| format!("invalid value '{v}' for {name}")),
+    }
 }
 
 pub fn run() -> i32 {
@@ -162,9 +183,19 @@ fn cmd_run(args: &[String]) -> i32 {
         eprintln!("run: need a sequence name");
         return 2;
     };
-    let variant = match flag_value(args, "--variant").as_deref() {
-        Some("cublas") => PlanChoice::Cublas,
-        _ => PlanChoice::Fused,
+    let variant = match flag_value(args, "--variant") {
+        Ok(v) => match v.as_deref() {
+            Some("cublas") => PlanChoice::Cublas,
+            Some("fused") | None => PlanChoice::Fused,
+            Some(other) => {
+                eprintln!("run: unknown variant '{other}' (expected 'fused' or 'cublas')");
+                return 2;
+            }
+        },
+        Err(e) => {
+            eprintln!("run: {e}");
+            return 2;
+        }
     };
     let ctx = Arc::new(Context::new());
     let mut coord = match Coordinator::new(ctx, &artifacts_dir()) {
@@ -180,8 +211,13 @@ fn cmd_run(args: &[String]) -> i32 {
         return 1;
     }
     let (dm, dn) = sizes[sizes.len() / 2];
-    let m: usize = flag_value(args, "--m").and_then(|v| v.parse().ok()).unwrap_or(dm);
-    let n: usize = flag_value(args, "--n").and_then(|v| v.parse().ok()).unwrap_or(dn);
+    let (m, n) = match (parse_flag::<usize>(args, "--m"), parse_flag::<usize>(args, "--n")) {
+        (Ok(m), Ok(n)) => (m.unwrap_or(dm), n.unwrap_or(dn)),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("run: {e}");
+            return 2;
+        }
+    };
     let inputs = synth_inputs(coord.runtime(), seq, variant.as_str(), m, n, 42);
     let check = !args.iter().any(|a| a == "--no-check");
     println!(
@@ -277,11 +313,22 @@ fn cmd_autotune(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
-    let n_requests: usize = flag_value(args, "--requests")
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(32);
+    let n_requests: usize = match parse_flag(args, "--requests") {
+        Ok(v) => v.unwrap_or(32),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let window_ms: u64 = match parse_flag(args, "--batch-window") {
+        Ok(v) => v.unwrap_or(10),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
     // Size discovery from the manifest alone (no PJRT on this thread —
-    // the client is !Send and lives on the worker).
+    // the client is !Send and lives on the engine's worker).
     let manifest = match crate::util::manifest::Manifest::load(&artifacts_dir().join("manifest.txt")) {
         Ok(m) => m,
         Err(e) => {
@@ -304,41 +351,50 @@ fn cmd_serve(args: &[String]) -> i32 {
         let n: usize = entry.attrs["n"].parse().unwrap();
         prepared.push((seq, m, n));
     }
-    let dir = artifacts_dir();
-    let (tx, rx) = mpsc::channel();
-    let worker = std::thread::spawn(move || {
-        let ctx = Arc::new(Context::new());
-        let coord = Coordinator::new(ctx, &dir).expect("coordinator");
-        coord.serve(rx)
-    });
+    let cfg = EngineConfig {
+        batch_window: Duration::from_millis(window_ms),
+        max_batch: 256,
+    };
+    let engine = match Engine::with_config(Arc::new(Context::new()), &artifacts_dir(), cfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("serve-demo: {e:#}");
+            return 1;
+        }
+    };
+    let client = engine.client();
     let t0 = std::time::Instant::now();
-    let mut replies = Vec::new();
+    // a burst of repeated keys — exactly the traffic batching groups
+    let mut tickets = Vec::new();
     for i in 0..n_requests {
         let (seq, m, n) = &prepared[i % prepared.len()];
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(Request {
-            seq: seq.to_string(),
-            m: *m,
-            n: *n,
-            inputs: RequestInputs::Synth { seed: i as u64 },
-            variant: None, // let the coordinator's plan cache decide
-            reply: rtx,
-        })
-        .unwrap();
-        replies.push(rrx);
+        match client.submit(SubmitRequest::new(*seq, *m, *n).synth(i as u64)) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                eprintln!("serve-demo: {e:#}");
+                return 1;
+            }
+        }
     }
-    drop(tx);
-    let ok = replies.iter().filter(|r| matches!(r.recv(), Ok(Ok(_)))).count();
-    let metrics = worker.join().unwrap();
+    let ok = tickets.into_iter().map(Ticket::wait).filter(Result::is_ok).count();
+    let metrics = engine.shutdown();
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{n_requests} requests in {} ({:.1} req/s)",
+        "served {ok}/{n_requests} requests in {} ({:.1} req/s, batch window {window_ms} ms)",
         fmt_duration(dt),
         n_requests as f64 / dt
     );
     for (seq, (count, secs)) in &metrics.per_seq {
         println!("  {seq:10} {count:4} requests, mean {}", fmt_duration(secs / *count as f64));
     }
+    println!(
+        "batches: {} for {} request(s) — mean size {:.1}, max {}, {} request(s) shared a batch",
+        metrics.batches,
+        metrics.requests,
+        metrics.mean_batch_size(),
+        metrics.max_batch_size,
+        metrics.batched_requests
+    );
     println!(
         "plan cache: {} hit(s) / {} miss(es) / {} eviction(s)",
         metrics.plan_cache_hits, metrics.plan_cache_misses, metrics.plan_cache_evictions

@@ -1,13 +1,21 @@
 //! L3 coordinator: the process that owns the compiled plans and serves
 //! execution requests.
 //!
-//! For this paper the system contribution lives in the compiler, so the
-//! coordinator is a thin driver (per DESIGN.md): it holds the compiler
-//! context (library, device model, routine DB), an LRU plan cache keyed
-//! by `(sequence, problem size, device)`, and a request loop executing
-//! AOT artifacts through the PJRT runtime with per-sequence metrics.
-//! std::thread + channels — tokio is unreachable in this offline
-//! environment.
+//! The public serving surface is the [`Engine`]/[`Client`] pair in
+//! [`engine`]: an [`Engine`] owns the worker thread (the PJRT client is
+//! `!Send`, so the runtime lives there), a cloneable [`Client`] submits
+//! typed [`SubmitRequest`]s and gets a [`Ticket`] back, and the raw
+//! request/reply wire types stay private to this module. std::thread +
+//! channels — tokio is unreachable in this offline environment.
+//!
+//! Inside the engine the scheduler is *batched* (the paper's premise,
+//! applied to serving): each turn drains every queued request and groups
+//! them by `(seq, tile-padded size, device, resolved plan)` — see
+//! [`batch`]. That key is deliberately the same shape as [`PlanKey`], so
+//! one `choose_plan` serves a whole group, and the group executes as one
+//! multi-input dispatch through `Runtime::run_seq_batch`, which resolves
+//! the artifact stages and executables once per batch instead of once
+//! per request. Per-batch counters surface through [`Metrics`].
 //!
 //! The plan cache is what keeps the serve path off the compiler: a cold
 //! `(seq, m, n)` runs the pruned planner once (`crate::planner`); every
@@ -15,8 +23,17 @@
 //! counts surface through [`Metrics`]. A plan decided for one
 //! `ProblemSize` or device is never served for another — size and
 //! device are part of the key.
+//!
+//! [`Context::new`] also reloads the routine calibration database from
+//! `calibration.txt` next to the artifact catalog (keyed by device name
+//! + library fingerprint) instead of recalibrating every process start;
+//! see [`crate::predict::RoutineDb::load_cached`].
 
+pub(crate) mod batch;
 pub mod cli;
+pub mod engine;
+
+pub use engine::{Client, Engine, EngineConfig, SubmitRequest, Ticket};
 
 use crate::autotune;
 use crate::fusion::ImplAxes;
@@ -29,7 +46,7 @@ use crate::sequences::{self, Sequence};
 use crate::sim::DeviceModel;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -42,10 +59,34 @@ pub struct Context {
 }
 
 impl Context {
+    /// Build the context, reloading the routine calibration from the
+    /// cache next to the artifact catalog when one is present (see
+    /// [`Context::with_calibration_cache`]). The catalog directory is
+    /// `$FUSEBLA_ARTIFACTS` or `./artifacts`, matching the CLI.
     pub fn new() -> Context {
+        let dir = std::env::var("FUSEBLA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Self::with_calibration_cache(&dir)
+    }
+
+    /// Build the context with `dir/calibration.txt` as the persistent
+    /// calibration cache. The cache is keyed by device name + library
+    /// fingerprint; a stale or mismatched file is ignored and rewritten.
+    /// Nothing is written when `dir` does not exist (no catalog, no
+    /// side effects).
+    pub fn with_calibration_cache(dir: &Path) -> Context {
         let lib = Library::standard();
         let dev = DeviceModel::gtx480();
+        let fp = lib.fingerprint();
+        let path = dir.join("calibration.txt");
+        if let Some(db) = RoutineDb::load_cached(&path, dev.name, fp) {
+            return Context { lib, dev, db };
+        }
         let db = RoutineDb::calibrate(&dev, &lib);
+        if dir.is_dir() {
+            let _ = db.save(&path, dev.name, fp);
+        }
         Context { lib, dev, db }
     }
 }
@@ -58,7 +99,7 @@ impl Default for Context {
 
 /// Which plan variant to execute for a sequence (the coordinator decides
 /// once via the compiler, then caches).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum PlanChoice {
     Fused,
     Cublas,
@@ -76,13 +117,42 @@ impl PlanChoice {
 /// Input payload of a request. `Synth` lets producers on other threads
 /// enqueue work without touching the (thread-bound) PJRT runtime: the
 /// coordinator materializes deterministic random inputs itself.
-pub enum RequestInputs {
+/// Private wire type — callers go through [`SubmitRequest`].
+pub(crate) enum RequestInputs {
     Explicit(BTreeMap<String, Tensor>),
     Synth { seed: u64 },
 }
 
-/// One execution request.
-pub struct Request {
+/// Wire messages between the engine handle and the worker.
+pub(crate) enum Msg {
+    Run(Request),
+    /// Answered inline by the worker, never batched.
+    Control(Control),
+}
+
+/// Control-plane messages: observability and lifecycle.
+pub(crate) enum Control {
+    /// Snapshot the worker's metrics as of the moment it processes the
+    /// message.
+    Metrics(mpsc::Sender<Metrics>),
+    /// Resolve (and cache) the plan for a key without executing
+    /// anything.
+    Plan {
+        seq: String,
+        m: usize,
+        n: usize,
+        reply: mpsc::Sender<Result<PlanChoice>>,
+    },
+    /// Stop serving even while client handles keep the channel open
+    /// (an engine shutdown must not wait for every `Client` clone to
+    /// drop).
+    Shutdown,
+}
+
+/// One execution request on the wire between [`Client`] and the worker.
+/// Private — [`Client::submit`] is the only producer, so no hand-wired
+/// reply channels exist outside the engine.
+pub(crate) struct Request {
     pub seq: String,
     pub m: usize,
     pub n: usize,
@@ -104,7 +174,30 @@ pub struct Metrics {
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
     pub plan_cache_evictions: u64,
+    /// Multi-input dispatches executed by the batched scheduler.
+    pub batches: u64,
+    /// Requests that shared their batch with at least one other request
+    /// (the grouping win; 0 means every batch was a singleton).
+    pub batched_requests: u64,
+    /// Largest batch executed so far.
+    pub max_batch_size: u64,
+    /// Sum of executed batch sizes (numerator of the mean).
+    pub batch_size_sum: u64,
+    /// Per-sequence (executed-request count, batch-attributed seconds).
+    /// Requests rejected before dispatch (e.g. plan-resolution errors)
+    /// appear only in `requests`/`failures`.
     pub per_seq: BTreeMap<String, (u64, f64)>,
+}
+
+impl Metrics {
+    /// Mean requests per executed batch (0 before the first batch).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
 }
 
 /// Cache key of one plan decision: a sequence at a problem size on a
@@ -122,9 +215,16 @@ pub struct PlanKey {
 }
 
 impl PlanKey {
-    /// Key for a sequence at a (tile-padded) problem size on a device.
+    /// Key for a sequence at a problem size on a device. Callers pass
+    /// the tile-padded size (pad once at the boundary — `choose_plan`
+    /// does); an unpadded size here is a bug, not a request to pad.
     pub fn new(seq: &str, p: ProblemSize, device: &str) -> PlanKey {
-        let p = p.padded();
+        debug_assert!(
+            p == p.padded(),
+            "PlanKey sizes must be tile-padded (got {}x{})",
+            p.m,
+            p.n
+        );
         PlanKey {
             seq: seq.to_string(),
             m: p.m,
@@ -206,8 +306,9 @@ impl PlanCache {
     }
 }
 
-/// The coordinator: plan cache + runtime + metrics behind a request
-/// channel.
+/// The coordinator: plan cache + runtime + metrics. The engine drives it
+/// through the batched scheduler; it can also be embedded directly for
+/// synchronous, checked runs (see the examples).
 pub struct Coordinator {
     ctx: Arc<Context>,
     runtime: Runtime,
@@ -236,6 +337,12 @@ impl Coordinator {
     /// variant, else the baseline decomposition. Repeat requests for the
     /// same `(seq, m, n)` on the same device skip planning entirely.
     pub fn choose_plan(&mut self, seq_name: &str, m: usize, n: usize) -> Result<PlanChoice> {
+        // Validate the name before touching the cache so unknown
+        // sequences never pollute the hit/miss counters.
+        let seq: Sequence = sequences::by_name(seq_name)
+            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
+        // Pad exactly once: the padded size is both the plan-cache key
+        // and the size the planner plans at (PlanKey::new asserts it).
         let p = ProblemSize::new(m, n).padded();
         let key = PlanKey::new(seq_name, p, self.ctx.dev.name);
         let cached = self.plan_cache.get(&key);
@@ -243,8 +350,6 @@ impl Coordinator {
         if let Some(choice) = cached {
             return Ok(choice);
         }
-        let seq: Sequence = sequences::by_name(seq_name)
-            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
         let (prog, graph) = seq.graph(&self.ctx.lib);
         let planned = planner::plan(
             &prog,
@@ -280,39 +385,134 @@ impl Coordinator {
         self.metrics.plan_cache_evictions = self.plan_cache.evictions;
     }
 
-    /// Handle one request synchronously.
-    pub fn handle(&mut self, req: &Request) -> Result<RunResult> {
-        let variant = match req.variant {
-            Some(v) => v,
-            None => self.choose_plan(&req.seq, req.m, req.n)?,
-        };
-        let inputs = match &req.inputs {
-            RequestInputs::Explicit(m) => m.clone(),
-            RequestInputs::Synth { seed } => {
-                synth_inputs(&self.runtime, &req.seq, variant.as_str(), req.m, req.n, *seed)
-            }
-        };
-        let t0 = Instant::now();
-        let result = self
-            .runtime
-            .run_seq(&req.seq, variant.as_str(), req.m, req.n, &inputs);
-        let dt = t0.elapsed().as_secs_f64();
-        self.metrics.requests += 1;
-        self.metrics.seconds_total += dt;
-        let e = self.metrics.per_seq.entry(req.seq.clone()).or_insert((0, 0.0));
-        e.0 += 1;
-        e.1 += dt;
-        if result.is_err() {
-            self.metrics.failures += 1;
+    /// Execute one grouped batch as a multi-input dispatch, record the
+    /// per-batch metrics, and reply to every member. Consumes the
+    /// batch: explicit input tensors move into the runtime without a
+    /// copy.
+    pub(crate) fn execute_batch(&mut self, b: batch::Batch) {
+        debug_assert_eq!(
+            b.key.device, self.ctx.dev.name,
+            "batch grouped for another device"
+        );
+        let batch::Batch { key, m, n, reqs } = b;
+        let variant = key.choice.as_str();
+        let size = reqs.len() as u64;
+        let mut inputs = Vec::with_capacity(reqs.len());
+        let mut replies = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            inputs.push(match r.inputs {
+                RequestInputs::Explicit(map) => map,
+                RequestInputs::Synth { seed } => {
+                    synth_inputs(&self.runtime, &key.seq, variant, m, n, seed)
+                }
+            });
+            replies.push(r.reply);
         }
-        result
+        let t0 = Instant::now();
+        let results = self.runtime.run_seq_batch(&key.seq, variant, m, n, inputs);
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.batches += 1;
+        self.metrics.batch_size_sum += size;
+        self.metrics.max_batch_size = self.metrics.max_batch_size.max(size);
+        if size > 1 {
+            self.metrics.batched_requests += size;
+        }
+        self.metrics.requests += size;
+        self.metrics.seconds_total += dt;
+        let e = self.metrics.per_seq.entry(key.seq.clone()).or_insert((0, 0.0));
+        e.0 += size;
+        e.1 += dt;
+        self.metrics.failures += results.iter().filter(|r| r.is_err()).count() as u64;
+        for (reply, res) in replies.iter().zip(results) {
+            let _ = reply.send(res);
+        }
     }
 
-    /// Run a request loop until the channel closes. Returns metrics.
-    pub fn serve(mut self, rx: mpsc::Receiver<Request>) -> Metrics {
-        while let Ok(req) = rx.recv() {
-            let res = self.handle(&req);
-            let _ = req.reply.send(res);
+    /// One scheduling turn: group a drained queue by batch key (one
+    /// `choose_plan` per key), then execute each group as one dispatch
+    /// and reply per request.
+    fn run_turn(&mut self, queue: Vec<Request>) {
+        let device = self.ctx.dev.name;
+        let (batches, failed) =
+            batch::group(queue, device, |seq, m, n| self.choose_plan(seq, m, n));
+        // Requests rejected before dispatch count toward requests and
+        // failures but not per_seq, which tracks *executed* traffic —
+        // a never-executed request must not dilute a sequence's mean
+        // latency.
+        for (req, err) in failed {
+            self.metrics.requests += 1;
+            self.metrics.failures += 1;
+            let _ = req.reply.send(Err(err));
+        }
+        for b in batches {
+            self.execute_batch(b);
+        }
+    }
+
+    /// Answer a control message inline; returns true on shutdown.
+    fn answer_control(&mut self, c: Control) -> bool {
+        match c {
+            Control::Shutdown => true,
+            Control::Metrics(reply) => {
+                let _ = reply.send(self.metrics.clone());
+                false
+            }
+            Control::Plan { seq, m, n, reply } => {
+                let _ = reply.send(self.choose_plan(&seq, m, n));
+                false
+            }
+        }
+    }
+
+    /// Drain-and-group request loop (the engine's worker body): block
+    /// for the first request of a turn, keep draining until the queue is
+    /// empty and the batch window has elapsed (or the turn cap is hit),
+    /// then run the turn. Returns metrics when the channel closes or a
+    /// [`Msg::Shutdown`] sentinel arrives.
+    pub(crate) fn serve_batched(mut self, rx: mpsc::Receiver<Msg>, cfg: &EngineConfig) -> Metrics {
+        let mut closing = false;
+        while !closing {
+            let first = match rx.recv() {
+                Ok(Msg::Run(r)) => r,
+                Ok(Msg::Control(c)) => {
+                    if self.answer_control(c) {
+                        break;
+                    }
+                    continue;
+                }
+                Err(_) => break,
+            };
+            let mut queue = vec![first];
+            let deadline = Instant::now() + cfg.batch_window;
+            while queue.len() < cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(Msg::Run(r)) => queue.push(r),
+                    Ok(Msg::Control(c)) => {
+                        if self.answer_control(c) {
+                            closing = true;
+                            break;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => break,
+                    Err(mpsc::TryRecvError::Empty) => {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(Msg::Run(r)) => queue.push(r),
+                            Ok(Msg::Control(c)) => {
+                                if self.answer_control(c) {
+                                    closing = true;
+                                    break;
+                                }
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                }
+            }
+            self.run_turn(queue);
         }
         self.metrics
     }
@@ -378,8 +578,40 @@ pub fn synth_inputs(
     inputs
 }
 
+/// Shared fixture for the in-crate serve-path tests: a temp catalog
+/// whose manifest parses and (optionally) whose HLO files exist, so
+/// planning and scheduling run end-to-end and only the offline stub
+/// backend stops execution.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::path::PathBuf;
+
+    /// Write a stub catalog with one fused stage-0 artifact per `seq`
+    /// at m=32, n=65536. With `hlo_files`, each entry gets a minimal
+    /// parseable HLO text so execution reaches the stub `compile` (and
+    /// fails there) instead of failing at file load.
+    pub(crate) fn stub_catalog(tag: &str, seqs: &[&str], hlo_files: bool) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fusebla_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut manifest = String::new();
+        for seq in seqs {
+            manifest.push_str(&format!(
+                "artifact {seq}.fused.m32n65536.s0\n file {seq}.hlo.txt\n seq {seq}\n variant fused\n stage 0\n in x:f32[65536]\n in y:f32[65536]\n out w:f32[65536]\n m 32\n n 65536\nend\n"
+            ));
+            if hlo_files {
+                std::fs::write(dir.join(format!("{seq}.hlo.txt")), format!("HloModule {seq}\n"))
+                    .unwrap();
+            }
+        }
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+        dir
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::testutil::stub_catalog;
     use super::*;
 
     fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -479,20 +711,14 @@ mod tests {
         assert_eq!(cache.evictions, 0);
     }
 
-    /// The serve-path acceptance check: a repeated `handle` for the same
-    /// `(seq, m, n)` must hit the plan cache. Uses a stub manifest (no
-    /// real artifacts needed — planning happens before execution, and
-    /// the failed execution is itself tracked by the failure counter).
+    /// The serve-path acceptance check: a repeated request for the same
+    /// `(seq, m, n)` must hit the plan cache across scheduling turns.
+    /// Uses a stub manifest (no real artifacts needed — planning happens
+    /// before execution, and the failed execution is itself tracked by
+    /// the failure counter).
     #[test]
-    fn handle_hits_plan_cache_on_repeat() {
-        let dir = std::env::temp_dir().join(format!("fusebla_plancache_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("manifest.txt"),
-            "artifact waxpby.fused.m32n65536.s0\n file waxpby.hlo.txt\n seq waxpby\n variant fused\n stage 0\n in x:f32[65536]\n in y:f32[65536]\n out w:f32[65536]\n m 32\n n 65536\nend\n",
-        )
-        .unwrap();
+    fn turns_hit_plan_cache_on_repeat() {
+        let dir = stub_catalog("plancache", &["waxpby"], false);
         let ctx = Arc::new(Context::new());
         let mut coord = Coordinator::new(ctx, &dir).unwrap();
         let request = |m: usize, n: usize| {
@@ -506,14 +732,31 @@ mod tests {
                 reply: rtx,
             }
         };
-        let _ = coord.handle(&request(32, 65536)); // cold: plans
-        let _ = coord.handle(&request(32, 65536)); // warm: cache hit
+        coord.run_turn(vec![request(32, 65536)]); // cold: plans
+        coord.run_turn(vec![request(32, 65536)]); // warm: cache hit
         assert_eq!(coord.metrics.plan_cache_misses, 1);
         assert_eq!(coord.metrics.plan_cache_hits, 1);
         assert_eq!(coord.metrics.requests, 2);
+        assert_eq!(coord.metrics.batches, 2);
         // a different problem size must re-plan, never reuse the entry
-        let _ = coord.handle(&request(32, 1024));
+        coord.run_turn(vec![request(32, 1024)]);
         assert_eq!(coord.metrics.plan_cache_misses, 2);
+        assert_eq!(coord.metrics.plan_cache_hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Raw sizes that tile-pad to the same shape share one plan entry:
+    /// the pad-once fix means the second request is a cache hit, not a
+    /// re-plan of an unpadded key.
+    #[test]
+    fn choose_plan_pads_key_once() {
+        let dir = stub_catalog("padonce", &["waxpby"], false);
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        let a = coord.choose_plan("waxpby", 32, 65530).unwrap();
+        let b = coord.choose_plan("waxpby", 32, 65536).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(coord.metrics.plan_cache_misses, 1);
         assert_eq!(coord.metrics.plan_cache_hits, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -527,19 +770,19 @@ mod tests {
         let handle = std::thread::spawn(move || {
             let ctx = Arc::new(Context::new());
             let coord = Coordinator::new(ctx, &dir).unwrap();
-            coord.serve(rx)
+            coord.serve_batched(rx, &EngineConfig::default())
         });
         let mut replies = vec![];
         for i in 0..3 {
             let (rtx, rrx) = mpsc::channel();
-            tx.send(Request {
+            tx.send(Msg::Run(Request {
                 seq: "waxpby".into(),
                 m: 32,
                 n: 65536,
                 inputs: RequestInputs::Synth { seed: i },
                 variant: Some(PlanChoice::Fused),
                 reply: rtx,
-            })
+            }))
             .unwrap();
             replies.push(rrx);
         }
@@ -550,23 +793,32 @@ mod tests {
         let metrics = handle.join().unwrap();
         assert_eq!(metrics.requests, 3);
         assert_eq!(metrics.failures, 0);
+        // all three share one key — the scheduler must have grouped at
+        // least some of them (the queue was full before serving began)
+        assert!(metrics.batches <= 3);
+        assert_eq!(metrics.batch_size_sum, 3);
     }
 
     #[test]
     fn metrics_track_failures() {
-        let Some(dir) = artifacts_dir() else { return };
+        let dir = stub_catalog("failures", &["waxpby"], false);
         let ctx = Arc::new(Context::new());
         let mut coord = Coordinator::new(ctx, &dir).unwrap();
-        let (rtx, _rrx) = mpsc::channel();
+        let (rtx, rrx) = mpsc::channel();
         let req = Request {
-            seq: "bicgk".into(),
-            m: 7, // no such size
+            seq: "waxpby".into(),
+            m: 7, // no such size in the catalog
             n: 7,
             inputs: RequestInputs::Explicit(BTreeMap::new()),
             variant: Some(PlanChoice::Fused),
             reply: rtx,
         };
-        assert!(coord.handle(&req).is_err());
+        coord.run_turn(vec![req]);
+        let reply = rrx.recv().unwrap();
+        let err = reply.err().expect("must fail").to_string();
+        assert!(err.contains("no artifacts"), "{err}");
         assert_eq!(coord.metrics.failures, 1);
+        assert_eq!(coord.metrics.requests, 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

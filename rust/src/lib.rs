@@ -9,8 +9,8 @@
 //!   an optimization-space search with empirical performance prediction
 //!   (the [`planner`] runs it memoized, pruned and in parallel on the
 //!   hot path), a calibrated GTX 480 timing model standing in for the
-//!   paper's testbed, and a PJRT runtime + coordinator executing
-//!   AOT-compiled artifacts behind an LRU plan cache.
+//!   paper's testbed, and a PJRT runtime served through the batching
+//!   [`Engine`]/[`Client`] facade behind an LRU plan cache.
 //! * **L2 (python/compile)** — JAX definitions of each BLAS sequence.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (fused and
 //!   elementary) mirroring the paper's 32×32-tile scheme.
@@ -33,3 +33,5 @@ pub mod script;
 pub mod sequences;
 pub mod sim;
 pub mod util;
+
+pub use coordinator::{Client, Engine, EngineConfig, SubmitRequest, Ticket};

@@ -98,6 +98,48 @@ impl Library {
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.funcs.iter().map(|f| f.name.as_str())
     }
+
+    /// Stable FNV-1a fingerprint of everything the routine calibration
+    /// depends on (function/routine names, word + flop counts, thread
+    /// shapes, variant cost inputs). The persistent calibration cache is
+    /// keyed by this plus the device name, so editing the library
+    /// invalidates cached calibrations automatically.
+    pub fn fingerprint(&self) -> u64 {
+        fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+            }
+            h
+        }
+        // Strings are length-prefixed so field boundaries are
+        // unambiguous (a rename cannot collide with an adjacent field).
+        fn eat_str(h: u64, s: &str) -> u64 {
+            eat(eat(h, &(s.len() as u64).to_le_bytes()), s.as_bytes())
+        }
+        let mut h: u64 = 0xcbf29ce484222325;
+        for f in &self.funcs {
+            h = eat_str(h, &f.name);
+            h = eat(h, &[f.depth()]);
+            h = eat(h, &f.flops_per_instance.to_le_bytes());
+            for r in &f.routines {
+                h = eat_str(h, &r.name);
+                h = eat(h, &r.global_words.to_le_bytes());
+                h = eat(h, &r.flops.to_le_bytes());
+                h = eat(h, &r.threads.0.to_le_bytes());
+                h = eat(h, &r.threads.1.to_le_bytes());
+                h = eat(h, &[u8::from(r.uses_atomic)]);
+            }
+            for v in &f.variants {
+                h = eat_str(h, &v.name);
+                h = eat(h, &v.threads.0.to_le_bytes());
+                h = eat(h, &v.threads.1.to_le_bytes());
+                h = eat(h, &v.regs_per_thread.to_le_bytes());
+                h = eat(h, &v.scratch_smem_words.to_le_bytes());
+                h = eat(h, &v.compute_efficiency.to_bits().to_le_bytes());
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -148,5 +190,17 @@ mod tests {
     #[test]
     fn lookup_unknown_is_none() {
         assert!(Library::standard().lookup("sgemm").is_none());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let a = Library::standard().fingerprint();
+        let b = Library::standard().fingerprint();
+        assert_eq!(a, b, "same content must hash identically");
+        assert_ne!(a, 0);
+        // a smaller library hashes differently
+        let mut small = Library::new();
+        small.register(blas1::scopy());
+        assert_ne!(small.fingerprint(), a);
     }
 }

@@ -21,6 +21,7 @@ use crate::ir::plan::{GridPlan, Hoist, IterDim, KernelPlan, Poly2, SeqPlan, Traf
 use crate::library::Library;
 use crate::sim::{simulate_kernel, DeviceModel};
 use std::collections::BTreeMap;
+use std::path::Path;
 
 /// Environment bucket a routine was benchmarked under.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -163,7 +164,100 @@ impl RoutineDb {
     fn lookup(&self, routine: &str, env: EnvKey) -> Option<f64> {
         self.map.get(routine).and_then(|m| m.get(&env)).copied()
     }
+
+    /// Persist the calibration next to the artifact catalog, keyed by
+    /// device name + library fingerprint. Seconds are stored as raw f64
+    /// bits, so a reload is bit-identical to the calibration it cached.
+    /// The write goes through a temp file + rename so concurrent
+    /// processes never observe a torn file.
+    pub fn save(&self, path: &Path, device: &str, library_fingerprint: u64) -> std::io::Result<()> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SAVE_SEQ: AtomicU64 = AtomicU64::new(0);
+        let mut out = String::new();
+        out.push_str(CALIBRATION_HEADER);
+        out.push('\n');
+        out.push_str(&format!("device {device}\n"));
+        out.push_str(&format!("library {library_fingerprint:016x}\n"));
+        for (routine, envs) in &self.map {
+            out.push_str(&format!("routine {routine}\n"));
+            for (k, secs) in envs {
+                out.push_str(&format!(
+                    "env {} {} {} {:016x}\n",
+                    k.ipb_log2,
+                    k.iters_log2,
+                    k.smem_bucket,
+                    secs.to_bits()
+                ));
+            }
+        }
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SAVE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, out)?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Reload a calibration cached by [`RoutineDb::save`]. Returns
+    /// `None` when the file is missing, malformed, or was recorded for a
+    /// different device or library fingerprint — callers then fall back
+    /// to a fresh [`RoutineDb::calibrate`].
+    pub fn load_cached(path: &Path, device: &str, library_fingerprint: u64) -> Option<RoutineDb> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let mut lines = text.lines();
+        if lines.next()? != CALIBRATION_HEADER {
+            return None;
+        }
+        if lines.next()? != format!("device {device}") {
+            return None;
+        }
+        if lines.next()? != format!("library {library_fingerprint:016x}") {
+            return None;
+        }
+        let mut map: BTreeMap<String, BTreeMap<EnvKey, f64>> = BTreeMap::new();
+        let mut current: Option<String> = None;
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("routine ") {
+                current = Some(name.to_string());
+                map.entry(name.to_string()).or_default();
+            } else if let Some(rest) = line.strip_prefix("env ") {
+                let routine = current.as_ref()?;
+                let mut parts = rest.split_whitespace();
+                let ipb_log2: u8 = parts.next()?.parse().ok()?;
+                let iters_log2: u8 = parts.next()?.parse().ok()?;
+                let smem_bucket: u8 = parts.next()?.parse().ok()?;
+                let bits = u64::from_str_radix(parts.next()?, 16).ok()?;
+                if parts.next().is_some() {
+                    return None;
+                }
+                map.get_mut(routine)?.insert(
+                    EnvKey {
+                        ipb_log2,
+                        iters_log2,
+                        smem_bucket,
+                    },
+                    f64::from_bits(bits),
+                );
+            } else {
+                return None;
+            }
+        }
+        if map.is_empty() {
+            return None;
+        }
+        Some(RoutineDb { map })
+    }
 }
+
+/// First line of the calibration cache. The version bumps whenever the
+/// calibration *algorithm* (micro-plans, environment grid, simulator)
+/// changes in a way the library fingerprint cannot see.
+const CALIBRATION_HEADER: &str = "# fusebla calibration v1";
 
 /// Predicted runtime of one kernel: `max(Σ t_transfer, Σ t_compute)`.
 pub fn predict_kernel(db: &RoutineDb, plan: &KernelPlan, p: ProblemSize) -> f64 {
@@ -238,6 +332,46 @@ mod tests {
         assert_send_sync::<RoutineDb>();
         assert_send_sync::<KernelPlan>();
         assert_send_sync::<crate::ir::elem::ProblemSize>();
+    }
+
+    #[test]
+    fn calibration_cache_roundtrips_bit_identical() {
+        let (dev, _, db) = db();
+        let dir = std::env::temp_dir().join(format!("fusebla_cal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("calibration.txt");
+        db.save(&path, dev.name, 0x1234).unwrap();
+        let loaded = RoutineDb::load_cached(&path, dev.name, 0x1234).expect("cache loads");
+        assert_eq!(loaded.len(), db.len());
+        for (routine, envs) in &db.map {
+            for (k, secs) in envs {
+                assert_eq!(
+                    loaded.map[routine][k].to_bits(),
+                    secs.to_bits(),
+                    "{routine}: cached seconds must be bit-identical"
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn calibration_cache_rejects_mismatched_keys() {
+        let (dev, _, db) = db();
+        let dir = std::env::temp_dir().join(format!("fusebla_calkey_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("calibration.txt");
+        db.save(&path, dev.name, 7).unwrap();
+        // wrong device, wrong fingerprint, missing file → all None
+        assert!(RoutineDb::load_cached(&path, "some other GPU", 7).is_none());
+        assert!(RoutineDb::load_cached(&path, dev.name, 8).is_none());
+        assert!(RoutineDb::load_cached(&dir.join("nope.txt"), dev.name, 7).is_none());
+        // corrupt payload → None (fall back to recalibration)
+        std::fs::write(&path, "# fusebla calibration v1\ngarbage\n").unwrap();
+        assert!(RoutineDb::load_cached(&path, dev.name, 7).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

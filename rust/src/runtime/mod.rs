@@ -61,10 +61,15 @@ pub struct StageStats {
 /// Result of running a sequence variant.
 #[derive(Clone, Debug)]
 pub struct RunResult {
-    /// All produced tensors by name (sequence outputs included).
+    /// All produced tensors by name (sequence outputs included). The
+    /// free inputs stay in the map too, so the result is self-contained
+    /// enough to re-verify against the reference oracle.
     pub env: BTreeMap<String, Tensor>,
     pub stages: Vec<StageStats>,
     pub seconds: f64,
+    /// Which artifact variant actually executed ("fused"/"cublas") —
+    /// lets clients observe the coordinator's plan decision.
+    pub variant: String,
 }
 
 /// The PJRT-backed executor.
@@ -173,6 +178,17 @@ impl Runtime {
     /// outputs back into `env`.
     pub fn run_stage(&self, entry: &ArtifactEntry, env: &mut BTreeMap<String, Tensor>) -> Result<f64> {
         let exe = self.executable(&entry.key)?;
+        self.run_stage_exec(&exe, entry, env)
+    }
+
+    /// Stage execution against an already-resolved executable (the batch
+    /// path pins executables once per stage instead of once per request).
+    fn run_stage_exec(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        entry: &ArtifactEntry,
+        env: &mut BTreeMap<String, Tensor>,
+    ) -> Result<f64> {
         let mut literals = Vec::with_capacity(entry.inputs.len());
         for spec in &entry.inputs {
             let t = env
@@ -241,7 +257,68 @@ impl Runtime {
             env,
             stages: stats,
             seconds: t0.elapsed().as_secs_f64(),
+            variant: variant.to_string(),
         })
+    }
+
+    /// Execute all stages of a sequence variant for several independent
+    /// input sets in one dispatch. The manifest scan and the
+    /// executable-cache lookups happen once per *stage* instead of once
+    /// per request — that is the launch-overhead amortization batching
+    /// buys on this runtime. Input sets are consumed (each becomes its
+    /// request's environment in place, no copy); results are
+    /// bit-identical to calling [`Runtime::run_seq`] once per input
+    /// set, and per-request failures (e.g. a missing input tensor) fail
+    /// only that slot.
+    pub fn run_seq_batch(
+        &self,
+        seq: &str,
+        variant: &str,
+        m: usize,
+        n: usize,
+        inputs: Vec<BTreeMap<String, Tensor>>,
+    ) -> Vec<Result<RunResult>> {
+        let stages = self.stages_of(seq, variant, m, n);
+        if stages.is_empty() {
+            let msg = format!(
+                "no artifacts for {seq}.{variant} at m{m} n{n}; available: {:?}",
+                self.sizes_of(seq, variant)
+            );
+            return inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect();
+        }
+        let mut exes = Vec::with_capacity(stages.len());
+        for entry in &stages {
+            match self.executable(&entry.key) {
+                Ok(e) => exes.push(e),
+                Err(e) => {
+                    // A missing/corrupt artifact fails the whole batch —
+                    // every request would have hit the same artifact.
+                    let msg = format!("{e:#}");
+                    return inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect();
+                }
+            }
+        }
+        inputs
+            .into_iter()
+            .map(|input| -> Result<RunResult> {
+                let mut env = input;
+                let mut stats = Vec::with_capacity(stages.len());
+                let t0 = Instant::now();
+                for (entry, exe) in stages.iter().zip(&exes) {
+                    let secs = self.run_stage_exec(exe, entry, &mut env)?;
+                    stats.push(StageStats {
+                        key: entry.key.clone(),
+                        seconds: secs,
+                    });
+                }
+                Ok(RunResult {
+                    env,
+                    stages: stats,
+                    seconds: t0.elapsed().as_secs_f64(),
+                    variant: variant.to_string(),
+                })
+            })
+            .collect()
     }
 }
 

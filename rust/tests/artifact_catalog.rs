@@ -1,0 +1,82 @@
+//! Artifact-catalog validation: everything the CI artifact job can
+//! prove about `make artifacts` output *without* a real PJRT backend
+//! (the vendored `xla` crate is a compile-only stub; execution-level
+//! tests additionally need an XLA-backed build).
+//!
+//! Gated on `artifacts/manifest.txt` existing, like the execution tests.
+
+use fusebla::runtime::Runtime;
+use fusebla::sequences;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+/// Every sequence has both variants catalogued at at least one size,
+/// and the runtime's size discovery sees them.
+#[test]
+fn catalog_covers_every_sequence_and_variant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).expect("runtime loads the manifest");
+    for seq in sequences::all() {
+        for variant in ["fused", "cublas"] {
+            let sizes = rt.sizes_of(seq.name, variant);
+            assert!(
+                !sizes.is_empty(),
+                "{}.{variant}: no catalogued sizes",
+                seq.name
+            );
+        }
+    }
+}
+
+/// Every manifest entry points at an HLO text file that exists and
+/// parses as an HLO module (the stub backend does real file validation
+/// even though it cannot execute).
+#[test]
+fn every_artifact_file_exists_and_is_hlo() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    for entry in rt.manifest.entries.values() {
+        let path = rt.manifest.path_of(entry);
+        assert!(path.exists(), "{}: file {} missing", entry.key, path.display());
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.key));
+        assert!(
+            text.contains("HloModule"),
+            "{}: {} is not HLO module text",
+            entry.key,
+            path.display()
+        );
+    }
+}
+
+/// Stages of each (seq, variant, size) group are numbered contiguously
+/// from 0, and every entry declares its inputs, outputs, and size attrs.
+#[test]
+fn stage_numbering_is_contiguous_and_entries_are_complete() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let mut groups: BTreeMap<(String, String, String, String), Vec<usize>> = BTreeMap::new();
+    for entry in rt.manifest.entries.values() {
+        assert!(!entry.inputs.is_empty(), "{}: no inputs", entry.key);
+        assert!(!entry.outputs.is_empty(), "{}: no outputs", entry.key);
+        let m = entry.attrs.get("m").unwrap_or_else(|| panic!("{}: no m attr", entry.key));
+        let n = entry.attrs.get("n").unwrap_or_else(|| panic!("{}: no n attr", entry.key));
+        groups
+            .entry((entry.seq.clone(), entry.variant.clone(), m.clone(), n.clone()))
+            .or_default()
+            .push(entry.stage);
+    }
+    for ((seq, variant, m, n), mut stages) in groups {
+        stages.sort_unstable();
+        let expect: Vec<usize> = (0..stages.len()).collect();
+        assert_eq!(
+            stages, expect,
+            "{seq}.{variant} m{m} n{n}: stages not contiguous"
+        );
+    }
+}

@@ -1,0 +1,128 @@
+//! Batched serve path, exercised through the public API only: grouping
+//! metrics, engine lifecycle, and — when artifacts are built — the
+//! bit-identity of batched execution vs per-request execution.
+//!
+//! The stub-manifest tests run everywhere (planning and scheduling work
+//! without the real PJRT backend); the execution tests gate on
+//! `artifacts/manifest.txt` like the rest of the suite.
+
+use fusebla::coordinator::{synth_inputs, Context, Coordinator, PlanChoice};
+use fusebla::{Engine, EngineConfig, SubmitRequest};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+/// Batched execution must be bit-identical to per-request sequential
+/// execution on the same inputs — batching shares dispatch bookkeeping,
+/// never arithmetic.
+#[test]
+fn batched_results_bit_identical_to_sequential() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coord = Coordinator::new(Arc::new(Context::new()), &dir).unwrap();
+    let rt = coord.runtime();
+    let inputs: Vec<_> = (0..4)
+        .map(|seed| synth_inputs(rt, "waxpby", "fused", 32, 65536, seed))
+        .collect();
+    let batched = rt.run_seq_batch("waxpby", "fused", 32, 65536, inputs.clone());
+    assert_eq!(batched.len(), 4);
+    for (input, b) in inputs.iter().zip(batched) {
+        let b = b.expect("batched run");
+        let s = rt.run_seq("waxpby", "fused", 32, 65536, input).expect("sequential run");
+        assert_eq!(b.env.len(), s.env.len());
+        assert_eq!(b.stages.len(), s.stages.len());
+        for (name, tb) in &b.env {
+            let ts = &s.env[name];
+            assert_eq!(tb.dims, ts.dims, "dims of '{name}'");
+            for (x, y) in tb.data.iter().zip(&ts.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "tensor '{name}' differs");
+            }
+        }
+    }
+}
+
+/// A repeated-key burst through the engine executes fewer batches than
+/// requests, and every batched result matches the per-request run for
+/// the same seed bit-for-bit.
+#[test]
+fn engine_burst_batches_and_matches_sequential() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = Arc::new(Context::new());
+    let cfg = EngineConfig {
+        batch_window: Duration::from_millis(250),
+        max_batch: 64,
+    };
+    let engine = Engine::with_config(ctx.clone(), &dir, cfg).unwrap();
+    let client = engine.client();
+    let n = 12u64;
+    let tickets: Vec<_> = (0..n)
+        .map(|seed| {
+            client
+                .submit(
+                    SubmitRequest::new("waxpby", 32, 65536)
+                        .synth(seed)
+                        .variant(PlanChoice::Fused),
+                )
+                .unwrap()
+        })
+        .collect();
+    let results: Vec<_> = tickets
+        .into_iter()
+        .map(|t| t.wait().expect("burst request"))
+        .collect();
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.requests, n);
+    assert_eq!(metrics.failures, 0);
+    assert_eq!(metrics.batch_size_sum, n);
+    assert!(
+        metrics.batches < n,
+        "a same-key burst must group: {} batches for {n} requests",
+        metrics.batches
+    );
+    assert!(metrics.max_batch_size >= 2);
+    assert!(metrics.mean_batch_size() > 1.0);
+
+    let coord = Coordinator::new(ctx, &dir).unwrap();
+    for (seed, res) in results.iter().enumerate() {
+        let inputs = synth_inputs(coord.runtime(), "waxpby", "fused", 32, 65536, seed as u64);
+        let seq = coord
+            .runtime()
+            .run_seq("waxpby", "fused", 32, 65536, &inputs)
+            .unwrap();
+        for (name, tb) in &res.env {
+            let ts = &seq.env[name];
+            for (x, y) in tb.data.iter().zip(&ts.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "seed {seed}: tensor '{name}' differs");
+            }
+        }
+    }
+}
+
+/// `run_seq_batch` on a size with no artifacts fails every slot with the
+/// catalog-listing error, instead of failing the call shape itself.
+/// Runs without real artifacts (stub manifest).
+#[test]
+fn batch_of_missing_size_fails_per_slot() {
+    let dir = std::env::temp_dir().join(format!("fusebla_batchmiss_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "artifact waxpby.fused.m32n65536.s0\n file waxpby.hlo.txt\n seq waxpby\n variant fused\n stage 0\n in x:f32[65536]\n in y:f32[65536]\n out w:f32[65536]\n m 32\n n 65536\nend\n",
+    )
+    .unwrap();
+    let coord = Coordinator::new(Arc::new(Context::new()), &dir).unwrap();
+    let inputs = vec![Default::default(), Default::default()];
+    let results = coord.runtime().run_seq_batch("waxpby", "fused", 32, 1024, inputs);
+    assert_eq!(results.len(), 2);
+    for r in results {
+        let err = r.err().expect("must fail").to_string();
+        assert!(err.contains("no artifacts"), "{err}");
+        assert!(err.contains("65536"), "should list catalog sizes: {err}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
