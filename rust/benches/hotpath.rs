@@ -3,19 +3,33 @@
 //! repeated runs. Criterion is unreachable offline; the in-repo harness
 //! (`util::stats`) provides warmup + sampling.
 //!
+//! The dispatch section compares the seed per-request path (linear
+//! manifest scan + `BTreeMap<String, Tensor>` environments) against the
+//! resolve-once path (indexed manifest + slot-interned environments +
+//! read-locked plan-cache probe) on a synthetic catalog, so the
+//! host-side overhead win is measured even without built artifacts.
+//! Results merge into `BENCH_hotpath.json` (see
+//! `bench_support::report`).
+//!
 //! `cargo bench --bench hotpath`
 
 use fusebla::autotune;
+use fusebla::bench_support::report::{update_bench_json, BENCH_JSON};
 use fusebla::coordinator::Context;
 use fusebla::fusion::{self, ImplAxes};
 use fusebla::graph::DepGraph;
 use fusebla::ir::elem::ProblemSize;
 use fusebla::predict::{predict_seq, RoutineDb};
+use fusebla::runtime::{SlotPlan, Tensor};
 use fusebla::script::compile_script;
 use fusebla::sequences;
 use fusebla::sim::{simulate_seq, DeviceModel};
+use fusebla::util::manifest::{ArtifactEntry, Manifest};
 use fusebla::util::stats::{bench, black_box};
-use fusebla::util::{Summary, Table};
+use fusebla::util::{Json, Summary, Table};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::{Arc, RwLock};
 
 fn report(t: &mut Table, name: &str, samples: &[f64]) {
     let s = Summary::from_samples(samples);
@@ -27,6 +41,167 @@ fn report(t: &mut Table, name: &str, samples: &[f64]) {
         format!("{:.1}", s.stddev * 1e6),
         s.n.to_string(),
     ]);
+}
+
+/// Synthetic catalog at a realistic scale: `n_seqs` sequences × 2
+/// variants × `n_sizes` sizes × 3 chained stages. Stage tensors are
+/// small vectors — the bench measures dispatch bookkeeping, not memcpy.
+fn synthetic_manifest(n_seqs: usize, n_sizes: usize) -> Manifest {
+    let mut text = String::new();
+    for s in 0..n_seqs {
+        for variant in ["fused", "cublas"] {
+            for k in 0..n_sizes {
+                let (m, n) = (32, 1024 << k);
+                for (stage, (ins, outs)) in [
+                    ("in x:f32[16]\n in y:f32[16]\n", "out t0:f32[16]\n"),
+                    ("in t0:f32[16]\n in y:f32[16]\n", "out t1:f32[16]\n"),
+                    ("in t1:f32[16]\n in x:f32[16]\n", "out w:f32[16]\n"),
+                ]
+                .iter()
+                .enumerate()
+                {
+                    text.push_str(&format!(
+                        "artifact seq{s}.{variant}.m{m}n{n}.s{stage}\n file f.hlo.txt\n seq seq{s}\n variant {variant}\n stage {stage}\n {ins} {outs} m {m}\n n {n}\nend\n"
+                    ));
+                }
+            }
+        }
+    }
+    Manifest::parse(&text, Path::new(".")).expect("synthetic manifest")
+}
+
+/// The seed per-request stage lookup: a full catalog scan with
+/// per-entry attr `to_string()` comparisons and entry clones (kept here
+/// as the reference the indexed path is measured against).
+fn stages_linear(man: &Manifest, seq: &str, variant: &str, m: usize, n: usize) -> Vec<ArtifactEntry> {
+    let mut v: Vec<ArtifactEntry> = man
+        .entries
+        .values()
+        .filter(|e| {
+            e.seq == seq
+                && e.variant == variant
+                && e.attrs.get("m").map(|s| s.as_str()) == Some(m.to_string().as_str())
+                && e.attrs.get("n").map(|s| s.as_str()) == Some(n.to_string().as_str())
+        })
+        .cloned()
+        .collect();
+    v.sort_by_key(|e| e.stage);
+    v
+}
+
+/// "Execute" one request the seed way: scan the manifest, clone the
+/// input map, then per stage look up every input by name and insert
+/// every output by name. The kernel itself is simulated by an output
+/// allocation — identical work in both paths.
+fn dispatch_seed(
+    man: &Manifest,
+    seq: &str,
+    variant: &str,
+    m: usize,
+    n: usize,
+    inputs: &BTreeMap<String, Tensor>,
+) -> BTreeMap<String, Tensor> {
+    let stages = stages_linear(man, seq, variant, m, n);
+    let mut env = inputs.clone();
+    for entry in &stages {
+        for spec in &entry.inputs {
+            let t = env.get(&spec.name).expect("input bound");
+            assert_eq!(t.dims, spec.dims);
+            black_box(&t.data);
+        }
+        for spec in &entry.outputs {
+            let len: usize = spec.dims.iter().product::<usize>().max(1);
+            env.insert(spec.name.clone(), Tensor::new(spec.dims.clone(), vec![0.0; len]));
+        }
+    }
+    env
+}
+
+type PlanCache = RwLock<HashMap<(String, String, usize, usize), Arc<SlotPlan>>>;
+
+/// "Execute" one request the resolve-once way: one read-locked
+/// plan-cache probe (the only shared state on the hot path), then slot
+/// binds/reads/writes and a single materialize at the boundary.
+fn dispatch_resolved(
+    cache: &PlanCache,
+    seq: &str,
+    variant: &str,
+    m: usize,
+    n: usize,
+    inputs: &BTreeMap<String, Tensor>,
+) -> BTreeMap<String, Tensor> {
+    let key = (seq.to_string(), variant.to_string(), m, n);
+    let plan = cache.read().unwrap().get(&key).expect("resolved").clone();
+    let mut env = plan.bind(inputs);
+    for st in plan.stages() {
+        for (spec, &slot) in st.entry.inputs.iter().zip(st.input_slots()) {
+            let t = env.get(slot).expect("input bound");
+            assert_eq!(t.dims, spec.dims);
+            black_box(&t.data);
+        }
+        for (spec, &slot) in st.entry.outputs.iter().zip(st.output_slots()) {
+            let len: usize = spec.dims.iter().product::<usize>().max(1);
+            env.set(slot, Tensor::new(spec.dims.clone(), vec![0.0; len]));
+        }
+    }
+    plan.materialize(env)
+}
+
+fn dispatch_section() -> Json {
+    let man = synthetic_manifest(8, 4);
+    let (seq, variant, m, n) = ("seq4", "fused", 32, 4096);
+    let inputs: BTreeMap<String, Tensor> = [
+        ("x".to_string(), Tensor::vector(vec![1.0; 16])),
+        ("y".to_string(), Tensor::vector(vec![2.0; 16])),
+    ]
+    .into_iter()
+    .collect();
+
+    // resolve once (what Runtime::resolve does on a miss), then serve
+    // every request from the cache
+    let cache: PlanCache = RwLock::new(HashMap::new());
+    let entries = stages_linear(&man, seq, variant, m, n);
+    let n_stages = entries.len();
+    cache.write().unwrap().insert(
+        (seq.to_string(), variant.to_string(), m, n),
+        Arc::new(SlotPlan::build(seq, variant, m, n, entries)),
+    );
+
+    // both paths must produce the same env before either is timed
+    let a = dispatch_seed(&man, seq, variant, m, n, &inputs);
+    let b = dispatch_resolved(&cache, seq, variant, m, n, &inputs);
+    assert_eq!(a, b, "dispatch paths disagree");
+
+    let seed = Summary::from_samples(&bench(200, 3000, || {
+        black_box(dispatch_seed(&man, seq, variant, m, n, &inputs))
+    }));
+    let resolved = Summary::from_samples(&bench(200, 3000, || {
+        black_box(dispatch_resolved(&cache, seq, variant, m, n, &inputs))
+    }));
+    let speedup = seed.median / resolved.median;
+    println!(
+        "dispatch path ({} entries, {} stages/request): seed {:.2} µs, resolved {:.2} µs → {:.1}x ({:.0} vs {:.0} req/s)",
+        man.entries.len(),
+        n_stages,
+        seed.median * 1e6,
+        resolved.median * 1e6,
+        speedup,
+        1.0 / seed.median,
+        1.0 / resolved.median,
+    );
+    Json::Obj(vec![
+        ("catalog_entries".into(), Json::num(man.entries.len() as f64)),
+        ("stages_per_request".into(), Json::num(n_stages as f64)),
+        ("dispatch_us_seed_median".into(), Json::num(seed.median * 1e6)),
+        ("dispatch_us_resolved_median".into(), Json::num(resolved.median * 1e6)),
+        ("dispatch_speedup".into(), Json::num(speedup)),
+        ("requests_per_sec_seed".into(), Json::num(1.0 / seed.median)),
+        ("requests_per_sec_resolved".into(), Json::num(1.0 / resolved.median)),
+        (
+            "per_stage_dispatch_overhead_us".into(),
+            Json::num(resolved.median * 1e6 / n_stages.max(1) as f64),
+        ),
+    ])
 }
 
 fn main() {
@@ -114,11 +289,13 @@ fn main() {
     );
     t.print();
 
+    // per-request dispatch overhead: seed path vs resolve-once path
+    let mut section = dispatch_section();
+
     // runtime dispatch overhead (artifact execution minus kernel work):
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.txt").exists() {
         use fusebla::coordinator::{synth_inputs, Coordinator};
-        use std::sync::Arc;
         let coord = Coordinator::new(Arc::new(Context::new()), dir).unwrap();
         let (m, n) = coord.runtime().sizes_of("sscal", "fused")[0];
         coord.runtime().warmup("sscal", "fused", m, n).unwrap();
@@ -137,7 +314,13 @@ fn main() {
             s.median * 1e6,
             2 * n * 4 / 1024
         );
+        section.set("runtime_dispatch_us_sscal", Json::num(s.median * 1e6));
     } else {
         println!("(artifacts not built: skipping runtime dispatch bench)");
+    }
+
+    match update_bench_json(Path::new(BENCH_JSON), "hotpath", section) {
+        Ok(()) => println!("wrote {BENCH_JSON} (section 'hotpath')"),
+        Err(e) => eprintln!("could not write {BENCH_JSON}: {e}"),
     }
 }

@@ -1,14 +1,22 @@
 //! Serve-path throughput: the drain-and-group scheduler on a
 //! repeated-key burst vs request-at-a-time submission (same engine,
 //! batching defeated by waiting out each ticket). The delta is the
-//! dispatch amortization batching buys — per-batch manifest scans and
-//! executable-cache lookups instead of per-request.
+//! dispatch amortization batching buys — and with resolve-once plans,
+//! both modes serve repeat keys from the runtime's resolve cache (one
+//! read-locked probe per dispatch, no manifest scans, no per-stage
+//! executable lookups).
+//!
+//! Results merge into `BENCH_hotpath.json` (section
+//! `serve_throughput`) so the requests/sec trajectory is tracked
+//! across PRs.
 //!
 //! `make artifacts && cargo bench --bench serve_throughput`
 
+use fusebla::bench_support::report::{update_bench_json, BENCH_JSON};
 use fusebla::coordinator::Context;
 use fusebla::util::fmt_duration;
 use fusebla::util::manifest::Manifest;
+use fusebla::util::Json;
 use fusebla::{Engine, EngineConfig, SubmitRequest};
 use std::path::Path;
 use std::sync::Arc;
@@ -25,19 +33,21 @@ fn main() {
     // size discovery from the manifest alone; the runtime lives on the
     // engine worker
     let manifest = Manifest::load(&dir.join("manifest.txt")).expect("manifest");
-    let entry = manifest
-        .entries
-        .values()
-        .find(|e| e.seq == "waxpby" && e.variant == "fused" && e.stage == 0)
-        .expect("waxpby artifacts");
-    let m: usize = entry.attrs["m"].parse().unwrap();
-    let n: usize = entry.attrs["n"].parse().unwrap();
+    let Some(&(m, n)) = manifest.sizes("waxpby", "fused").first() else {
+        println!("(no waxpby artifacts: skipping serve throughput bench)");
+        return;
+    };
 
     let ctx = Arc::new(Context::new());
     println!("serve throughput: {N_REQUESTS} × waxpby @ m{m} n{n}\n");
-    for (label, window_ms, burst) in [
-        ("request-at-a-time (wait each ticket)", 0u64, false),
-        ("batched burst (10 ms window)       ", 10, true),
+    let mut section = Json::Obj(vec![(
+        "requests".into(),
+        Json::num(N_REQUESTS as f64),
+    )]);
+    let mut req_per_sec = Vec::new();
+    for (label, key, window_ms, burst) in [
+        ("request-at-a-time (wait each ticket)", "request_at_a_time", 0u64, false),
+        ("batched burst (10 ms window)       ", "batched_burst", 10, true),
     ] {
         let cfg = EngineConfig {
             batch_window: Duration::from_millis(window_ms),
@@ -45,8 +55,8 @@ fn main() {
         };
         let engine = Engine::with_config(ctx.clone(), dir, cfg).expect("engine");
         let client = engine.client();
-        // warmup: compile the executables once so both modes time
-        // dispatch, not XLA compilation
+        // warmup: resolve the plan (compile the executables) once so
+        // both modes time dispatch, not XLA compilation
         client
             .submit(SubmitRequest::new("waxpby", m, n).synth(u64::MAX))
             .expect("submit")
@@ -75,14 +85,41 @@ fn main() {
         }
         let dt = t0.elapsed().as_secs_f64();
         let metrics = engine.shutdown();
+        let rps = N_REQUESTS as f64 / dt;
+        req_per_sec.push(rps);
         println!(
-            "{label}: {} in {} → {:.1} req/s | {} batch(es), mean size {:.1}, max {}",
+            "{label}: {} in {} → {:.1} req/s | {} batch(es), mean size {:.1}, max {} | resolve {} hit(s) / {} miss(es)",
             N_REQUESTS,
             fmt_duration(dt),
-            N_REQUESTS as f64 / dt,
+            rps,
             metrics.batches,
             metrics.mean_batch_size(),
-            metrics.max_batch_size
+            metrics.max_batch_size,
+            metrics.resolve_hits,
+            metrics.resolve_misses,
         );
+        section.set(
+            key,
+            Json::Obj(vec![
+                ("req_per_sec".into(), Json::num(rps)),
+                ("seconds".into(), Json::num(dt)),
+                ("batches".into(), Json::num(metrics.batches as f64)),
+                ("mean_batch_size".into(), Json::num(metrics.mean_batch_size())),
+                ("max_batch_size".into(), Json::num(metrics.max_batch_size as f64)),
+                ("resolve_hits".into(), Json::num(metrics.resolve_hits as f64)),
+                ("resolve_misses".into(), Json::num(metrics.resolve_misses as f64)),
+                (
+                    "executable_compiles".into(),
+                    Json::num(metrics.executable_compiles as f64),
+                ),
+            ]),
+        );
+    }
+    if let [seq_rps, batch_rps] = req_per_sec[..] {
+        section.set("batched_speedup", Json::num(batch_rps / seq_rps));
+    }
+    match update_bench_json(Path::new(BENCH_JSON), "serve_throughput", section) {
+        Ok(()) => println!("\nwrote {BENCH_JSON} (section 'serve_throughput')"),
+        Err(e) => eprintln!("could not write {BENCH_JSON}: {e}"),
     }
 }

@@ -1,5 +1,9 @@
 //! Shared harness regenerating every table and figure of the paper's
 //! evaluation section. Used by `cargo bench` targets and the CLI.
+//! [`report`] adds the machine-readable side: benches merge their
+//! results into `BENCH_hotpath.json` via [`report::update_bench_json`].
+
+pub mod report;
 
 use crate::autotune::{self, SearchReport};
 use crate::coordinator::Context;

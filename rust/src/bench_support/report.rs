@@ -1,0 +1,69 @@
+//! Machine-readable bench output.
+//!
+//! Each bench target merges its own section into one JSON report file
+//! (`BENCH_hotpath.json` at the crate root), so re-running a single
+//! bench refreshes its numbers without clobbering the others and the
+//! perf trajectory stays diffable across PRs:
+//!
+//! ```json
+//! {
+//!   "hotpath": { "dispatch_speedup": 9.3, ... },
+//!   "serve_throughput": { "req_per_sec_batched": 41000.0, ... }
+//! }
+//! ```
+
+use crate::util::Json;
+use std::path::Path;
+
+/// Default report file, relative to the bench working directory (the
+/// crate root under `cargo bench`).
+pub const BENCH_JSON: &str = "BENCH_hotpath.json";
+
+/// Merge `section` into the JSON report at `path`: existing sections
+/// are preserved, the named one is replaced. A missing or unparseable
+/// file starts a fresh report.
+pub fn update_bench_json(path: &Path, section: &str, value: Json) -> std::io::Result<()> {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .unwrap_or_else(|| Json::Obj(Vec::new()));
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(Vec::new());
+    }
+    root.set(section, value);
+    std::fs::write(path, root.to_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("fusebla_report_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn sections_merge_without_clobbering() {
+        let path = scratch("merge.json");
+        let _ = std::fs::remove_file(&path);
+        update_bench_json(&path, "a", Json::Obj(vec![("x".into(), Json::num(1.0))])).unwrap();
+        update_bench_json(&path, "b", Json::Obj(vec![("y".into(), Json::num(2.0))])).unwrap();
+        update_bench_json(&path, "a", Json::Obj(vec![("x".into(), Json::num(3.0))])).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("a").unwrap().get("x").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(root.get("b").unwrap().get("y").and_then(Json::as_f64), Some(2.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_report_starts_fresh() {
+        let path = scratch("corrupt.json");
+        std::fs::write(&path, "not json {{{").unwrap();
+        update_bench_json(&path, "a", Json::num(1.0)).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("a").and_then(Json::as_f64), Some(1.0));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -14,6 +14,11 @@
 //! dispatches ([`Batch::m`]/[`Batch::n`] carry the raw size); in
 //! practice catalog sizes are tile multiples and the two granularities
 //! coincide.
+//!
+//! Execution-side, each batch maps onto one `Runtime::resolve` of
+//! `(seq, variant, raw size)` — the runtime's resolve cache pins the
+//! stage list, slot plan and executables per key, so grouping here and
+//! resolving there share the same key discipline.
 
 use super::{PlanChoice, Request};
 use crate::ir::elem::ProblemSize;

@@ -339,16 +339,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mix = ["waxpby", "vadd", "sscal", "axpydot"];
     let mut prepared = Vec::new();
     for seq in mix {
-        let Some(entry) = manifest
-            .entries
-            .values()
-            .find(|e| e.seq == seq && e.variant == "fused" && e.stage == 0)
-        else {
+        let Some(&(m, n)) = manifest.sizes(seq, "fused").first() else {
             eprintln!("serve-demo: missing artifacts for {seq}");
             return 1;
         };
-        let m: usize = entry.attrs["m"].parse().unwrap();
-        let n: usize = entry.attrs["n"].parse().unwrap();
         prepared.push((seq, m, n));
     }
     let cfg = EngineConfig {
@@ -398,6 +392,13 @@ fn cmd_serve(args: &[String]) -> i32 {
     println!(
         "plan cache: {} hit(s) / {} miss(es) / {} eviction(s)",
         metrics.plan_cache_hits, metrics.plan_cache_misses, metrics.plan_cache_evictions
+    );
+    println!(
+        "resolve cache: {} hit(s) / {} miss(es); executables: {} compile(s) / {} cache hit(s)",
+        metrics.resolve_hits,
+        metrics.resolve_misses,
+        metrics.executable_compiles,
+        metrics.executable_cache_hits
     );
     i32::from(ok != n_requests)
 }

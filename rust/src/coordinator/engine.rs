@@ -332,6 +332,11 @@ mod tests {
         assert_eq!(m.failures, 9, "stub backend fails every execution");
         // two distinct batch keys → exactly two plan-cache misses, ever
         assert_eq!(m.plan_cache_misses, 2);
+        // stub backend: every batch's resolve fails at compile; failed
+        // resolves are never cached and never pin an executable
+        assert_eq!(m.resolve_misses, m.batches);
+        assert_eq!(m.resolve_hits, 0);
+        assert_eq!(m.executable_compiles, 0);
         assert!(m.batches >= 2, "at least one batch per distinct key");
         assert!(
             m.batches < 9,

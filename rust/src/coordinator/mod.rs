@@ -13,9 +13,13 @@
 //! them by `(seq, tile-padded size, device, resolved plan)` — see
 //! [`batch`]. That key is deliberately the same shape as [`PlanKey`], so
 //! one `choose_plan` serves a whole group, and the group executes as one
-//! multi-input dispatch through `Runtime::run_seq_batch`, which resolves
-//! the artifact stages and executables once per batch instead of once
-//! per request. Per-batch counters surface through [`Metrics`].
+//! multi-input dispatch over a `Runtime::resolve`d plan: the runtime's
+//! resolve cache maps the batch key to a pinned `ResolvedSeq` (indexed
+//! stage list, slot-interned environments, pinned executables), so a
+//! repeat key costs one read-locked probe and the dispatch itself
+//! touches no manifest scan, no string-keyed env map and no lock.
+//! Per-batch counters — including the resolve/compile hit-miss counts
+//! mirrored from the runtime — surface through [`Metrics`].
 //!
 //! The plan cache is what keeps the serve path off the compiler: a cold
 //! `(seq, m, n)` runs the pruned planner once (`crate::planner`); every
@@ -183,6 +187,18 @@ pub struct Metrics {
     pub max_batch_size: u64,
     /// Sum of executed batch sizes (numerator of the mean).
     pub batch_size_sum: u64,
+    /// Runtime resolve-cache hits: dispatches that reused a pinned
+    /// `ResolvedSeq` (no manifest lookup, no executable-cache probe).
+    /// Mirrored from [`crate::runtime::RuntimeCounters`] on every batch
+    /// and metrics snapshot.
+    pub resolve_hits: u64,
+    /// Runtime resolve-cache misses (plans built, or failed attempts —
+    /// failures are not cached).
+    pub resolve_misses: u64,
+    /// Executables compiled fresh by the runtime.
+    pub executable_compiles: u64,
+    /// Executable-cache hits inside the runtime.
+    pub executable_cache_hits: u64,
     /// Per-sequence (executed-request count, batch-attributed seconds).
     /// Requests rejected before dispatch (e.g. plan-resolution errors)
     /// appear only in `requests`/`failures`.
@@ -385,6 +401,16 @@ impl Coordinator {
         self.metrics.plan_cache_evictions = self.plan_cache.evictions;
     }
 
+    /// Mirror the runtime's resolve/compile counters into the metrics
+    /// snapshot (the runtime's atomics are the single source of truth).
+    fn sync_runtime_metrics(&mut self) {
+        let c = self.runtime.counters();
+        self.metrics.resolve_hits = c.resolve_hits;
+        self.metrics.resolve_misses = c.resolve_misses;
+        self.metrics.executable_compiles = c.executable_compiles;
+        self.metrics.executable_cache_hits = c.executable_cache_hits;
+    }
+
     /// Execute one grouped batch as a multi-input dispatch, record the
     /// per-batch metrics, and reply to every member. Consumes the
     /// batch: explicit input tensors move into the runtime without a
@@ -409,7 +435,18 @@ impl Coordinator {
             replies.push(r.reply);
         }
         let t0 = Instant::now();
-        let results = self.runtime.run_seq_batch(&key.seq, variant, m, n, inputs);
+        // Resolve once per batch key: the runtime's resolve cache makes
+        // a repeat key one read-locked probe, and the batch then runs
+        // entirely on pinned executables and slot-indexed environments.
+        let results = match self.runtime.resolve(&key.seq, variant, m, n) {
+            Ok(plan) => self.runtime.run_resolved_batch(&plan, inputs),
+            Err(e) => {
+                // A missing size or corrupt artifact fails the whole
+                // batch — every request would have hit the same artifact.
+                let msg = format!("{e:#}");
+                inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect()
+            }
+        };
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.batches += 1;
         self.metrics.batch_size_sum += size;
@@ -423,6 +460,7 @@ impl Coordinator {
         e.0 += size;
         e.1 += dt;
         self.metrics.failures += results.iter().filter(|r| r.is_err()).count() as u64;
+        self.sync_runtime_metrics();
         for (reply, res) in replies.iter().zip(results) {
             let _ = reply.send(res);
         }
@@ -454,6 +492,7 @@ impl Coordinator {
         match c {
             Control::Shutdown => true,
             Control::Metrics(reply) => {
+                self.sync_runtime_metrics();
                 let _ = reply.send(self.metrics.clone());
                 false
             }
@@ -514,6 +553,7 @@ impl Coordinator {
             }
             self.run_turn(queue);
         }
+        self.sync_runtime_metrics();
         self.metrics
     }
 
@@ -549,19 +589,7 @@ pub fn synth_inputs(
     let mut produced: Vec<String> = vec![];
     let mut inputs = BTreeMap::new();
     let mut rng = Prng::new(seed);
-    let mut entries: Vec<_> = runtime
-        .manifest
-        .entries
-        .values()
-        .filter(|e| {
-            e.seq == seq
-                && e.variant == variant
-                && e.attrs.get("m").map(|s| s.as_str()) == Some(m.to_string().as_str())
-                && e.attrs.get("n").map(|s| s.as_str()) == Some(n.to_string().as_str())
-        })
-        .collect();
-    entries.sort_by_key(|e| e.stage);
-    for e in entries {
+    for e in runtime.manifest.stages(seq, variant, m, n) {
         for spec in &e.inputs {
             if !produced.contains(&spec.name) && !inputs.contains_key(&spec.name) {
                 let len: usize = spec.dims.iter().product::<usize>().max(1);

@@ -10,7 +10,9 @@
 //!   (the [`planner`] runs it memoized, pruned and in parallel on the
 //!   hot path), a calibrated GTX 480 timing model standing in for the
 //!   paper's testbed, and a PJRT runtime served through the batching
-//!   [`Engine`]/[`Client`] facade behind an LRU plan cache.
+//!   [`Engine`]/[`Client`] facade behind an LRU plan cache, executing
+//!   resolve-once plans (indexed manifest + slot-interned environments
+//!   + pinned executables — see [`runtime`]).
 //! * **L2 (python/compile)** — JAX definitions of each BLAS sequence.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (fused and
 //!   elementary) mirroring the paper's 32×32-tile scheme.

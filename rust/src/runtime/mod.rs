@@ -9,13 +9,41 @@
 //! Python is never on this path: artifacts are HLO text produced once by
 //! `make artifacts`; this module compiles them on first use and caches
 //! the executables.
+//!
+//! # The resolve-once hot path
+//!
+//! Serving short, memory-bound kernels makes host-side dispatch
+//! overhead proportionally huge (the paper's premise, inverted), so
+//! everything per-request is resolved exactly once per
+//! `(seq, variant, m, n)` key:
+//!
+//! * the indexed manifest ([`Manifest::stages`]) replaces every linear
+//!   catalog scan;
+//! * a [`SlotPlan`] interns the sequence's tensor names into integer
+//!   *slots*, so stage execution binds inputs/outputs through
+//!   `Vec<Option<Tensor>>` indices instead of `BTreeMap<String, _>`
+//!   lookups — the named `env` map is materialized exactly once, at the
+//!   [`RunResult`] boundary;
+//! * a [`ResolvedSeq`] pins the per-stage executables, and both the
+//!   executable cache and the resolve cache are read-mostly
+//!   (`RwLock` + per-key `Arc`, misses compiled outside the lock), so
+//!   cache hits never contend on a writer lock. Today the PJRT client
+//!   (and with it the whole `Runtime`) is `!Sync` and lives on the
+//!   engine's single worker thread, so nothing actually races yet; the
+//!   locking regime is what makes a multi-worker serve path safe to
+//!   add once a `Send`/`Sync` XLA backend replaces the offline stub.
+//!
+//! [`Runtime::counters`] exposes resolve/compile hit-miss counts for
+//! the engine's metrics and the cache tests.
 
 pub mod refcheck;
 
-use crate::util::manifest::{ArtifactEntry, Manifest};
+use crate::util::manifest::{ArtifactEntry, Manifest, TensorSpec};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 /// A host tensor (f32, row-major).
@@ -72,11 +100,247 @@ pub struct RunResult {
     pub variant: String,
 }
 
+/// One stage of a [`SlotPlan`]: the manifest entry plus its parameter
+/// names pre-resolved to slot indices (parallel to `entry.inputs` /
+/// `entry.outputs`).
+pub struct StageSlots {
+    pub entry: ArtifactEntry,
+    input_slots: Vec<usize>,
+    output_slots: Vec<usize>,
+}
+
+impl StageSlots {
+    /// Slot of each stage input, parallel to `entry.inputs`.
+    pub fn input_slots(&self) -> &[usize] {
+        &self.input_slots
+    }
+
+    /// Slot of each stage output, parallel to `entry.outputs`.
+    pub fn output_slots(&self) -> &[usize] {
+        &self.output_slots
+    }
+}
+
+/// The backend-free half of a resolved sequence: tensor names interned
+/// into dense slot indices (computed once), plus the per-stage slot
+/// bindings. Execution reads and writes a `Vec<Option<Tensor>>` by
+/// index; names only appear at the request boundary ([`SlotPlan::bind`]
+/// / [`SlotPlan::materialize`]).
+pub struct SlotPlan {
+    seq: String,
+    variant: String,
+    m: usize,
+    n: usize,
+    /// Slot index → tensor name (the interning table).
+    slot_names: Vec<String>,
+    /// Tensor name → slot, used only when binding a named input map.
+    slot_of: BTreeMap<String, usize>,
+    stages: Vec<StageSlots>,
+}
+
+impl SlotPlan {
+    /// Intern every tensor name of the ordered stage list. Slots are
+    /// assigned in first-appearance order (stage by stage, inputs
+    /// before outputs), so plan construction is deterministic.
+    pub fn build(
+        seq: &str,
+        variant: &str,
+        m: usize,
+        n: usize,
+        entries: Vec<ArtifactEntry>,
+    ) -> SlotPlan {
+        fn intern(
+            specs: &[TensorSpec],
+            slot_names: &mut Vec<String>,
+            slot_of: &mut BTreeMap<String, usize>,
+        ) -> Vec<usize> {
+            specs
+                .iter()
+                .map(|s| match slot_of.get(&s.name) {
+                    Some(&i) => i,
+                    None => {
+                        let i = slot_names.len();
+                        slot_names.push(s.name.clone());
+                        slot_of.insert(s.name.clone(), i);
+                        i
+                    }
+                })
+                .collect()
+        }
+        let mut slot_names: Vec<String> = Vec::new();
+        let mut slot_of: BTreeMap<String, usize> = BTreeMap::new();
+        let mut stages = Vec::with_capacity(entries.len());
+        for entry in entries {
+            let input_slots = intern(&entry.inputs, &mut slot_names, &mut slot_of);
+            let output_slots = intern(&entry.outputs, &mut slot_names, &mut slot_of);
+            stages.push(StageSlots {
+                entry,
+                input_slots,
+                output_slots,
+            });
+        }
+        SlotPlan {
+            seq: seq.to_string(),
+            variant: variant.to_string(),
+            m,
+            n,
+            slot_names,
+            slot_of,
+            stages,
+        }
+    }
+
+    pub fn seq(&self) -> &str {
+        &self.seq
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    pub fn size(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    pub fn stages(&self) -> &[StageSlots] {
+        &self.stages
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slot_names.len()
+    }
+
+    /// Bind a named input map into a slot environment, cloning the
+    /// tensors. Names with no slot (inputs no stage touches) are kept
+    /// aside and passed through to the result env untouched, exactly as
+    /// the map-based path carried them.
+    pub fn bind(&self, inputs: &BTreeMap<String, Tensor>) -> SlotEnv {
+        let mut env = self.empty_env();
+        for (name, t) in inputs {
+            match self.slot_of.get(name) {
+                Some(&i) => env.slots[i] = Some(t.clone()),
+                None => env.extra.push((name.clone(), t.clone())),
+            }
+        }
+        env
+    }
+
+    /// [`SlotPlan::bind`] without the clone: the input map is consumed
+    /// and its tensors move into the environment.
+    pub fn bind_owned(&self, inputs: BTreeMap<String, Tensor>) -> SlotEnv {
+        let mut env = self.empty_env();
+        for (name, t) in inputs {
+            match self.slot_of.get(&name) {
+                Some(&i) => env.slots[i] = Some(t),
+                None => env.extra.push((name, t)),
+            }
+        }
+        env
+    }
+
+    fn empty_env(&self) -> SlotEnv {
+        SlotEnv {
+            slots: vec![None; self.slot_names.len()],
+            extra: Vec::new(),
+        }
+    }
+
+    /// Materialize the named env map — called exactly once per request,
+    /// at the [`RunResult`] boundary. Inputs, intermediates and outputs
+    /// all appear, matching the map-based execution path bit-for-bit.
+    pub fn materialize(&self, env: SlotEnv) -> BTreeMap<String, Tensor> {
+        let mut out = BTreeMap::new();
+        for (name, slot) in self.slot_names.iter().zip(env.slots) {
+            if let Some(t) = slot {
+                out.insert(name.clone(), t);
+            }
+        }
+        for (name, t) in env.extra {
+            out.insert(name, t);
+        }
+        out
+    }
+}
+
+/// A request's tensor environment, indexed by plan slot instead of
+/// name. Lives from [`SlotPlan::bind`] to [`SlotPlan::materialize`].
+pub struct SlotEnv {
+    slots: Vec<Option<Tensor>>,
+    /// Input tensors whose names no stage reads or writes; carried
+    /// through to the materialized env.
+    extra: Vec<(String, Tensor)>,
+}
+
+impl SlotEnv {
+    pub fn get(&self, slot: usize) -> Option<&Tensor> {
+        self.slots[slot].as_ref()
+    }
+
+    pub fn set(&mut self, slot: usize, t: Tensor) {
+        self.slots[slot] = Some(t);
+    }
+}
+
+/// A fully resolved execution plan: the slot plan plus the pinned
+/// per-stage executables. Once a request holds one of these (behind an
+/// `Arc` from the resolve cache), executing it touches no lock, no
+/// catalog scan and no string-keyed map.
+pub struct ResolvedSeq {
+    plan: SlotPlan,
+    /// Pinned executables, parallel to `plan.stages()`.
+    exes: Vec<Arc<xla::PjRtLoadedExecutable>>,
+}
+
+impl ResolvedSeq {
+    pub fn plan(&self) -> &SlotPlan {
+        &self.plan
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.plan.stage_count()
+    }
+}
+
+/// Point-in-time snapshot of the runtime's hot-path counters (all
+/// maintained with relaxed atomics — cheap enough for the hot path).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RuntimeCounters {
+    /// Executables compiled fresh (executable-cache misses that reached
+    /// the compiler successfully).
+    pub executable_compiles: u64,
+    /// Executable-cache hits (read-lock only, no compilation).
+    pub executable_cache_hits: u64,
+    /// Resolve-cache hits: requests that reused a pinned
+    /// [`ResolvedSeq`].
+    pub resolve_hits: u64,
+    /// Resolve-cache misses: plans built (or attempted — failed
+    /// resolves are not cached and count a miss each time).
+    pub resolve_misses: u64,
+}
+
+#[derive(Default)]
+struct RuntimeStats {
+    executable_compiles: AtomicU64,
+    executable_cache_hits: AtomicU64,
+    resolve_hits: AtomicU64,
+    resolve_misses: AtomicU64,
+}
+
 /// The PJRT-backed executor.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Artifact key → compiled executable. Read-mostly: hits take the
+    /// read lock only; misses compile *outside* the lock and insert
+    /// after (a concurrent duplicate compile keeps the first insert).
+    exe_cache: RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// (seq, variant, m, n) → resolved plan, same read-mostly regime.
+    plan_cache: RwLock<HashMap<(String, String, usize, usize), Arc<ResolvedSeq>>>,
+    stats: RuntimeStats,
 }
 
 impl Runtime {
@@ -89,7 +353,9 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: std::sync::Mutex::new(BTreeMap::new()),
+            exe_cache: RwLock::new(HashMap::new()),
+            plan_cache: RwLock::new(HashMap::new()),
+            stats: RuntimeStats::default(),
         })
     }
 
@@ -97,9 +363,21 @@ impl Runtime {
         self.client.platform_name()
     }
 
+    /// Snapshot the hot-path counters.
+    pub fn counters(&self) -> RuntimeCounters {
+        RuntimeCounters {
+            executable_compiles: self.stats.executable_compiles.load(Ordering::Relaxed),
+            executable_cache_hits: self.stats.executable_cache_hits.load(Ordering::Relaxed),
+            resolve_hits: self.stats.resolve_hits.load(Ordering::Relaxed),
+            resolve_misses: self.stats.resolve_misses.load(Ordering::Relaxed),
+        }
+    }
+
     /// Compile (or fetch from cache) the executable for an artifact key.
-    pub fn executable(&self, key: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(key) {
+    /// Hits take the read lock only; a miss compiles outside any lock.
+    pub fn executable(&self, key: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exe_cache.read().unwrap().get(key) {
+            self.stats.executable_cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(e.clone());
         }
         let entry = self
@@ -112,87 +390,85 @@ impl Runtime {
         )
         .with_context(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
+        let exe = Arc::new(
             self.client
                 .compile(&comp)
                 .with_context(|| format!("compiling {key}"))?,
         );
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key.to_string(), exe.clone());
-        Ok(exe)
+        self.stats.executable_compiles.fetch_add(1, Ordering::Relaxed);
+        // Two threads can race past the read lock and compile the same
+        // key; the first insert wins so every caller shares one Arc.
+        let mut cache = self.exe_cache.write().unwrap();
+        Ok(cache.entry(key.to_string()).or_insert(exe).clone())
     }
 
-    /// Pre-compile all stages of a (seq, variant, size) so timing runs
-    /// measure execution only.
-    pub fn warmup(&self, seq: &str, variant: &str, m: usize, n: usize) -> Result<usize> {
-        let stages = self.stages_of(seq, variant, m, n);
-        if stages.is_empty() {
-            bail!("no artifacts for {seq}.{variant} m{m} n{n}");
+    /// Resolve (or fetch from cache) the execution plan of a
+    /// `(seq, variant, m, n)` key: the indexed stage list, the interned
+    /// slot plan, and the pinned executables. Everything a request needs
+    /// beyond this is slot-indexed — repeat requests do one read-locked
+    /// map probe here and touch no other shared state.
+    pub fn resolve(
+        &self,
+        seq: &str,
+        variant: &str,
+        m: usize,
+        n: usize,
+    ) -> Result<Arc<ResolvedSeq>> {
+        let key = (seq.to_string(), variant.to_string(), m, n);
+        if let Some(r) = self.plan_cache.read().unwrap().get(&key) {
+            self.stats.resolve_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(r.clone());
         }
-        let keys: Vec<String> = stages.iter().map(|e| e.key.clone()).collect();
-        for key in &keys {
-            self.executable(key)?;
-        }
-        Ok(keys.len())
-    }
-
-    fn stages_of(&self, seq: &str, variant: &str, m: usize, n: usize) -> Vec<ArtifactEntry> {
-        let mut v: Vec<ArtifactEntry> = self
+        self.stats.resolve_misses.fetch_add(1, Ordering::Relaxed);
+        // Build outside the lock: indexed stage lookup, slot interning,
+        // then compiling/pinning every stage executable. Failures are
+        // not cached — a rebuilt catalog can succeed on retry.
+        let entries: Vec<ArtifactEntry> = self
             .manifest
-            .entries
-            .values()
-            .filter(|e| {
-                e.seq == seq
-                    && e.variant == variant
-                    && e.attrs.get("m").map(|s| s.as_str()) == Some(m.to_string().as_str())
-                    && e.attrs.get("n").map(|s| s.as_str()) == Some(n.to_string().as_str())
-            })
+            .stages(seq, variant, m, n)
+            .into_iter()
             .cloned()
             .collect();
-        v.sort_by_key(|e| e.stage);
-        v
+        if entries.is_empty() {
+            bail!(
+                "no artifacts for {seq}.{variant} at m{m} n{n}; available: {:?}",
+                self.sizes_of(seq, variant)
+            );
+        }
+        let plan = SlotPlan::build(seq, variant, m, n, entries);
+        let mut exes = Vec::with_capacity(plan.stage_count());
+        for st in plan.stages() {
+            exes.push(self.executable(&st.entry.key)?);
+        }
+        let resolved = Arc::new(ResolvedSeq { plan, exes });
+        let mut cache = self.plan_cache.write().unwrap();
+        Ok(cache.entry(key).or_insert(resolved).clone())
+    }
+
+    /// Pre-resolve a (seq, variant, size) — compiling all its stages —
+    /// so timing runs measure execution only. Returns the stage count.
+    pub fn warmup(&self, seq: &str, variant: &str, m: usize, n: usize) -> Result<usize> {
+        Ok(self.resolve(seq, variant, m, n)?.stage_count())
     }
 
     /// Available (m, n) size points of a sequence variant in the catalog.
     pub fn sizes_of(&self, seq: &str, variant: &str) -> Vec<(usize, usize)> {
-        let mut sizes: Vec<(usize, usize)> = self
-            .manifest
-            .entries
-            .values()
-            .filter(|e| e.seq == seq && e.variant == variant && e.stage == 0)
-            .filter_map(|e| {
-                Some((
-                    e.attrs.get("m")?.parse().ok()?,
-                    e.attrs.get("n")?.parse().ok()?,
-                ))
-            })
-            .collect();
-        sizes.sort_unstable();
-        sizes.dedup();
-        sizes
+        self.manifest.sizes(seq, variant).to_vec()
     }
 
-    /// Execute one stage: bind named inputs from `env`, run, put named
-    /// outputs back into `env`.
-    pub fn run_stage(&self, entry: &ArtifactEntry, env: &mut BTreeMap<String, Tensor>) -> Result<f64> {
-        let exe = self.executable(&entry.key)?;
-        self.run_stage_exec(&exe, entry, env)
-    }
-
-    /// Stage execution against an already-resolved executable (the batch
-    /// path pins executables once per stage instead of once per request).
-    fn run_stage_exec(
+    /// Execute one stage against the slot environment: inputs are read
+    /// by slot index, outputs written by slot index — no name lookups.
+    fn run_stage_slots(
         &self,
+        st: &StageSlots,
         exe: &xla::PjRtLoadedExecutable,
-        entry: &ArtifactEntry,
-        env: &mut BTreeMap<String, Tensor>,
+        env: &mut SlotEnv,
     ) -> Result<f64> {
+        let entry = &st.entry;
         let mut literals = Vec::with_capacity(entry.inputs.len());
-        for spec in &entry.inputs {
+        for (spec, &slot) in entry.inputs.iter().zip(&st.input_slots) {
             let t = env
-                .get(&spec.name)
+                .get(slot)
                 .ok_or_else(|| anyhow!("stage {} needs '{}' (not in env)", entry.key, spec.name))?;
             if t.dims != spec.dims {
                 bail!(
@@ -220,14 +496,61 @@ impl Runtime {
                 entry.outputs.len()
             );
         }
-        for (spec, lit) in entry.outputs.iter().zip(outs) {
+        for ((spec, &slot), lit) in entry.outputs.iter().zip(&st.output_slots).zip(outs) {
             let data = lit.to_vec::<f32>()?;
-            env.insert(spec.name.clone(), Tensor::new(spec.dims.clone(), data));
+            env.set(slot, Tensor::new(spec.dims.clone(), data));
         }
         Ok(seconds)
     }
 
-    /// Execute all stages of a sequence variant.
+    /// Execute every stage of a resolved plan over a bound environment
+    /// and materialize the result. The per-request hot path: slot reads,
+    /// slot writes, pinned executables — no locks, scans or name maps.
+    fn run_bound(&self, r: &ResolvedSeq, mut env: SlotEnv) -> Result<RunResult> {
+        let mut stats = Vec::with_capacity(r.plan.stage_count());
+        let t0 = Instant::now();
+        for (st, exe) in r.plan.stages().iter().zip(&r.exes) {
+            let secs = self.run_stage_slots(st, exe, &mut env)?;
+            stats.push(StageStats {
+                key: st.entry.key.clone(),
+                seconds: secs,
+            });
+        }
+        Ok(RunResult {
+            env: r.plan.materialize(env),
+            stages: stats,
+            seconds: t0.elapsed().as_secs_f64(),
+            variant: r.plan.variant.clone(),
+        })
+    }
+
+    /// Execute a resolved plan on one named input set.
+    pub fn run_resolved(
+        &self,
+        r: &ResolvedSeq,
+        inputs: &BTreeMap<String, Tensor>,
+    ) -> Result<RunResult> {
+        self.run_bound(r, r.plan.bind(inputs))
+    }
+
+    /// Execute a resolved plan on several independent input sets in one
+    /// dispatch. Input sets are consumed (tensors move into the slot
+    /// environments, no copy); results are bit-identical to running
+    /// each set alone, and per-request failures (e.g. a missing input
+    /// tensor) fail only that slot.
+    pub fn run_resolved_batch(
+        &self,
+        r: &ResolvedSeq,
+        inputs: Vec<BTreeMap<String, Tensor>>,
+    ) -> Vec<Result<RunResult>> {
+        inputs
+            .into_iter()
+            .map(|input| self.run_bound(r, r.plan.bind_owned(input)))
+            .collect()
+    }
+
+    /// Execute all stages of a sequence variant (resolve-once: repeat
+    /// keys reuse the cached [`ResolvedSeq`]).
     pub fn run_seq(
         &self,
         seq: &str,
@@ -236,40 +559,15 @@ impl Runtime {
         n: usize,
         inputs: &BTreeMap<String, Tensor>,
     ) -> Result<RunResult> {
-        let stages = self.stages_of(seq, variant, m, n);
-        if stages.is_empty() {
-            bail!(
-                "no artifacts for {seq}.{variant} at m{m} n{n}; available: {:?}",
-                self.sizes_of(seq, variant)
-            );
-        }
-        let mut env = inputs.clone();
-        let mut stats = Vec::with_capacity(stages.len());
-        let t0 = Instant::now();
-        for entry in &stages {
-            let secs = self.run_stage(entry, &mut env)?;
-            stats.push(StageStats {
-                key: entry.key.clone(),
-                seconds: secs,
-            });
-        }
-        Ok(RunResult {
-            env,
-            stages: stats,
-            seconds: t0.elapsed().as_secs_f64(),
-            variant: variant.to_string(),
-        })
+        let r = self.resolve(seq, variant, m, n)?;
+        self.run_resolved(&r, inputs)
     }
 
     /// Execute all stages of a sequence variant for several independent
-    /// input sets in one dispatch. The manifest scan and the
-    /// executable-cache lookups happen once per *stage* instead of once
-    /// per request — that is the launch-overhead amortization batching
-    /// buys on this runtime. Input sets are consumed (each becomes its
-    /// request's environment in place, no copy); results are
-    /// bit-identical to calling [`Runtime::run_seq`] once per input
-    /// set, and per-request failures (e.g. a missing input tensor) fail
-    /// only that slot.
+    /// input sets in one dispatch — [`Runtime::resolve`] once, then
+    /// [`Runtime::run_resolved_batch`]. A failed resolve (missing size,
+    /// corrupt artifact) fails every slot with the same error: each
+    /// request would have hit the same artifact.
     pub fn run_seq_batch(
         &self,
         seq: &str,
@@ -278,47 +576,13 @@ impl Runtime {
         n: usize,
         inputs: Vec<BTreeMap<String, Tensor>>,
     ) -> Vec<Result<RunResult>> {
-        let stages = self.stages_of(seq, variant, m, n);
-        if stages.is_empty() {
-            let msg = format!(
-                "no artifacts for {seq}.{variant} at m{m} n{n}; available: {:?}",
-                self.sizes_of(seq, variant)
-            );
-            return inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect();
-        }
-        let mut exes = Vec::with_capacity(stages.len());
-        for entry in &stages {
-            match self.executable(&entry.key) {
-                Ok(e) => exes.push(e),
-                Err(e) => {
-                    // A missing/corrupt artifact fails the whole batch —
-                    // every request would have hit the same artifact.
-                    let msg = format!("{e:#}");
-                    return inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect();
-                }
+        match self.resolve(seq, variant, m, n) {
+            Ok(r) => self.run_resolved_batch(&r, inputs),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect()
             }
         }
-        inputs
-            .into_iter()
-            .map(|input| -> Result<RunResult> {
-                let mut env = input;
-                let mut stats = Vec::with_capacity(stages.len());
-                let t0 = Instant::now();
-                for (entry, exe) in stages.iter().zip(&exes) {
-                    let secs = self.run_stage_exec(exe, entry, &mut env)?;
-                    stats.push(StageStats {
-                        key: entry.key.clone(),
-                        seconds: secs,
-                    });
-                }
-                Ok(RunResult {
-                    env,
-                    stages: stats,
-                    seconds: t0.elapsed().as_secs_f64(),
-                    variant: variant.to_string(),
-                })
-            })
-            .collect()
     }
 }
 
@@ -338,7 +602,7 @@ mod tests {
 
     fn inputs_for(rt: &Runtime, seq: &str, variant: &str, m: usize, n: usize) -> BTreeMap<String, Tensor> {
         // free inputs = names consumed before production
-        let stages = rt.stages_of(seq, variant, m, n);
+        let stages = rt.manifest.stages(seq, variant, m, n);
         let mut produced: Vec<String> = vec![];
         let mut inputs = BTreeMap::new();
         let mut rng = Prng::new(42);
@@ -397,8 +661,40 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let n = rt.warmup("vadd", "fused", 32, 65536).unwrap();
         assert_eq!(n, 1);
-        let t0 = Instant::now();
+        let before = rt.counters();
+        assert_eq!(before.executable_compiles, 1, "warmup compiles the one stage");
         let _ = rt.executable("vadd.fused.m32n65536.s0").unwrap();
-        assert!(t0.elapsed().as_secs_f64() < 0.01, "cache miss on second lookup");
+        let after = rt.counters();
+        assert_eq!(
+            after.executable_compiles, before.executable_compiles,
+            "cache miss on second lookup"
+        );
+        assert_eq!(after.executable_cache_hits, before.executable_cache_hits + 1);
+    }
+
+    #[test]
+    fn repeat_requests_hit_the_resolve_cache() {
+        let Some(rt) = runtime() else { return };
+        let (m, n) = (256, 256);
+        let inputs = inputs_for(&rt, "bicgk", "fused", m, n);
+        let a = rt.run_seq("bicgk", "fused", m, n, &inputs).unwrap();
+        let c0 = rt.counters();
+        assert_eq!(c0.resolve_misses, 1);
+        assert_eq!(c0.resolve_hits, 0);
+        let b = rt.run_seq("bicgk", "fused", m, n, &inputs).unwrap();
+        let c1 = rt.counters();
+        assert_eq!(c1.resolve_misses, 1, "second request must not re-resolve");
+        assert_eq!(c1.resolve_hits, 1);
+        assert_eq!(
+            c1.executable_compiles, c0.executable_compiles,
+            "pinned executables never recompile"
+        );
+        // resolve-once shares bookkeeping, never changes arithmetic
+        for (name, ta) in &a.env {
+            let tb = &b.env[name];
+            for (x, y) in ta.data.iter().zip(&tb.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "tensor '{name}' differs");
+            }
+        }
     }
 }

@@ -20,6 +20,12 @@
 //!
 //! Unknown `key value` lines inside a stanza are kept in `attrs` so the
 //! format is forward-compatible.
+//!
+//! The manifest is *indexed at parse time*: `m`/`n` size attrs are
+//! parsed once into [`ArtifactEntry::m`]/[`ArtifactEntry::n`], and a
+//! prebuilt `(seq, variant, m, n) → ordered stage list` index backs
+//! [`Manifest::stages`]/[`Manifest::sizes`], so the runtime's request
+//! path never scans the catalog or compares attr strings.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -122,6 +128,23 @@ pub struct ArtifactEntry {
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
     pub attrs: BTreeMap<String, String>,
+    /// Rows, parsed once from the `m` attr (None when absent or
+    /// non-numeric). The raw string stays in `attrs`.
+    pub m: Option<usize>,
+    /// Columns, parsed once from the `n` attr.
+    pub n: Option<usize>,
+}
+
+/// Per-(seq, variant) slice of the parse-time index.
+#[derive(Clone, Debug, Default)]
+struct VariantIndex {
+    /// (m, n) → entry keys ordered by stage. Only entries whose size
+    /// attrs are canonical decimals are indexed, mirroring the exact
+    /// string comparison a linear attr scan performs (an entry with
+    /// `m 032` never matches a lookup for m=32 there either).
+    stages: BTreeMap<(usize, usize), Vec<String>>,
+    /// Size points declared by stage-0 entries, sorted and deduped.
+    sizes: Vec<(usize, usize)>,
 }
 
 /// The parsed manifest: key → entry.
@@ -130,6 +153,8 @@ pub struct Manifest {
     pub entries: BTreeMap<String, ArtifactEntry>,
     /// Directory the manifest was loaded from (file paths resolve here).
     pub root: PathBuf,
+    /// seq → variant → per-size stage lists, built once at parse time.
+    index: BTreeMap<String, BTreeMap<String, VariantIndex>>,
 }
 
 impl Manifest {
@@ -163,13 +188,17 @@ impl Manifest {
                         inputs: vec![],
                         outputs: vec![],
                         attrs: BTreeMap::new(),
+                        m: None,
+                        n: None,
                     });
                 }
                 "end" => {
-                    let e = cur.take().ok_or_else(|| err("'end' outside stanza".into()))?;
+                    let mut e = cur.take().ok_or_else(|| err("'end' outside stanza".into()))?;
                     if e.file.as_os_str().is_empty() {
                         return Err(err(format!("artifact '{}' has no file", e.key)));
                     }
+                    e.m = e.attrs.get("m").and_then(|s| s.parse().ok());
+                    e.n = e.attrs.get("n").and_then(|s| s.parse().ok());
                     if entries.insert(e.key.clone(), e).is_some() {
                         return Err(err("duplicate artifact key".into()));
                     }
@@ -198,9 +227,69 @@ impl Manifest {
             return Err("manifest truncated inside a stanza".into());
         }
         Ok(Manifest {
+            index: Self::build_index(&entries),
             entries,
             root: root.to_path_buf(),
         })
+    }
+
+    /// Build the (seq, variant, m, n) → stage-list index. Entries are
+    /// visited in key order, so the stable per-stage sort leaves ties in
+    /// the same order a linear scan over `entries.values()` would.
+    fn build_index(
+        entries: &BTreeMap<String, ArtifactEntry>,
+    ) -> BTreeMap<String, BTreeMap<String, VariantIndex>> {
+        let mut index: BTreeMap<String, BTreeMap<String, VariantIndex>> = BTreeMap::new();
+        for e in entries.values() {
+            let (Some(m), Some(n)) = (e.m, e.n) else { continue };
+            let vi = index
+                .entry(e.seq.clone())
+                .or_default()
+                .entry(e.variant.clone())
+                .or_default();
+            // Only canonical decimal attrs join the per-size stage
+            // lists: a string-comparing scan for m=32 never matched an
+            // entry declaring `m 032`, and the index must agree with it
+            // byte-for-byte.
+            if e.attrs["m"] == m.to_string() && e.attrs["n"] == n.to_string() {
+                vi.stages.entry((m, n)).or_default().push(e.key.clone());
+            }
+            if e.stage == 0 {
+                vi.sizes.push((m, n));
+            }
+        }
+        for variants in index.values_mut() {
+            for vi in variants.values_mut() {
+                for keys in vi.stages.values_mut() {
+                    keys.sort_by_key(|k| entries[k].stage);
+                }
+                vi.sizes.sort_unstable();
+                vi.sizes.dedup();
+            }
+        }
+        index
+    }
+
+    /// Ordered stage entries of `(seq, variant)` at an exact raw size —
+    /// an indexed lookup, no catalog scan. Empty when the catalog has no
+    /// such size.
+    pub fn stages(&self, seq: &str, variant: &str, m: usize, n: usize) -> Vec<&ArtifactEntry> {
+        self.index
+            .get(seq)
+            .and_then(|v| v.get(variant))
+            .and_then(|vi| vi.stages.get(&(m, n)))
+            .map(|keys| keys.iter().map(|k| &self.entries[k]).collect())
+            .unwrap_or_default()
+    }
+
+    /// Available (m, n) size points of a sequence variant (declared by
+    /// its stage-0 entries), sorted. Indexed — no catalog scan.
+    pub fn sizes(&self, seq: &str, variant: &str) -> &[(usize, usize)] {
+        self.index
+            .get(seq)
+            .and_then(|v| v.get(variant))
+            .map(|vi| vi.sizes.as_slice())
+            .unwrap_or(&[])
     }
 
     pub fn load(path: &Path) -> Result<Self, String> {
@@ -289,6 +378,52 @@ end
     #[test]
     fn truncated_stanza_is_error() {
         assert!(Manifest::parse("artifact a\n file f\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn size_attrs_parse_once() {
+        let text = "\
+artifact a.fused.m32n64.s0\n file f\n seq a\n variant fused\n stage 0\n m 32\n n 64\nend
+artifact a.fused.nosize\n file f\n seq a\n variant fused\n stage 0\nend
+artifact a.fused.badsize\n file f\n seq a\n variant fused\n stage 0\n m x\n n 64\nend
+";
+        let man = Manifest::parse(text, Path::new(".")).unwrap();
+        assert_eq!(man.get("a.fused.m32n64.s0").unwrap().m, Some(32));
+        assert_eq!(man.get("a.fused.m32n64.s0").unwrap().n, Some(64));
+        assert_eq!(man.get("a.fused.nosize").unwrap().m, None);
+        assert_eq!(man.get("a.fused.badsize").unwrap().m, None);
+        assert_eq!(man.get("a.fused.badsize").unwrap().n, Some(64));
+    }
+
+    #[test]
+    fn stage_index_orders_and_isolates_keys() {
+        let text = "\
+artifact b.fused.m8n8.s1\n file f\n seq b\n variant fused\n stage 1\n m 8\n n 8\nend
+artifact b.fused.m8n8.s0\n file f\n seq b\n variant fused\n stage 0\n m 8\n n 8\nend
+artifact b.fused.m8n16.s0\n file f\n seq b\n variant fused\n stage 0\n m 8\n n 16\nend
+artifact b.cublas.m8n8.s0\n file f\n seq b\n variant cublas\n stage 0\n m 8\n n 8\nend
+";
+        let man = Manifest::parse(text, Path::new(".")).unwrap();
+        let keys: Vec<&str> = man.stages("b", "fused", 8, 8).iter().map(|e| e.key.as_str()).collect();
+        assert_eq!(keys, vec!["b.fused.m8n8.s0", "b.fused.m8n8.s1"]);
+        assert_eq!(man.stages("b", "cublas", 8, 8).len(), 1);
+        assert!(man.stages("b", "fused", 8, 32).is_empty());
+        assert!(man.stages("ghost", "fused", 8, 8).is_empty());
+        assert_eq!(man.sizes("b", "fused"), &[(8, 8), (8, 16)]);
+        assert_eq!(man.sizes("b", "cublas"), &[(8, 8)]);
+        assert!(man.sizes("ghost", "fused").is_empty());
+    }
+
+    #[test]
+    fn non_canonical_size_attrs_stay_out_of_the_stage_index() {
+        // `m 032` parses to 32 but never matched a string-comparing
+        // scan for m=32; the index must agree. (sizes() keeps it: the
+        // seed sizes_of parsed leniently.)
+        let text =
+            "artifact c.fused.odd\n file f\n seq c\n variant fused\n stage 0\n m 032\n n 8\nend\n";
+        let man = Manifest::parse(text, Path::new(".")).unwrap();
+        assert!(man.stages("c", "fused", 32, 8).is_empty());
+        assert_eq!(man.sizes("c", "fused"), &[(32, 8)]);
     }
 
     #[test]

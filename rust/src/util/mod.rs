@@ -4,12 +4,14 @@
 //! dependency closure, so facilities normally pulled from crates.io
 //! (`rand`, `proptest`, `serde`, table printers) are implemented here.
 
+pub mod json;
 pub mod manifest;
 pub mod prng;
 pub mod proptest;
 pub mod stats;
 pub mod table;
 
+pub use json::Json;
 pub use prng::Prng;
 pub use stats::Summary;
 pub use table::Table;

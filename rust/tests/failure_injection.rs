@@ -70,9 +70,18 @@ fn wrong_input_dims_rejected_before_execution() {
     let Some(dir) = real_artifacts() else { return };
     let rt = Runtime::load(&dir).unwrap();
     let entry = rt.manifest.get("sscal.fused.m32n65536.s0").unwrap().clone();
+    // bind every declared input at its right shape, then corrupt x
     let mut env = BTreeMap::new();
+    for spec in &entry.inputs {
+        let len = spec.dims.iter().product::<usize>().max(1);
+        env.insert(spec.name.clone(), Tensor::new(spec.dims.clone(), vec![1.0; len]));
+    }
     env.insert("x".to_string(), Tensor::vector(vec![1.0; 64])); // wrong size
-    let err = rt.run_stage(&entry, &mut env).err().expect("must fail").to_string();
+    let err = rt
+        .run_seq("sscal", "fused", 32, 65536, &env)
+        .err()
+        .expect("must fail")
+        .to_string();
     assert!(err.contains("dims"), "{err}");
 }
 

@@ -1,0 +1,326 @@
+//! The resolve-once execution-plan subsystem, tested without a real
+//! backend: the indexed manifest must return byte-identical stage lists
+//! to the seed's linear catalog scan, slot-interned execution must
+//! produce exactly the env the seed `BTreeMap` path produced, and the
+//! runtime's resolve-cache counters must tell failures from hits.
+
+use fusebla::runtime::{Runtime, SlotPlan, Tensor};
+use fusebla::util::manifest::{ArtifactEntry, Manifest, TensorSpec};
+use fusebla::util::proptest::{check, Gen};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The seed `Runtime::stages_of` lookup, kept verbatim as the reference
+/// the index is checked against: a full scan comparing size attrs as
+/// strings, cloning matches, sorting by stage.
+fn stages_reference(man: &Manifest, seq: &str, variant: &str, m: usize, n: usize) -> Vec<ArtifactEntry> {
+    let mut v: Vec<ArtifactEntry> = man
+        .entries
+        .values()
+        .filter(|e| {
+            e.seq == seq
+                && e.variant == variant
+                && e.attrs.get("m").map(|s| s.as_str()) == Some(m.to_string().as_str())
+                && e.attrs.get("n").map(|s| s.as_str()) == Some(n.to_string().as_str())
+        })
+        .cloned()
+        .collect();
+    v.sort_by_key(|e| e.stage);
+    v
+}
+
+/// The seed `Runtime::sizes_of` scan, kept verbatim as the reference.
+fn sizes_reference(man: &Manifest, seq: &str, variant: &str) -> Vec<(usize, usize)> {
+    let mut sizes: Vec<(usize, usize)> = man
+        .entries
+        .values()
+        .filter(|e| e.seq == seq && e.variant == variant && e.stage == 0)
+        .filter_map(|e| {
+            Some((
+                e.attrs.get("m")?.parse().ok()?,
+                e.attrs.get("n")?.parse().ok()?,
+            ))
+        })
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+}
+
+/// A catalog exercising every indexing edge: several sequences,
+/// variants, sizes and stages, entries with missing/non-numeric size
+/// attrs, and a non-canonical `m 032` that string comparison rejects.
+fn tricky_catalog() -> Manifest {
+    let mut text = String::new();
+    for seq in ["alpha", "beta", "gamma"] {
+        for variant in ["fused", "cublas"] {
+            for (m, n) in [(32, 1024), (32, 65536), (256, 256)] {
+                let n_stages = if variant == "fused" { 1 } else { 3 };
+                for stage in 0..n_stages {
+                    text.push_str(&format!(
+                        "artifact {seq}.{variant}.m{m}n{n}.s{stage}\n file f.hlo.txt\n seq {seq}\n variant {variant}\n stage {stage}\n in x:f32[{n}]\n out y:f32[{n}]\n m {m}\n n {n}\nend\n"
+                    ));
+                }
+            }
+        }
+    }
+    // oddballs the scan ignores (and the index must too)
+    text.push_str(
+        "artifact alpha.fused.nosize\n file f.hlo.txt\n seq alpha\n variant fused\n stage 0\nend\n",
+    );
+    text.push_str(
+        "artifact alpha.fused.badm\n file f.hlo.txt\n seq alpha\n variant fused\n stage 0\n m lots\n n 1024\nend\n",
+    );
+    text.push_str(
+        "artifact beta.fused.noncanon\n file f.hlo.txt\n seq beta\n variant fused\n stage 0\n m 032\n n 1024\nend\n",
+    );
+    Manifest::parse(&text, Path::new(".")).expect("tricky catalog")
+}
+
+#[test]
+fn indexed_stages_match_reference_scan_over_whole_catalog() {
+    let man = tricky_catalog();
+    // every (seq, variant) × every size mentioned anywhere, plus sizes
+    // and names the catalog does not have
+    let mut sizes: Vec<(usize, usize)> = man
+        .entries
+        .values()
+        .filter_map(|e| Some((e.attrs.get("m")?.parse().ok()?, e.attrs.get("n")?.parse().ok()?)))
+        .collect();
+    sizes.push((7, 7));
+    sizes.push((32, 32));
+    let mut checked = 0;
+    for seq in ["alpha", "beta", "gamma", "ghost"] {
+        for variant in ["fused", "cublas", "ghost"] {
+            for &(m, n) in &sizes {
+                let reference = stages_reference(&man, seq, variant, m, n);
+                let indexed = man.stages(seq, variant, m, n);
+                let ref_keys: Vec<&str> = reference.iter().map(|e| e.key.as_str()).collect();
+                let idx_keys: Vec<&str> = indexed.iter().map(|e| e.key.as_str()).collect();
+                assert_eq!(ref_keys, idx_keys, "{seq}.{variant} m{m} n{n}");
+                // identical entries, not just identical keys
+                for (a, b) in reference.iter().zip(&indexed) {
+                    assert_eq!(a.key, b.key);
+                    assert_eq!(a.stage, b.stage);
+                    assert_eq!(a.inputs, b.inputs);
+                    assert_eq!(a.outputs, b.outputs);
+                    assert_eq!(a.attrs, b.attrs);
+                }
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100, "query sweep must cover the catalog ({checked})");
+}
+
+#[test]
+fn indexed_sizes_match_reference_scan() {
+    let man = tricky_catalog();
+    for seq in ["alpha", "beta", "gamma", "ghost"] {
+        for variant in ["fused", "cublas", "ghost"] {
+            assert_eq!(
+                sizes_reference(&man, seq, variant),
+                man.sizes(seq, variant).to_vec(),
+                "{seq}.{variant}"
+            );
+        }
+    }
+    // the non-canonical `m 032` entry is a stage-0 size (lenient parse,
+    // as the seed scan had it) but never a stage-list match
+    assert!(man.sizes("beta", "fused").contains(&(32, 1024)));
+    assert!(!man
+        .stages("beta", "fused", 32, 1024)
+        .iter()
+        .any(|e| e.key == "beta.fused.noncanon"));
+}
+
+fn spec(name: &str, dims: &[usize]) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        dtype: fusebla::util::manifest::DType::F32,
+        dims: dims.to_vec(),
+    }
+}
+
+fn entry(stage: usize, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> ArtifactEntry {
+    ArtifactEntry {
+        key: format!("prop.fused.s{stage}"),
+        file: PathBuf::from("f.hlo.txt"),
+        seq: "prop".to_string(),
+        variant: "fused".to_string(),
+        stage,
+        inputs,
+        outputs,
+        attrs: BTreeMap::new(),
+        m: Some(8),
+        n: Some(8),
+    }
+}
+
+/// A deterministic stand-in for stage execution: every output element
+/// is a pure function of the stage index, the output's position and all
+/// input tensors — evaluated identically by both environment
+/// implementations, so any divergence is the environment's fault.
+fn fake_output(stage: usize, j: usize, out_len: usize, dims: &[usize], ins: &[&Tensor]) -> Tensor {
+    let mut data = vec![0.0f32; out_len];
+    for (k, x) in data.iter_mut().enumerate() {
+        let mut acc = (stage * 31 + j * 7) as f32;
+        for t in ins {
+            acc += t.data[k % t.data.len()];
+        }
+        *x = acc;
+    }
+    Tensor::new(dims.to_vec(), data)
+}
+
+/// Slot-interned execution must produce exactly the `RunResult.env` the
+/// seed `BTreeMap<String, Tensor>` path produced — same names, same
+/// dims, bit-identical data — including pass-through of inputs no stage
+/// touches.
+#[test]
+fn slot_env_matches_btreemap_env() {
+    check("slot env equivalence", 128, |g: &mut Gen| {
+        // a fixed name pool with per-name dims, so specs stay coherent
+        let names: Vec<String> = (0..10).map(|i| format!("t{i}")).collect();
+        let dims: Vec<Vec<usize>> = (0..names.len()).map(|_| vec![g.usize(1, 6)]).collect();
+        let n_stages = g.usize(1, 5);
+        let mut entries = Vec::new();
+        for stage in 0..n_stages {
+            let n_in = g.usize(1, 3);
+            let n_out = g.usize(1, 2);
+            let pick = |g: &mut Gen| -> usize { g.usize(0, names.len() - 1) };
+            let inputs: Vec<TensorSpec> = (0..n_in)
+                .map(|_| {
+                    let i = pick(g);
+                    spec(&names[i], &dims[i])
+                })
+                .collect();
+            let outputs: Vec<TensorSpec> = (0..n_out)
+                .map(|_| {
+                    let i = pick(g);
+                    spec(&names[i], &dims[i])
+                })
+                .collect();
+            entries.push(entry(stage, inputs, outputs));
+        }
+
+        // free inputs: names read before any stage produces them
+        let mut produced: Vec<&str> = Vec::new();
+        let mut inputs: BTreeMap<String, Tensor> = BTreeMap::new();
+        for e in &entries {
+            for s in &e.inputs {
+                if !produced.contains(&s.name.as_str()) && !inputs.contains_key(&s.name) {
+                    let len = s.dims.iter().product::<usize>().max(1);
+                    inputs.insert(s.name.clone(), Tensor::new(s.dims.clone(), g.f32_vec(len)));
+                }
+            }
+            for s in &e.outputs {
+                produced.push(s.name.as_str());
+            }
+        }
+        if g.bool() {
+            // an input no stage touches must pass through both paths
+            inputs.insert("spare".to_string(), Tensor::vector(g.f32_vec(3)));
+        }
+
+        // reference: the seed semantics — clone the named map, read
+        // inputs by name, insert outputs by name
+        let mut env_ref = inputs.clone();
+        for e in &entries {
+            let ins: Vec<&Tensor> = e.inputs.iter().map(|s| &env_ref[&s.name]).collect();
+            let outs: Vec<(String, Tensor)> = e
+                .outputs
+                .iter()
+                .enumerate()
+                .map(|(j, s)| {
+                    let len = s.dims.iter().product::<usize>().max(1);
+                    (s.name.clone(), fake_output(e.stage, j, len, &s.dims, &ins))
+                })
+                .collect();
+            for (name, t) in outs {
+                env_ref.insert(name, t);
+            }
+        }
+
+        // slot path: bind once, execute by slot index, materialize once
+        let plan = SlotPlan::build("prop", "fused", 8, 8, entries.clone());
+        assert_eq!(plan.stage_count(), entries.len());
+        let mut env = plan.bind(&inputs);
+        for st in plan.stages() {
+            let ins: Vec<&Tensor> = st
+                .input_slots()
+                .iter()
+                .map(|&slot| env.get(slot).expect("bound input"))
+                .collect();
+            let outs: Vec<(usize, Tensor)> = st
+                .entry
+                .outputs
+                .iter()
+                .zip(st.output_slots())
+                .enumerate()
+                .map(|(j, (s, &slot))| {
+                    let len = s.dims.iter().product::<usize>().max(1);
+                    (slot, fake_output(st.entry.stage, j, len, &s.dims, &ins))
+                })
+                .collect();
+            drop(ins);
+            for (slot, t) in outs {
+                env.set(slot, t);
+            }
+        }
+        let env_slots = plan.materialize(env);
+
+        assert_eq!(env_ref.len(), env_slots.len());
+        for (name, a) in &env_ref {
+            let b = &env_slots[name];
+            assert_eq!(a.dims, b.dims, "dims of '{name}'");
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "tensor '{name}' differs");
+            }
+        }
+    });
+}
+
+fn scratch_catalog(tag: &str, manifest: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fusebla_rp_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    dir
+}
+
+/// A failed resolve is re-attempted (never cached) and the counters
+/// report it as a miss each time; nothing compiles.
+#[test]
+fn failed_resolves_are_not_cached_and_count_misses() {
+    let dir = scratch_catalog(
+        "failmiss",
+        "artifact w.fused.m32n64.s0\n file missing.hlo.txt\n seq w\n variant fused\n stage 0\n in x:f32[64]\n out y:f32[64]\n m 32\n n 64\nend\n",
+    );
+    let rt = Runtime::load(&dir).expect("manifest parses");
+    assert!(rt.resolve("w", "fused", 32, 64).is_err(), "missing HLO file");
+    let c0 = rt.counters();
+    assert_eq!(c0.resolve_misses, 1);
+    assert_eq!(c0.resolve_hits, 0);
+    assert_eq!(c0.executable_compiles, 0);
+    assert!(rt.resolve("w", "fused", 32, 64).is_err(), "still failing");
+    let c1 = rt.counters();
+    assert_eq!(c1.resolve_misses, 2, "failures must not be cached");
+    assert_eq!(c1.resolve_hits, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Resolving a size the catalog lacks fails with the catalog's actual
+/// size points in the message (the operator-facing breadcrumb).
+#[test]
+fn resolve_of_missing_size_lists_available_sizes() {
+    let dir = scratch_catalog(
+        "nosize",
+        "artifact w.fused.m32n64.s0\n file f.hlo.txt\n seq w\n variant fused\n stage 0\n in x:f32[64]\n out y:f32[64]\n m 32\n n 64\nend\n",
+    );
+    let rt = Runtime::load(&dir).expect("manifest parses");
+    let err = rt.resolve("w", "fused", 5, 5).err().expect("must fail").to_string();
+    assert!(err.contains("no artifacts"), "{err}");
+    assert!(err.contains("(32, 64)"), "should list catalog sizes: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
