@@ -3,18 +3,19 @@
 # `make artifacts` runs the L2/L1 Python side once (JAX lowering of
 # every catalog entry to HLO text + the manifest); the Rust runtime then
 # executes those artifacts without Python on the request path. The
-# calibration cache (`calibration.txt`) is written next to the catalog
-# by the first Rust process that runs.
+# per-device calibration caches (`calibration.<device>.txt`) are written
+# next to the catalog by the first Rust process that uses each device.
 #
 #   make artifacts                                    # full catalog
 #   make artifacts BLAS2_SIZES=256,512 BLAS1_SIZES=65536   # small CI catalog
 #   make test-python                                  # kernel-vs-oracle pytest
+#   make fleet-demo                                   # routed heterogeneous serve demo
 
 BLAS2_SIZES ?= 256,512,1024
 BLAS1_SIZES ?= 65536,1048576
 OUT ?= rust/artifacts
 
-.PHONY: artifacts test-python clean-artifacts
+.PHONY: artifacts test-python clean-artifacts fleet-demo
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../$(OUT) \
@@ -25,3 +26,9 @@ test-python:
 
 clean-artifacts:
 	rm -rf $(OUT)
+
+# The heterogeneous-fleet routing demo in one command: three simulated
+# devices (GTX 480/580, GT 430), predictor-guided routing, per-device
+# metrics incl. the queued-duration histogram. Needs `make artifacts`.
+fleet-demo:
+	cd rust && cargo run --release -- serve-demo --devices 3 --requests 48 --batch-window 5

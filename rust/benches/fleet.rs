@@ -1,0 +1,130 @@
+//! Fleet serving study — the `multigpu` scaling bench's serve-path
+//! sibling: end-to-end requests/sec of the engine at 1, 2 and 4
+//! simulated devices (heterogeneous profiles, predictor-guided
+//! routing), plus the routing-decision overhead itself.
+//!
+//! The routing section is offline-safe: the cost model is a pure
+//! function of the simulated calibrations, so the per-submit decision
+//! cost is measured even without built artifacts. The throughput
+//! section gates on `artifacts/manifest.txt` like the other execution
+//! benches.
+//!
+//! Results merge into `BENCH_fleet.json` so the fleet trajectory
+//! (req/s per device count, routing overhead) stays diffable across
+//! PRs.
+//!
+//! `cargo bench --bench fleet`
+
+use fusebla::bench_support::report::update_bench_json;
+use fusebla::fleet::{CostModel, DeviceRegistry};
+use fusebla::util::manifest::Manifest;
+use fusebla::util::stats::{bench, black_box};
+use fusebla::util::{fmt_duration, Json, Summary};
+use fusebla::{Engine, EngineConfig, SubmitRequest, Ticket};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The fleet report file (separate from `BENCH_hotpath.json`: device
+/// counts, not dispatch paths, are the axis here).
+const BENCH_FLEET_JSON: &str = "BENCH_fleet.json";
+const N_REQUESTS: usize = 96;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    let report = Path::new(BENCH_FLEET_JSON);
+
+    // Routing-decision overhead: forecasts are cached per (seq, padded
+    // size), so the steady-state per-submit cost is a map probe plus an
+    // argmin over the roster — the number a router must keep tiny to
+    // stay off the hot path.
+    let registry = Arc::new(DeviceRegistry::simulated(4, dir));
+    let model = CostModel::new(registry);
+    let keys = [("waxpby", 32, 65536), ("vadd", 32, 65536), ("sscal", 32, 65536)];
+    for (seq, m, n) in keys {
+        let _ = model.route(seq, m, n, &[0, 0, 0, 0]); // warm the forecast cache
+    }
+    let depths = [3u64, 1, 0, 2];
+    let samples = bench(100, 10_000, || {
+        let mut acc = 0usize;
+        for (seq, m, n) in keys {
+            acc += model.route(seq, m, n, &depths);
+        }
+        black_box(acc)
+    });
+    let s = Summary::from_samples(&samples);
+    let per_decision_ns = s.median / keys.len() as f64 * 1e9;
+    println!(
+        "routing decision (warm, 4 devices): median {per_decision_ns:.0} ns \
+         (mean {:.0} ns over {} samples)",
+        s.mean / keys.len() as f64 * 1e9,
+        s.n
+    );
+    let routing = Json::Obj(vec![
+        ("devices".into(), Json::num(4.0)),
+        ("decision_ns_median".into(), Json::num(per_decision_ns)),
+        ("decision_ns_mean".into(), Json::num(s.mean / keys.len() as f64 * 1e9)),
+    ]);
+    update_bench_json(report, "routing", routing).expect("write BENCH_fleet.json");
+
+    // Throughput scaling: the same mixed-key burst served by fleets of
+    // 1, 2 and 4 simulated devices.
+    if !dir.join("manifest.txt").exists() {
+        println!("(artifacts not built: skipping fleet throughput bench)");
+        return;
+    }
+    let manifest = Manifest::load(&dir.join("manifest.txt")).expect("manifest");
+    let mix = ["waxpby", "vadd", "sscal", "axpydot"];
+    let mut prepared = Vec::new();
+    for seq in mix {
+        let Some(&(m, n)) = manifest.sizes(seq, "fused").first() else {
+            println!("(no {seq} artifacts: skipping fleet throughput bench)");
+            return;
+        };
+        prepared.push((seq, m, n));
+    }
+
+    let mut throughput = Vec::new();
+    for g in [1usize, 2, 4] {
+        let registry = Arc::new(DeviceRegistry::simulated(g, dir));
+        let cfg = EngineConfig {
+            batch_window: Duration::from_millis(5),
+            max_batch: N_REQUESTS,
+        };
+        let engine = Engine::start_fleet(registry, dir, cfg).expect("fleet engine");
+        let client = engine.client();
+        // warmup: resolve every (key, device) once so the timed burst
+        // measures dispatch + routing, not XLA compilation
+        for id in client.devices() {
+            for (seq, m, n) in &prepared {
+                client
+                    .submit(SubmitRequest::new(*seq, *m, *n).pin(id.name()))
+                    .expect("warmup submit")
+                    .wait()
+                    .expect("warmup run");
+            }
+        }
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..N_REQUESTS)
+            .map(|i| {
+                let (seq, m, n) = prepared[i % prepared.len()];
+                client
+                    .submit(SubmitRequest::new(seq, m, n).synth(i as u64))
+                    .expect("burst submit")
+            })
+            .collect();
+        let ok = tickets.into_iter().map(Ticket::wait).filter(Result::is_ok).count();
+        let dt = t0.elapsed().as_secs_f64();
+        let fleet = engine.shutdown_fleet();
+        assert_eq!(ok, N_REQUESTS, "every burst request must succeed");
+        let rps = N_REQUESTS as f64 / dt;
+        println!("G={g}: {ok}/{N_REQUESTS} in {} → {rps:.0} req/s", fmt_duration(dt));
+        for (id, m) in &fleet.devices {
+            println!("  device {id}: {} request(s), {} batch(es)", m.requests, m.batches);
+        }
+        throughput.push((format!("req_per_sec_g{g}"), Json::num(rps)));
+    }
+    throughput.push(("requests".into(), Json::num(N_REQUESTS as f64)));
+    update_bench_json(report, "throughput", Json::Obj(throughput)).expect("write BENCH_fleet.json");
+    println!("wrote {BENCH_FLEET_JSON}");
+}

@@ -24,9 +24,11 @@ use super::{PlanChoice, Request};
 use crate::ir::elem::ProblemSize;
 use anyhow::{anyhow, Error, Result};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Identity of one batch: the plan-cache key shape plus the resolved
-/// plan choice.
+/// plan choice. The device name is the context's interned `Arc<str>` —
+/// grouping a turn clones a refcount per request, not a `String`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub(crate) struct BatchKey {
     pub seq: String,
@@ -34,7 +36,7 @@ pub(crate) struct BatchKey {
     pub m: usize,
     /// Tile-padded columns (plan granularity).
     pub n: usize,
-    pub device: String,
+    pub device: Arc<str>,
     pub choice: PlanChoice,
 }
 
@@ -56,7 +58,7 @@ pub(crate) struct Batch {
 /// first-arrival order; members keep arrival order.
 pub(crate) fn group(
     reqs: Vec<Request>,
-    device: &str,
+    device: &Arc<str>,
     mut resolve: impl FnMut(&str, usize, usize) -> Result<PlanChoice>,
 ) -> (Vec<Batch>, Vec<(Request, Error)>) {
     let mut batches: Vec<Batch> = Vec::new();
@@ -92,7 +94,7 @@ pub(crate) fn group(
             seq: req.seq.clone(),
             m: p.m,
             n: p.n,
-            device: device.to_string(),
+            device: device.clone(),
             choice,
         };
         match batches
@@ -114,9 +116,10 @@ pub(crate) fn group(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::RequestInputs;
+    use crate::coordinator::{Reply, RequestInputs};
     use anyhow::anyhow;
     use std::sync::mpsc;
+    use std::time::Instant;
 
     fn req(seq: &str, m: usize, n: usize, variant: Option<PlanChoice>) -> Request {
         // the receiver is dropped — grouping never touches the reply
@@ -127,8 +130,13 @@ mod tests {
             n,
             inputs: RequestInputs::Synth { seed: 0 },
             variant,
-            reply: tx,
+            enqueued: Instant::now(),
+            reply: Reply::new(tx, None),
         }
+    }
+
+    fn dev(name: &str) -> Arc<str> {
+        Arc::from(name)
     }
 
     #[test]
@@ -141,7 +149,7 @@ mod tests {
             req("vadd", 32, 65536, None),
         ];
         let mut calls = Vec::new();
-        let (batches, failed) = group(reqs, "dev0", |seq, m, n| {
+        let (batches, failed) = group(reqs, &dev("dev0"), |seq, m, n| {
             calls.push((seq.to_string(), m, n));
             Ok(PlanChoice::Fused)
         });
@@ -164,7 +172,7 @@ mod tests {
             req("waxpby", 32, 65536, Some(PlanChoice::Cublas)),
         ];
         let mut calls = 0;
-        let (batches, failed) = group(reqs, "dev0", |_, _, _| {
+        let (batches, failed) = group(reqs, &dev("dev0"), |_, _, _| {
             calls += 1;
             Ok(PlanChoice::Fused)
         });
@@ -182,7 +190,7 @@ mod tests {
     fn padded_sizes_share_planning_but_raw_sizes_execute_separately() {
         let reqs = vec![req("waxpby", 32, 65530, None), req("waxpby", 32, 65536, None)];
         let mut calls = 0;
-        let (batches, failed) = group(reqs, "dev0", |_, _, _| {
+        let (batches, failed) = group(reqs, &dev("dev0"), |_, _, _| {
             calls += 1;
             Ok(PlanChoice::Fused)
         });
@@ -202,7 +210,7 @@ mod tests {
             req("ghost", 32, 32, None),
         ];
         let mut calls = 0;
-        let (batches, failed) = group(reqs, "dev0", |seq, _, _| {
+        let (batches, failed) = group(reqs, &dev("dev0"), |seq, _, _| {
             calls += 1;
             if seq == "ghost" {
                 Err(anyhow!("unknown sequence '{seq}'"))

@@ -6,8 +6,8 @@
 //! fusebla compile <script> [--all] [--emit-cuda]
 //! fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
 //! fusebla autotune <seq>                  search + prediction-accuracy report
-//! fusebla serve-demo [--requests N] [--batch-window MS]
-//!                                         batched Engine/Client serve demo
+//! fusebla serve-demo [--requests N] [--batch-window MS] [--devices N]
+//!                                         batched (fleet) serve demo
 //! fusebla list                            sequences + artifact catalog
 //! ```
 
@@ -15,8 +15,10 @@ use crate::autotune;
 use crate::bench_support as bench;
 use crate::codegen;
 use crate::coordinator::{
-    synth_inputs, Context, Coordinator, Engine, EngineConfig, PlanChoice, SubmitRequest, Ticket,
+    synth_inputs, Context, Coordinator, Engine, EngineConfig, Metrics, PlanChoice, SubmitRequest,
+    Ticket,
 };
+use crate::fleet::DeviceRegistry;
 use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
 use crate::script::compile_script;
@@ -41,7 +43,7 @@ usage:
   fusebla compile <script-file> [--all] [--emit-cuda]
   fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
   fusebla autotune <seq>
-  fusebla serve-demo [--requests N] [--batch-window MS]
+  fusebla serve-demo [--requests N] [--batch-window MS] [--devices N]
   fusebla list"
     );
     2
@@ -327,6 +329,17 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let n_devices: usize = match parse_flag(args, "--devices") {
+        Ok(v) => v.unwrap_or(1),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    if n_devices == 0 {
+        eprintln!("serve-demo: --devices must be at least 1");
+        return 2;
+    }
     // Size discovery from the manifest alone (no PJRT on this thread —
     // the client is !Send and lives on the engine's worker).
     let manifest = match crate::util::manifest::Manifest::load(&artifacts_dir().join("manifest.txt")) {
@@ -349,7 +362,16 @@ fn cmd_serve(args: &[String]) -> i32 {
         batch_window: Duration::from_millis(window_ms),
         max_batch: 256,
     };
-    let engine = match Engine::with_config(Arc::new(Context::new()), &artifacts_dir(), cfg) {
+    // One device serves the classic single-device path (no router in
+    // the way); more cycle the heterogeneous simulated profiles, each
+    // with its own calibration file next to the catalog.
+    let engine = if n_devices == 1 {
+        Engine::with_config(Arc::new(Context::new()), &artifacts_dir(), cfg)
+    } else {
+        let registry = Arc::new(DeviceRegistry::simulated(n_devices, artifacts_dir()));
+        Engine::start_fleet(registry, &artifacts_dir(), cfg)
+    };
+    let engine = match engine {
         Ok(e) => e,
         Err(e) => {
             eprintln!("serve-demo: {e:#}");
@@ -371,13 +393,25 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     }
     let ok = tickets.into_iter().map(Ticket::wait).filter(Result::is_ok).count();
-    let metrics = engine.shutdown();
+    let fleet = engine.shutdown_fleet();
+    let metrics = fleet.aggregate();
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{n_requests} requests in {} ({:.1} req/s, batch window {window_ms} ms)",
+        "served {ok}/{n_requests} requests in {} ({:.1} req/s, batch window {window_ms} ms, {} device(s))",
         fmt_duration(dt),
-        n_requests as f64 / dt
+        n_requests as f64 / dt,
+        fleet.devices.len()
     );
+    if fleet.devices.len() > 1 {
+        for (id, m) in &fleet.devices {
+            println!(
+                "device {id}: {} request(s), {} batch(es), {}",
+                m.requests,
+                m.batches,
+                queued_line(m)
+            );
+        }
+    }
     for (seq, (count, secs)) in &metrics.per_seq {
         println!("  {seq:10} {count:4} requests, mean {}", fmt_duration(secs / *count as f64));
     }
@@ -400,7 +434,24 @@ fn cmd_serve(args: &[String]) -> i32 {
         metrics.executable_compiles,
         metrics.executable_cache_hits
     );
+    println!("{}", queued_line(&metrics));
     i32::from(ok != n_requests)
+}
+
+/// One-line queued-duration summary (submission → batch dispatch) from
+/// a worker's histogram — the routing-vs-queueing signal per device.
+fn queued_line(m: &Metrics) -> String {
+    if m.queued.is_empty() {
+        return "queued: (no dispatched requests)".to_string();
+    }
+    format!(
+        "queued: mean {} p50 {} p90 {} max {} over {} request(s)",
+        fmt_duration(m.queued.mean()),
+        fmt_duration(m.queued.quantile(0.5)),
+        fmt_duration(m.queued.quantile(0.9)),
+        fmt_duration(m.queued.max()),
+        m.queued.count()
+    )
 }
 
 fn cmd_list() -> i32 {

@@ -1,6 +1,8 @@
-//! The serving facade: [`Engine`] owns the worker thread and shutdown,
-//! [`Client`] is the cloneable submission handle, [`SubmitRequest`] is
-//! the typed request builder, and [`Ticket`] is the reply future.
+//! The serving facade: [`Engine`] owns one worker per fleet device,
+//! [`Client`] is the cloneable submission handle with the
+//! predictor-guided router in front, [`SubmitRequest`] is the typed
+//! request builder (now with an optional device pin), and [`Ticket`] is
+//! the reply future.
 //!
 //! ```text
 //! let engine = Engine::start(Arc::new(Context::new()), Path::new("artifacts"))?;
@@ -9,27 +11,51 @@
 //!     SubmitRequest::new("bicgk", 256, 256).synth(42),
 //! )?;
 //! let result = ticket.wait()?;                  // RunResult
-//! let metrics = engine.shutdown();              // drain + join
+//! let metrics = engine.shutdown();              // drain + join (aggregated)
 //! ```
 //!
-//! The PJRT runtime is `!Send`, so the engine builds the
-//! [`Coordinator`] *on* the worker thread and reports readiness (or the
-//! load error) back before `start` returns. Requests flow over a
-//! private channel; the worker runs the drain-and-group scheduler
-//! (`Coordinator::serve_batched`) so concurrent submissions sharing a
-//! `(seq, padded size, device, plan)` key execute as one batch.
+//! A heterogeneous fleet starts from a registry instead of a context;
+//! the single-device constructors above wrap the context in a one-slot
+//! registry, so existing callers are source-compatible:
+//!
+//! ```text
+//! let reg = Arc::new(DeviceRegistry::simulated(4, "artifacts"));
+//! let engine = Engine::start_fleet(reg, Path::new("artifacts"), cfg)?;
+//! client.submit(SubmitRequest::new("waxpby", 32, 65536))?;          // routed
+//! client.submit(SubmitRequest::new("waxpby", 32, 65536)
+//!     .pin("GeForce GTX 480 (model)"))?;                            // pinned
+//! let fleet = engine.shutdown_fleet();          // per-device Metrics
+//! ```
+//!
+//! The PJRT runtime is `!Send`, so the engine builds each device's
+//! [`Coordinator`] *on* that device's worker thread (N devices
+//! calibrate and come up in parallel) and reports readiness (or the
+//! load error) back before `start_fleet` returns. The catalog manifest
+//! is parsed once and shared across the per-device runtimes. Each
+//! worker runs the drain-and-group scheduler
+//! (`Coordinator::serve_batched`) over its own plan cache, so
+//! concurrent submissions sharing a `(seq, padded size, device, plan)`
+//! key execute as one batch on one device.
+//!
+//! Unpinned submissions go through [`CostModel::route`]: predicted
+//! seconds of the executed variant on each device's own calibration,
+//! scaled by the device's live queue depth — the argmin wins. Pinned
+//! submissions bypass the router entirely, which is what makes them
+//! bit-identical to a single-device engine (`tests/fleet_serving.rs`).
 
-use super::{Context, Control, Coordinator, Metrics, Msg, PlanChoice, Request, RequestInputs};
-use crate::runtime::{RunResult, Tensor};
+use super::{Context, Control, Coordinator, Metrics, Msg, PlanChoice, Reply, Request, RequestInputs};
+use crate::fleet::{CostModel, DeviceId, DeviceRegistry};
+use crate::runtime::{RunResult, Runtime, Tensor};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Scheduler knobs of one engine.
+/// Scheduler knobs of one engine (shared by every fleet worker).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     /// How long a scheduling turn keeps collecting requests after the
@@ -50,14 +76,15 @@ impl Default for EngineConfig {
 }
 
 /// Builder for one execution request. Defaults: deterministic synthetic
-/// inputs (seed 0) and the coordinator's plan cache deciding the
-/// variant.
+/// inputs (seed 0), the coordinator's plan cache deciding the variant,
+/// and the fleet router deciding the device.
 pub struct SubmitRequest {
     seq: String,
     m: usize,
     n: usize,
     inputs: RequestInputs,
     variant: Option<PlanChoice>,
+    device: Option<String>,
 }
 
 impl SubmitRequest {
@@ -68,6 +95,7 @@ impl SubmitRequest {
             n,
             inputs: RequestInputs::Synth { seed: 0 },
             variant: None,
+            device: None,
         }
     }
 
@@ -87,6 +115,14 @@ impl SubmitRequest {
     /// Force a plan variant instead of letting the plan cache decide.
     pub fn variant(mut self, v: PlanChoice) -> SubmitRequest {
         self.variant = Some(v);
+        self
+    }
+
+    /// Pin the request to a registered device (by exact name),
+    /// bypassing the router. Pinned execution is bit-identical to a
+    /// single-device engine; an unknown name fails the submit.
+    pub fn pin(mut self, device: impl Into<String>) -> SubmitRequest {
+        self.device = Some(device.into());
         self
     }
 }
@@ -119,37 +155,100 @@ impl<T> Ticket<T> {
     }
 }
 
-/// Cloneable, `Send` submission handle to a running [`Engine`].
+/// Routing state shared by the engine handle and every [`Client`]
+/// clone: the cost model (which owns the registry) and the live
+/// per-device queue depths (incremented at submit, decremented when a
+/// reply leaves its worker). The request senders themselves are *not*
+/// shared — each handle owns its own `mpsc::Sender` clones.
+struct Shared {
+    model: CostModel,
+    depths: Vec<Arc<AtomicU64>>,
+}
+
+impl Shared {
+    /// Point-in-time queue depths, parallel to registry indices.
+    fn snapshot(&self) -> Vec<u64> {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Lane index for a request: the pin when present (an unknown name
+    /// is an error, not a silent reroute), otherwise the router's
+    /// argmin — short-circuited on one-device fleets so the
+    /// single-device serve path never pays a forecast.
+    fn lane_for(&self, pin: Option<&str>, seq: &str, m: usize, n: usize) -> Result<usize> {
+        match pin {
+            Some(name) => match self.model.registry().find(name) {
+                Some(id) => Ok(id.index()),
+                None => Err(anyhow!(
+                    "unknown device '{name}' (registered: {})",
+                    self.model
+                        .registry()
+                        .ids()
+                        .iter()
+                        .map(DeviceId::name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )),
+            },
+            None if self.depths.len() == 1 => Ok(0),
+            None => Ok(self.model.route(seq, m, n, &self.snapshot())),
+        }
+    }
+}
+
+/// Cloneable, `Send` submission handle to a running [`Engine`]. Routing
+/// happens here, on the submitting thread: the worker a request lands
+/// on is decided before it is enqueued.
 #[derive(Clone)]
 pub struct Client {
-    tx: mpsc::Sender<Msg>,
+    shared: Arc<Shared>,
+    txs: Vec<mpsc::Sender<Msg>>,
 }
 
 impl Client {
     /// Enqueue a request; the returned [`Ticket`] resolves to the run
-    /// result. Fails only when the engine is already shut down.
+    /// result. Fails when the engine is already shut down or the pin
+    /// names an unregistered device.
     pub fn submit(&self, req: SubmitRequest) -> Result<Ticket<RunResult>> {
+        let lane = self
+            .shared
+            .lane_for(req.device.as_deref(), &req.seq, req.m, req.n)?;
+        let depth = &self.shared.depths[lane];
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Run(Request {
-                seq: req.seq,
-                m: req.m,
-                n: req.n,
-                inputs: req.inputs,
-                variant: req.variant,
-                reply,
-            }))
-            .map_err(|_| anyhow!("engine is shut down"))?;
+        // Count the request before sending so a racing router on
+        // another thread sees it; undo if the worker is gone.
+        depth.fetch_add(1, Ordering::Relaxed);
+        let sent = self.txs[lane].send(Msg::Run(Request {
+            seq: req.seq,
+            m: req.m,
+            n: req.n,
+            inputs: req.inputs,
+            variant: req.variant,
+            enqueued: Instant::now(),
+            reply: Reply::new(reply, Some(depth.clone())),
+        }));
+        if sent.is_err() {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("engine is shut down"));
+        }
         Ok(Ticket { rx })
     }
 
     /// Resolve (and cache) the plan for a `(seq, m, n)` key without
-    /// executing anything — the planner runs on the worker exactly as
-    /// it would for an unforced submission. Blocks until the worker
-    /// picks the query up.
+    /// executing anything — the planner runs on the worker of the
+    /// device the router prefers for the key *at steady state* (empty
+    /// queues), so the pre-warm lands where unforced submissions of the
+    /// same key settle once transient backlogs drain, not wherever a
+    /// momentary spike happens to point. Blocks until the worker picks
+    /// the query up.
     pub fn plan(&self, seq: &str, m: usize, n: usize) -> Result<PlanChoice> {
+        let lane = if self.txs.len() == 1 {
+            0
+        } else {
+            self.shared.model.route(seq, m, n, &vec![0; self.txs.len()])
+        };
         let (reply, rx) = mpsc::channel();
-        self.tx
+        self.txs[lane]
             .send(Msg::Control(Control::Plan {
                 seq: seq.to_string(),
                 m,
@@ -160,18 +259,44 @@ impl Client {
         rx.recv()
             .unwrap_or_else(|_| Err(anyhow!("engine dropped the request (shut down mid-flight)")))
     }
+
+    /// The registered device identities, in routing (registry) order.
+    pub fn devices(&self) -> Vec<DeviceId> {
+        self.shared.model.registry().ids()
+    }
 }
 
-/// Owns the serving worker: coordinator construction, the request
-/// channel, and shutdown. Dropping the engine without calling
-/// [`Engine::shutdown`] still stops and joins the worker.
+/// Final or point-in-time metrics of a fleet: one [`Metrics`] per
+/// device, in registry order, plus the aggregate view.
+pub struct FleetMetrics {
+    pub devices: Vec<(DeviceId, Metrics)>,
+}
+
+impl FleetMetrics {
+    /// Fold every device's metrics into one (counters add, batch maxima
+    /// take the max, distributions merge).
+    pub fn aggregate(&self) -> Metrics {
+        let mut total = Metrics::default();
+        for (_, m) in &self.devices {
+            total.merge(m);
+        }
+        total
+    }
+}
+
+/// Owns the serving fleet: per-device coordinator construction, the
+/// request lanes, and shutdown. Dropping the engine without calling
+/// [`Engine::shutdown`] still stops and joins every worker.
 pub struct Engine {
-    tx: Option<mpsc::Sender<Msg>>,
-    worker: Option<JoinHandle<Metrics>>,
+    shared: Arc<Shared>,
+    txs: Vec<mpsc::Sender<Msg>>,
+    ids: Vec<DeviceId>,
+    workers: Vec<Option<JoinHandle<Metrics>>>,
 }
 
 impl Engine {
-    /// Start an engine with the default scheduler configuration.
+    /// Start a single-device engine with the default scheduler
+    /// configuration.
     ///
     /// The context decides its own calibration-cache location; when
     /// serving a non-default catalog directory, build it with
@@ -181,91 +306,170 @@ impl Engine {
         Self::with_config(ctx, artifacts_dir, EngineConfig::default())
     }
 
-    /// Start an engine: spawn the worker, build the coordinator there
-    /// (the PJRT client is `!Send`), and wait for it to come up so load
-    /// errors surface here instead of on the first submit.
+    /// Start a single-device engine: the context is wrapped in a
+    /// one-slot registry (no recalibration), so the serve path is the
+    /// fleet path with the router short-circuited.
     pub fn with_config(
         ctx: Arc<Context>,
         artifacts_dir: &Path,
         cfg: EngineConfig,
     ) -> Result<Engine> {
-        let (tx, rx) = mpsc::channel();
-        let (ready_tx, ready_rx) = mpsc::channel();
-        let dir = artifacts_dir.to_path_buf();
-        let worker = std::thread::spawn(move || {
-            let coord = match Coordinator::new(ctx, &dir) {
-                Ok(c) => {
-                    let _ = ready_tx.send(Ok(()));
-                    c
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return Metrics::default();
-                }
-            };
-            coord.serve_batched(rx, &cfg)
-        });
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Engine {
-                tx: Some(tx),
-                worker: Some(worker),
-            }),
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                Err(e)
-            }
-            Err(_) => {
-                let _ = worker.join();
-                Err(anyhow!("engine worker died during startup"))
+        let registry = Arc::new(DeviceRegistry::from_context(ctx, artifacts_dir));
+        Self::start_fleet(registry, artifacts_dir, cfg)
+    }
+
+    /// Start one worker per registered device: each spawns, builds its
+    /// own coordinator there (the PJRT client is `!Send`; the parsed
+    /// manifest is shared), loads or runs its device's calibration, and
+    /// reports readiness. All workers must come up — any load error
+    /// shuts the rest down and surfaces here instead of on the first
+    /// submit.
+    pub fn start_fleet(
+        registry: Arc<DeviceRegistry>,
+        artifacts_dir: &Path,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        let manifest = Runtime::load_manifest(artifacts_dir)?;
+        let ids = registry.ids();
+        let mut txs = Vec::with_capacity(registry.len());
+        let mut depths = Vec::with_capacity(registry.len());
+        let mut workers = Vec::with_capacity(registry.len());
+        let mut readies = Vec::with_capacity(registry.len());
+        for i in 0..registry.len() {
+            let (tx, rx) = mpsc::channel();
+            let (ready_tx, ready_rx) = mpsc::channel();
+            let reg = registry.clone();
+            let man = manifest.clone();
+            let cfg = cfg.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("fusebla-dev{i}"))
+                .spawn(move || {
+                    let coord = match Coordinator::with_manifest(reg.context(i), man) {
+                        Ok(c) => {
+                            let _ = ready_tx.send(Ok(()));
+                            c
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return Metrics::default();
+                        }
+                    };
+                    coord.serve_batched(rx, &cfg)
+                })
+                .expect("spawning a fleet worker thread");
+            txs.push(tx);
+            depths.push(Arc::new(AtomicU64::new(0)));
+            workers.push(Some(worker));
+            readies.push(ready_rx);
+        }
+        let mut failure = None;
+        for ready in readies {
+            match ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failure = Some(e),
+                Err(_) => failure = Some(anyhow!("a fleet worker died during startup")),
             }
         }
+        if let Some(e) = failure {
+            for tx in &txs {
+                let _ = tx.send(Msg::Control(Control::Shutdown));
+            }
+            for w in workers.into_iter().flatten() {
+                let _ = w.join();
+            }
+            return Err(e);
+        }
+        Ok(Engine {
+            shared: Arc::new(Shared {
+                model: CostModel::new(registry),
+                depths,
+            }),
+            txs,
+            ids,
+            workers,
+        })
     }
 
     /// A new submission handle (cheap; clone freely across threads).
     pub fn client(&self) -> Client {
         Client {
-            tx: self.tx.as_ref().expect("engine is running").clone(),
+            shared: self.shared.clone(),
+            txs: self.txs.clone(),
         }
     }
 
-    /// Point-in-time metrics snapshot without shutting down. Blocks
-    /// until the worker reaches the query in its queue (it answers
-    /// between scheduling turns).
+    /// The registered device identities, in registry order.
+    pub fn devices(&self) -> &[DeviceId] {
+        &self.ids
+    }
+
+    /// Aggregated point-in-time metrics snapshot without shutting down
+    /// (the single-device view; see [`Engine::fleet_metrics`] for the
+    /// per-device breakdown). Blocks until each worker reaches the
+    /// query in its queue (they answer between scheduling turns).
     pub fn metrics(&self) -> Metrics {
-        let (reply, rx) = mpsc::channel();
-        let sent = self
-            .tx
-            .as_ref()
-            .is_some_and(|tx| tx.send(Msg::Control(Control::Metrics(reply))).is_ok());
-        if !sent {
-            return Metrics::default();
-        }
-        rx.recv().unwrap_or_default()
+        self.fleet_metrics().aggregate()
     }
 
-    /// Stop the worker after it finishes everything submitted before
-    /// this call, and return the final metrics. A shutdown sentinel (not
-    /// channel disconnection) stops the loop, so outstanding [`Client`]
-    /// clones cannot keep the engine alive; their later submissions
-    /// fail, and tickets for requests enqueued after the sentinel
-    /// resolve to an error instead of hanging.
-    pub fn shutdown(mut self) -> Metrics {
-        if let Some(tx) = self.tx.take() {
+    /// Per-device point-in-time metrics snapshot, in registry order.
+    /// The query fans out to every worker before any reply is awaited,
+    /// so the snapshot waits for the slowest single turn, not the sum
+    /// of all turns.
+    pub fn fleet_metrics(&self) -> FleetMetrics {
+        let replies: Vec<Option<mpsc::Receiver<Metrics>>> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (reply, rx) = mpsc::channel();
+                tx.send(Msg::Control(Control::Metrics(reply))).ok().map(|_| rx)
+            })
+            .collect();
+        let devices = self
+            .ids
+            .iter()
+            .cloned()
+            .zip(replies.into_iter().map(|rx| match rx {
+                Some(rx) => rx.recv().unwrap_or_default(),
+                None => Metrics::default(),
+            }))
+            .collect();
+        FleetMetrics { devices }
+    }
+
+    /// Stop every worker after it finishes everything submitted before
+    /// this call, and return the aggregated final metrics. A shutdown
+    /// sentinel (not channel disconnection) stops each loop, so
+    /// outstanding [`Client`] clones cannot keep the engine alive;
+    /// their later submissions fail, and tickets for requests enqueued
+    /// after the sentinel resolve to an error instead of hanging.
+    pub fn shutdown(self) -> Metrics {
+        self.shutdown_fleet().aggregate()
+    }
+
+    /// [`Engine::shutdown`] with the per-device breakdown preserved.
+    pub fn shutdown_fleet(mut self) -> FleetMetrics {
+        for tx in &self.txs {
             let _ = tx.send(Msg::Control(Control::Shutdown));
         }
-        match self.worker.take() {
-            Some(w) => w.join().expect("engine worker panicked"),
-            None => Metrics::default(),
-        }
+        let devices = self
+            .ids
+            .iter()
+            .cloned()
+            .zip(self.workers.iter_mut().map(|w| match w.take() {
+                Some(w) => w.join().expect("fleet worker panicked"),
+                None => Metrics::default(),
+            }))
+            .collect();
+        FleetMetrics { devices }
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        if let Some(tx) = self.tx.take() {
+        for tx in &self.txs {
             let _ = tx.send(Msg::Control(Control::Shutdown));
         }
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.iter_mut().filter_map(Option::take) {
             let _ = w.join();
         }
     }
@@ -275,6 +479,7 @@ impl Drop for Engine {
 mod tests {
     use super::super::testutil::stub_catalog;
     use super::*;
+    use crate::sim::DeviceModel;
 
     /// Stub catalog with parseable HLO stubs: planning and scheduling
     /// work end-to-end; only the final PJRT `compile` fails on the
@@ -282,6 +487,17 @@ mod tests {
     /// run without built artifacts.
     fn stub_dir(tag: &str) -> std::path::PathBuf {
         stub_catalog(&format!("engine_{tag}"), &["waxpby", "vadd"], true)
+    }
+
+    /// GTX 480 + GT 430 fleet over a stub catalog (the calibration
+    /// files land in the stub dir, wiped with it).
+    fn stub_fleet(tag: &str, cfg: EngineConfig) -> (std::path::PathBuf, Engine) {
+        let dir = stub_dir(tag);
+        let reg = Arc::new(
+            DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], &dir).unwrap(),
+        );
+        let engine = Engine::start_fleet(reg, &dir, cfg).unwrap();
+        (dir, engine)
     }
 
     #[test]
@@ -389,6 +605,89 @@ mod tests {
         let m = engine.shutdown();
         assert_eq!(m.requests, 2);
         assert_eq!(m.failures, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinned_submissions_land_on_the_pinned_device() {
+        let (dir, engine) = stub_fleet("pin", EngineConfig::default());
+        let client = engine.client();
+        let ids = client.devices();
+        assert_eq!(ids.len(), 2);
+        // two to the slow device, one to the fast — counts must follow
+        // the pins, not the router's preference
+        let slow = ids[1].name().to_string();
+        let fast = ids[0].name().to_string();
+        let tickets = vec![
+            client.submit(SubmitRequest::new("waxpby", 32, 65536).pin(&slow)).unwrap(),
+            client.submit(SubmitRequest::new("waxpby", 32, 65536).pin(&slow)).unwrap(),
+            client.submit(SubmitRequest::new("waxpby", 32, 65536).pin(&fast)).unwrap(),
+        ];
+        for t in tickets {
+            assert!(t.wait().is_err(), "stub backend fails execution");
+        }
+        let fleet = engine.shutdown_fleet();
+        assert_eq!(fleet.devices.len(), 2);
+        assert_eq!(fleet.devices[0].1.requests, 1, "fast device got the one pin");
+        assert_eq!(fleet.devices[1].1.requests, 2, "slow device got both pins");
+        let agg = fleet.aggregate();
+        assert_eq!(agg.requests, 3);
+        // every dispatched request left one queued-duration sample
+        assert_eq!(agg.queued.count(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinning_an_unknown_device_fails_the_submit() {
+        let (dir, engine) = stub_fleet("badpin", EngineConfig::default());
+        let client = engine.client();
+        let err = client
+            .submit(SubmitRequest::new("waxpby", 32, 65536).pin("no such device"))
+            .err()
+            .expect("unknown pin must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown device"), "{msg}");
+        assert!(msg.contains("GTX 480"), "message lists the roster: {msg}");
+        let m = engine.shutdown();
+        assert_eq!(m.requests, 0, "nothing was enqueued");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn router_starves_the_slow_device_on_a_small_burst() {
+        let (dir, engine) = stub_fleet("route", EngineConfig::default());
+        let client = engine.client();
+        // GT 430 is ~6× slower on bandwidth-bound keys; a burst smaller
+        // than the cost ratio must route entirely to the GTX 480 even
+        // with the queue-depth term counting the in-flight requests.
+        let tickets: Vec<_> = (0..3u64)
+            .map(|i| client.submit(SubmitRequest::new("waxpby", 32, 65536).synth(i)).unwrap())
+            .collect();
+        for t in tickets {
+            assert!(t.wait().is_err(), "stub backend fails execution");
+        }
+        let fleet = engine.shutdown_fleet();
+        assert_eq!(fleet.devices[0].1.requests, 3, "fast device takes the burst");
+        assert_eq!(fleet.devices[1].1.requests, 0, "slow device stays idle");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fleet_metrics_snapshot_fans_out_per_device() {
+        let (dir, engine) = stub_fleet("fanout", EngineConfig::default());
+        let client = engine.client();
+        let ids = client.devices();
+        let t = client
+            .submit(SubmitRequest::new("vadd", 32, 65536).pin(ids[1].name()))
+            .unwrap();
+        let _ = t.wait();
+        let live = engine.fleet_metrics();
+        assert_eq!(live.devices[0].0.index(), 0);
+        assert_eq!(live.devices[1].0.index(), 1);
+        assert_eq!(live.devices[0].1.requests, 0);
+        assert_eq!(live.devices[1].1.requests, 1);
+        assert_eq!(live.aggregate().requests, engine.metrics().requests);
+        let _ = engine.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

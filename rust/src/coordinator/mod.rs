@@ -29,42 +29,56 @@
 //! device are part of the key.
 //!
 //! [`Context::new`] also reloads the routine calibration database from
-//! `calibration.txt` next to the artifact catalog (keyed by device name
-//! + library fingerprint) instead of recalibrating every process start;
-//! see [`crate::predict::RoutineDb::load_cached`].
+//! the per-device cache next to the artifact catalog (keyed by device
+//! name + library fingerprint) instead of recalibrating every process
+//! start; see [`crate::predict::RoutineDb::load_or_calibrate`]. A
+//! [`crate::fleet::DeviceRegistry`] holds one such context per
+//! registered device, and the engine then runs one worker (one
+//! coordinator, one plan cache) per device with a predictor-guided
+//! router in front — see [`crate::fleet`].
 
 pub(crate) mod batch;
 pub mod cli;
 pub mod engine;
 
-pub use engine::{Client, Engine, EngineConfig, SubmitRequest, Ticket};
+pub use engine::{Client, Engine, EngineConfig, FleetMetrics, SubmitRequest, Ticket};
 
 use crate::autotune;
 use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
 use crate::library::Library;
 use crate::planner::{self, PlannerConfig};
-use crate::predict::{predict_seq, RoutineDb};
+use crate::predict::RoutineDb;
 use crate::runtime::{refcheck, RunResult, Runtime, Tensor};
 use crate::sequences::{self, Sequence};
 use crate::sim::DeviceModel;
+use crate::util::manifest::Manifest;
+use crate::util::Histogram;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Shared compiler context (built once per process).
+/// Per-device compiler context: the shared function library plus one
+/// device's model and calibration. A single-device process builds one
+/// ([`Context::new`]); a fleet holds one per registered device, sharing
+/// the library `Arc` (see [`crate::fleet::DeviceRegistry`]).
 pub struct Context {
-    pub lib: Library,
+    pub lib: Arc<Library>,
     pub dev: DeviceModel,
-    pub db: RoutineDb,
+    pub db: Arc<RoutineDb>,
+    /// The device name interned once; cloning it into a [`PlanKey`] or
+    /// batch key is a refcount bump, not a `String` allocation.
+    pub device: Arc<str>,
 }
 
 impl Context {
-    /// Build the context, reloading the routine calibration from the
-    /// cache next to the artifact catalog when one is present (see
+    /// Build the default single-device context (the paper's GTX 480),
+    /// reloading the routine calibration from the per-device cache next
+    /// to the artifact catalog when one is present (see
     /// [`Context::with_calibration_cache`]). The catalog directory is
     /// `$FUSEBLA_ARTIFACTS` or `./artifacts`, matching the CLI.
     pub fn new() -> Context {
@@ -74,24 +88,40 @@ impl Context {
         Self::with_calibration_cache(&dir)
     }
 
-    /// Build the context with `dir/calibration.txt` as the persistent
-    /// calibration cache. The cache is keyed by device name + library
-    /// fingerprint; a stale or mismatched file is ignored and rewritten.
-    /// Nothing is written when `dir` does not exist (no catalog, no
-    /// side effects).
+    /// Build the default-device context with `dir` as the persistent
+    /// calibration cache directory (one `calibration.<device>.txt` per
+    /// device; the legacy shared `calibration.txt` is still read as a
+    /// migration path). The cache is keyed by device name + library
+    /// fingerprint; a stale or mismatched file is ignored and
+    /// rewritten. Nothing is written when `dir` does not exist (no
+    /// catalog, no side effects).
     pub fn with_calibration_cache(dir: &Path) -> Context {
-        let lib = Library::standard();
-        let dev = DeviceModel::gtx480();
-        let fp = lib.fingerprint();
-        let path = dir.join("calibration.txt");
-        if let Some(db) = RoutineDb::load_cached(&path, dev.name, fp) {
-            return Context { lib, dev, db };
+        Self::for_device(Arc::new(Library::standard()), DeviceModel::gtx480(), dir)
+    }
+
+    /// Build the context of one fleet device, loading (or running and
+    /// persisting) its own calibration under `cal_dir`.
+    pub fn for_device(lib: Arc<Library>, dev: DeviceModel, cal_dir: &Path) -> Context {
+        let device: Arc<str> = Arc::from(dev.name.as_str());
+        Self::for_device_interned(lib, dev, device, cal_dir)
+    }
+
+    /// [`Context::for_device`] with the interned name supplied by the
+    /// registry, so plan keys share the registry's `Arc`.
+    pub(crate) fn for_device_interned(
+        lib: Arc<Library>,
+        dev: DeviceModel,
+        device: Arc<str>,
+        cal_dir: &Path,
+    ) -> Context {
+        debug_assert_eq!(&*device, dev.name.as_str());
+        let db = Arc::new(RoutineDb::load_or_calibrate(cal_dir, &dev, &lib));
+        Context {
+            lib,
+            dev,
+            db,
+            device,
         }
-        let db = RoutineDb::calibrate(&dev, &lib);
-        if dir.is_dir() {
-            let _ = db.save(&path, dev.name, fp);
-        }
-        Context { lib, dev, db }
     }
 }
 
@@ -153,6 +183,30 @@ pub(crate) enum Control {
     Shutdown,
 }
 
+/// Reply half of one request: the ticket channel plus the router's
+/// queue-depth counter for the device the request was dispatched to.
+/// Sending the (single) reply decrements the depth, so the router's
+/// view of a device's backlog includes everything up to the moment the
+/// result left the worker.
+pub(crate) struct Reply {
+    tx: mpsc::Sender<Result<RunResult>>,
+    depth: Option<Arc<AtomicU64>>,
+}
+
+impl Reply {
+    pub(crate) fn new(tx: mpsc::Sender<Result<RunResult>>, depth: Option<Arc<AtomicU64>>) -> Reply {
+        Reply { tx, depth }
+    }
+
+    /// Deliver the request's one reply (a dropped ticket is fine).
+    pub(crate) fn send(&self, res: Result<RunResult>) {
+        if let Some(d) = &self.depth {
+            d.fetch_sub(1, Ordering::Relaxed);
+        }
+        let _ = self.tx.send(res);
+    }
+}
+
 /// One execution request on the wire between [`Client`] and the worker.
 /// Private — [`Client::submit`] is the only producer, so no hand-wired
 /// reply channels exist outside the engine.
@@ -163,7 +217,9 @@ pub(crate) struct Request {
     pub inputs: RequestInputs,
     /// Force a variant; None = let the coordinator's plan cache decide.
     pub variant: Option<PlanChoice>,
-    pub reply: mpsc::Sender<Result<RunResult>>,
+    /// Submission time, for the queued-duration histogram.
+    pub enqueued: Instant,
+    pub reply: Reply,
 }
 
 /// Aggregated metrics.
@@ -199,6 +255,11 @@ pub struct Metrics {
     pub executable_compiles: u64,
     /// Executable-cache hits inside the runtime.
     pub executable_cache_hits: u64,
+    /// Time executed requests spent queued before their batch was
+    /// dispatched (submission → batch start). Per device this is the
+    /// routing-vs-queueing signal: a device whose queue wait dwarfs its
+    /// execution time is over-subscribed.
+    pub queued: Histogram,
     /// Per-sequence (executed-request count, batch-attributed seconds).
     /// Requests rejected before dispatch (e.g. plan-resolution errors)
     /// appear only in `requests`/`failures`.
@@ -214,6 +275,32 @@ impl Metrics {
             self.batch_size_sum as f64 / self.batches as f64
         }
     }
+
+    /// Fold another worker's metrics into this one (the fleet
+    /// aggregate): counters add, batch maxima take the max, per-seq and
+    /// queued-duration distributions merge.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.failures += other.failures;
+        self.seconds_total += other.seconds_total;
+        self.plan_cache_hits += other.plan_cache_hits;
+        self.plan_cache_misses += other.plan_cache_misses;
+        self.plan_cache_evictions += other.plan_cache_evictions;
+        self.batches += other.batches;
+        self.batched_requests += other.batched_requests;
+        self.max_batch_size = self.max_batch_size.max(other.max_batch_size);
+        self.batch_size_sum += other.batch_size_sum;
+        self.resolve_hits += other.resolve_hits;
+        self.resolve_misses += other.resolve_misses;
+        self.executable_compiles += other.executable_compiles;
+        self.executable_cache_hits += other.executable_cache_hits;
+        self.queued.merge(&other.queued);
+        for (seq, (count, secs)) in &other.per_seq {
+            let e = self.per_seq.entry(seq.clone()).or_insert((0, 0.0));
+            e.0 += count;
+            e.1 += secs;
+        }
+    }
 }
 
 /// Cache key of one plan decision: a sequence at a problem size on a
@@ -221,20 +308,26 @@ impl Metrics {
 /// `ProblemSize` (or GPU model) is never served for another. Sizes are
 /// stored tile-padded (the granularity the planner actually plans at),
 /// so raw sizes that pad to the same shape share one entry instead of
-/// re-planning per raw pair.
+/// re-planning per raw pair. The device name is interned (`Arc<str>`,
+/// issued by the context/registry): per-request key construction bumps
+/// a refcount instead of allocating a fresh `String`, and equality,
+/// ordering and hashing still compare the name's *contents*.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct PlanKey {
     pub seq: String,
     pub m: usize,
     pub n: usize,
-    pub device: String,
+    pub device: Arc<str>,
 }
 
 impl PlanKey {
     /// Key for a sequence at a problem size on a device. Callers pass
     /// the tile-padded size (pad once at the boundary — `choose_plan`
-    /// does); an unpadded size here is a bug, not a request to pad.
-    pub fn new(seq: &str, p: ProblemSize, device: &str) -> PlanKey {
+    /// does); an unpadded size here is a bug, not a request to pad. On
+    /// the serve path `device` is the context's interned name
+    /// (`ctx.device.clone()`); `&str`/`String` also convert, for tests
+    /// and ad-hoc keys.
+    pub fn new(seq: &str, p: ProblemSize, device: impl Into<Arc<str>>) -> PlanKey {
         debug_assert!(
             p == p.padded(),
             "PlanKey sizes must be tile-padded (got {}x{})",
@@ -245,7 +338,7 @@ impl PlanKey {
             seq: seq.to_string(),
             m: p.m,
             n: p.n,
-            device: device.to_string(),
+            device: device.into(),
         }
     }
 }
@@ -335,9 +428,15 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(ctx: Arc<Context>, artifacts_dir: &Path) -> Result<Coordinator> {
+        Self::with_manifest(ctx, Runtime::load_manifest(artifacts_dir)?)
+    }
+
+    /// Build over an already-parsed manifest — fleet workers share one
+    /// parse across their per-device runtimes.
+    pub fn with_manifest(ctx: Arc<Context>, manifest: Arc<Manifest>) -> Result<Coordinator> {
         Ok(Coordinator {
             ctx,
-            runtime: Runtime::load(artifacts_dir)?,
+            runtime: Runtime::with_manifest(manifest)?,
             plan_cache: PlanCache::new(PlanCache::DEFAULT_CAP),
             metrics: Metrics::default(),
         })
@@ -360,31 +459,34 @@ impl Coordinator {
         // Pad exactly once: the padded size is both the plan-cache key
         // and the size the planner plans at (PlanKey::new asserts it).
         let p = ProblemSize::new(m, n).padded();
-        let key = PlanKey::new(seq_name, p, self.ctx.dev.name);
+        let key = PlanKey::new(seq_name, p, self.ctx.device.clone());
         let cached = self.plan_cache.get(&key);
         self.sync_plan_cache_metrics();
         if let Some(choice) = cached {
             return Ok(choice);
         }
-        let (prog, graph) = seq.graph(&self.ctx.lib);
-        let planned = planner::plan(
-            &prog,
-            &self.ctx.lib,
-            &graph,
-            &self.ctx.db,
-            &ImplAxes::minimal(),
-            p,
-            &PlannerConfig::default(),
-        );
         // Execute the CUBLAS decomposition only if it actually predicts
         // faster than the searched plan. Ties go to the fused artifacts:
         // even a no-fusion plan is retuned per size, while the baseline
         // is fixed-config and pays copy kernels for the S-tagged
         // sequences. (Predictions favor fused on all 11 sequences; the
-        // comparison is what makes this a per-size decision.)
+        // comparison is what makes this a per-size decision.) The same
+        // forecast, on each device's own calibration, is what the fleet
+        // router ranks devices by — one definition of "fast" everywhere.
+        let (prog, graph) = seq.graph(&self.ctx.lib);
         let cublas_prog = seq.cublas_program(&self.ctx.lib);
         let baseline = autotune::baseline_plan(&cublas_prog, &self.ctx.lib);
-        let choice = if predict_seq(&self.ctx.db, &baseline, p) < planned.predicted {
+        let forecast = planner::forecast_variants(
+            &prog,
+            &self.ctx.lib,
+            &graph,
+            &self.ctx.db,
+            &ImplAxes::minimal(),
+            &baseline,
+            p,
+            &PlannerConfig::default(),
+        );
+        let choice = if forecast.baseline_wins() {
             PlanChoice::Cublas
         } else {
             PlanChoice::Fused
@@ -417,15 +519,20 @@ impl Coordinator {
     /// copy.
     pub(crate) fn execute_batch(&mut self, b: batch::Batch) {
         debug_assert_eq!(
-            b.key.device, self.ctx.dev.name,
+            b.key.device, self.ctx.device,
             "batch grouped for another device"
         );
         let batch::Batch { key, m, n, reqs } = b;
         let variant = key.choice.as_str();
         let size = reqs.len() as u64;
+        let dispatched = Instant::now();
         let mut inputs = Vec::with_capacity(reqs.len());
         let mut replies = Vec::with_capacity(reqs.len());
         for r in reqs {
+            // queued = submission → batch dispatch, per member
+            self.metrics
+                .queued
+                .record(dispatched.duration_since(r.enqueued).as_secs_f64());
             inputs.push(match r.inputs {
                 RequestInputs::Explicit(map) => map,
                 RequestInputs::Synth { seed } => {
@@ -462,7 +569,7 @@ impl Coordinator {
         self.metrics.failures += results.iter().filter(|r| r.is_err()).count() as u64;
         self.sync_runtime_metrics();
         for (reply, res) in replies.iter().zip(results) {
-            let _ = reply.send(res);
+            reply.send(res);
         }
     }
 
@@ -470,9 +577,9 @@ impl Coordinator {
     /// `choose_plan` per key), then execute each group as one dispatch
     /// and reply per request.
     fn run_turn(&mut self, queue: Vec<Request>) {
-        let device = self.ctx.dev.name;
+        let device = self.ctx.device.clone();
         let (batches, failed) =
-            batch::group(queue, device, |seq, m, n| self.choose_plan(seq, m, n));
+            batch::group(queue, &device, |seq, m, n| self.choose_plan(seq, m, n));
         // Requests rejected before dispatch count toward requests and
         // failures but not per_seq, which tracks *executed* traffic —
         // a never-executed request must not dilute a sequence's mean
@@ -480,7 +587,7 @@ impl Coordinator {
         for (req, err) in failed {
             self.metrics.requests += 1;
             self.metrics.failures += 1;
-            let _ = req.reply.send(Err(err));
+            req.reply.send(Err(err));
         }
         for b in batches {
             self.execute_batch(b);
@@ -678,7 +785,7 @@ mod tests {
             seq: seq.to_string(),
             m,
             n,
-            device: "GeForce GTX 480 (model)".to_string(),
+            device: "GeForce GTX 480 (model)".into(),
         }
     }
 
@@ -702,7 +809,7 @@ mod tests {
         assert_eq!(cache.get(&key("bicgk", 512, 512)), None);
         // same sequence and size, other device → miss
         let mut other_dev = key("bicgk", 256, 256);
-        other_dev.device = "some other GPU".to_string();
+        other_dev.device = "some other GPU".into();
         assert_eq!(cache.get(&other_dev), None);
         // exact key → hit
         assert_eq!(cache.get(&key("bicgk", 256, 256)), Some(PlanChoice::Fused));
@@ -757,7 +864,8 @@ mod tests {
                 n,
                 inputs: RequestInputs::Synth { seed: 7 },
                 variant: None, // let the plan cache decide
-                reply: rtx,
+                enqueued: Instant::now(),
+                reply: Reply::new(rtx, None),
             }
         };
         coord.run_turn(vec![request(32, 65536)]); // cold: plans
@@ -770,6 +878,8 @@ mod tests {
         coord.run_turn(vec![request(32, 1024)]);
         assert_eq!(coord.metrics.plan_cache_misses, 2);
         assert_eq!(coord.metrics.plan_cache_hits, 1);
+        // every dispatched request leaves one queued-duration sample
+        assert_eq!(coord.metrics.queued.count(), 3);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -809,7 +919,8 @@ mod tests {
                 n: 65536,
                 inputs: RequestInputs::Synth { seed: i },
                 variant: Some(PlanChoice::Fused),
-                reply: rtx,
+                enqueued: Instant::now(),
+                reply: Reply::new(rtx, None),
             }))
             .unwrap();
             replies.push(rrx);
@@ -839,7 +950,8 @@ mod tests {
             n: 7,
             inputs: RequestInputs::Explicit(BTreeMap::new()),
             variant: Some(PlanChoice::Fused),
-            reply: rtx,
+            enqueued: Instant::now(),
+            reply: Reply::new(rtx, None),
         };
         coord.run_turn(vec![req]);
         let reply = rrx.recv().unwrap();

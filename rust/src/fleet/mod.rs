@@ -1,0 +1,288 @@
+//! Heterogeneous fleet serving: the device registry and the
+//! predictor-guided router (paper §6's multi-GPU future work, applied
+//! to the serve stack).
+//!
+//! The single-device serve path is `Context → Coordinator → Engine`:
+//! one device model, one calibration, one plan cache, one worker. This
+//! module is everything *above* that stack needed to serve a fleet:
+//!
+//! * [`DeviceRegistry`] owns N (possibly heterogeneous) device models,
+//!   each with its own lazily-calibrated, persistently-cached
+//!   [`RoutineDb`](crate::predict::RoutineDb) — one calibration file
+//!   per device (see [`crate::predict::calibration_path`]), so two
+//!   devices never clobber a shared `calibration.txt`;
+//! * [`DeviceId`] is the registry-issued interned identity: the
+//!   `Arc<str>` name it carries is cloned into every
+//!   [`PlanKey`](crate::coordinator::PlanKey)/batch key instead of
+//!   allocating a fresh `String` per request;
+//! * [`CostModel`] (see [`router`]) scores a batch key on every
+//!   device's calibration with the paper's benchmark-driven predictor
+//!   and routes to the cheapest device given current queue depths.
+//!
+//! The engine ([`crate::coordinator::engine`]) spawns one worker per
+//! registered device, each running the existing drain-and-group batch
+//! scheduler over its own `Coordinator` (own plan cache, own runtime).
+//! Pinned submissions bypass the router, so their execution is
+//! bit-identical to a single-device engine.
+
+pub mod router;
+
+pub use router::CostModel;
+
+use crate::coordinator::Context;
+use crate::library::Library;
+use crate::predict::sanitize_device;
+use crate::sim::DeviceModel;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+/// Registry-issued identity of one fleet device: a dense index (the
+/// worker lane) plus the interned device name (shared by every plan
+/// key built for the device — cloning it is a refcount bump, not a
+/// string allocation).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DeviceId {
+    index: usize,
+    name: Arc<str>,
+}
+
+impl DeviceId {
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The interned name, for building plan keys without allocating.
+    pub fn interned(&self) -> &Arc<str> {
+        &self.name
+    }
+}
+
+impl fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{} {}", self.index, self.name)
+    }
+}
+
+/// The paper-era profile cycle [`DeviceRegistry::simulated`] draws
+/// from: the testbed GTX 480, the faster GTX 580, and the deliberately
+/// weak GT 430 (the router should starve it unless the fast parts are
+/// saturated).
+pub fn profiles() -> Vec<DeviceModel> {
+    vec![
+        DeviceModel::gtx480(),
+        DeviceModel::gtx580(),
+        DeviceModel::gt430(),
+    ]
+}
+
+struct Slot {
+    dev: DeviceModel,
+    name: Arc<str>,
+    /// Per-device serving context, built (and its calibration loaded or
+    /// run) on first use. `OnceLock` serializes concurrent first uses,
+    /// so N workers starting at once calibrate each device exactly
+    /// once.
+    ctx: OnceLock<Arc<Context>>,
+}
+
+/// Owns the fleet roster: N device models, their interned identities,
+/// and their lazily-built per-device [`Context`]s (calibration +
+/// shared library). Shared via `Arc` between the engine, its workers
+/// and the router.
+pub struct DeviceRegistry {
+    lib: Arc<Library>,
+    cal_dir: PathBuf,
+    slots: Vec<Slot>,
+}
+
+impl DeviceRegistry {
+    /// Register a roster of devices with `cal_dir` as the calibration
+    /// cache directory (one file per device). Rejects empty rosters and
+    /// name collisions — including *sanitized*-name collisions, which
+    /// would make two devices ping-pong one calibration file.
+    pub fn new(devices: Vec<DeviceModel>, cal_dir: impl Into<PathBuf>) -> Result<DeviceRegistry> {
+        if devices.is_empty() {
+            return Err(anyhow!("device registry needs at least one device"));
+        }
+        let mut seen = BTreeSet::new();
+        for d in &devices {
+            if !seen.insert(sanitize_device(&d.name)) {
+                return Err(anyhow!(
+                    "device name '{}' collides with another registered device \
+                     (calibration files are keyed by sanitized name)",
+                    d.name
+                ));
+            }
+        }
+        Ok(DeviceRegistry {
+            lib: Arc::new(Library::standard()),
+            cal_dir: cal_dir.into(),
+            slots: devices
+                .into_iter()
+                .map(|dev| {
+                    let name: Arc<str> = Arc::from(dev.name.as_str());
+                    Slot {
+                        dev,
+                        name,
+                        ctx: OnceLock::new(),
+                    }
+                })
+                .collect(),
+        })
+    }
+
+    /// A fleet of `n` simulated devices cycling through [`profiles`];
+    /// repeat instances of a profile are renamed ("… #2") so identities,
+    /// plan caches and calibration files stay distinct.
+    pub fn simulated(n: usize, cal_dir: impl Into<PathBuf>) -> DeviceRegistry {
+        assert!(n >= 1, "a fleet needs at least one device");
+        let cycle = profiles();
+        let devices = (0..n)
+            .map(|i| {
+                let mut dev = cycle[i % cycle.len()].clone();
+                let repeat = i / cycle.len();
+                if repeat > 0 {
+                    dev.name = format!("{} #{}", dev.name, repeat + 1);
+                }
+                dev
+            })
+            .collect();
+        Self::new(devices, cal_dir).expect("cycled profiles cannot collide")
+    }
+
+    /// Wrap an already-built single-device context as a one-slot
+    /// registry — the compatibility path [`crate::Engine::start`] uses,
+    /// so existing callers pay no recalibration.
+    pub fn from_context(ctx: Arc<Context>, cal_dir: impl Into<PathBuf>) -> DeviceRegistry {
+        let cell = OnceLock::new();
+        let _ = cell.set(ctx.clone());
+        let slot = Slot {
+            dev: ctx.dev.clone(),
+            name: ctx.device.clone(),
+            ctx: cell,
+        };
+        DeviceRegistry {
+            lib: ctx.lib.clone(),
+            cal_dir: cal_dir.into(),
+            slots: vec![slot],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The shared function library every device plans against.
+    pub fn library(&self) -> &Arc<Library> {
+        &self.lib
+    }
+
+    pub fn id(&self, index: usize) -> DeviceId {
+        DeviceId {
+            index,
+            name: self.slots[index].name.clone(),
+        }
+    }
+
+    pub fn ids(&self) -> Vec<DeviceId> {
+        (0..self.len()).map(|i| self.id(i)).collect()
+    }
+
+    /// Look an identity up by exact device name (the submit-time pin).
+    pub fn find(&self, name: &str) -> Option<DeviceId> {
+        self.slots
+            .iter()
+            .position(|s| &*s.name == name)
+            .map(|i| self.id(i))
+    }
+
+    pub fn model(&self, index: usize) -> &DeviceModel {
+        &self.slots[index].dev
+    }
+
+    /// The per-device serving context. First use loads the device's
+    /// persistent calibration (or calibrates and persists it); repeats
+    /// return the same `Arc`.
+    pub fn context(&self, index: usize) -> Arc<Context> {
+        let slot = &self.slots[index];
+        slot.ctx
+            .get_or_init(|| {
+                Arc::new(Context::for_device_interned(
+                    self.lib.clone(),
+                    slot.dev.clone(),
+                    slot.name.clone(),
+                    &self.cal_dir,
+                ))
+            })
+            .clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fusebla_fleet_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn simulated_fleet_names_are_distinct() {
+        let reg = DeviceRegistry::simulated(7, scratch("names"));
+        assert_eq!(reg.len(), 7);
+        let names: BTreeSet<String> = reg.ids().iter().map(|d| d.name().to_string()).collect();
+        assert_eq!(names.len(), 7, "{names:?}");
+        // the cycle restarts with an instance suffix
+        assert_eq!(reg.id(3).name(), "GeForce GTX 480 (model) #2");
+        assert_eq!(reg.find(reg.id(5).name()), Some(reg.id(5)));
+        assert_eq!(reg.find("no such device"), None);
+    }
+
+    #[test]
+    fn registry_rejects_colliding_names() {
+        let mut a = DeviceModel::gtx480();
+        a.name = "GTX 480".into();
+        let mut b = DeviceModel::gtx580();
+        b.name = "gtx-480".into(); // sanitizes identically to a
+        let err = DeviceRegistry::new(vec![a, b], scratch("collide"))
+            .err()
+            .expect("collision must be rejected");
+        assert!(format!("{err:#}").contains("collides"), "{err:#}");
+        assert!(DeviceRegistry::new(vec![], scratch("empty")).is_err());
+    }
+
+    #[test]
+    fn contexts_are_lazy_and_cached() {
+        let dir = scratch("lazyctx");
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = DeviceRegistry::simulated(2, &dir);
+        let a = reg.context(0);
+        let b = reg.context(0);
+        assert!(Arc::ptr_eq(&a, &b), "repeat lookups share one context");
+        // the second device has not been touched: only device 0's
+        // calibration file exists so far
+        let cal0 = crate::predict::calibration_path(&dir, reg.id(0).name());
+        let cal1 = crate::predict::calibration_path(&dir, reg.id(1).name());
+        assert!(cal0.exists());
+        assert!(!cal1.exists(), "device 1 must calibrate lazily");
+        let _ = reg.context(1);
+        assert!(cal1.exists());
+        // identities intern the device name: the plan-key Arc is the
+        // registry's, not a fresh allocation
+        assert!(Arc::ptr_eq(reg.id(0).interned(), &a.device));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

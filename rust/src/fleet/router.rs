@@ -1,0 +1,266 @@
+//! Predictor-guided routing: place each batch key on the device the
+//! paper's benchmark-driven cost model says is cheapest *right now*.
+//!
+//! For a `(seq, tile-padded size)` key the [`CostModel`] forecasts, on
+//! every registered device's own calibration, the seconds of the
+//! variant the coordinator would actually execute there
+//! ([`crate::planner::forecast_variants`] — the same decision
+//! `choose_plan` makes, so the router and the workers share one notion
+//! of "fast"). Forecasts are computed once per key and cached; the
+//! per-submit cost is a map probe plus an argmin over N devices.
+//!
+//! The dispatch score is `predicted_seconds × (queue_depth + 1)`:
+//! a device's backlog multiplies its effective cost, so an idle slow
+//! device eventually beats a saturated fast one (load balancing), while
+//! with empty queues the fastest device always wins (the unit test
+//! pins the GT 430 losing to the GTX 480 for bandwidth-bound BLAS-1).
+//! Unknown sequences route to the shallowest queue — the worker owns
+//! producing the "unknown sequence" error, exactly as on one device.
+//!
+//! Known cold-key tradeoff: the first unpinned submission of a new
+//! `(seq, padded size)` key runs the pruned planner once per device on
+//! the *submitting* thread, and the routed worker then plans its own
+//! device again on the plan-cache miss (N+1 planner runs; every later
+//! submission of the key is a map probe). Single-device engines
+//! short-circuit the router entirely, so the pre-fleet planner-free
+//! submit path is unchanged for existing callers. Moving forecasts onto
+//! the workers (and seeding their plan caches from the router) is the
+//! ROADMAP's sharded-search item.
+
+use super::DeviceRegistry;
+use crate::autotune;
+use crate::fusion::ImplAxes;
+use crate::ir::elem::ProblemSize;
+use crate::planner::{self, PlannerConfig};
+use crate::sequences;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Per-key, per-device forecast cache over a registry. `Send + Sync`:
+/// lives behind the engine's shared state and is consulted from every
+/// client thread.
+pub struct CostModel {
+    registry: Arc<DeviceRegistry>,
+    /// seq → padded (m, n) → predicted best-variant seconds per device
+    /// (parallel to registry indices). Two-level so the hot lookup
+    /// borrows the sequence name instead of allocating a key. Bounded:
+    /// clients control `(m, n)` just like they control plan-cache keys,
+    /// so inserts past [`CostModel::CACHE_CAP`] evict the oldest key
+    /// (FIFO via `order`) instead of growing without bound.
+    cache: Mutex<ForecastCache>,
+}
+
+#[derive(Default)]
+struct ForecastCache {
+    by_seq: BTreeMap<String, BTreeMap<(usize, usize), Arc<Vec<f64>>>>,
+    /// Insertion order of every cached `(seq, padded size)` key.
+    order: VecDeque<(String, (usize, usize))>,
+}
+
+impl CostModel {
+    /// Cap on cached `(seq, padded size)` forecasts. Generous — the
+    /// whole catalog is far smaller — but keeps a size-scanning client
+    /// from growing the router's memory without bound.
+    pub const CACHE_CAP: usize = 4096;
+
+    pub fn new(registry: Arc<DeviceRegistry>) -> CostModel {
+        CostModel {
+            registry,
+            cache: Mutex::new(ForecastCache::default()),
+        }
+    }
+
+    pub fn registry(&self) -> &Arc<DeviceRegistry> {
+        &self.registry
+    }
+
+    /// Predicted seconds of the executed variant per device for
+    /// `(seq, m, n)` (size tile-padded exactly like the plan-cache
+    /// key). `None` for unknown sequences. First call per key runs the
+    /// pruned planner once per device; repeats are a read of the cache.
+    pub fn costs(&self, seq: &str, m: usize, n: usize) -> Option<Arc<Vec<f64>>> {
+        let p = ProblemSize::new(m, n).padded();
+        if let Some(c) = self
+            .cache
+            .lock()
+            .unwrap()
+            .by_seq
+            .get(seq)
+            .and_then(|sizes| sizes.get(&(p.m, p.n)))
+        {
+            return Some(c.clone());
+        }
+        // Forecast outside the lock: the planner fans cost evaluation
+        // out over threads, and a racing duplicate forecast is
+        // bit-identical anyway (pure function of calibration + size).
+        let sq = sequences::by_name(seq)?;
+        let lib = self.registry.library().clone();
+        let (prog, graph) = sq.graph(&lib);
+        let baseline = autotune::baseline_plan(&sq.cublas_program(&lib), &lib);
+        let cfg = PlannerConfig::default();
+        let seconds: Vec<f64> = (0..self.registry.len())
+            .map(|i| {
+                let ctx = self.registry.context(i);
+                planner::forecast_variants(
+                    &prog,
+                    &lib,
+                    &graph,
+                    &ctx.db,
+                    &ImplAxes::minimal(),
+                    &baseline,
+                    p,
+                    &cfg,
+                )
+                .best_seconds()
+            })
+            .collect();
+        let entry = Arc::new(seconds);
+        let mut cache = self.cache.lock().unwrap();
+        // a racing duplicate forecast keeps the first insert; only a
+        // genuinely new key evicts and extends the eviction order
+        let is_new = match cache.by_seq.get(seq) {
+            Some(sizes) => !sizes.contains_key(&(p.m, p.n)),
+            None => true,
+        };
+        if is_new {
+            while cache.order.len() >= Self::CACHE_CAP {
+                // FIFO eviction: forecasts are pure and recomputable,
+                // and real traffic never reaches the cap — this only
+                // bounds a size-scanning client.
+                let (old_seq, old_size) = cache.order.pop_front().expect("order tracks the cache");
+                if let Some(sizes) = cache.by_seq.get_mut(&old_seq) {
+                    sizes.remove(&old_size);
+                    if sizes.is_empty() {
+                        cache.by_seq.remove(&old_seq);
+                    }
+                }
+            }
+            cache.order.push_back((seq.to_string(), (p.m, p.n)));
+        }
+        let out = cache
+            .by_seq
+            .entry(seq.to_string())
+            .or_default()
+            .entry((p.m, p.n))
+            .or_insert(entry)
+            .clone();
+        Some(out)
+    }
+
+    /// Pick the device for one submission given current queue depths
+    /// (parallel to registry indices). Ties break to the lowest index,
+    /// so routing is deterministic.
+    pub fn route(&self, seq: &str, m: usize, n: usize, depths: &[u64]) -> usize {
+        debug_assert_eq!(depths.len(), self.registry.len());
+        match self.costs(seq, m, n) {
+            Some(costs) => score_argmin(&costs, depths),
+            None => shallowest(depths),
+        }
+    }
+}
+
+/// `argmin_i costs[i] × (depths[i] + 1)` — the routing score. Public
+/// within the crate's tests so scoring is testable without an engine.
+pub fn score_argmin(costs: &[f64], depths: &[u64]) -> usize {
+    assert_eq!(costs.len(), depths.len());
+    let mut best = 0;
+    let mut best_score = f64::INFINITY;
+    for (i, (&c, &d)) in costs.iter().zip(depths).enumerate() {
+        let score = c * (d as f64 + 1.0);
+        if score < best_score {
+            best = i;
+            best_score = score;
+        }
+    }
+    best
+}
+
+/// Fallback for unroutable (unknown-sequence) submissions: the
+/// shallowest queue, ties to the lowest index.
+pub fn shallowest(depths: &[u64]) -> usize {
+    depths
+        .iter()
+        .enumerate()
+        .min_by_key(|&(_, &d)| d)
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::DeviceModel;
+
+    fn two_device_model(tag: &str) -> CostModel {
+        let dir = std::env::temp_dir().join(format!("fusebla_router_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = DeviceRegistry::new(
+            vec![DeviceModel::gtx480(), DeviceModel::gt430()],
+            dir,
+        )
+        .unwrap();
+        CostModel::new(Arc::new(reg))
+    }
+
+    /// The acceptance-criteria unit test: with empty queues, an
+    /// obviously-slower device never wins routing for bandwidth-bound
+    /// BLAS-1 sequences.
+    #[test]
+    fn slow_device_never_wins_on_empty_queues() {
+        let model = two_device_model("slowloses");
+        for seq in ["waxpby", "vadd", "sscal", "axpydot"] {
+            for (m, n) in [(32, 65536), (32, 1 << 20)] {
+                let costs = model.costs(seq, m, n).expect("known sequence");
+                assert!(
+                    costs[0] < costs[1],
+                    "{seq} m{m} n{n}: GTX 480 {} must beat GT 430 {}",
+                    costs[0],
+                    costs[1]
+                );
+                assert_eq!(model.route(seq, m, n, &[0, 0]), 0);
+            }
+        }
+    }
+
+    /// Queue depth flips the decision: a saturated fast device loses to
+    /// an idle slow one once its backlog outweighs the hardware gap.
+    #[test]
+    fn deep_queue_overflows_to_the_slow_device() {
+        let model = two_device_model("overflow");
+        let costs = model.costs("waxpby", 32, 65536).unwrap();
+        let ratio = costs[1] / costs[0];
+        assert!(ratio > 1.0);
+        // depth just below the ratio: fast still wins; above: slow wins
+        let flip = ratio.ceil() as u64;
+        assert_eq!(model.route("waxpby", 32, 65536, &[flip.saturating_sub(2), 0]), 0);
+        assert_eq!(model.route("waxpby", 32, 65536, &[flip + 1, 0]), 1);
+    }
+
+    #[test]
+    fn forecasts_are_cached_per_padded_key() {
+        let model = two_device_model("cache");
+        let a = model.costs("waxpby", 32, 65530).unwrap();
+        let b = model.costs("waxpby", 32, 65536).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "padded-identical sizes share one forecast");
+        // the cache is bounded: its book-keeping never exceeds the cap
+        let order_len = model.cache.lock().unwrap().order.len();
+        assert_eq!(order_len, 1);
+        assert!(CostModel::CACHE_CAP >= 1);
+    }
+
+    #[test]
+    fn unknown_sequences_route_to_the_shallowest_queue() {
+        let model = two_device_model("unknown");
+        assert!(model.costs("ghost", 32, 32).is_none());
+        assert_eq!(model.route("ghost", 32, 32, &[3, 1]), 1);
+        assert_eq!(model.route("ghost", 32, 32, &[2, 2]), 0, "ties to lowest index");
+    }
+
+    #[test]
+    fn scoring_is_deterministic() {
+        assert_eq!(score_argmin(&[1.0, 2.0], &[0, 0]), 0);
+        assert_eq!(score_argmin(&[1.0, 2.0], &[3, 0]), 1);
+        assert_eq!(score_argmin(&[1.0, 1.0], &[0, 0]), 0, "ties to lowest index");
+        assert_eq!(shallowest(&[5, 4, 4]), 1);
+    }
+}

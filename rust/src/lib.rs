@@ -12,7 +12,10 @@
 //!   paper's testbed, and a PJRT runtime served through the batching
 //!   [`Engine`]/[`Client`] facade behind an LRU plan cache, executing
 //!   resolve-once plans (indexed manifest + slot-interned environments
-//!   + pinned executables — see [`runtime`]).
+//!   + pinned executables — see [`runtime`]). The engine serves a
+//!   heterogeneous *fleet*: one worker (plan cache, calibration) per
+//!   registered device, with predictor-guided routing in front — see
+//!   [`fleet`].
 //! * **L2 (python/compile)** — JAX definitions of each BLAS sequence.
 //! * **L1 (python/compile/kernels)** — Pallas kernels (fused and
 //!   elementary) mirroring the paper's 32×32-tile scheme.
@@ -24,6 +27,7 @@ pub mod autotune;
 pub mod bench_support;
 pub mod codegen;
 pub mod coordinator;
+pub mod fleet;
 pub mod fusion;
 pub mod graph;
 pub mod ir;
@@ -36,4 +40,5 @@ pub mod sequences;
 pub mod sim;
 pub mod util;
 
-pub use coordinator::{Client, Engine, EngineConfig, SubmitRequest, Ticket};
+pub use coordinator::{Client, Engine, EngineConfig, FleetMetrics, SubmitRequest, Ticket};
+pub use fleet::{DeviceId, DeviceRegistry};

@@ -66,4 +66,7 @@ pub mod cost;
 pub mod search;
 
 pub use cost::{part_key, CostCache, ImplKey};
-pub use search::{plan, plan_space, rank_top_k, Planned, PlannerConfig, PlannerStats, RankedCombo};
+pub use search::{
+    forecast_variants, plan, plan_space, rank_top_k, Planned, PlannerConfig, PlannerStats,
+    RankedCombo, VariantForecast,
+};

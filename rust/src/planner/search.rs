@@ -82,6 +82,55 @@ pub struct RankedCombo {
     pub predicted: f64,
 }
 
+/// Predicted seconds of the two servable variants of a sequence on one
+/// device's calibration: the planner's best (possibly fused) plan vs a
+/// caller-supplied fixed baseline decomposition. This is the decision
+/// the serve path makes everywhere a `(seq, size, device)` key is
+/// scored — the coordinator's `choose_plan` picks the executed variant
+/// from it, and the fleet router ranks devices by [`best_seconds`]
+/// (`VariantForecast::best_seconds`) — so both consumers share one
+/// definition of "how fast is this sequence here".
+#[derive(Clone, Copy, Debug)]
+pub struct VariantForecast {
+    /// Predicted seconds of the planner's winner (retuned per size).
+    pub planned: f64,
+    /// Predicted seconds of the fixed baseline decomposition.
+    pub baseline: f64,
+}
+
+impl VariantForecast {
+    /// The baseline must *strictly* beat the searched plan to be chosen
+    /// — ties go to the planned variant, which is retuned per size.
+    pub fn baseline_wins(&self) -> bool {
+        self.baseline < self.planned
+    }
+
+    /// Predicted seconds of whichever variant would execute.
+    pub fn best_seconds(&self) -> f64 {
+        self.planned.min(self.baseline)
+    }
+}
+
+/// Run the pruned planner and predict the baseline on the same
+/// calibration, yielding the per-device [`VariantForecast`].
+#[allow(clippy::too_many_arguments)]
+pub fn forecast_variants(
+    prog: &Program,
+    lib: &Library,
+    graph: &DepGraph,
+    db: &RoutineDb,
+    axes: &ImplAxes,
+    baseline: &SeqPlan,
+    p: ProblemSize,
+    cfg: &PlannerConfig,
+) -> VariantForecast {
+    let planned = plan(prog, lib, graph, db, axes, p, cfg);
+    VariantForecast {
+        planned: planned.predicted,
+        baseline: crate::predict::predict_seq(db, baseline, p),
+    }
+}
+
 /// Build the pruned space for a program and select the best plan.
 pub fn plan(
     prog: &Program,

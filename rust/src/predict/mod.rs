@@ -199,6 +199,30 @@ impl RoutineDb {
         std::fs::rename(&tmp, path)
     }
 
+    /// Load the persistent calibration of one device from `dir`, or
+    /// calibrate fresh and persist it. The lookup order is the fleet
+    /// layout first — one file per device
+    /// ([`calibration_path`]: `calibration.<sanitized-name>.txt`), so
+    /// two devices' caches live side by side instead of clobbering one
+    /// shared file — then the legacy pre-fleet `calibration.txt`
+    /// (whose header already records which device wrote it, so it is
+    /// only trusted for that device) as a migration path; a legacy hit
+    /// is rewritten into the per-device file. Nothing is written when
+    /// `dir` does not exist.
+    pub fn load_or_calibrate(dir: &Path, dev: &DeviceModel, lib: &Library) -> RoutineDb {
+        let fp = lib.fingerprint();
+        let path = calibration_path(dir, &dev.name);
+        if let Some(db) = Self::load_cached(&path, &dev.name, fp) {
+            return db;
+        }
+        let migrated = Self::load_cached(&dir.join("calibration.txt"), &dev.name, fp);
+        let db = migrated.unwrap_or_else(|| Self::calibrate(dev, lib));
+        if dir.is_dir() {
+            let _ = db.save(&path, &dev.name, fp);
+        }
+        db
+    }
+
     /// Reload a calibration cached by [`RoutineDb::save`]. Returns
     /// `None` when the file is missing, malformed, or was recorded for a
     /// different device or library fingerprint — callers then fall back
@@ -258,6 +282,35 @@ impl RoutineDb {
 /// calibration *algorithm* (micro-plans, environment grid, simulator)
 /// changes in a way the library fingerprint cannot see.
 const CALIBRATION_HEADER: &str = "# fusebla calibration v1";
+
+/// File-name-safe form of a device name: lowercase, runs of
+/// non-alphanumerics collapsed to single dashes
+/// (`"GeForce GTX 480 (model)"` → `"geforce-gtx-480-model"`). Distinct
+/// device names can collide here ("GTX 480" vs "gtx-480") — a fleet
+/// registry rejects such rosters up front, since colliding files would
+/// ping-pong each other's caches.
+pub fn sanitize_device(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else if !out.is_empty() && !out.ends_with('-') {
+            out.push('-');
+        }
+    }
+    while out.ends_with('-') {
+        out.pop();
+    }
+    if out.is_empty() {
+        out.push_str("device");
+    }
+    out
+}
+
+/// Per-device calibration cache file: `dir/calibration.<sanitized>.txt`.
+pub fn calibration_path(dir: &Path, device: &str) -> std::path::PathBuf {
+    dir.join(format!("calibration.{}.txt", sanitize_device(device)))
+}
 
 /// Predicted runtime of one kernel: `max(Σ t_transfer, Σ t_compute)`.
 pub fn predict_kernel(db: &RoutineDb, plan: &KernelPlan, p: ProblemSize) -> f64 {
@@ -341,8 +394,8 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("calibration.txt");
-        db.save(&path, dev.name, 0x1234).unwrap();
-        let loaded = RoutineDb::load_cached(&path, dev.name, 0x1234).expect("cache loads");
+        db.save(&path, &dev.name, 0x1234).unwrap();
+        let loaded = RoutineDb::load_cached(&path, &dev.name, 0x1234).expect("cache loads");
         assert_eq!(loaded.len(), db.len());
         for (routine, envs) in &db.map {
             for (k, secs) in envs {
@@ -363,14 +416,85 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("calibration.txt");
-        db.save(&path, dev.name, 7).unwrap();
+        db.save(&path, &dev.name, 7).unwrap();
         // wrong device, wrong fingerprint, missing file → all None
         assert!(RoutineDb::load_cached(&path, "some other GPU", 7).is_none());
-        assert!(RoutineDb::load_cached(&path, dev.name, 8).is_none());
-        assert!(RoutineDb::load_cached(&dir.join("nope.txt"), dev.name, 7).is_none());
+        assert!(RoutineDb::load_cached(&path, &dev.name, 8).is_none());
+        assert!(RoutineDb::load_cached(&dir.join("nope.txt"), &dev.name, 7).is_none());
         // corrupt payload → None (fall back to recalibration)
         std::fs::write(&path, "# fusebla calibration v1\ngarbage\n").unwrap();
-        assert!(RoutineDb::load_cached(&path, dev.name, 7).is_none());
+        assert!(RoutineDb::load_cached(&path, &dev.name, 7).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn device_name_sanitization() {
+        assert_eq!(sanitize_device("GeForce GTX 480 (model)"), "geforce-gtx-480-model");
+        assert_eq!(sanitize_device("GeForce GTX 480 (model) #2"), "geforce-gtx-480-model-2");
+        assert_eq!(sanitize_device("___"), "device");
+        assert_eq!(sanitize_device(""), "device");
+    }
+
+    /// The fleet contract: two devices' calibrations persist side by
+    /// side in one directory, round-trip bit-identically, and never
+    /// overwrite each other.
+    #[test]
+    fn per_device_caches_roundtrip_side_by_side() {
+        let lib = Library::standard();
+        let fast = DeviceModel::gtx480();
+        let slow = DeviceModel::gt430();
+        let dir = std::env::temp_dir().join(format!("fusebla_calfleet_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let db_fast = RoutineDb::load_or_calibrate(&dir, &fast, &lib);
+        let db_slow = RoutineDb::load_or_calibrate(&dir, &slow, &lib);
+        assert!(calibration_path(&dir, &fast.name).exists());
+        assert!(calibration_path(&dir, &slow.name).exists());
+        // reload both — each must be bit-identical to its own
+        // calibration, not the other device's
+        let re_fast = RoutineDb::load_or_calibrate(&dir, &fast, &lib);
+        let re_slow = RoutineDb::load_or_calibrate(&dir, &slow, &lib);
+        for (db, re) in [(&db_fast, &re_fast), (&db_slow, &re_slow)] {
+            assert_eq!(db.len(), re.len());
+            for (routine, envs) in &db.map {
+                for (k, secs) in envs {
+                    assert_eq!(re.map[routine][k].to_bits(), secs.to_bits(), "{routine}");
+                }
+            }
+        }
+        // the devices genuinely calibrated differently (the slow part
+        // must not silently share the fast part's numbers)
+        let probe = db_fast.map.iter().next().map(|(r, _)| r.clone()).unwrap();
+        assert!(
+            db_fast.map[&probe] != db_slow.map[&probe],
+            "distinct devices must calibrate distinctly"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Migration: a pre-fleet shared `calibration.txt` still loads for
+    /// the device that wrote it, and the first load rewrites it into
+    /// the per-device layout.
+    #[test]
+    fn legacy_shared_cache_migrates() {
+        let lib = Library::standard();
+        let dev = DeviceModel::gtx480();
+        let dir = std::env::temp_dir().join(format!("fusebla_calmig_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let db = RoutineDb::calibrate(&dev, &lib);
+        db.save(&dir.join("calibration.txt"), &dev.name, lib.fingerprint()).unwrap();
+        let loaded = RoutineDb::load_or_calibrate(&dir, &dev, &lib);
+        assert_eq!(loaded.len(), db.len());
+        assert!(
+            calibration_path(&dir, &dev.name).exists(),
+            "legacy hit must be rewritten into the per-device file"
+        );
+        // a *different* device never trusts the legacy file
+        let other = DeviceModel::gt430();
+        let other_db = RoutineDb::load_or_calibrate(&dir, &other, &lib);
+        let probe = db.map.iter().next().map(|(r, _)| r.clone()).unwrap();
+        assert!(other_db.map[&probe] != db.map[&probe]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

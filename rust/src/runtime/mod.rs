@@ -333,7 +333,9 @@ struct RuntimeStats {
 /// The PJRT-backed executor.
 pub struct Runtime {
     client: xla::PjRtClient,
-    pub manifest: Manifest,
+    /// Shared with the engine's other per-device runtimes: a fleet of N
+    /// workers parses the catalog once ([`Runtime::load_manifest`]).
+    pub manifest: Arc<Manifest>,
     /// Artifact key → compiled executable. Read-mostly: hits take the
     /// read lock only; misses compile *outside* the lock and insert
     /// after (a concurrent duplicate compile keeps the first insert).
@@ -346,9 +348,21 @@ pub struct Runtime {
 impl Runtime {
     /// Load the artifact manifest and create the PJRT CPU client.
     pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        Self::with_manifest(Self::load_manifest(artifacts_dir)?)
+    }
+
+    /// Parse the catalog manifest once, for sharing across runtimes
+    /// (each fleet worker owns a runtime — the PJRT client is thread
+    /// bound — but the parsed catalog is immutable and shared).
+    pub fn load_manifest(artifacts_dir: &Path) -> Result<Arc<Manifest>> {
         let manifest_path = artifacts_dir.join("manifest.txt");
         let manifest = Manifest::load(&manifest_path)
             .map_err(|e| anyhow!("{e} — run `make artifacts` first"))?;
+        Ok(Arc::new(manifest))
+    }
+
+    /// Build a runtime over an already-parsed manifest.
+    pub fn with_manifest(manifest: Arc<Manifest>) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
             client,

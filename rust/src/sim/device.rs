@@ -31,7 +31,10 @@ pub enum Limiter {
 /// The simulated device.
 #[derive(Clone, Debug)]
 pub struct DeviceModel {
-    pub name: &'static str,
+    /// Instance name — part of every plan-cache key and calibration
+    /// file, so a fleet registry may rename clones of one profile
+    /// ("… #2") to keep instances distinct.
+    pub name: String,
     pub sm_count: u32,
     pub max_threads_per_sm: u32,
     pub max_blocks_per_sm: u32,
@@ -65,7 +68,7 @@ impl DeviceModel {
     /// The paper's testbed.
     pub fn gtx480() -> Self {
         DeviceModel {
-            name: "GeForce GTX 480 (model)",
+            name: "GeForce GTX 480 (model)".into(),
             sm_count: 15,
             max_threads_per_sm: 1536,
             max_blocks_per_sm: 8,
@@ -82,6 +85,39 @@ impl DeviceModel {
             launch_overhead: 4.0e-6,
             kernel_gap: 2.5e-6,
             wave_latency_floor: 2.2e-6,
+        }
+        .validated()
+    }
+
+    /// Fermi GF110 (GTX 580) — the paper-era step up from the testbed:
+    /// one more SM, higher clocks, 192.4 GB/s theoretical DRAM
+    /// bandwidth, 1581 GFlop/s single precision. Per-SM resource limits
+    /// match GF100; the efficiency coefficients are inherited from the
+    /// calibrated GTX 480 model (same memory architecture).
+    pub fn gtx580() -> Self {
+        DeviceModel {
+            name: "GeForce GTX 580 (model)".into(),
+            sm_count: 16,
+            peak_bandwidth: 192.4e9,
+            peak_compute: 1581.0e9,
+            ..Self::gtx480()
+        }
+        .validated()
+    }
+
+    /// Fermi GF108 (GT 430) — a deliberately weak paper-era part for
+    /// heterogeneous-fleet studies: 2 SMs and a 128-bit DDR3 bus at
+    /// 28.8 GB/s, 269 GFlop/s. Bandwidth-bound BLAS kernels run ~6×
+    /// slower than on the GTX 480, so a cost-aware router should only
+    /// pick it when the faster devices are saturated.
+    pub fn gt430() -> Self {
+        DeviceModel {
+            name: "GeForce GT 430 (model)".into(),
+            sm_count: 2,
+            peak_bandwidth: 28.8e9,
+            peak_compute: 269.0e9,
+            launch_overhead: 5.0e-6,
+            ..Self::gtx480()
         }
         .validated()
     }
@@ -230,6 +266,28 @@ mod tests {
         assert!(
             (105.0..130.0).contains(&bw),
             "sync-heavy bandwidth {bw:.1} GB/s (paper: 115)"
+        );
+    }
+
+    #[test]
+    fn fleet_profiles_order_by_bandwidth() {
+        // The heterogeneous profiles must stay "obviously" ordered for
+        // the routing tests: 580 ≥ 480 ≫ 430 on streaming bandwidth.
+        let occ = 32.0 / 48.0;
+        let b480 = DeviceModel::gtx480().effective_bandwidth(occ, 0);
+        let b580 = DeviceModel::gtx580().effective_bandwidth(occ, 0);
+        let b430 = DeviceModel::gt430().effective_bandwidth(occ, 0);
+        assert!(b580 > b480);
+        assert!(b480 > 4.0 * b430, "GT 430 must be far slower: {b480} vs {b430}");
+        // distinct names → distinct calibration caches and plan keys
+        let names = [
+            DeviceModel::gtx480().name,
+            DeviceModel::gtx580().name,
+            DeviceModel::gt430().name,
+        ];
+        assert_eq!(
+            names.iter().collect::<std::collections::BTreeSet<_>>().len(),
+            3
         );
     }
 

@@ -13,7 +13,7 @@ pub mod table;
 
 pub use json::Json;
 pub use prng::Prng;
-pub use stats::Summary;
+pub use stats::{Histogram, Summary};
 pub use table::Table;
 
 /// Format a byte count with binary units, e.g. `48.0 KiB`.

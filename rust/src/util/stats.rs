@@ -88,6 +88,116 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Fixed-bucket latency histogram (seconds). Buckets are geometric —
+/// the default grid spans 1 µs to ~4 s in ×4 steps — so one histogram
+/// covers both sub-millisecond dispatch waits and multi-second queue
+/// buildups without storing samples. Mergeable across workers (the
+/// fleet aggregates one per device).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Upper bound (inclusive) of each bucket; the last bucket is open.
+    bounds: Vec<f64>,
+    /// Per-bucket counts, `bounds.len() + 1` long (overflow bucket last).
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    /// 1 µs … ~4.2 s in ×4 steps (12 bounds, 13 buckets).
+    fn default() -> Self {
+        Histogram::new((0..12).map(|k| 1e-6 * 4f64.powi(k)).collect())
+    }
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        let counts = vec![0; bounds.len() + 1];
+        Histogram {
+            bounds,
+            counts,
+            count: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Record one sample (seconds; negatives clamp to 0).
+    pub fn record(&mut self, secs: f64) {
+        let secs = secs.max(0.0);
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.count += 1;
+        self.sum += secs;
+        self.max = self.max.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the q-quantile (clamped to the
+    /// observed max — bucket edges, not interpolation, so the answer is
+    /// conservative by at most one bucket width).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let edge = self.bounds.get(i).copied().unwrap_or(self.max);
+                return edge.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram with the same bucket grid (the fleet
+    /// aggregate over per-device metrics).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram grids must match");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +230,47 @@ mod tests {
     fn bench_budget_respects_min_iters() {
         let samples = bench_budget(0, 3, 0.0, || 7);
         assert!(samples.len() >= 3);
+    }
+
+    #[test]
+    fn histogram_records_and_summarizes() {
+        let mut h = Histogram::default();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        for s in [2e-6, 2e-6, 2e-6, 1e-3] {
+            h.record(s);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - (6e-6 + 1e-3) / 4.0).abs() < 1e-12);
+        assert_eq!(h.max(), 1e-3);
+        // three of four samples sit in the 1–4 µs bucket
+        assert_eq!(h.quantile(0.5), 4e-6);
+        // the top quantile is clamped to the observed max
+        assert!(h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn histogram_handles_out_of_range_samples() {
+        let mut h = Histogram::new(vec![1.0, 2.0]);
+        h.record(-5.0); // clamps to 0 → first bucket
+        h.record(100.0); // overflow bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn histograms_merge_bucketwise() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        a.record(2e-6);
+        b.record(1e-3);
+        b.record(1e-3);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 1e-3);
+        assert!((a.sum() - (2e-6 + 2e-3)).abs() < 1e-12);
+        // median of {2µs, 1ms, 1ms} lands in a millisecond bucket
+        assert!(a.quantile(0.5) >= 1e-4);
     }
 }

@@ -1,0 +1,140 @@
+//! Heterogeneous fleet serving, exercised through the public API only:
+//! pinned-submission bit-identity with single-device execution, and
+//! the predictor-guided router's device preference.
+//!
+//! The routing unit tests (cost ordering, queue-depth spillover,
+//! forecast caching) live in `src/fleet/router.rs` and run everywhere;
+//! the execution tests here gate on `artifacts/manifest.txt` like the
+//! rest of the suite — the offline stub backend cannot execute.
+
+use fusebla::coordinator::{synth_inputs, Context, Coordinator, PlanChoice};
+use fusebla::sim::DeviceModel;
+use fusebla::util::proptest::check;
+use fusebla::{DeviceRegistry, Engine, EngineConfig, SubmitRequest};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+/// A GTX 480 + GT 430 fleet whose calibration files live in a scratch
+/// directory (so the test never races the catalog's own cache files).
+fn two_device_registry(tag: &str) -> (PathBuf, Arc<DeviceRegistry>) {
+    let cal = std::env::temp_dir().join(format!("fusebla_fleetsrv_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cal);
+    std::fs::create_dir_all(&cal).unwrap();
+    let reg = DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], &cal).unwrap();
+    (cal, Arc::new(reg))
+}
+
+/// The acceptance-criteria property: a pinned submission through the
+/// fleet engine is bit-identical to single-device `run_seq_batch` on
+/// the same inputs — routing and per-device plan caches change *where*
+/// a request runs, never its arithmetic. Holds for every device in the
+/// roster, including the deliberately slow heterogeneous one.
+#[test]
+fn pinned_submissions_bit_identical_to_single_device_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (cal, registry) = two_device_registry("bitident");
+    let ids = registry.ids();
+    let engine = Engine::start_fleet(
+        registry,
+        &dir,
+        EngineConfig {
+            batch_window: Duration::from_millis(50),
+            max_batch: 64,
+        },
+    )
+    .unwrap();
+    let client = engine.client();
+    // the single-device reference: the plain coordinator's batch path
+    let coord = Coordinator::new(Arc::new(Context::new()), &dir).unwrap();
+    let rt = coord.runtime();
+    check("pinned fleet submissions match run_seq_batch", 12, |g| {
+        let seq = *g.choose(&["waxpby", "vadd", "sscal", "axpydot"]);
+        let sizes = rt.sizes_of(seq, "fused");
+        let (m, n) = *g.choose(&sizes);
+        let device = g.choose(&ids).clone();
+        let seeds: Vec<u64> = (0..g.usize(1, 4)).map(|_| g.rng().below(1000)).collect();
+        let inputs: Vec<_> = seeds
+            .iter()
+            .map(|&s| synth_inputs(rt, seq, "fused", m, n, s))
+            .collect();
+        let reference = rt.run_seq_batch(seq, "fused", m, n, inputs.clone());
+        let tickets: Vec<_> = inputs
+            .iter()
+            .map(|input| {
+                client
+                    .submit(
+                        SubmitRequest::new(seq, m, n)
+                            .inputs(input.clone())
+                            .variant(PlanChoice::Fused)
+                            .pin(device.name()),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for (t, r) in tickets.into_iter().zip(reference) {
+            let fleet_res = t.wait().expect("pinned fleet run");
+            let single = r.expect("single-device batch run");
+            assert_eq!(fleet_res.env.len(), single.env.len());
+            for (name, tf) in &fleet_res.env {
+                let ts = &single.env[name];
+                assert_eq!(tf.dims, ts.dims, "dims of '{name}' on {device}");
+                for (x, y) in tf.data.iter().zip(&ts.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "tensor '{name}' on {device}");
+                }
+            }
+        }
+    });
+    let fleet = engine.shutdown_fleet();
+    let agg = fleet.aggregate();
+    assert_eq!(agg.failures, 0, "no pinned request may fail");
+    assert!(agg.requests > 0);
+    let _ = std::fs::remove_dir_all(&cal);
+}
+
+/// With empty queues, the router never places a bandwidth-bound BLAS-1
+/// burst on the obviously slower device: every request lands on the
+/// GTX 480 and the GT 430's worker stays idle.
+#[test]
+fn router_prefers_the_cheap_device_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (cal, registry) = two_device_registry("cheapwins");
+    let engine = Engine::start_fleet(registry, &dir, EngineConfig::default()).unwrap();
+    let client = engine.client();
+    for i in 0..4u64 {
+        let t = client
+            .submit(SubmitRequest::new("waxpby", 32, 65536).synth(i))
+            .unwrap();
+        // wait each ticket: queues are empty at every routing decision
+        t.wait().expect("routed run");
+    }
+    let fleet = engine.shutdown_fleet();
+    assert_eq!(fleet.devices[0].1.requests, 4, "GTX 480 must take every request");
+    assert_eq!(fleet.devices[1].1.requests, 0, "GT 430 must stay idle");
+    // the idle device executed nothing, so only the active one holds
+    // queued-duration samples
+    assert_eq!(fleet.devices[0].1.queued.count(), 4);
+    assert_eq!(fleet.devices[1].1.queued.count(), 0);
+    let _ = std::fs::remove_dir_all(&cal);
+}
+
+/// Per-device calibration files appear side by side after a fleet
+/// engine starts — two devices never clobber one `calibration.txt`.
+#[test]
+fn fleet_start_writes_per_device_calibrations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (cal, registry) = two_device_registry("calfiles");
+    let engine = Engine::start_fleet(registry, &dir, EngineConfig::default()).unwrap();
+    drop(engine);
+    let fast = fusebla::predict::calibration_path(&cal, &DeviceModel::gtx480().name);
+    let slow = fusebla::predict::calibration_path(&cal, &DeviceModel::gt430().name);
+    assert!(fast.exists(), "missing {fast:?}");
+    assert!(slow.exists(), "missing {slow:?}");
+    assert_ne!(fast, slow);
+    let _ = std::fs::remove_dir_all(&cal);
+}
