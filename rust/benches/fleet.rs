@@ -90,6 +90,7 @@ fn main() {
         let cfg = EngineConfig {
             batch_window: Duration::from_millis(5),
             max_batch: N_REQUESTS,
+            ..EngineConfig::default()
         };
         let engine = Engine::start_fleet(registry, dir, cfg).expect("fleet engine");
         let client = engine.client();

@@ -52,6 +52,7 @@ fn main() {
         let cfg = EngineConfig {
             batch_window: Duration::from_millis(window_ms),
             max_batch: N_REQUESTS as usize,
+            ..EngineConfig::default()
         };
         let engine = Engine::with_config(ctx.clone(), dir, cfg).expect("engine");
         let client = engine.client();

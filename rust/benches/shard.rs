@@ -1,0 +1,157 @@
+//! Sharded-search study: what sharding the planner's partition range
+//! buys, and what the cold-key rewire costs the submitting thread.
+//!
+//! Two offline-safe sections (planning is pure — no artifacts, no real
+//! backend needed; the serve sections run over a stub catalog, since
+//! only *execution* needs real artifacts):
+//!
+//! * `sharded_planner` — plans/sec of `plan_space` unsharded vs
+//!   `plan_space_sharded` at K=1/2/4 (in-process: measures the
+//!   chunk/merge machinery itself, which must stay cheap for the fleet
+//!   scatter to be worth it), plus `Client::search_sharded` wall time
+//!   at K=1/2/4 through a live 4-worker fleet.
+//! * `cold_key` — submit latency of a *fresh* `(seq, size)` key through
+//!   the fleet engine (forecasts scattered to workers) vs the old
+//!   submitting-thread path (`CostModel::costs` with no lanes, which
+//!   still exists as the fallback), per distinct padded key.
+//!
+//! Results merge into `BENCH_shard.json` so the shard trajectory stays
+//! diffable across PRs.
+//!
+//! `cargo bench --bench shard`
+
+use fusebla::bench_support::report::update_bench_json;
+use fusebla::coordinator::Context;
+use fusebla::fleet::CostModel;
+use fusebla::fusion::ImplAxes;
+use fusebla::ir::elem::ProblemSize;
+use fusebla::planner::{plan_space, plan_space_sharded, PlannerConfig};
+use fusebla::sequences;
+use fusebla::util::stats::{bench, black_box};
+use fusebla::util::{Json, Summary};
+use fusebla::{DeviceRegistry, Engine, EngineConfig, SubmitRequest};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+const BENCH_SHARD_JSON: &str = "BENCH_shard.json";
+
+fn main() {
+    let report = Path::new(BENCH_SHARD_JSON);
+    // A stub catalog is enough for the engine sections: planning and
+    // the control plane never touch artifact bytes; submits fail at
+    // the stub backend *after* routing, which is all the cold-key
+    // latency section measures.
+    let seqs = ["waxpby", "vadd", "sscal", "axpydot"];
+    let dir = fusebla::bench_support::stub_catalog("bench_shard", &seqs);
+
+    // ---- sharded planner, in-process: chunk/merge overhead ----------
+    let ctx = Context::new();
+    let seq = sequences::by_name("gemver").expect("gemver");
+    let (prog, _graph, space) = seq.space(&ctx.lib, &ImplAxes::minimal());
+    let p = ProblemSize::square(8192);
+    let cfg = PlannerConfig::default();
+
+    let mut planner_section = Vec::new();
+    let unsharded = bench(5, 200, || black_box(plan_space(&prog, &space, &ctx.db, p, &cfg)));
+    let s = Summary::from_samples(&unsharded);
+    println!(
+        "plan_space (gemver, unsharded): median {:.1} µs → {:.0} plans/s",
+        s.median * 1e6,
+        1.0 / s.median
+    );
+    planner_section.push(("plans_per_sec_unsharded".into(), Json::num(1.0 / s.median)));
+    for k in [1usize, 2, 4] {
+        let samples = bench(5, 200, || {
+            black_box(plan_space_sharded(&prog, &space, &ctx.db, p, &cfg, k))
+        });
+        let s = Summary::from_samples(&samples);
+        println!(
+            "plan_space_sharded (gemver, K={k}): median {:.1} µs → {:.0} plans/s",
+            s.median * 1e6,
+            1.0 / s.median
+        );
+        planner_section.push((format!("plans_per_sec_k{k}"), Json::num(1.0 / s.median)));
+    }
+    update_bench_json(report, "sharded_planner", Json::Obj(planner_section))
+        .expect("write BENCH_shard.json");
+
+    // ---- sharded search through a live fleet ------------------------
+    let registry = Arc::new(DeviceRegistry::simulated(4, &dir));
+    let engine = Engine::start_fleet(registry, &dir, EngineConfig::default()).expect("fleet");
+    let client = engine.client();
+    let device = client.devices()[0].name().to_string();
+    let mut fleet_section = Vec::new();
+    for k in [1usize, 2, 4] {
+        // one warm call builds the workers' space caches, then measure
+        let warm = client.search_sharded("gemver", 8192, 8192, k, Some(device.as_str()));
+        warm.expect("warm sharded search");
+        let samples = bench(2, 50, || {
+            let planned = client.search_sharded("gemver", 8192, 8192, k, Some(device.as_str()));
+            black_box(planned.unwrap())
+        });
+        let s = Summary::from_samples(&samples);
+        println!(
+            "search_sharded (gemver, K={k}, 4 workers): median {:.1} ms → {:.0} plans/s",
+            s.median * 1e3,
+            1.0 / s.median
+        );
+        fleet_section.push((format!("fleet_plans_per_sec_k{k}"), Json::num(1.0 / s.median)));
+    }
+    update_bench_json(report, "sharded_search_fleet", Json::Obj(fleet_section))
+        .expect("write BENCH_shard.json");
+
+    // ---- cold-key submit latency ------------------------------------
+    // Each measurement uses a genuinely fresh padded key (n stepped by
+    // one 32-wide tile), so every submit walks the cold path: forecasts
+    // scattered to the four workers, gathered, then the request routed.
+    let mix = seqs;
+    let mut n_step = 1 << 16;
+    let mut worker_samples = Vec::new();
+    for i in 0..24usize {
+        n_step += 32; // fresh padded key every iteration
+        let seqname = mix[i % mix.len()];
+        let t0 = Instant::now();
+        let ticket = client.submit(SubmitRequest::new(seqname, 32, n_step)).unwrap();
+        worker_samples.push(t0.elapsed().as_secs_f64());
+        let _ = ticket.wait(); // stub backend error — drain the ticket
+    }
+    let worker = Summary::from_samples(&worker_samples);
+    println!(
+        "cold-key submit (worker forecasts, 4 devices): median {:.2} ms",
+        worker.median * 1e3
+    );
+
+    // the old path for comparison: N planner runs on the calling
+    // thread (CostModel::costs with no lanes — today's fallback)
+    let local_model = CostModel::new(Arc::new(DeviceRegistry::simulated(4, &dir)));
+    let mut local_samples = Vec::new();
+    for i in 0..24usize {
+        n_step += 32;
+        let seqname = mix[i % mix.len()];
+        let t0 = Instant::now();
+        let _ = black_box(local_model.costs(seqname, 32, n_step)).unwrap();
+        local_samples.push(t0.elapsed().as_secs_f64());
+    }
+    let local = Summary::from_samples(&local_samples);
+    println!(
+        "cold-key forecast (submitting thread, 4 devices): median {:.2} ms",
+        local.median * 1e3
+    );
+    let stats = client.routing_stats();
+    update_bench_json(
+        report,
+        "cold_key",
+        Json::Obj(vec![
+            ("submit_ms_worker_forecasts".into(), Json::num(worker.median * 1e3)),
+            ("forecast_ms_submitting_thread".into(), Json::num(local.median * 1e3)),
+            ("worker_forecasts".into(), Json::num(stats.worker_forecasts as f64)),
+            ("local_fallbacks".into(), Json::num(stats.local_forecasts as f64)),
+        ]),
+    )
+    .expect("write BENCH_shard.json");
+
+    let _ = engine.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("wrote {BENCH_SHARD_JSON}");
+}

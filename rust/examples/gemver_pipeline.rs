@@ -31,6 +31,7 @@ fn main() {
     let cfg = EngineConfig {
         batch_window: Duration::from_millis(20),
         max_batch: 64,
+        ..EngineConfig::default()
     };
     let ctx = Arc::new(Context::with_calibration_cache(dir));
     let engine = Engine::with_config(ctx, dir, cfg).expect("engine");

@@ -15,6 +15,29 @@ use crate::sim::{simulate_seq, SeqTiming};
 use crate::util::{fmt_duration, fmt_gflops, Table};
 use std::collections::BTreeMap;
 
+/// Write a minimal parseable artifact catalog (one fused stage-0
+/// stanza per sequence at m=32, n=65536, with a stub HLO text) into a
+/// fresh scratch directory, and return that directory. Enough to start
+/// an engine without built artifacts: planning and the control plane
+/// work end-to-end; only execution fails, at the offline stub backend.
+/// One definition shared by the shard bench and the integration tests,
+/// so the manifest wire format lives in one place.
+pub fn stub_catalog(tag: &str, seqs: &[&str]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fusebla_stub_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut manifest = String::new();
+    for seq in seqs {
+        manifest.push_str(&format!(
+            "artifact {seq}.fused.m32n65536.s0\n file {seq}.hlo.txt\n seq {seq}\n variant fused\n \
+             stage 0\n in x:f32[65536]\n in y:f32[65536]\n out w:f32[65536]\n m 32\n n 65536\nend\n"
+        ));
+        std::fs::write(dir.join(format!("{seq}.hlo.txt")), format!("HloModule {seq}\n")).unwrap();
+    }
+    std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+    dir
+}
+
 /// Evaluation sizes (paper: "sized to GPU memory"; our model is
 /// analytic, so the paper-scale sizes are free).
 pub fn eval_size(seq: &Sequence) -> ProblemSize {

@@ -361,6 +361,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let cfg = EngineConfig {
         batch_window: Duration::from_millis(window_ms),
         max_batch: 256,
+        ..EngineConfig::default()
     };
     // One device serves the classic single-device path (no router in
     // the way); more cycle the heterogeneous simulated profiles, each
@@ -433,6 +434,17 @@ fn cmd_serve(args: &[String]) -> i32 {
         metrics.resolve_misses,
         metrics.executable_compiles,
         metrics.executable_cache_hits
+    );
+    let routing = client.routing_stats();
+    println!(
+        "shard plane: {} planner run(s) on workers, {} shard chunk(s) served of {} requested; \
+         cold keys {} ({} worker / {} local forecast(s))",
+        metrics.planner_on_worker,
+        metrics.shard_served,
+        metrics.shard_requests,
+        routing.cold_keys,
+        routing.worker_forecasts,
+        routing.local_forecasts
     );
     println!("{}", queued_line(&metrics));
     i32::from(ok != n_requests)

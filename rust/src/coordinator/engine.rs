@@ -44,14 +44,20 @@
 //! bit-identical to a single-device engine (`tests/fleet_serving.rs`).
 
 use super::{Context, Control, Coordinator, Metrics, Msg, PlanChoice, Reply, Request, RequestInputs};
-use crate::fleet::{CostModel, DeviceId, DeviceRegistry};
+use crate::fleet::{CostModel, DeviceId, DeviceRegistry, RoutingStats};
+use crate::fusion::space::Space;
+use crate::fusion::ImplAxes;
+use crate::ir::elem::ProblemSize;
+use crate::ir::program::Program;
+use crate::planner::{self, PlannerConfig};
 use crate::runtime::{RunResult, Runtime, Tensor};
+use crate::sequences;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -64,6 +70,23 @@ pub struct EngineConfig {
     pub batch_window: Duration,
     /// Cap on requests drained per scheduling turn.
     pub max_batch: usize,
+    /// How long the submitting side waits for a worker's `PlanShard`
+    /// chunk reply in a sharded search before it re-plans that chunk
+    /// locally. The fallback is bit-identical — planning is a pure
+    /// function of (key, calibration) — so a busy, wedged or dead
+    /// worker costs latency, never a different answer. `ZERO` forces
+    /// every chunk local (useful in tests).
+    pub shard_deadline: Duration,
+    /// How long a cold-key submit waits for the workers' `Forecast`
+    /// replies before scoring that device with a locally-computed
+    /// (bit-identical) forecast. Deliberately much shorter than
+    /// [`EngineConfig::shard_deadline`], because the local fallback
+    /// costs only milliseconds: this value *bounds* the cold-key stall
+    /// a fully busy fleet can add to a submit (idle workers answer far
+    /// sooner). Set it near zero to always plan cold keys locally —
+    /// the scattered `Forecast` still seeds each worker's plan cache
+    /// whenever the worker drains it, waited-for or not.
+    pub forecast_deadline: Duration,
 }
 
 impl Default for EngineConfig {
@@ -71,6 +94,8 @@ impl Default for EngineConfig {
         EngineConfig {
             batch_window: Duration::ZERO,
             max_batch: 256,
+            shard_deadline: Duration::from_secs(5),
+            forecast_deadline: Duration::from_secs(1),
         }
     }
 }
@@ -163,6 +188,19 @@ impl<T> Ticket<T> {
 struct Shared {
     model: CostModel,
     depths: Vec<Arc<AtomicU64>>,
+    /// Submitter-side wait bound for `PlanShard` chunk replies
+    /// ([`EngineConfig::shard_deadline`]).
+    deadline: Duration,
+    /// Submitter-side wait bound for cold-key `Forecast` replies
+    /// ([`EngineConfig::forecast_deadline`]).
+    forecast_deadline: Duration,
+    /// Sequence name → its (program, built optimization space), shared
+    /// by every client clone. Sharded searches of the same sequence
+    /// skip fusion enumeration and space construction on the
+    /// submitting thread — the workers keep the equivalent per-worker
+    /// cache. Keyed by validated sequence names only (a closed set),
+    /// so no eviction is needed.
+    spaces: Mutex<BTreeMap<String, Arc<(Program, Space)>>>,
 }
 
 impl Shared {
@@ -174,8 +212,18 @@ impl Shared {
     /// Lane index for a request: the pin when present (an unknown name
     /// is an error, not a silent reroute), otherwise the router's
     /// argmin — short-circuited on one-device fleets so the
-    /// single-device serve path never pays a forecast.
-    fn lane_for(&self, pin: Option<&str>, seq: &str, m: usize, n: usize) -> Result<usize> {
+    /// single-device serve path never pays a forecast. `lanes` are the
+    /// caller's request senders: a cold key's forecasts run *on* the
+    /// workers behind them (seeding their plan caches), not here on the
+    /// submitting thread.
+    fn lane_for(
+        &self,
+        pin: Option<&str>,
+        seq: &str,
+        m: usize,
+        n: usize,
+        lanes: &[mpsc::Sender<Msg>],
+    ) -> Result<usize> {
         match pin {
             Some(name) => match self.model.registry().find(name) {
                 Some(id) => Ok(id.index()),
@@ -191,7 +239,13 @@ impl Shared {
                 )),
             },
             None if self.depths.len() == 1 => Ok(0),
-            None => Ok(self.model.route(seq, m, n, &self.snapshot())),
+            None => Ok(self.model.route_via(
+                seq,
+                m,
+                n,
+                &self.snapshot(),
+                Some((lanes, self.forecast_deadline)),
+            )),
         }
     }
 }
@@ -212,7 +266,7 @@ impl Client {
     pub fn submit(&self, req: SubmitRequest) -> Result<Ticket<RunResult>> {
         let lane = self
             .shared
-            .lane_for(req.device.as_deref(), &req.seq, req.m, req.n)?;
+            .lane_for(req.device.as_deref(), &req.seq, req.m, req.n, &self.txs)?;
         let depth = &self.shared.depths[lane];
         let (reply, rx) = mpsc::channel();
         // Count the request before sending so a racing router on
@@ -242,11 +296,7 @@ impl Client {
     /// momentary spike happens to point. Blocks until the worker picks
     /// the query up.
     pub fn plan(&self, seq: &str, m: usize, n: usize) -> Result<PlanChoice> {
-        let lane = if self.txs.len() == 1 {
-            0
-        } else {
-            self.shared.model.route(seq, m, n, &vec![0; self.txs.len()])
-        };
+        let lane = self.steady_state_lane(seq, m, n);
         let (reply, rx) = mpsc::channel();
         self.txs[lane]
             .send(Msg::Control(Control::Plan {
@@ -263,6 +313,134 @@ impl Client {
     /// The registered device identities, in routing (registry) order.
     pub fn devices(&self) -> Vec<DeviceId> {
         self.shared.model.registry().ids()
+    }
+
+    /// Submitting-side routing counters: cold keys seen, forecasts
+    /// served by workers vs computed locally (the fallback). The
+    /// cold-key regression test pins `local_forecasts == 0` on the
+    /// routed path — planning must stay off the submitting thread.
+    pub fn routing_stats(&self) -> RoutingStats {
+        self.shared.model.stats()
+    }
+
+    /// The device the router would pick for this key at steady state
+    /// (empty queues) — where unforced submissions of the key settle
+    /// once transient backlogs drain.
+    fn steady_state_lane(&self, seq: &str, m: usize, n: usize) -> usize {
+        if self.txs.len() == 1 {
+            0
+        } else {
+            self.shared.model.route_via(
+                seq,
+                m,
+                n,
+                &vec![0; self.txs.len()],
+                Some((&self.txs, self.shared.forecast_deadline)),
+            )
+        }
+    }
+
+    /// Run the pruned planner for `(seq, m, n)` with its partition
+    /// range sharded into `k` chunks scattered across the fleet's
+    /// workers — idle lanes first — and merged here. The merged result
+    /// is **bit-identical** to unsharded
+    /// [`planner::plan_space`] on the same device's calibration (see
+    /// [`crate::planner::shard`]); chunks whose worker is busy past
+    /// [`EngineConfig::shard_deadline`], gone, or answering with an
+    /// error are re-planned locally, so degraded fleets cost latency,
+    /// never correctness — and never a partial merge.
+    ///
+    /// `device` pins whose calibration the search runs against (by
+    /// registered name); `None` uses the steady-state routed device for
+    /// the key — note that routing a *cold* key scatters the usual
+    /// `Forecast` queries, which seed worker plan caches like any
+    /// routed submission would. The search itself is pure: nothing
+    /// executes, no plan cache is consulted, and its answer is
+    /// returned, not retained.
+    pub fn search_sharded(
+        &self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        k: usize,
+        device: Option<&str>,
+    ) -> Result<planner::Planned> {
+        let sq = sequences::by_name(seq).ok_or_else(|| anyhow!("unknown sequence '{seq}'"))?;
+        let registry = self.shared.model.registry().clone();
+        let target = match device {
+            Some(name) => registry
+                .find(name)
+                .ok_or_else(|| anyhow!("unknown device '{name}'"))?
+                .index(),
+            None => self.steady_state_lane(seq, m, n),
+        };
+        let db = registry.context(target).db.clone();
+        // Build (or reuse) the sequence's space: deterministic per
+        // name, so every client clone shares one construction. Built
+        // outside the lock — a racing duplicate build keeps the first
+        // insert and both are identical anyway.
+        let cached = self.shared.spaces.lock().unwrap().get(seq).cloned();
+        let entry = match cached {
+            Some(e) => e,
+            None => {
+                let (prog, _graph, space) = sq.space(registry.library(), &ImplAxes::minimal());
+                let built = Arc::new((prog, space));
+                self.shared
+                    .spaces
+                    .lock()
+                    .unwrap()
+                    .entry(seq.to_string())
+                    .or_insert(built)
+                    .clone()
+            }
+        };
+        let (prog, space) = (&entry.0, &entry.1);
+        let p = ProblemSize::new(m, n).padded();
+        let cfg = PlannerConfig::default();
+
+        // Scatter: chunks round-robin over lanes ordered shallowest
+        // queue first (stable on ties → deterministic), all sends
+        // before any gather so workers overlap.
+        let depths = self.shared.snapshot();
+        let mut order: Vec<usize> = (0..self.txs.len()).collect();
+        order.sort_by_key(|&i| depths[i]);
+        let ranges = planner::chunk_ranges(space.partitions.len(), k);
+        let pending: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(j, r)| {
+                let lane = order[j % order.len()];
+                let (reply, rx) = mpsc::channel();
+                let sent = self.txs[lane]
+                    .send(Msg::Control(Control::PlanShard {
+                        seq: seq.to_string(),
+                        m: p.m,
+                        n: p.n,
+                        range: r.clone(),
+                        db: db.clone(),
+                        reply,
+                    }))
+                    .is_ok();
+                (r, sent.then_some(rx))
+            })
+            .collect();
+
+        // Gather under one overall deadline; any lost, late or failed
+        // chunk is evaluated locally (pure function — identical bits).
+        let by = Instant::now() + self.shared.deadline;
+        let chunks = pending
+            .into_iter()
+            .map(|(r, rx)| {
+                let served = rx
+                    .and_then(|rx| {
+                        rx.recv_timeout(by.saturating_duration_since(Instant::now())).ok()
+                    })
+                    .and_then(|res| res.ok())
+                    .filter(|c: &planner::ShardEval| c.range == r);
+                served.unwrap_or_else(|| planner::shard::eval_chunk(space, &db, p, &cfg, r))
+            })
+            .collect();
+        Ok(planner::shard::merge(prog, space, chunks))
     }
 }
 
@@ -383,6 +561,9 @@ impl Engine {
             shared: Arc::new(Shared {
                 model: CostModel::new(registry),
                 depths,
+                deadline: cfg.shard_deadline,
+                forecast_deadline: cfg.forecast_deadline,
+                spaces: Mutex::new(BTreeMap::new()),
             }),
             txs,
             ids,
@@ -526,6 +707,7 @@ mod tests {
         let cfg = EngineConfig {
             batch_window: Duration::from_millis(300),
             max_batch: 64,
+            ..EngineConfig::default()
         };
         let engine = Engine::with_config(Arc::new(Context::new()), &dir, cfg).unwrap();
         let client = engine.client();
@@ -589,6 +771,7 @@ mod tests {
         let cfg = EngineConfig {
             batch_window: Duration::from_millis(100),
             max_batch: 64,
+            ..EngineConfig::default()
         };
         let engine = Engine::with_config(Arc::new(Context::new()), &dir, cfg).unwrap();
         let client = engine.client();
@@ -669,6 +852,38 @@ mod tests {
         let fleet = engine.shutdown_fleet();
         assert_eq!(fleet.devices[0].1.requests, 3, "fast device takes the burst");
         assert_eq!(fleet.devices[1].1.requests, 0, "slow device stays idle");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Sharded search through the control plane: different chunkings of
+    /// the same key on the same device are bit-identical, the workers
+    /// served the chunks, and planning touched no plan cache and
+    /// executed nothing.
+    #[test]
+    fn search_sharded_is_chunking_invariant_and_runs_on_workers() {
+        let (dir, engine) = stub_fleet("shard", EngineConfig::default());
+        let client = engine.client();
+        let device = client.devices()[0].name().to_string();
+        let a = client.search_sharded("gemver", 4096, 4096, 1, Some(device.as_str())).unwrap();
+        let b = client.search_sharded("gemver", 4096, 4096, 4, Some(device.as_str())).unwrap();
+        assert_eq!(a.best.variant, b.best.variant);
+        assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+        assert_eq!(a.stats.combos_evaluated, b.stats.combos_evaluated);
+        assert_eq!(a.stats.kernel_evals, b.stats.kernel_evals);
+        assert!(client.search_sharded("ghost", 32, 32, 2, None).is_err());
+        assert!(client
+            .search_sharded("gemver", 4096, 4096, 2, Some("no such device"))
+            .is_err());
+        let m = engine.shutdown();
+        // 1 + 4 chunks scattered; every one was received and served
+        assert_eq!(m.shard_requests, 5);
+        assert_eq!(m.shard_served, 5);
+        assert_eq!(m.requests, 0, "sharded search executes nothing");
+        assert_eq!(
+            m.plan_cache_misses + m.plan_cache_hits,
+            0,
+            "sharded search is pure planning — no plan-cache traffic"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

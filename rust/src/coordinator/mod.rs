@@ -44,18 +44,21 @@ pub mod engine;
 pub use engine::{Client, Engine, EngineConfig, FleetMetrics, SubmitRequest, Ticket};
 
 use crate::autotune;
+use crate::fusion::space::Space;
 use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
+use crate::ir::plan::SeqPlan;
 use crate::library::Library;
-use crate::planner::{self, PlannerConfig};
-use crate::predict::RoutineDb;
+use crate::planner::{self, PlannerConfig, VariantForecast};
+use crate::predict::{predict_seq, RoutineDb};
 use crate::runtime::{refcheck, RunResult, Runtime, Tensor};
 use crate::sequences::{self, Sequence};
 use crate::sim::DeviceModel;
 use crate::util::manifest::Manifest;
 use crate::util::Histogram;
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
+use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -146,6 +149,20 @@ impl PlanChoice {
             PlanChoice::Cublas => "cublas",
         }
     }
+
+    /// The variant the serve path executes for a forecast: the CUBLAS
+    /// baseline only when it *strictly* beats the searched plan (ties
+    /// go to the planned variant, which is retuned per size). The one
+    /// decision rule — `choose_plan` and the worker-side forecast
+    /// seeding both derive from here, so a seeded cache entry can never
+    /// disagree with an unseeded decision for the same forecast.
+    pub fn from_forecast(f: &VariantForecast) -> PlanChoice {
+        if f.baseline_wins() {
+            PlanChoice::Cublas
+        } else {
+            PlanChoice::Fused
+        }
+    }
 }
 
 /// Input payload of a request. `Synth` lets producers on other threads
@@ -176,6 +193,33 @@ pub(crate) enum Control {
         m: usize,
         n: usize,
         reply: mpsc::Sender<Result<PlanChoice>>,
+    },
+    /// Run the planner for one key on this worker, against this
+    /// worker's *own* calibration, and reply with the per-variant
+    /// forecast. Seeds the worker's plan cache as a side effect, so the
+    /// first routed execution of the key is a plan-cache hit. This is
+    /// the fleet's cold-key path: the router scatters one `Forecast`
+    /// per device instead of running N planner searches on the
+    /// submitting thread (see `fleet::router`).
+    Forecast {
+        seq: String,
+        m: usize,
+        n: usize,
+        reply: mpsc::Sender<Result<VariantForecast>>,
+    },
+    /// Evaluate one chunk of a plan-space partition range against the
+    /// supplied calibration (the *target* device's — not necessarily
+    /// this worker's). The space is rebuilt from the sequence name on
+    /// the worker (deterministic, cached per sequence), so the wire
+    /// carries only the key and the range. See [`crate::planner::shard`]
+    /// for why the merged chunks are bit-identical to unsharded search.
+    PlanShard {
+        seq: String,
+        m: usize,
+        n: usize,
+        range: Range<usize>,
+        db: Arc<RoutineDb>,
+        reply: mpsc::Sender<Result<planner::ShardEval>>,
     },
     /// Stop serving even while client handles keep the channel open
     /// (an engine shutdown must not wait for every `Client` clone to
@@ -255,6 +299,18 @@ pub struct Metrics {
     pub executable_compiles: u64,
     /// Executable-cache hits inside the runtime.
     pub executable_cache_hits: u64,
+    /// `PlanShard` chunk requests received by this worker over the
+    /// control plane.
+    pub shard_requests: u64,
+    /// `PlanShard` chunks successfully evaluated and replied (a failed
+    /// chunk — unknown sequence, out-of-range — counts a request only;
+    /// the submitter re-plans it locally).
+    pub shard_served: u64,
+    /// Planner searches this worker ran on behalf of control-plane
+    /// `Forecast` queries — cold-key planning moved off the submitting
+    /// thread. At most one per (key, device): repeats hit the worker's
+    /// forecast memo.
+    pub planner_on_worker: u64,
     /// Time executed requests spent queued before their batch was
     /// dispatched (submission → batch start). Per device this is the
     /// routing-vs-queueing signal: a device whose queue wait dwarfs its
@@ -294,6 +350,9 @@ impl Metrics {
         self.resolve_misses += other.resolve_misses;
         self.executable_compiles += other.executable_compiles;
         self.executable_cache_hits += other.executable_cache_hits;
+        self.shard_requests += other.shard_requests;
+        self.shard_served += other.shard_served;
+        self.planner_on_worker += other.planner_on_worker;
         self.queued.merge(&other.queued);
         for (seq, (count, secs)) in &other.per_seq {
             let e = self.per_seq.entry(seq.clone()).or_insert((0, 0.0));
@@ -423,10 +482,37 @@ pub struct Coordinator {
     runtime: Runtime,
     /// (seq, size, device) → chosen variant (decided by the planner).
     plan_cache: PlanCache,
+    /// Padded `(seq, m, n)` → the planner's per-variant forecast on
+    /// this device, memoized so a control-plane `Forecast` repeat (or a
+    /// `choose_plan` following a `Forecast`) never re-runs the search.
+    /// FIFO-bounded like the router's forecast cache: clients control
+    /// the keys.
+    forecast_cache: BTreeMap<(String, usize, usize), VariantForecast>,
+    /// Insertion order of `forecast_cache` keys, for FIFO eviction.
+    forecast_order: VecDeque<(String, usize, usize)>,
+    /// Sequence name → its planning inputs (program, built space,
+    /// baseline plan), reused across `PlanShard` chunks *and* fresh
+    /// per-size forecasts — the space is size-independent, so a new
+    /// problem size never re-runs fusion enumeration or space
+    /// construction. Deterministic per sequence and the set of
+    /// sequences is closed, so no eviction is needed.
+    space_cache: BTreeMap<String, PlanningEntry>,
     pub metrics: Metrics,
 }
 
+/// One sequence's cached planning inputs (see `Coordinator::space_cache`).
+struct PlanningEntry {
+    prog: crate::ir::program::Program,
+    space: Space,
+    baseline: SeqPlan,
+}
+
 impl Coordinator {
+    /// Cap on memoized per-key forecasts (matches the spirit of
+    /// [`crate::fleet::CostModel::CACHE_CAP`]: generous, but bounded
+    /// against size-scanning clients).
+    const FORECAST_CAP: usize = 4096;
+
     pub fn new(ctx: Arc<Context>, artifacts_dir: &Path) -> Result<Coordinator> {
         Self::with_manifest(ctx, Runtime::load_manifest(artifacts_dir)?)
     }
@@ -438,6 +524,9 @@ impl Coordinator {
             ctx,
             runtime: Runtime::with_manifest(manifest)?,
             plan_cache: PlanCache::new(PlanCache::DEFAULT_CAP),
+            forecast_cache: BTreeMap::new(),
+            forecast_order: VecDeque::new(),
+            space_cache: BTreeMap::new(),
             metrics: Metrics::default(),
         })
     }
@@ -473,27 +562,121 @@ impl Coordinator {
         // comparison is what makes this a per-size decision.) The same
         // forecast, on each device's own calibration, is what the fleet
         // router ranks devices by — one definition of "fast" everywhere.
-        let (prog, graph) = seq.graph(&self.ctx.lib);
-        let cublas_prog = seq.cublas_program(&self.ctx.lib);
-        let baseline = autotune::baseline_plan(&cublas_prog, &self.ctx.lib);
-        let forecast = planner::forecast_variants(
-            &prog,
-            &self.ctx.lib,
-            &graph,
-            &self.ctx.db,
-            &ImplAxes::minimal(),
-            &baseline,
-            p,
-            &PlannerConfig::default(),
-        );
-        let choice = if forecast.baseline_wins() {
-            PlanChoice::Cublas
-        } else {
-            PlanChoice::Fused
-        };
+        let (forecast, _) = self.forecast_memo(&seq, p);
+        let choice = PlanChoice::from_forecast(&forecast);
         self.plan_cache.insert(key, choice);
         self.sync_plan_cache_metrics();
         Ok(choice)
+    }
+
+    /// This sequence's cached planning inputs, built on first use. One
+    /// build serves every `PlanShard` chunk and every problem size's
+    /// forecast of the sequence.
+    fn planning_entry(&mut self, seq: &Sequence) -> &PlanningEntry {
+        if !self.space_cache.contains_key(seq.name) {
+            let (prog, _graph, space) = seq.space(&self.ctx.lib, &ImplAxes::minimal());
+            let baseline =
+                autotune::baseline_plan(&seq.cublas_program(&self.ctx.lib), &self.ctx.lib);
+            self.space_cache.insert(
+                seq.name.to_string(),
+                PlanningEntry {
+                    prog,
+                    space,
+                    baseline,
+                },
+            );
+        }
+        &self.space_cache[seq.name]
+    }
+
+    /// The planner's per-variant forecast for a sequence at a padded
+    /// size on this device's calibration, memoized. Returns
+    /// `(forecast, fresh)` where `fresh` marks an actual planner run
+    /// (vs a memo hit). Plans over the per-sequence cached space —
+    /// bit-identical to [`planner::forecast_variants`], which builds an
+    /// identical space fresh (both are pure functions of the same
+    /// inputs), so worker-side and submitter-fallback forecasts always
+    /// agree.
+    fn forecast_memo(&mut self, seq: &Sequence, p: ProblemSize) -> (VariantForecast, bool) {
+        debug_assert_eq!(p, p.padded(), "forecasts are memoized per padded size");
+        let memo_key = (seq.name.to_string(), p.m, p.n);
+        if let Some(&f) = self.forecast_cache.get(&memo_key) {
+            return (f, false);
+        }
+        let db = self.ctx.db.clone();
+        let entry = self.planning_entry(seq);
+        let planned = planner::plan_space(
+            &entry.prog,
+            &entry.space,
+            &db,
+            p,
+            &PlannerConfig::default(),
+        );
+        let forecast = VariantForecast {
+            planned: planned.predicted,
+            baseline: predict_seq(&db, &entry.baseline, p),
+        };
+        while self.forecast_order.len() >= Self::FORECAST_CAP {
+            if let Some(old) = self.forecast_order.pop_front() {
+                self.forecast_cache.remove(&old);
+            }
+        }
+        self.forecast_order.push_back(memo_key.clone());
+        self.forecast_cache.insert(memo_key, forecast);
+        (forecast, true)
+    }
+
+    /// Answer a control-plane `Forecast`: plan the key on this device's
+    /// own calibration (memoized; fresh runs count into
+    /// `planner_on_worker`) and seed the plan cache so the first routed
+    /// execution of the key hits instead of re-planning.
+    fn forecast_for(&mut self, seq_name: &str, m: usize, n: usize) -> Result<VariantForecast> {
+        let seq: Sequence = sequences::by_name(seq_name)
+            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
+        let p = ProblemSize::new(m, n).padded();
+        let (forecast, fresh) = self.forecast_memo(&seq, p);
+        if fresh {
+            self.metrics.planner_on_worker += 1;
+        }
+        let key = PlanKey::new(seq_name, p, self.ctx.device.clone());
+        if self.plan_cache.get(&key).is_none() {
+            self.plan_cache.insert(key, PlanChoice::from_forecast(&forecast));
+        }
+        self.sync_plan_cache_metrics();
+        Ok(forecast)
+    }
+
+    /// Answer a control-plane `PlanShard`: evaluate one chunk of the
+    /// key's partition range against the supplied calibration. The
+    /// optimization space is rebuilt from the sequence name (pure —
+    /// identical on every worker) and cached per sequence.
+    fn eval_shard(
+        &mut self,
+        seq_name: &str,
+        m: usize,
+        n: usize,
+        range: Range<usize>,
+        db: &RoutineDb,
+    ) -> Result<planner::ShardEval> {
+        let p = ProblemSize::new(m, n).padded();
+        let seq: Sequence = sequences::by_name(seq_name)
+            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
+        let space = &self.planning_entry(&seq).space;
+        if range.end > space.partitions.len() {
+            return Err(anyhow!(
+                "shard range {}..{} exceeds the {} partitions of '{seq_name}'",
+                range.start,
+                range.end,
+                space.partitions.len()
+            ));
+        }
+        Ok(planner::shard::eval_chunk(
+            space,
+            db,
+            p,
+            &PlannerConfig::default(),
+            range,
+        ))
     }
 
     /// Mirror the plan cache's counters into the metrics snapshot.
@@ -605,6 +788,26 @@ impl Coordinator {
             }
             Control::Plan { seq, m, n, reply } => {
                 let _ = reply.send(self.choose_plan(&seq, m, n));
+                false
+            }
+            Control::Forecast { seq, m, n, reply } => {
+                let _ = reply.send(self.forecast_for(&seq, m, n));
+                false
+            }
+            Control::PlanShard {
+                seq,
+                m,
+                n,
+                range,
+                db,
+                reply,
+            } => {
+                self.metrics.shard_requests += 1;
+                let res = self.eval_shard(&seq, m, n, range, &db);
+                if res.is_ok() {
+                    self.metrics.shard_served += 1;
+                }
+                let _ = reply.send(res);
                 false
             }
         }
@@ -880,6 +1083,36 @@ mod tests {
         assert_eq!(coord.metrics.plan_cache_hits, 1);
         // every dispatched request leaves one queued-duration sample
         assert_eq!(coord.metrics.queued.count(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The control-plane forecast runs the planner once, memoizes per
+    /// padded key, and seeds the plan cache — so the first execute-path
+    /// decision for the key is a cache hit, not a re-plan.
+    #[test]
+    fn forecast_seeds_the_plan_cache_and_memoizes() {
+        let dir = stub_catalog("forecastseed", &["waxpby"], false);
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        let f1 = coord.forecast_for("waxpby", 32, 65536).unwrap();
+        assert_eq!(coord.metrics.planner_on_worker, 1);
+        assert_eq!(coord.metrics.plan_cache_misses, 1, "seeding records the one miss");
+        // a padded-identical repeat is a memo hit: no second planner run
+        let f2 = coord.forecast_for("waxpby", 32, 65530).unwrap();
+        assert_eq!(coord.metrics.planner_on_worker, 1);
+        assert_eq!(f1.planned.to_bits(), f2.planned.to_bits());
+        assert_eq!(f1.baseline.to_bits(), f2.baseline.to_bits());
+        // the execute-path decision now hits the seeded entry
+        let choice = coord.choose_plan("waxpby", 32, 65536).unwrap();
+        let expect = if f1.baseline < f1.planned {
+            PlanChoice::Cublas
+        } else {
+            PlanChoice::Fused
+        };
+        assert_eq!(choice, expect);
+        assert_eq!(coord.metrics.plan_cache_misses, 1, "no re-plan after seeding");
+        assert!(coord.metrics.plan_cache_hits >= 1);
+        assert!(coord.forecast_for("ghost", 32, 32).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

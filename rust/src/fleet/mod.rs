@@ -24,10 +24,17 @@
 //! scheduler over its own `Coordinator` (own plan cache, own runtime).
 //! Pinned submissions bypass the router, so their execution is
 //! bit-identical to a single-device engine.
+//!
+//! The workers also serve as the *planning* fleet: cold-key forecasts
+//! scatter to them as control-plane `Forecast` queries (each device
+//! plans its own key and seeds its plan cache — see [`router`]), and
+//! large plan-space searches shard their partition range across idle
+//! workers as `PlanShard` chunks, merged bit-identically by the
+//! submitter (`Client::search_sharded`, [`crate::planner::shard`]).
 
 pub mod router;
 
-pub use router::CostModel;
+pub use router::{CostModel, RoutingStats};
 
 use crate::coordinator::Context;
 use crate::library::Library;

@@ -17,24 +17,42 @@
 //! Unknown sequences route to the shallowest queue — the worker owns
 //! producing the "unknown sequence" error, exactly as on one device.
 //!
-//! Known cold-key tradeoff: the first unpinned submission of a new
-//! `(seq, padded size)` key runs the pruned planner once per device on
-//! the *submitting* thread, and the routed worker then plans its own
-//! device again on the plan-cache miss (N+1 planner runs; every later
-//! submission of the key is a map probe). Single-device engines
-//! short-circuit the router entirely, so the pre-fleet planner-free
-//! submit path is unchanged for existing callers. Moving forecasts onto
-//! the workers (and seeding their plan caches from the router) is the
-//! ROADMAP's sharded-search item.
+//! Cold keys plan **on the workers**, not here: the first unpinned
+//! submission of a new `(seq, padded size)` key scatters one
+//! control-plane `Forecast` per device ([`CostModel::costs_via`]); each
+//! worker plans the key against its *own* calibration, seeds its plan
+//! cache with the decision (so the routed worker's first execution is
+//! a plan-cache hit, not a re-plan), and replies with the forecast the
+//! router scores. The submitting thread runs zero planner searches on
+//! this path — it only gathers — and the fleet runs at most one per
+//! device, where the old flow ran N+1 with N of them on the submitting
+//! thread. A worker that is busy past the engine's (deliberately
+//! short) `forecast_deadline`, gone, or erroring falls back to a
+//! *local* forecast on that device's calibration — bit-identical (the
+//! forecast is a pure function of key and calibration), so degraded
+//! fleets cost latency, never routing differences — and the scattered
+//! `Forecast` still seeds the worker's plan cache whenever the worker
+//! drains it, waited-for or not. [`CostModel::stats`] counts cold keys and worker vs
+//! local forecasts; `tests/fleet_serving.rs` pins the zero-local
+//! property. Single-device engines short-circuit the router entirely,
+//! so the pre-fleet planner-free submit path is unchanged. Plain
+//! [`CostModel::costs`] (no lanes — unit tests, benches, standalone
+//! models) forecasts locally as before.
 
 use super::DeviceRegistry;
 use crate::autotune;
+use crate::coordinator::{Control, Msg};
 use crate::fusion::ImplAxes;
+use crate::graph::DepGraph;
 use crate::ir::elem::ProblemSize;
+use crate::ir::plan::SeqPlan;
+use crate::ir::program::Program;
 use crate::planner::{self, PlannerConfig};
 use crate::sequences;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Per-key, per-device forecast cache over a registry. `Send + Sync`:
 /// lives behind the engine's shared state and is consulted from every
@@ -48,6 +66,15 @@ pub struct CostModel {
     /// so inserts past [`CostModel::CACHE_CAP`] evict the oldest key
     /// (FIFO via `order`) instead of growing without bound.
     cache: Mutex<ForecastCache>,
+    /// Cold keys forecast (cache misses — one per distinct key, modulo
+    /// racing duplicates).
+    cold_keys: AtomicU64,
+    /// Per-device forecasts served by a worker over the control plane.
+    worker_forecasts: AtomicU64,
+    /// Per-device forecasts computed on the calling thread: the whole
+    /// path when no lanes are supplied, the fallback when a worker
+    /// missed the deadline or is gone.
+    local_forecasts: AtomicU64,
 }
 
 #[derive(Default)]
@@ -55,6 +82,27 @@ struct ForecastCache {
     by_seq: BTreeMap<String, BTreeMap<(usize, usize), Arc<Vec<f64>>>>,
     /// Insertion order of every cached `(seq, padded size)` key.
     order: VecDeque<(String, (usize, usize))>,
+}
+
+/// Submitting-side counters of the router's cold path (see
+/// [`CostModel::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RoutingStats {
+    /// Keys whose forecast was computed rather than cache-probed.
+    pub cold_keys: u64,
+    /// Per-device forecasts served by workers (planner off the
+    /// submitting thread).
+    pub worker_forecasts: u64,
+    /// Per-device forecasts computed locally on the calling thread.
+    pub local_forecasts: u64,
+}
+
+/// What a local fallback needs to forecast a sequence: built lazily at
+/// most once per cold key, shared across the devices that fall back.
+struct LocalPlanning {
+    prog: Program,
+    graph: DepGraph,
+    baseline: SeqPlan,
 }
 
 impl CostModel {
@@ -67,6 +115,9 @@ impl CostModel {
         CostModel {
             registry,
             cache: Mutex::new(ForecastCache::default()),
+            cold_keys: AtomicU64::new(0),
+            worker_forecasts: AtomicU64::new(0),
+            local_forecasts: AtomicU64::new(0),
         }
     }
 
@@ -74,11 +125,40 @@ impl CostModel {
         &self.registry
     }
 
+    /// Point-in-time snapshot of the cold-path counters.
+    pub fn stats(&self) -> RoutingStats {
+        RoutingStats {
+            cold_keys: self.cold_keys.load(Ordering::Relaxed),
+            worker_forecasts: self.worker_forecasts.load(Ordering::Relaxed),
+            local_forecasts: self.local_forecasts.load(Ordering::Relaxed),
+        }
+    }
+
     /// Predicted seconds of the executed variant per device for
     /// `(seq, m, n)` (size tile-padded exactly like the plan-cache
-    /// key). `None` for unknown sequences. First call per key runs the
-    /// pruned planner once per device; repeats are a read of the cache.
+    /// key). `None` for unknown sequences. First call per key forecasts
+    /// once per device — locally on this thread; the engine's submit
+    /// path uses [`CostModel::costs_via`] with worker lanes instead —
+    /// and repeats are a read of the cache.
     pub fn costs(&self, seq: &str, m: usize, n: usize) -> Option<Arc<Vec<f64>>> {
+        self.costs_via(seq, m, n, None)
+    }
+
+    /// [`CostModel::costs`] with the cold path scattered over worker
+    /// lanes: one `Control::Forecast` per device, gathered under
+    /// `deadline`, so each worker plans its own key (and seeds its plan
+    /// cache — the routed first execution becomes a cache hit) while
+    /// the submitting thread only waits. Devices whose worker misses
+    /// the deadline, is gone, or errors are forecast locally — a
+    /// bit-identical fallback, since the forecast is a pure function of
+    /// (key, calibration).
+    pub(crate) fn costs_via(
+        &self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        lanes: Option<(&[mpsc::Sender<Msg>], Duration)>,
+    ) -> Option<Arc<Vec<f64>>> {
         let p = ProblemSize::new(m, n).padded();
         if let Some(c) = self
             .cache
@@ -90,30 +170,55 @@ impl CostModel {
         {
             return Some(c.clone());
         }
-        // Forecast outside the lock: the planner fans cost evaluation
-        // out over threads, and a racing duplicate forecast is
-        // bit-identical anyway (pure function of calibration + size).
+        // Forecast outside the lock: workers plan concurrently, and a
+        // racing duplicate forecast is bit-identical anyway (pure
+        // function of calibration + size).
         let sq = sequences::by_name(seq)?;
-        let lib = self.registry.library().clone();
-        let (prog, graph) = sq.graph(&lib);
-        let baseline = autotune::baseline_plan(&sq.cublas_program(&lib), &lib);
-        let cfg = PlannerConfig::default();
-        let seconds: Vec<f64> = (0..self.registry.len())
-            .map(|i| {
-                let ctx = self.registry.context(i);
-                planner::forecast_variants(
-                    &prog,
-                    &lib,
-                    &graph,
-                    &ctx.db,
-                    &ImplAxes::minimal(),
-                    &baseline,
-                    p,
-                    &cfg,
-                )
-                .best_seconds()
-            })
-            .collect();
+        self.cold_keys.fetch_add(1, Ordering::Relaxed);
+        let mut local: Option<LocalPlanning> = None;
+        let seconds: Vec<f64> = match lanes {
+            Some((txs, deadline)) => {
+                debug_assert_eq!(txs.len(), self.registry.len());
+                // Scatter to every worker before gathering any reply,
+                // so the per-device planner runs overlap.
+                let pending: Vec<_> = txs
+                    .iter()
+                    .map(|tx| {
+                        let (reply, rx) = mpsc::channel();
+                        tx.send(Msg::Control(Control::Forecast {
+                            seq: seq.to_string(),
+                            m: p.m,
+                            n: p.n,
+                            reply,
+                        }))
+                        .ok()
+                        .map(|_| rx)
+                    })
+                    .collect();
+                let by = Instant::now() + deadline;
+                pending
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, rx)| {
+                        let served = rx
+                            .and_then(|rx| {
+                                rx.recv_timeout(by.saturating_duration_since(Instant::now())).ok()
+                            })
+                            .and_then(|res| res.ok());
+                        match served {
+                            Some(f) => {
+                                self.worker_forecasts.fetch_add(1, Ordering::Relaxed);
+                                f.best_seconds()
+                            }
+                            None => self.forecast_local(&sq, i, p, &mut local),
+                        }
+                    })
+                    .collect()
+            }
+            None => (0..self.registry.len())
+                .map(|i| self.forecast_local(&sq, i, p, &mut local))
+                .collect(),
+        };
         let entry = Arc::new(seconds);
         let mut cache = self.cache.lock().unwrap();
         // a racing duplicate forecast keeps the first insert; only a
@@ -147,32 +252,91 @@ impl CostModel {
         Some(out)
     }
 
+    /// One device's forecast computed on the calling thread — the
+    /// no-lanes path and the per-device fallback. The planning inputs
+    /// (program, graph, baseline) are built lazily once and shared by
+    /// every device that falls back during this cold key.
+    fn forecast_local(
+        &self,
+        sq: &sequences::Sequence,
+        device: usize,
+        p: ProblemSize,
+        local: &mut Option<LocalPlanning>,
+    ) -> f64 {
+        self.local_forecasts.fetch_add(1, Ordering::Relaxed);
+        let lib = self.registry.library();
+        let lp = local.get_or_insert_with(|| {
+            let (prog, graph) = sq.graph(lib);
+            let baseline = autotune::baseline_plan(&sq.cublas_program(lib), lib);
+            LocalPlanning {
+                prog,
+                graph,
+                baseline,
+            }
+        });
+        let ctx = self.registry.context(device);
+        planner::forecast_variants(
+            &lp.prog,
+            lib,
+            &lp.graph,
+            &ctx.db,
+            &ImplAxes::minimal(),
+            &lp.baseline,
+            p,
+            &PlannerConfig::default(),
+        )
+        .best_seconds()
+    }
+
     /// Pick the device for one submission given current queue depths
     /// (parallel to registry indices). Ties break to the lowest index,
     /// so routing is deterministic.
     pub fn route(&self, seq: &str, m: usize, n: usize, depths: &[u64]) -> usize {
+        self.route_via(seq, m, n, depths, None)
+    }
+
+    /// [`CostModel::route`] with the cold-path forecasts running on the
+    /// supplied worker lanes (see [`CostModel::costs_via`]).
+    pub(crate) fn route_via(
+        &self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        depths: &[u64],
+        lanes: Option<(&[mpsc::Sender<Msg>], Duration)>,
+    ) -> usize {
         debug_assert_eq!(depths.len(), self.registry.len());
-        match self.costs(seq, m, n) {
-            Some(costs) => score_argmin(&costs, depths),
+        match self.costs_via(seq, m, n, lanes) {
+            Some(costs) => score_argmin(&costs, depths).unwrap_or_else(|| shallowest(depths)),
             None => shallowest(depths),
         }
     }
 }
 
-/// `argmin_i costs[i] × (depths[i] + 1)` — the routing score. Public
-/// within the crate's tests so scoring is testable without an engine.
-pub fn score_argmin(costs: &[f64], depths: &[u64]) -> usize {
+/// `argmin_i costs[i] × (depths[i] + 1)` over the *finite* scores — the
+/// routing score. A non-finite cost (NaN or ∞ from a poisoned
+/// calibration) used to win by default: every float comparison against
+/// it is false, so the scan silently kept index 0. Non-finite scores
+/// are skipped instead; `None` (no finite score at all) sends the
+/// caller to [`shallowest`]. Public within the crate's tests so scoring
+/// is testable without an engine.
+pub fn score_argmin(costs: &[f64], depths: &[u64]) -> Option<usize> {
     assert_eq!(costs.len(), depths.len());
-    let mut best = 0;
-    let mut best_score = f64::INFINITY;
+    let mut best: Option<(usize, f64)> = None;
     for (i, (&c, &d)) in costs.iter().zip(depths).enumerate() {
         let score = c * (d as f64 + 1.0);
-        if score < best_score {
-            best = i;
-            best_score = score;
+        if !score.is_finite() {
+            continue;
+        }
+        let improves = match best {
+            Some((_, b)) => score < b,
+            None => true,
+        };
+        if improves {
+            best = Some((i, score));
         }
     }
-    best
+    best.map(|(i, _)| i)
 }
 
 /// Fallback for unroutable (unknown-sequence) submissions: the
@@ -258,9 +422,74 @@ mod tests {
 
     #[test]
     fn scoring_is_deterministic() {
-        assert_eq!(score_argmin(&[1.0, 2.0], &[0, 0]), 0);
-        assert_eq!(score_argmin(&[1.0, 2.0], &[3, 0]), 1);
-        assert_eq!(score_argmin(&[1.0, 1.0], &[0, 0]), 0, "ties to lowest index");
+        assert_eq!(score_argmin(&[1.0, 2.0], &[0, 0]), Some(0));
+        assert_eq!(score_argmin(&[1.0, 2.0], &[3, 0]), Some(1));
+        assert_eq!(
+            score_argmin(&[1.0, 1.0], &[0, 0]),
+            Some(0),
+            "ties to lowest index"
+        );
         assert_eq!(shallowest(&[5, 4, 4]), 1);
+    }
+
+    /// The satellite fix: a non-finite forecast must not capture the
+    /// argmin (every comparison against NaN is false, so the old scan
+    /// silently kept index 0 — routing everything to a device whose
+    /// forecast was poisoned).
+    #[test]
+    fn non_finite_scores_are_skipped() {
+        assert_eq!(score_argmin(&[f64::NAN, 2.0], &[0, 0]), Some(1));
+        assert_eq!(score_argmin(&[f64::INFINITY, 2.0], &[0, 0]), Some(1));
+        assert_eq!(score_argmin(&[2.0, f64::NAN, 1.0], &[0, 0, 0]), Some(2));
+        // a finite cost whose *score* overflows to ∞ is skipped too
+        assert_eq!(score_argmin(&[f64::MAX, 1.0], &[3, 0]), Some(1));
+        // nothing finite → no winner
+        assert_eq!(score_argmin(&[f64::NAN, f64::INFINITY], &[0, 0]), None);
+        assert_eq!(score_argmin(&[], &[]), None);
+    }
+
+    /// End-to-end: a fully poisoned forecast falls back to the
+    /// shallowest queue instead of index 0.
+    #[test]
+    fn poisoned_forecasts_route_to_the_shallowest_queue() {
+        let model = two_device_model("poisoned");
+        // inject a poisoned cache entry for a known sequence
+        {
+            let mut cache = model.cache.lock().unwrap();
+            cache
+                .by_seq
+                .entry("waxpby".to_string())
+                .or_default()
+                .insert((32, 65536), Arc::new(vec![f64::NAN, f64::INFINITY]));
+        }
+        assert_eq!(
+            model.route("waxpby", 32, 65536, &[3, 1]),
+            1,
+            "all-non-finite scores must fall back to the shallowest queue"
+        );
+        // one finite survivor wins regardless of queue depth ordering
+        {
+            let mut cache = model.cache.lock().unwrap();
+            cache
+                .by_seq
+                .get_mut("waxpby")
+                .unwrap()
+                .insert((32, 65536), Arc::new(vec![f64::NAN, 1.0]));
+        }
+        assert_eq!(model.route("waxpby", 32, 65536, &[0, 5]), 1);
+    }
+
+    #[test]
+    fn local_cold_path_counts_into_stats() {
+        let model = two_device_model("stats");
+        assert_eq!(model.stats(), RoutingStats::default());
+        let _ = model.costs("waxpby", 32, 65536).unwrap();
+        let s = model.stats();
+        assert_eq!(s.cold_keys, 1);
+        assert_eq!(s.local_forecasts, 2, "one local forecast per device");
+        assert_eq!(s.worker_forecasts, 0);
+        // warm repeat: pure cache, no new forecasts
+        let _ = model.costs("waxpby", 32, 65530).unwrap();
+        assert_eq!(model.stats(), s);
     }
 }

@@ -12,7 +12,8 @@ use crate::fusion::Fusion;
 use crate::ir::elem::ProblemSize;
 use crate::ir::plan::KernelPlan;
 use crate::predict::{predict_kernel, RoutineDb};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
 
 /// Stable identity of one part implementation: (sorted call ids of the
 /// part, index into the part's pruned implementation list).
@@ -63,6 +64,13 @@ impl CostCache {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+
+    /// The distinct implementation keys this cache holds. Shard merges
+    /// union these sets to reconstruct the unsharded `kernel_evals`
+    /// count exactly (a key shared by two chunks is one eval, not two).
+    pub fn key_set(&self) -> BTreeSet<ImplKey> {
+        self.map.keys().cloned().collect()
+    }
 }
 
 /// Threshold below which the parallel sweep is not worth the thread
@@ -76,9 +84,30 @@ const PARALLEL_MIN_JOBS: usize = 32;
 /// function of `(KernelPlan, RoutineDb, ProblemSize)` and the merge goes
 /// through a `BTreeMap`, so thread interleaving cannot change anything.
 pub fn precompute(space: &Space, db: &RoutineDb, p: ProblemSize, threads: usize) -> CostCache {
+    precompute_range(space, db, p, threads, 0..space.partitions.len())
+}
+
+/// [`precompute`] restricted to the partitions in `range` — the unit of
+/// work one shard evaluates (see [`crate::planner::shard`]). Only
+/// implementations referenced by those partitions are predicted; an
+/// empty range yields an empty cache.
+pub fn precompute_range(
+    space: &Space,
+    db: &RoutineDb,
+    p: ProblemSize,
+    threads: usize,
+    range: Range<usize>,
+) -> CostCache {
+    assert!(
+        range.end <= space.partitions.len(),
+        "partition range {}..{} exceeds {} partitions",
+        range.start,
+        range.end,
+        space.partitions.len()
+    );
     let mut jobs: BTreeMap<ImplKey, &KernelPlan> = BTreeMap::new();
-    for (pi, per_part) in space.impls.iter().enumerate() {
-        for (part_idx, impls) in per_part.iter().enumerate() {
+    for pi in range {
+        for (part_idx, impls) in space.impls[pi].iter().enumerate() {
             let base = part_key(&space.partitions[pi].parts[part_idx]);
             for (j, pimpl) in impls.iter().enumerate() {
                 jobs.entry((base.clone(), j)).or_insert(&pimpl.plan);
@@ -179,6 +208,24 @@ mod tests {
         }
         assert_eq!(cache.len(), distinct.len());
         assert_eq!(cache.evals, distinct.len());
+    }
+
+    #[test]
+    fn precompute_range_covers_exactly_its_partitions() {
+        let (_, _, space, db) = bicgk_space();
+        let p = ProblemSize::square(4096);
+        let full = precompute(&space, &db, p, 1);
+        // per-chunk key sets union to the full job set, values agree
+        let n = space.partitions.len();
+        let a = precompute_range(&space, &db, p, 1, 0..1);
+        let b = precompute_range(&space, &db, p, 1, 1..n);
+        let mut union = a.key_set();
+        union.extend(b.key_set());
+        assert_eq!(union, full.key_set());
+        // an empty range evaluates nothing
+        let empty = precompute_range(&space, &db, p, 1, n..n);
+        assert!(empty.is_empty());
+        assert_eq!(empty.evals, 0);
     }
 
     #[test]

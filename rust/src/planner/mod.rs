@@ -25,6 +25,13 @@
 //!   materialized into [`crate::ir::plan::SeqPlan`]s, so the number of
 //!   full combinations evaluated is at most the number of partitions —
 //!   versus the product-of-list-sizes the exhaustive sweep pays.
+//! * **Sharded search** ([`shard`]): the per-partition evaluation is
+//!   embarrassingly parallel, so the partition range splits into
+//!   chunks evaluated anywhere — other threads, or the fleet's idle
+//!   workers via the engine's control plane — and merged by the same
+//!   incumbent scan. Separability makes the merge exact: the sharded
+//!   result is bit-identical to unsharded [`plan_space`] (which is
+//!   itself implemented as the one-chunk instance).
 //!
 //! # The pruning bound, and why the planner is exact
 //!
@@ -64,9 +71,11 @@
 
 pub mod cost;
 pub mod search;
+pub mod shard;
 
 pub use cost::{part_key, CostCache, ImplKey};
 pub use search::{
     forecast_variants, plan, plan_space, rank_top_k, Planned, PlannerConfig, PlannerStats,
     RankedCombo, VariantForecast,
 };
+pub use shard::{chunk_ranges, plan_space_sharded, ShardEval};

@@ -4,7 +4,7 @@
 //! argument that makes [`plan_space`] exact while materializing at most
 //! one combination per partition.
 
-use super::cost::{self, CostCache};
+use super::cost;
 use crate::fusion::space::Space;
 use crate::fusion::{enumerate_fusions, ImplAxes};
 use crate::graph::DepGraph;
@@ -147,6 +147,13 @@ pub fn plan(
 }
 
 /// Select the best plan of an already-built space.
+///
+/// Implemented as the one-chunk instance of the sharded search
+/// ([`crate::planner::shard`]): evaluate the whole partition range as a
+/// single chunk, then run the merge's incumbent scan. Sharded
+/// evaluation (any chunking of the same range) is therefore
+/// bit-identical by construction — same plan, same predicted seconds,
+/// same stats — which `tests/planner_equivalence.rs` property-tests.
 pub fn plan_space(
     prog: &Program,
     space: &Space,
@@ -158,72 +165,13 @@ pub fn plan_space(
         !space.partitions.is_empty(),
         "optimization space has no partitions"
     );
-    let mut cache = cost::precompute(space, db, p, cfg.threads.max(1));
-    let kernel_evals = cache.evals;
-
-    // Per-partition exact optimum (= lower bound, tight by separability):
-    // the per-part argmin, taking the first index on ties so the choice
-    // matches the first minimal combination in enumeration order.
-    struct PartitionBest {
-        bound: f64,
-        choice: Vec<usize>,
-    }
-    let mut kernel_refs = 0usize;
-    let mut per_partition: Vec<PartitionBest> = Vec::with_capacity(space.partitions.len());
-    for (pi, per_part) in space.impls.iter().enumerate() {
-        let mut bound = 0.0f64;
-        let mut choice = Vec::with_capacity(per_part.len());
-        for (part_idx, impls) in per_part.iter().enumerate() {
-            let base = cost::part_key(&space.partitions[pi].parts[part_idx]);
-            kernel_refs += impls.len();
-            let mut best_j = 0usize;
-            let mut best_c = f64::INFINITY;
-            for (j, pimpl) in impls.iter().enumerate() {
-                let c = cache.kernel_cost((base.clone(), j), &pimpl.plan, db, p);
-                if c < best_c {
-                    best_c = c;
-                    best_j = j;
-                }
-            }
-            bound += best_c;
-            choice.push(best_j);
-        }
-        per_partition.push(PartitionBest { bound, choice });
-    }
-
-    // Incumbent scan in partition enumeration order. Strict improvement
-    // keeps exhaustive search's first-minimum tie-breaking; partitions
-    // whose bound does not beat the incumbent are pruned unmaterialized.
-    let mut stats = PlannerStats {
-        space_combinations: space.combination_count(),
-        combos_evaluated: 0,
-        partitions_pruned: 0,
-        kernel_evals,
-        kernel_refs,
-    };
-    let mut best: Option<(usize, f64)> = None;
-    for (pi, pb) in per_partition.iter().enumerate() {
-        if let Some((_, incumbent)) = best {
-            if pb.bound >= incumbent {
-                stats.partitions_pruned += 1;
-                continue;
-            }
-        }
-        stats.combos_evaluated += 1;
-        best = Some((pi, pb.bound));
-    }
-    let (pi, predicted) = best.expect("non-empty space has a best partition");
-    let best_plan = materialize(prog, space, pi, &per_partition[pi].choice);
-    Planned {
-        best: best_plan,
-        predicted,
-        stats,
-    }
+    let full = super::shard::eval_chunk(space, db, p, cfg, 0..space.partitions.len());
+    super::shard::merge(prog, space, vec![full])
 }
 
 /// Build the `SeqPlan` of one combination with the same kernel order and
 /// variant label the exhaustive ranking uses.
-fn materialize(prog: &Program, space: &Space, pi: usize, choice: &[usize]) -> SeqPlan {
+pub(crate) fn materialize(prog: &Program, space: &Space, pi: usize, choice: &[usize]) -> SeqPlan {
     let mut parts = space.combination(pi, choice);
     parts.sort_by_key(|pp| pp.fi.fusion.calls.iter().next().unwrap().0);
     let label = format!(

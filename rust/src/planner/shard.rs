@@ -1,0 +1,334 @@
+//! Sharded plan-space search: split the partition range into chunks,
+//! evaluate each chunk independently (possibly on another worker), and
+//! merge the chunk results into the exact unsharded answer.
+//!
+//! # Why the merge is exact
+//!
+//! [`plan_space`](super::plan_space) has two phases with very different
+//! coupling. The expensive phase — predicting every implementation and
+//! taking each partition's per-part argmin — is *embarrassingly
+//! parallel over partitions*: a partition's bound and choice depend
+//! only on that partition's own implementation lists and the (pure)
+//! predictor. Only the cheap final phase — the incumbent scan that
+//! picks `min_P LB(P)` and accounts pruning — couples partitions, and
+//! it needs nothing but each partition's `(bound, choice)` pair.
+//!
+//! So a shard evaluates a contiguous chunk of the partition range and
+//! returns its per-partition [`PartitionBest`]s plus bookkeeping
+//! ([`ShardEval`]); [`merge`] re-assembles the chunks in partition
+//! order and runs the *identical* incumbent scan the unsharded planner
+//! runs. Every float is produced by the same pure function in the same
+//! accumulation order, so the merged result is bit-identical to
+//! unsharded [`plan_space`](super::plan_space) — same plan label, same
+//! predicted seconds, same summed [`PlannerStats`] — for every chunking
+//! (including `K` larger than the partition count, where trailing
+//! chunks are empty). `plan_space` itself is implemented as the
+//! one-chunk instance of this module, so the equivalence holds by
+//! construction and is property-tested in
+//! `tests/planner_equivalence.rs`.
+//!
+//! Stats reconstruction:
+//! * `space_combinations` / `kernel_refs` are per-partition sums —
+//!   chunk subtotals add up exactly;
+//! * `kernel_evals` counts *distinct* implementations, and an
+//!   implementation shared by parts in two chunks must count once —
+//!   each chunk reports its referenced key set and the merge counts the
+//!   union;
+//! * `combos_evaluated` / `partitions_pruned` depend on the global
+//!   incumbent order, so they are computed by the merge scan, never by
+//!   the shards.
+
+use super::cost::{self, ImplKey};
+use super::search::{materialize, Planned, PlannerConfig, PlannerStats};
+use crate::fusion::space::Space;
+use crate::ir::elem::ProblemSize;
+use crate::ir::program::Program;
+use crate::predict::RoutineDb;
+use std::collections::BTreeSet;
+use std::ops::Range;
+
+/// One partition's exact optimum: the tight lower bound (sum of
+/// per-part minima) and the per-part implementation choice achieving it
+/// (first index on ties, matching enumeration order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionBest {
+    pub bound: f64,
+    pub choice: Vec<usize>,
+}
+
+/// The result of evaluating one chunk of the partition range:
+/// everything [`merge`] needs, nothing thread- or device-dependent.
+/// `Send`, so it can cross the engine's control plane.
+#[derive(Clone, Debug)]
+pub struct ShardEval {
+    /// The evaluated partition range (global indices).
+    pub range: Range<usize>,
+    /// Per-partition optima, parallel to `range`.
+    pub bests: Vec<PartitionBest>,
+    /// Distinct implementation keys this chunk referenced; the merge
+    /// unions the chunks' sets into the exact `kernel_evals` count.
+    pub keys: BTreeSet<ImplKey>,
+    /// Implementation references across the chunk's partitions.
+    pub kernel_refs: usize,
+    /// Combination count of the chunk's partitions.
+    pub space_combinations: usize,
+}
+
+/// Split `0..n_partitions` into `k` contiguous chunks of near-equal
+/// length, in order. With `k > n_partitions` the trailing chunks are
+/// empty — evaluating them is a no-op and the merge still sees full
+/// coverage.
+pub fn chunk_ranges(n_partitions: usize, k: usize) -> Vec<Range<usize>> {
+    let k = k.max(1);
+    let base = n_partitions / k;
+    let rem = n_partitions % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n_partitions);
+    out
+}
+
+/// Evaluate one chunk: predict the chunk's implementations
+/// ([`cost::precompute_range`]) and take each partition's per-part
+/// argmin — exactly the per-partition loop of the unsharded planner,
+/// restricted to `range`. Pure function of
+/// `(space, calibration, size, range)`: two evaluations of the same
+/// chunk on different threads, workers or devices' worth of hardware
+/// produce identical bits.
+pub fn eval_chunk(
+    space: &Space,
+    db: &RoutineDb,
+    p: ProblemSize,
+    cfg: &PlannerConfig,
+    range: Range<usize>,
+) -> ShardEval {
+    assert!(
+        range.end <= space.partitions.len(),
+        "shard range {}..{} exceeds {} partitions",
+        range.start,
+        range.end,
+        space.partitions.len()
+    );
+    let mut cache = cost::precompute_range(space, db, p, cfg.threads.max(1), range.clone());
+    let keys = cache.key_set();
+    let mut kernel_refs = 0usize;
+    let mut space_combinations = 0usize;
+    let mut bests = Vec::with_capacity(range.len());
+    for pi in range.clone() {
+        let per_part = &space.impls[pi];
+        space_combinations += per_part.iter().map(|v| v.len()).product::<usize>();
+        let mut bound = 0.0f64;
+        let mut choice = Vec::with_capacity(per_part.len());
+        for (part_idx, impls) in per_part.iter().enumerate() {
+            let base = cost::part_key(&space.partitions[pi].parts[part_idx]);
+            kernel_refs += impls.len();
+            let mut best_j = 0usize;
+            let mut best_c = f64::INFINITY;
+            for (j, pimpl) in impls.iter().enumerate() {
+                let c = cache.kernel_cost((base.clone(), j), &pimpl.plan, db, p);
+                if c < best_c {
+                    best_c = c;
+                    best_j = j;
+                }
+            }
+            bound += best_c;
+            choice.push(best_j);
+        }
+        bests.push(PartitionBest { bound, choice });
+    }
+    ShardEval {
+        range,
+        bests,
+        keys,
+        kernel_refs,
+        space_combinations,
+    }
+}
+
+/// Merge chunk evaluations into the final plan: sort the chunks back
+/// into partition order, verify they tile the whole range exactly (a
+/// partial merge is a bug, never a silent answer), then run the same
+/// strict-improvement incumbent scan as the unsharded planner and
+/// materialize the winner.
+///
+/// Panics when the chunks do not cover `0..space.partitions.len()`
+/// exactly once — callers (the engine's scatter/gather) re-evaluate
+/// lost chunks locally rather than merging holes.
+pub fn merge(prog: &Program, space: &Space, mut chunks: Vec<ShardEval>) -> Planned {
+    assert!(
+        !space.partitions.is_empty(),
+        "optimization space has no partitions"
+    );
+    chunks.sort_by_key(|c| (c.range.start, c.range.end));
+    let mut next = 0usize;
+    for c in &chunks {
+        assert_eq!(
+            c.range.start, next,
+            "shard chunks must tile the partition range (gap or overlap at {})",
+            c.range.start
+        );
+        assert_eq!(
+            c.bests.len(),
+            c.range.len(),
+            "chunk {}..{} carries {} partition bests",
+            c.range.start,
+            c.range.end,
+            c.bests.len()
+        );
+        next = c.range.end;
+    }
+    assert_eq!(
+        next,
+        space.partitions.len(),
+        "shard chunks cover {next} of {} partitions",
+        space.partitions.len()
+    );
+
+    let mut keys: BTreeSet<ImplKey> = BTreeSet::new();
+    let mut stats = PlannerStats::default();
+    // The incumbent scan over the re-assembled partition order —
+    // identical to the unsharded scan, so pruning accounting and
+    // first-minimum tie-breaking match exactly. Key sets are *moved*
+    // into the union (merge owns the chunks), not cloned.
+    let mut best: Option<(usize, usize, f64)> = None; // (chunk, offset, bound)
+    for (ci, c) in chunks.iter_mut().enumerate() {
+        stats.space_combinations += c.space_combinations;
+        stats.kernel_refs += c.kernel_refs;
+        keys.append(&mut c.keys);
+        for (off, pb) in c.bests.iter().enumerate() {
+            if let Some((_, _, incumbent)) = best {
+                if pb.bound >= incumbent {
+                    stats.partitions_pruned += 1;
+                    continue;
+                }
+            }
+            stats.combos_evaluated += 1;
+            best = Some((ci, off, pb.bound));
+        }
+    }
+    stats.kernel_evals = keys.len();
+    let (ci, off, predicted) = best.expect("non-empty space has a best partition");
+    let pi = chunks[ci].range.start + off;
+    let best_plan = materialize(prog, space, pi, &chunks[ci].bests[off].choice);
+    Planned {
+        best: best_plan,
+        predicted,
+        stats,
+    }
+}
+
+/// Sharded [`plan_space`](super::plan_space), evaluated in-process:
+/// chunk the partition range into `k` pieces, evaluate each, merge.
+/// Exists for tests, benches and the engine's local fallback — the
+/// serving path scatters the same chunks over fleet workers instead
+/// (`Client::search_sharded`).
+pub fn plan_space_sharded(
+    prog: &Program,
+    space: &Space,
+    db: &RoutineDb,
+    p: ProblemSize,
+    cfg: &PlannerConfig,
+    k: usize,
+) -> Planned {
+    let chunks = chunk_ranges(space.partitions.len(), k)
+        .into_iter()
+        .map(|r| eval_chunk(space, db, p, cfg, r))
+        .collect();
+    merge(prog, space, chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{enumerate_fusions, ImplAxes};
+    use crate::graph::DepGraph;
+    use crate::library::Library;
+    use crate::planner::plan_space;
+    use crate::predict::RoutineDb;
+    use crate::script::compile_script;
+    use crate::sim::DeviceModel;
+
+    #[test]
+    fn chunk_ranges_tile_the_partition_range() {
+        for n in [0usize, 1, 2, 5, 7, 16] {
+            for k in 1..=6 {
+                let ranges = chunk_ranges(n, k);
+                assert_eq!(ranges.len(), k);
+                let mut next = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    next = r.end;
+                }
+                assert_eq!(next, n, "n={n} k={k}");
+                // near-equal: lengths differ by at most one
+                let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(hi - lo <= 1, "n={n} k={k}: {lens:?}");
+            }
+        }
+        // k = 0 is clamped to one chunk
+        assert_eq!(chunk_ranges(4, 0), vec![0..4]);
+    }
+
+    #[test]
+    fn sharded_gemver_matches_unsharded_for_every_k() {
+        let lib = Library::standard();
+        let seq = crate::sequences::by_name("gemver").unwrap();
+        let prog = compile_script(seq.name, seq.script, &lib).unwrap();
+        let graph = DepGraph::build(&prog, &lib);
+        let db = RoutineDb::calibrate(&DeviceModel::gtx480(), &lib);
+        let fusions = enumerate_fusions(&prog, &lib, &graph);
+        let space = Space::build(&prog, &lib, &graph, &fusions, &ImplAxes::minimal());
+        let p = ProblemSize::square(8192);
+        let cfg = PlannerConfig::default();
+        let reference = plan_space(&prog, &space, &db, p, &cfg);
+        for k in 1..=space.partitions.len() + 2 {
+            let sharded = plan_space_sharded(&prog, &space, &db, p, &cfg, k);
+            assert_eq!(sharded.best.variant, reference.best.variant, "k={k}");
+            assert_eq!(
+                sharded.predicted.to_bits(),
+                reference.predicted.to_bits(),
+                "k={k}"
+            );
+            assert_eq!(
+                sharded.stats.kernel_evals, reference.stats.kernel_evals,
+                "k={k}: shared impls must count once across chunks"
+            );
+            assert_eq!(sharded.stats.kernel_refs, reference.stats.kernel_refs, "k={k}");
+            assert_eq!(
+                sharded.stats.combos_evaluated, reference.stats.combos_evaluated,
+                "k={k}"
+            );
+            assert_eq!(
+                sharded.stats.partitions_pruned, reference.stats.partitions_pruned,
+                "k={k}"
+            );
+            assert_eq!(
+                sharded.stats.space_combinations, reference.stats.space_combinations,
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "tile the partition range")]
+    fn merge_rejects_partial_coverage() {
+        let lib = Library::standard();
+        let seq = crate::sequences::by_name("bicgk").unwrap();
+        let prog = compile_script(seq.name, seq.script, &lib).unwrap();
+        let graph = DepGraph::build(&prog, &lib);
+        let db = RoutineDb::calibrate(&DeviceModel::gtx480(), &lib);
+        let fusions = enumerate_fusions(&prog, &lib, &graph);
+        let space = Space::build(&prog, &lib, &graph, &fusions, &ImplAxes::minimal());
+        let p = ProblemSize::square(4096);
+        let cfg = PlannerConfig::default();
+        // bicgk has 2 partitions; hand merge only the second chunk
+        let tail = eval_chunk(&space, &db, p, &cfg, 1..2);
+        let _ = merge(&prog, &space, vec![tail]);
+    }
+}

@@ -11,6 +11,8 @@
 //!   Baseline plans are compiled from it **with fusion disabled and a
 //!   fixed default implementation** — CUBLAS cannot fuse or retune.
 
+use crate::fusion::space::Space;
+use crate::fusion::{enumerate_fusions, ImplAxes};
 use crate::graph::DepGraph;
 use crate::ir::plan::Poly2;
 use crate::ir::program::Program;
@@ -75,6 +77,21 @@ impl Sequence {
     /// Is this sequence a BLAS-2 (matrix) workload?
     pub fn is_blas2(&self) -> bool {
         self.script.contains("matrix")
+    }
+
+    /// The sequence's optimization space, with the program and
+    /// dependency graph it was built from. This is THE definition the
+    /// serve path plans over — the fleet workers' per-sequence cache,
+    /// the engine's sharded-search client, and the router's local
+    /// fallback all build it through here, so the sharded-search
+    /// bit-identity guarantee (submitter's `chunk_ranges` over the same
+    /// partitions the worker evaluates) never depends on call sites
+    /// keeping a hand-copied build recipe in sync.
+    pub fn space(&self, lib: &Library, axes: &ImplAxes) -> (Program, DepGraph, Space) {
+        let (prog, graph) = self.graph(lib);
+        let fusions = enumerate_fusions(&prog, lib, &graph);
+        let space = Space::build(&prog, lib, &graph, &fusions, axes);
+        (prog, graph, space)
     }
 }
 

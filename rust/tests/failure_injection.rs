@@ -3,10 +3,18 @@
 //! a deployment requirement the paper's compiler (which controls its own
 //! binaries) never faced, but ours (AOT catalog + separate runtime) does.
 
+use fusebla::fusion::ImplAxes;
+use fusebla::ir::elem::ProblemSize;
+use fusebla::planner::{plan_space, PlannerConfig};
 use fusebla::runtime::{Runtime, Tensor};
+use fusebla::sequences;
+use fusebla::sim::DeviceModel;
+use fusebla::{DeviceRegistry, Engine, EngineConfig};
 use std::collections::BTreeMap;
 use std::fs;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn scratch_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("fusebla_fi_{name}_{}", std::process::id()));
@@ -108,6 +116,91 @@ fn truncated_manifest_rejected() {
     .unwrap();
     let err = Runtime::load(&dir).err().expect("must fail").to_string();
     assert!(err.contains("truncated"), "{err}");
+}
+
+/// Shard failure injection: a worker that is gone (engine shut down
+/// under a live client) or wedged past the shard deadline (deadline
+/// zero — every gather times out mid-`PlanShard`) makes the submitter
+/// plan the affected chunks locally. The final plan is identical in
+/// every case — same label, bit-identical predicted seconds, same
+/// stats — and the search neither hangs nor merges a partial range.
+#[test]
+fn shard_chunks_fall_back_locally_on_wedged_or_dead_workers() {
+    // stub catalog: the manifest parses, so the engine starts; only
+    // execution would need real artifacts, and nothing executes here
+    let dir = fusebla::bench_support::stub_catalog("shardfb", &["waxpby"]);
+    let cal = scratch_dir("shardfb_cal");
+    let registry = Arc::new(
+        DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], &cal).unwrap(),
+    );
+
+    // the unsharded local reference, on device 0's own calibration
+    let lib = registry.library().clone();
+    let seq = sequences::by_name("gemver").unwrap();
+    let (prog, _graph, space) = seq.space(&lib, &ImplAxes::minimal());
+    let p = ProblemSize::new(4096, 4096).padded();
+    let reference = plan_space(
+        &prog,
+        &space,
+        &registry.context(0).db,
+        p,
+        &PlannerConfig::default(),
+    );
+    let device0 = registry.id(0).name().to_string();
+    let same = |planned: &fusebla::planner::Planned, label: &str| {
+        assert_eq!(planned.best.variant, reference.best.variant, "{label}");
+        assert_eq!(
+            planned.predicted.to_bits(),
+            reference.predicted.to_bits(),
+            "{label}"
+        );
+        assert_eq!(
+            planned.stats.combos_evaluated, reference.stats.combos_evaluated,
+            "{label}"
+        );
+        assert_eq!(planned.stats.kernel_evals, reference.stats.kernel_evals, "{label}");
+    };
+
+    // 1. healthy fleet: chunks served by the workers
+    let engine = Engine::start_fleet(registry.clone(), &dir, EngineConfig::default()).unwrap();
+    let client = engine.client();
+    let healthy = client
+        .search_sharded("gemver", 4096, 4096, 4, Some(device0.as_str()))
+        .unwrap();
+    same(&healthy, "healthy fleet");
+    let live = engine.metrics();
+    assert_eq!(live.shard_requests, 4, "every chunk reached a worker");
+    assert_eq!(live.shard_served, 4);
+
+    // 2. workers gone: shut the engine down but keep the client — every
+    // PlanShard send fails, every chunk plans locally, nothing hangs
+    let _ = engine.shutdown();
+    let dead = client
+        .search_sharded("gemver", 4096, 4096, 4, Some(device0.as_str()))
+        .unwrap();
+    same(&dead, "dead workers");
+
+    // 3. wedged past the deadline: a zero shard deadline times every
+    // gather out mid-PlanShard; the submitter falls back chunk by chunk
+    // and still merges the full range
+    let wedged_engine = Engine::start_fleet(
+        registry.clone(),
+        &dir,
+        EngineConfig {
+            shard_deadline: Duration::ZERO,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let wedged = wedged_engine
+        .client()
+        .search_sharded("gemver", 4096, 4096, 3, Some(device0.as_str()))
+        .unwrap();
+    same(&wedged, "wedged workers");
+    let _ = wedged_engine.shutdown();
+
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
 }
 
 #[test]

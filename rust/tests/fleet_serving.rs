@@ -46,6 +46,7 @@ fn pinned_submissions_bit_identical_to_single_device_batch() {
         EngineConfig {
             batch_window: Duration::from_millis(50),
             max_batch: 64,
+            ..EngineConfig::default()
         },
     )
     .unwrap();
@@ -120,6 +121,68 @@ fn router_prefers_the_cheap_device_end_to_end() {
     // queued-duration samples
     assert_eq!(fleet.devices[0].1.queued.count(), 4);
     assert_eq!(fleet.devices[1].1.queued.count(), 0);
+    let _ = std::fs::remove_dir_all(&cal);
+}
+
+/// The cold-key regression (the router's old N+1 tradeoff, now gone):
+/// the first unpinned submit of a fresh `(seq, size)` key runs **zero**
+/// planner searches on the submitting thread and at most one per device
+/// fleet-wide — the forecasts run on the workers and seed their plan
+/// caches, so the routed worker's first execution is a plan-cache hit,
+/// not a re-plan.
+#[test]
+fn cold_key_plans_on_workers_not_the_submitting_thread() {
+    // A stub catalog is enough: planning and the control plane work
+    // end-to-end without built artifacts, and the plan-cache counters
+    // this test asserts are recorded before the (stub-failed) execution.
+    let dir = fusebla::bench_support::stub_catalog("coldkey", &["waxpby"]);
+    let (cal, registry) = two_device_registry("coldkey");
+    // a generous forecast deadline: this test pins *where* planning
+    // runs, not how fast a loaded CI machine answers
+    let cfg = EngineConfig {
+        forecast_deadline: Duration::from_secs(60),
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start_fleet(registry, &dir, cfg).unwrap();
+    let client = engine.client();
+
+    let ticket = client.submit(SubmitRequest::new("waxpby", 32, 65536)).unwrap();
+    let _ = ticket.wait(); // stub backend fails execution — irrelevant here
+
+    let stats = client.routing_stats();
+    assert_eq!(stats.cold_keys, 1);
+    assert_eq!(
+        stats.local_forecasts, 0,
+        "the submitting thread must run zero planner searches"
+    );
+    assert_eq!(stats.worker_forecasts, 2, "one worker forecast per device");
+
+    // a second submit of the same key is a pure cache probe: no new
+    // forecasts anywhere
+    let _ = client.submit(SubmitRequest::new("waxpby", 32, 65530)).unwrap().wait();
+    assert_eq!(client.routing_stats(), stats, "warm keys never re-forecast");
+
+    let fleet = engine.shutdown_fleet();
+    let agg = fleet.aggregate();
+    assert_eq!(
+        agg.planner_on_worker, 2,
+        "at most one planner run per device fleet-wide"
+    );
+    // every device was seeded exactly once by its forecast...
+    for (id, m) in &fleet.devices {
+        assert_eq!(m.planner_on_worker, 1, "{id}");
+        assert_eq!(m.plan_cache_misses, 1, "{id}: the seed records the one miss");
+    }
+    // ...and the routed worker's executions hit the seeded entry
+    let routed: Vec<_> = fleet.devices.iter().filter(|(_, m)| m.requests > 0).collect();
+    assert_eq!(routed.len(), 1, "one device took both submits");
+    assert_eq!(routed[0].1.requests, 2);
+    assert_eq!(
+        routed[0].1.plan_cache_hits,
+        2,
+        "first execution of the key must hit the forecast-seeded plan"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
     let _ = std::fs::remove_dir_all(&cal);
 }
 

@@ -10,9 +10,13 @@ use fusebla::bench_support::eval_size;
 use fusebla::coordinator::Context;
 use fusebla::fusion::space::Space;
 use fusebla::fusion::{enumerate_fusions, ImplAxes};
+use fusebla::ir::elem::ProblemSize;
 use fusebla::ir::plan::SeqPlan;
-use fusebla::planner::{plan_space, rank_top_k, PlannerConfig};
+use fusebla::planner::{
+    chunk_ranges, plan_space, plan_space_sharded, rank_top_k, shard, PlannerConfig,
+};
 use fusebla::sequences;
+use fusebla::util::proptest::check;
 
 fn kernel_names(plan: &SeqPlan) -> Vec<String> {
     plan.kernels.iter().map(|k| k.name.clone()).collect()
@@ -149,6 +153,69 @@ fn planner_memoizes_shared_parts_across_partitions() {
         planned.stats.kernel_evals,
         planned.stats.kernel_refs
     );
+}
+
+/// The shard-equivalence property: over randomized sequences, problem
+/// sizes and shard counts K ∈ {1..5} — including K larger than the
+/// partition count, which produces empty chunks — the merged sharded
+/// result is byte-identical to unsharded `plan_space`: same plan label
+/// and kernels, bit-identical predicted seconds, and stats totals that
+/// sum exactly (shared implementations across chunks counted once).
+/// Chunks are also merged in shuffled arrival order, since the fleet's
+/// workers answer in whatever order they drain.
+#[test]
+fn sharded_plan_space_is_byte_identical_to_unsharded() {
+    let ctx = Context::new();
+    let axes = ImplAxes::minimal();
+    let all = sequences::all();
+    let cfg = PlannerConfig::default();
+    check("sharded plan_space equals unsharded", 20, |g| {
+        let seq = g.choose(&all);
+        let (prog, graph) = seq.graph(&ctx.lib);
+        let (m, n) = if seq.is_blas2() {
+            (g.usize_edgy(1, 8192), g.usize_edgy(1, 8192))
+        } else {
+            (g.usize_edgy(1, 64), g.usize_edgy(1, 1 << 20))
+        };
+        let p = ProblemSize::new(m, n).padded();
+        let fusions = enumerate_fusions(&prog, &ctx.lib, &graph);
+        let space = Space::build(&prog, &ctx.lib, &graph, &fusions, &axes);
+        let reference = plan_space(&prog, &space, &ctx.db, p, &cfg);
+        for k in 1..=5usize {
+            let sharded = plan_space_sharded(&prog, &space, &ctx.db, p, &cfg, k);
+            assert_eq!(sharded.best.variant, reference.best.variant, "{} k={k}", seq.name);
+            assert_eq!(
+                kernel_names(&sharded.best),
+                kernel_names(&reference.best),
+                "{} k={k}",
+                seq.name
+            );
+            assert_eq!(
+                sharded.predicted.to_bits(),
+                reference.predicted.to_bits(),
+                "{} k={k}",
+                seq.name
+            );
+            let (s, r) = (&sharded.stats, &reference.stats);
+            assert_eq!(s.space_combinations, r.space_combinations, "{} k={k}", seq.name);
+            assert_eq!(s.combos_evaluated, r.combos_evaluated, "{} k={k}", seq.name);
+            assert_eq!(s.partitions_pruned, r.partitions_pruned, "{} k={k}", seq.name);
+            assert_eq!(s.kernel_evals, r.kernel_evals, "{} k={k}", seq.name);
+            assert_eq!(s.kernel_refs, r.kernel_refs, "{} k={k}", seq.name);
+        }
+        // chunks evaluated independently and merged out of order must
+        // reassemble to the identical answer (merge sorts by range)
+        let k = g.usize(2, 5);
+        let mut chunks: Vec<shard::ShardEval> = chunk_ranges(space.partitions.len(), k)
+            .into_iter()
+            .map(|r| shard::eval_chunk(&space, &ctx.db, p, &cfg, r))
+            .collect();
+        g.shuffle(&mut chunks);
+        let merged = shard::merge(&prog, &space, chunks);
+        assert_eq!(merged.best.variant, reference.best.variant, "{}", seq.name);
+        assert_eq!(merged.predicted.to_bits(), reference.predicted.to_bits(), "{}", seq.name);
+        assert_eq!(merged.stats.combos_evaluated, reference.stats.combos_evaluated);
+    });
 }
 
 #[test]

@@ -55,6 +55,7 @@ fn engine_burst_batches_and_matches_sequential() {
     let cfg = EngineConfig {
         batch_window: Duration::from_millis(250),
         max_batch: 64,
+        ..EngineConfig::default()
     };
     let engine = Engine::with_config(ctx.clone(), &dir, cfg).unwrap();
     let client = engine.client();
