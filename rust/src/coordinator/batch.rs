@@ -113,13 +113,27 @@ pub(crate) fn group(
     (batches, failed)
 }
 
+/// Order a turn's batches for execution: earliest deadline first
+/// (taking each batch's most urgent member), batches with no deadline
+/// last, and higher maximum priority breaking ties. The sort is stable,
+/// so equally-urgent batches keep first-arrival order — EDF-ish rather
+/// than a full preemptive EDF, which is all a turn-at-a-time scheduler
+/// can express.
+pub(crate) fn order_edf(batches: &mut [Batch]) {
+    batches.sort_by_key(|b| {
+        let deadline = b.reqs.iter().filter_map(|r| r.deadline).min();
+        let priority = b.reqs.iter().map(|r| r.priority).max().unwrap_or(0);
+        (deadline.is_none(), deadline, std::cmp::Reverse(priority))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::{Reply, RequestInputs};
     use anyhow::anyhow;
     use std::sync::mpsc;
-    use std::time::Instant;
+    use std::time::{Duration, Instant};
 
     fn req(seq: &str, m: usize, n: usize, variant: Option<PlanChoice>) -> Request {
         // the receiver is dropped — grouping never touches the reply
@@ -131,6 +145,8 @@ mod tests {
             inputs: RequestInputs::Synth { seed: 0 },
             variant,
             enqueued: Instant::now(),
+            deadline: None,
+            priority: 0,
             reply: Reply::new(tx, None),
         }
     }
@@ -224,5 +240,62 @@ mod tests {
         assert_eq!(calls, 2, "failures are memoized too — one resolve per key");
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].key.seq, "waxpby");
+    }
+
+    fn req_slo(seq: &str, deadline: Option<Duration>, priority: u8) -> Request {
+        let now = Instant::now();
+        let mut r = req(seq, 32, 65536, Some(PlanChoice::Fused));
+        r.deadline = deadline.map(|d| now + d);
+        r.priority = priority;
+        r
+    }
+
+    #[test]
+    fn edf_orders_urgent_first_and_deadline_free_last() {
+        // Arrival order: no-deadline, loose, urgent. Distinct seqs keep
+        // them in distinct batches.
+        let reqs = vec![
+            req_slo("waxpby", None, 0),
+            req_slo("vadd", Some(Duration::from_secs(60)), 0),
+            req_slo("sscal", Some(Duration::from_millis(5)), 0),
+        ];
+        let (mut batches, failed) = group(reqs, &dev("dev0"), |_, _, _| Ok(PlanChoice::Fused));
+        assert!(failed.is_empty());
+        assert_eq!(batches.len(), 3);
+        order_edf(&mut batches);
+        let order: Vec<&str> = batches.iter().map(|b| b.key.seq.as_str()).collect();
+        assert_eq!(order, vec!["sscal", "vadd", "waxpby"]);
+    }
+
+    #[test]
+    fn edf_batch_urgency_is_its_most_urgent_member() {
+        // One batch holds {loose, urgent} members; the other a medium
+        // deadline. The mixed batch must rank by its urgent member.
+        let reqs = vec![
+            req_slo("waxpby", Some(Duration::from_secs(60)), 0),
+            req_slo("vadd", Some(Duration::from_secs(1)), 0),
+            req_slo("waxpby", Some(Duration::from_millis(2)), 0),
+        ];
+        let (mut batches, failed) = group(reqs, &dev("dev0"), |_, _, _| Ok(PlanChoice::Fused));
+        assert!(failed.is_empty());
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].reqs.len(), 2);
+        order_edf(&mut batches);
+        assert_eq!(batches[0].key.seq, "waxpby", "urgent member pulls its batch first");
+    }
+
+    #[test]
+    fn edf_priority_breaks_ties_and_sort_is_stable() {
+        // No deadlines anywhere: priority decides, then arrival order.
+        let reqs = vec![
+            req_slo("waxpby", None, 0),
+            req_slo("vadd", None, 3),
+            req_slo("sscal", None, 0),
+        ];
+        let (mut batches, failed) = group(reqs, &dev("dev0"), |_, _, _| Ok(PlanChoice::Fused));
+        assert!(failed.is_empty());
+        order_edf(&mut batches);
+        let order: Vec<&str> = batches.iter().map(|b| b.key.seq.as_str()).collect();
+        assert_eq!(order, vec!["vadd", "waxpby", "sscal"]);
     }
 }

@@ -7,7 +7,12 @@
 //! fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
 //! fusebla autotune <seq>                  search + prediction-accuracy report
 //! fusebla serve-demo [--requests N] [--batch-window MS] [--devices N]
-//!                                         batched (fleet) serve demo
+//!                    [--scenario poisson|bursty|diurnal|hotkey] [--seed N]
+//!                    [--rate R] [--duration-ms MS] [--deadline-ms MS]
+//!                    [--priority P] [--queue-cap N]
+//!                                         batched (fleet) serve demo; with
+//!                                         --scenario, a seeded open-loop
+//!                                         traffic run with SLO reporting
 //! fusebla list                            sequences + artifact catalog
 //! ```
 
@@ -15,8 +20,8 @@ use crate::autotune;
 use crate::bench_support as bench;
 use crate::codegen;
 use crate::coordinator::{
-    synth_inputs, Context, Coordinator, Engine, EngineConfig, Metrics, PlanChoice, SubmitRequest,
-    Ticket,
+    synth_inputs, traffic, Context, Coordinator, Engine, EngineConfig, Metrics, PlanChoice,
+    SubmitRequest, Ticket,
 };
 use crate::fleet::DeviceRegistry;
 use crate::fusion::ImplAxes;
@@ -44,6 +49,9 @@ usage:
   fusebla run <seq> [--variant fused|cublas] [--m M] [--n N] [--no-check]
   fusebla autotune <seq>
   fusebla serve-demo [--requests N] [--batch-window MS] [--devices N]
+                     [--scenario poisson|bursty|diurnal|hotkey] [--seed N]
+                     [--rate R] [--duration-ms MS] [--deadline-ms MS]
+                     [--priority P] [--queue-cap N]
   fusebla list"
     );
     2
@@ -340,6 +348,68 @@ fn cmd_serve(args: &[String]) -> i32 {
         eprintln!("serve-demo: --devices must be at least 1");
         return 2;
     }
+    let scenario = match flag_value(args, "--scenario") {
+        Ok(None) => None,
+        Ok(Some(s)) => match traffic::Scenario::parse(&s) {
+            Some(sc) => Some(sc),
+            None => {
+                eprintln!(
+                    "serve-demo: unknown scenario '{s}' (expected poisson|bursty|diurnal|hotkey)"
+                );
+                return 2;
+            }
+        },
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let seed: u64 = match parse_flag(args, "--seed") {
+        Ok(v) => v.unwrap_or(42),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let rate: f64 = match parse_flag(args, "--rate") {
+        Ok(v) => v.unwrap_or(200.0),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    if rate <= 0.0 {
+        eprintln!("serve-demo: --rate must be positive");
+        return 2;
+    }
+    let duration_ms: u64 = match parse_flag(args, "--duration-ms") {
+        Ok(v) => v.unwrap_or(1000),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let deadline_ms: Option<u64> = match parse_flag(args, "--deadline-ms") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let priority: u8 = match parse_flag(args, "--priority") {
+        Ok(v) => v.unwrap_or(0),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let queue_cap: Option<usize> = match parse_flag(args, "--queue-cap") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
     // Size discovery from the manifest alone (no PJRT on this thread —
     // the client is !Send and lives on the engine's worker).
     let manifest = match crate::util::manifest::Manifest::load(&artifacts_dir().join("manifest.txt")) {
@@ -361,6 +431,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let cfg = EngineConfig {
         batch_window: Duration::from_millis(window_ms),
         max_batch: 256,
+        queue_cap: queue_cap.unwrap_or(usize::MAX),
         ..EngineConfig::default()
     };
     // One device serves the classic single-device path (no router in
@@ -380,6 +451,54 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     let client = engine.client();
+    // Open-loop SLO mode: replayable seeded arrivals instead of the
+    // closed-loop burst, with shed/SLO accounting printed at the end.
+    if let Some(scenario) = scenario {
+        let spec = traffic::TrafficSpec {
+            scenario,
+            seed,
+            rate,
+            horizon: Duration::from_millis(duration_ms),
+            keys: prepared.iter().map(|&(s, m, n)| (s.to_string(), m, n)).collect(),
+        };
+        let opts = traffic::OpenLoopOptions {
+            deadline: deadline_ms.map(Duration::from_millis),
+            priority,
+        };
+        // schedule() is pure, so recomputing it for the digest is free
+        // of replay risk
+        let digest = traffic::digest(&traffic::schedule(&spec));
+        let t0 = std::time::Instant::now();
+        let report = traffic::run_open_loop(&client, &spec, &opts);
+        let dt = t0.elapsed().as_secs_f64();
+        let fleet = engine.shutdown_fleet();
+        let metrics = fleet.aggregate();
+        println!(
+            "open-loop {} (seed {seed}, schedule {digest:016x}): {} submitted in {} — \
+             {} completed, {} failed, {} queue shed(s), {} deadline shed(s), {} other error(s)",
+            scenario.as_str(),
+            report.submitted,
+            fmt_duration(dt),
+            report.completed,
+            report.failed,
+            report.queue_sheds,
+            report.deadline_sheds,
+            report.other_errors
+        );
+        if fleet.devices.len() > 1 {
+            for (id, m) in &fleet.devices {
+                println!(
+                    "device {id}: {} request(s), {} batch(es), {}",
+                    m.requests,
+                    m.batches,
+                    queued_line(m)
+                );
+            }
+        }
+        println!("{}", slo_line(&metrics));
+        println!("{}", queued_line(&metrics));
+        return i32::from(report.other_errors != 0);
+    }
     let t0 = std::time::Instant::now();
     // a burst of repeated keys — exactly the traffic batching groups
     let mut tickets = Vec::new();
@@ -446,6 +565,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         routing.worker_forecasts,
         routing.local_forecasts
     );
+    println!("{}", slo_line(&metrics));
     println!("{}", queued_line(&metrics));
     i32::from(ok != n_requests)
 }
@@ -456,13 +576,38 @@ fn queued_line(m: &Metrics) -> String {
     if m.queued.is_empty() {
         return "queued: (no dispatched requests)".to_string();
     }
+    // the is_empty guard above makes the unwraps unreachable
     format!(
         "queued: mean {} p50 {} p90 {} max {} over {} request(s)",
-        fmt_duration(m.queued.mean()),
-        fmt_duration(m.queued.quantile(0.5)),
-        fmt_duration(m.queued.quantile(0.9)),
+        fmt_duration(m.queued.mean().unwrap_or(0.0)),
+        fmt_duration(m.queued.quantile(0.5).unwrap_or(0.0)),
+        fmt_duration(m.queued.quantile(0.9).unwrap_or(0.0)),
         fmt_duration(m.queued.max()),
         m.queued.count()
+    )
+}
+
+/// One-line submit→reply latency and SLO summary from the merged
+/// metrics: the distribution every request lands in, plus the
+/// deadline-scoped miss and shed counters.
+fn slo_line(m: &Metrics) -> String {
+    let q = |q: f64| {
+        m.latency
+            .quantile(q)
+            .map(fmt_duration)
+            .unwrap_or_else(|| "-".into())
+    };
+    format!(
+        "latency: p50 {} p99 {} max {} over {} request(s); SLO misses {}/{} deadline request(s); \
+         sheds: {} queue, {} deadline",
+        q(0.5),
+        q(0.99),
+        fmt_duration(m.latency.max()),
+        m.latency.count(),
+        m.slo_misses,
+        m.deadline_requests,
+        m.queue_sheds,
+        m.deadline_sheds
     )
 }
 

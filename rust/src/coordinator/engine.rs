@@ -43,7 +43,10 @@
 //! submissions bypass the router entirely, which is what makes them
 //! bit-identical to a single-device engine (`tests/fleet_serving.rs`).
 
-use super::{Context, Control, Coordinator, Metrics, Msg, PlanChoice, Reply, Request, RequestInputs};
+use super::{
+    Context, Control, Coordinator, Metrics, Msg, PlanChoice, Reply, Request, RequestInputs,
+    ServeError,
+};
 use crate::fleet::{CostModel, DeviceId, DeviceRegistry, RoutingStats};
 use crate::fusion::space::Space;
 use crate::fusion::ImplAxes;
@@ -87,6 +90,18 @@ pub struct EngineConfig {
     /// the scattered `Forecast` still seeds each worker's plan cache
     /// whenever the worker drains it, waited-for or not.
     pub forecast_deadline: Duration,
+    /// Admission-control bound on a device's in-flight requests
+    /// (submitted, not yet answered). A best-effort submit beyond the
+    /// cap is refused with [`ServeError::QueueFull`] instead of
+    /// queueing unboundedly; nonzero-priority submits get 2× headroom,
+    /// so load shedding hits best-effort traffic first.
+    /// `usize::MAX` (the default) disables shedding.
+    pub queue_cap: usize,
+    /// EDF slack: the per-request deadline budget reserved for dispatch
+    /// and execution. Batch formation stops collecting once the most
+    /// urgent in-hand request is within this slack of its deadline —
+    /// shipping *at* the deadline would already be too late.
+    pub deadline_slack: Duration,
 }
 
 impl Default for EngineConfig {
@@ -96,6 +111,8 @@ impl Default for EngineConfig {
             max_batch: 256,
             shard_deadline: Duration::from_secs(5),
             forecast_deadline: Duration::from_secs(1),
+            queue_cap: usize::MAX,
+            deadline_slack: Duration::from_millis(5),
         }
     }
 }
@@ -110,6 +127,8 @@ pub struct SubmitRequest {
     inputs: RequestInputs,
     variant: Option<PlanChoice>,
     device: Option<String>,
+    deadline: Option<Duration>,
+    priority: u8,
 }
 
 impl SubmitRequest {
@@ -121,6 +140,8 @@ impl SubmitRequest {
             inputs: RequestInputs::Synth { seed: 0 },
             variant: None,
             device: None,
+            deadline: None,
+            priority: 0,
         }
     }
 
@@ -148,6 +169,26 @@ impl SubmitRequest {
     /// single-device engine; an unknown name fails the submit.
     pub fn pin(mut self, device: impl Into<String>) -> SubmitRequest {
         self.device = Some(device.into());
+        self
+    }
+
+    /// Attach a completion deadline, relative to submission. The
+    /// scheduler ships the request without waiting out the batch window
+    /// once the deadline (less [`EngineConfig::deadline_slack`]) nears,
+    /// and sheds it with [`ServeError::DeadlineExpired`] if it is still
+    /// queued when the deadline passes. The resulting SLO accounting
+    /// lands in [`Metrics::slo_misses`]/[`Metrics::deadline_requests`].
+    pub fn deadline(mut self, d: Duration) -> SubmitRequest {
+        self.deadline = Some(d);
+        self
+    }
+
+    /// Scheduling priority (default 0 = best effort): higher executes
+    /// earlier among a turn's batches after deadline order, and gets 2×
+    /// admission-control headroom so overload sheds best-effort traffic
+    /// first.
+    pub fn priority(mut self, p: u8) -> SubmitRequest {
+        self.priority = p;
         self
     }
 }
@@ -188,6 +229,13 @@ impl<T> Ticket<T> {
 struct Shared {
     model: CostModel,
     depths: Vec<Arc<AtomicU64>>,
+    /// Per-device admission-control shed counters. Engine-side — a shed
+    /// request never reaches a worker — and overlaid onto the device's
+    /// [`Metrics`] snapshot when metrics are collected.
+    sheds: Vec<AtomicU64>,
+    /// Best-effort in-flight cap per device
+    /// ([`EngineConfig::queue_cap`]); priority submits get 2×.
+    queue_cap: u64,
     /// Submitter-side wait bound for `PlanShard` chunk replies
     /// ([`EngineConfig::shard_deadline`]).
     deadline: Duration,
@@ -261,31 +309,64 @@ pub struct Client {
 
 impl Client {
     /// Enqueue a request; the returned [`Ticket`] resolves to the run
-    /// result. Fails when the engine is already shut down or the pin
-    /// names an unregistered device.
+    /// result. Fails when the engine is already shut down, the pin
+    /// names an unregistered device, or admission control sheds the
+    /// request ([`ServeError::QueueFull`] — the routed device's
+    /// in-flight queue is at capacity).
     pub fn submit(&self, req: SubmitRequest) -> Result<Ticket<RunResult>> {
         let lane = self
             .shared
             .lane_for(req.device.as_deref(), &req.seq, req.m, req.n, &self.txs)?;
         let depth = &self.shared.depths[lane];
+        // Priority traffic gets double the best-effort cap, so overload
+        // sheds best-effort submissions first.
+        let cap = if req.priority > 0 {
+            self.shared.queue_cap.saturating_mul(2)
+        } else {
+            self.shared.queue_cap
+        };
         let (reply, rx) = mpsc::channel();
         // Count the request before sending so a racing router on
-        // another thread sees it; undo if the worker is gone.
-        depth.fetch_add(1, Ordering::Relaxed);
+        // another thread sees it; undo on shed. (A concurrent burst can
+        // transiently overshoot the cap by the number of racing
+        // submitters — admission control bounds the queue, it does not
+        // serialize submits.)
+        let prev = depth.fetch_add(1, Ordering::Relaxed);
+        if prev >= cap {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            self.shared.sheds[lane].fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow::Error::new(ServeError::QueueFull {
+                depth: prev,
+                cap,
+            }));
+        }
+        let enqueued = Instant::now();
         let sent = self.txs[lane].send(Msg::Run(Request {
             seq: req.seq,
             m: req.m,
             n: req.n,
             inputs: req.inputs,
             variant: req.variant,
-            enqueued: Instant::now(),
+            enqueued,
+            deadline: req.deadline.map(|d| enqueued + d),
+            priority: req.priority,
             reply: Reply::new(reply, Some(depth.clone())),
         }));
         if sent.is_err() {
-            depth.fetch_sub(1, Ordering::Relaxed);
+            // The failed send handed the request back, and its dropped
+            // Reply already released the depth slot (decrement-on-drop)
+            // — no manual undo here, that would double-count.
             return Err(anyhow!("engine is shut down"));
         }
         Ok(Ticket { rx })
+    }
+
+    /// Live per-device in-flight queue depths, in registry order — the
+    /// router's backlog view. Every submitted request releases its slot
+    /// on *any* terminal outcome (reply, failure, shed, shutdown), so
+    /// once all tickets resolve the depths are zero again.
+    pub fn queue_depths(&self) -> Vec<u64> {
+        self.shared.snapshot()
     }
 
     /// Resolve (and cache) the plan for a `(seq, m, n)` key without
@@ -557,10 +638,13 @@ impl Engine {
             }
             return Err(e);
         }
+        let sheds = (0..depths.len()).map(|_| AtomicU64::new(0)).collect();
         Ok(Engine {
             shared: Arc::new(Shared {
                 model: CostModel::new(registry),
                 depths,
+                sheds,
+                queue_cap: cfg.queue_cap as u64,
                 deadline: cfg.shard_deadline,
                 forecast_deadline: cfg.forecast_deadline,
                 spaces: Mutex::new(BTreeMap::new()),
@@ -595,7 +679,8 @@ impl Engine {
     /// Per-device point-in-time metrics snapshot, in registry order.
     /// The query fans out to every worker before any reply is awaited,
     /// so the snapshot waits for the slowest single turn, not the sum
-    /// of all turns.
+    /// of all turns. Admission-control sheds are counted engine-side (a
+    /// shed request never reaches a worker) and overlaid here.
     pub fn fleet_metrics(&self) -> FleetMetrics {
         let replies: Vec<Option<mpsc::Receiver<Metrics>>> = self
             .txs
@@ -609,9 +694,13 @@ impl Engine {
             .ids
             .iter()
             .cloned()
-            .zip(replies.into_iter().map(|rx| match rx {
-                Some(rx) => rx.recv().unwrap_or_default(),
-                None => Metrics::default(),
+            .zip(replies.into_iter().enumerate().map(|(i, rx)| {
+                let mut m = match rx {
+                    Some(rx) => rx.recv().unwrap_or_default(),
+                    None => Metrics::default(),
+                };
+                m.queue_sheds = self.shared.sheds[i].load(Ordering::Relaxed);
+                m
             }))
             .collect();
         FleetMetrics { devices }
@@ -628,17 +717,24 @@ impl Engine {
     }
 
     /// [`Engine::shutdown`] with the per-device breakdown preserved.
+    /// Engine-side shed counters are overlaid like in
+    /// [`Engine::fleet_metrics`].
     pub fn shutdown_fleet(mut self) -> FleetMetrics {
         for tx in &self.txs {
             let _ = tx.send(Msg::Control(Control::Shutdown));
         }
+        let shared = self.shared.clone();
         let devices = self
             .ids
             .iter()
             .cloned()
-            .zip(self.workers.iter_mut().map(|w| match w.take() {
-                Some(w) => w.join().expect("fleet worker panicked"),
-                None => Metrics::default(),
+            .zip(self.workers.iter_mut().enumerate().map(|(i, w)| {
+                let mut m = match w.take() {
+                    Some(w) => w.join().expect("fleet worker panicked"),
+                    None => Metrics::default(),
+                };
+                m.queue_sheds = shared.sheds[i].load(Ordering::Relaxed);
+                m
             }))
             .collect();
         FleetMetrics { devices }
@@ -884,6 +980,57 @@ mod tests {
             0,
             "sharded search is pure planning — no plan-cache traffic"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Admission control: a best-effort submit beyond `queue_cap` is
+    /// refused with a typed `QueueFull`, priority submits get 2×
+    /// headroom, and the sheds surface in the per-device snapshot. The
+    /// long batch window holds the admitted requests in flight; their
+    /// deadlines make the drain loop ship early (EDF), so the test
+    /// never waits the window out.
+    #[test]
+    fn queue_cap_sheds_with_typed_error_and_priority_headroom() {
+        let dir = stub_dir("qcap");
+        let cfg = EngineConfig {
+            batch_window: Duration::from_secs(60),
+            queue_cap: 1,
+            // ship ~500ms after a deadline-carrying request is in hand,
+            // leaving its 60s budget intact — wide enough for the
+            // submits below to land while the first is still in flight
+            deadline_slack: Duration::from_millis(59_500),
+            ..EngineConfig::default()
+        };
+        let engine = Engine::with_config(Arc::new(Context::new()), &dir, cfg).unwrap();
+        let client = engine.client();
+        let sub = || SubmitRequest::new("waxpby", 32, 65536).deadline(Duration::from_secs(60));
+        let t1 = client.submit(sub()).unwrap();
+        // the queue is at cap: best-effort submits shed, typed
+        let err = client.submit(sub()).err().expect("must shed");
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::QueueFull { depth, cap }) => assert_eq!((*depth, *cap), (1, 1)),
+            other => panic!("expected QueueFull, got {other:?} ({err:#})"),
+        }
+        // priority headroom: cap doubles, so one more gets in...
+        let t2 = client.submit(sub().priority(1)).unwrap();
+        // ...and the next priority submit finds 2 >= 2
+        let err2 = client.submit(sub().priority(1)).err().expect("priority cap");
+        assert!(err2.is::<ServeError>());
+        assert!(client.queue_depths().iter().sum::<u64>() <= 2);
+        let live = engine.fleet_metrics();
+        assert_eq!(live.devices[0].1.queue_sheds, 2);
+        // admitted requests complete (stub backend error, not a shed)
+        for t in [t1, t2] {
+            let res = t.wait();
+            let e = res.err().expect("stub backend fails execution");
+            assert!(e.downcast_ref::<ServeError>().is_none(), "not shed: {e:#}");
+        }
+        assert_eq!(client.queue_depths().iter().sum::<u64>(), 0);
+        let m = engine.shutdown();
+        assert_eq!(m.queue_sheds, 2);
+        assert_eq!(m.requests, 2, "shed requests never reach a worker");
+        assert_eq!(m.slo_misses, 0, "generous deadlines are met");
+        assert_eq!(m.deadline_requests, 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -40,6 +40,7 @@
 pub(crate) mod batch;
 pub mod cli;
 pub mod engine;
+pub mod traffic;
 
 pub use engine::{Client, Engine, EngineConfig, FleetMetrics, SubmitRequest, Ticket};
 
@@ -63,7 +64,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-device compiler context: the shared function library plus one
 /// device's model and calibration. A single-device process builds one
@@ -227,11 +228,43 @@ pub(crate) enum Control {
     Shutdown,
 }
 
+/// Typed serve-path rejections: outcomes the *serving layer* decided
+/// (admission control, deadline shedding), as opposed to runtime
+/// failures. Carried as the retained root cause of the `anyhow::Error`
+/// a [`Ticket`] resolves to, so callers distinguish a shed from an
+/// execution failure with `err.downcast_ref::<ServeError>()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control refused the request at submit: the target
+    /// device's in-flight queue was at capacity.
+    QueueFull { depth: u64, cap: u64 },
+    /// The request's deadline had already passed when the scheduler
+    /// picked it up; it was shed instead of executed late.
+    DeadlineExpired { late_by: Duration },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { depth, cap } => {
+                write!(f, "shed: device queue full ({depth} in flight, cap {cap})")
+            }
+            ServeError::DeadlineExpired { late_by } => write!(
+                f,
+                "shed: deadline expired {:.3} ms before dispatch",
+                late_by.as_secs_f64() * 1e3
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Reply half of one request: the ticket channel plus the router's
 /// queue-depth counter for the device the request was dispatched to.
-/// Sending the (single) reply decrements the depth, so the router's
-/// view of a device's backlog includes everything up to the moment the
-/// result left the worker.
+/// The depth slot is released on every terminal outcome — reply sent
+/// *or* request dropped unanswered (engine shutdown, worker death) —
+/// so the router's view of a device's backlog can never leak upward.
 pub(crate) struct Reply {
     tx: mpsc::Sender<Result<RunResult>>,
     depth: Option<Arc<AtomicU64>>,
@@ -242,12 +275,24 @@ impl Reply {
         Reply { tx, depth }
     }
 
-    /// Deliver the request's one reply (a dropped ticket is fine).
-    pub(crate) fn send(&self, res: Result<RunResult>) {
-        if let Some(d) = &self.depth {
+    /// Give the device's queue-depth slot back. Idempotent via
+    /// `Option::take`, so `send` followed by the `Drop` releases once.
+    fn release(&mut self) {
+        if let Some(d) = self.depth.take() {
             d.fetch_sub(1, Ordering::Relaxed);
         }
+    }
+
+    /// Deliver the request's one reply (a dropped ticket is fine).
+    pub(crate) fn send(mut self, res: Result<RunResult>) {
+        self.release();
         let _ = self.tx.send(res);
+    }
+}
+
+impl Drop for Reply {
+    fn drop(&mut self) {
+        self.release();
     }
 }
 
@@ -261,8 +306,17 @@ pub(crate) struct Request {
     pub inputs: RequestInputs,
     /// Force a variant; None = let the coordinator's plan cache decide.
     pub variant: Option<PlanChoice>,
-    /// Submission time, for the queued-duration histogram.
+    /// Submission time, for the queued-duration and latency histograms.
     pub enqueued: Instant,
+    /// Absolute completion deadline (submission time + the client's
+    /// relative deadline); `None` = no SLO. Batch formation ships when
+    /// the most urgent in-hand deadline arrives instead of waiting out
+    /// the window, and an already-expired request is shed, not run.
+    pub deadline: Option<Instant>,
+    /// Scheduling priority: higher executes earlier among a turn's
+    /// batches (after deadline order) and gets admission-control
+    /// headroom. 0 = best effort.
+    pub priority: u8,
     pub reply: Reply,
 }
 
@@ -311,11 +365,31 @@ pub struct Metrics {
     /// thread. At most one per (key, device): repeats hit the worker's
     /// forecast memo.
     pub planner_on_worker: u64,
+    /// Requests refused at submit by admission control (bounded
+    /// in-flight queue). Counted engine-side — a shed request never
+    /// reaches a worker — and overlaid onto this device's snapshot by
+    /// the engine when metrics are collected.
+    pub queue_sheds: u64,
+    /// Requests shed by the scheduler because their deadline had
+    /// already expired when picked up (typed
+    /// [`ServeError::DeadlineExpired`] instead of a late execution).
+    pub deadline_sheds: u64,
+    /// Deadline-carrying requests that reached a terminal outcome on
+    /// this worker (the SLO-miss denominator).
+    pub deadline_requests: u64,
+    /// Deadline-carrying requests whose terminal outcome — reply or
+    /// shed — came after the deadline. Sheds count: the client did not
+    /// get its result in time either way.
+    pub slo_misses: u64,
     /// Time executed requests spent queued before their batch was
     /// dispatched (submission → batch start). Per device this is the
     /// routing-vs-queueing signal: a device whose queue wait dwarfs its
     /// execution time is over-subscribed.
     pub queued: Histogram,
+    /// End-to-end latency (submission → terminal outcome, sheds
+    /// included) of every request this worker answered. p50/p99 SLO
+    /// reporting reads this.
+    pub latency: Histogram,
     /// Per-sequence (executed-request count, batch-attributed seconds).
     /// Requests rejected before dispatch (e.g. plan-resolution errors)
     /// appear only in `requests`/`failures`.
@@ -353,7 +427,12 @@ impl Metrics {
         self.shard_requests += other.shard_requests;
         self.shard_served += other.shard_served;
         self.planner_on_worker += other.planner_on_worker;
+        self.queue_sheds += other.queue_sheds;
+        self.deadline_sheds += other.deadline_sheds;
+        self.deadline_requests += other.deadline_requests;
+        self.slo_misses += other.slo_misses;
         self.queued.merge(&other.queued);
+        self.latency.merge(&other.latency);
         for (seq, (count, secs)) in &other.per_seq {
             let e = self.per_seq.entry(seq.clone()).or_insert((0, 0.0));
             e.0 += count;
@@ -722,7 +801,7 @@ impl Coordinator {
                     synth_inputs(&self.runtime, &key.seq, variant, m, n, seed)
                 }
             });
-            replies.push(r.reply);
+            replies.push((r.enqueued, r.deadline, r.reply));
         }
         let t0 = Instant::now();
         // Resolve once per batch key: the runtime's resolve cache makes
@@ -751,18 +830,66 @@ impl Coordinator {
         e.1 += dt;
         self.metrics.failures += results.iter().filter(|r| r.is_err()).count() as u64;
         self.sync_runtime_metrics();
-        for (reply, res) in replies.iter().zip(results) {
-            reply.send(res);
+        for ((enqueued, deadline, reply), res) in replies.into_iter().zip(results) {
+            self.finish(enqueued, deadline, reply, res);
         }
     }
 
-    /// One scheduling turn: group a drained queue by batch key (one
-    /// `choose_plan` per key), then execute each group as one dispatch
-    /// and reply per request.
+    /// Deliver one request's terminal outcome, recording end-to-end
+    /// latency and SLO accounting. A shed or failure still counts into
+    /// the latency histogram and (if past its deadline) the SLO misses:
+    /// the client did not get a result in time either way.
+    fn finish(
+        &mut self,
+        enqueued: Instant,
+        deadline: Option<Instant>,
+        reply: Reply,
+        res: Result<RunResult>,
+    ) {
+        let done = Instant::now();
+        self.metrics
+            .latency
+            .record(done.duration_since(enqueued).as_secs_f64());
+        if let Some(d) = deadline {
+            self.metrics.deadline_requests += 1;
+            if done > d {
+                self.metrics.slo_misses += 1;
+            }
+        }
+        reply.send(res);
+    }
+
+    /// One scheduling turn: shed already-expired requests, group the
+    /// rest by batch key (one `choose_plan` per key), then execute the
+    /// groups earliest-deadline-first as one dispatch each, replying
+    /// per request.
     fn run_turn(&mut self, queue: Vec<Request>) {
+        // Deadline shedding happens at the turn boundary: a request
+        // whose deadline passed while it waited is rejected with a
+        // typed error instead of executed late — late work wastes
+        // device time that on-time requests need.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(queue.len());
+        for req in queue {
+            match req.deadline {
+                Some(d) if now > d => {
+                    self.metrics.requests += 1;
+                    self.metrics.failures += 1;
+                    self.metrics.deadline_sheds += 1;
+                    let late_by = now.duration_since(d);
+                    self.finish(
+                        req.enqueued,
+                        req.deadline,
+                        req.reply,
+                        Err(anyhow::Error::new(ServeError::DeadlineExpired { late_by })),
+                    );
+                }
+                _ => live.push(req),
+            }
+        }
         let device = self.ctx.device.clone();
-        let (batches, failed) =
-            batch::group(queue, &device, |seq, m, n| self.choose_plan(seq, m, n));
+        let (mut batches, failed) =
+            batch::group(live, &device, |seq, m, n| self.choose_plan(seq, m, n));
         // Requests rejected before dispatch count toward requests and
         // failures but not per_seq, which tracks *executed* traffic —
         // a never-executed request must not dilute a sequence's mean
@@ -770,8 +897,9 @@ impl Coordinator {
         for (req, err) in failed {
             self.metrics.requests += 1;
             self.metrics.failures += 1;
-            req.reply.send(Err(err));
+            self.finish(req.enqueued, req.deadline, req.reply, Err(err));
         }
+        batch::order_edf(&mut batches);
         for b in batches {
             self.execute_batch(b);
         }
@@ -815,9 +943,18 @@ impl Coordinator {
 
     /// Drain-and-group request loop (the engine's worker body): block
     /// for the first request of a turn, keep draining until the queue is
-    /// empty and the batch window has elapsed (or the turn cap is hit),
-    /// then run the turn. Returns metrics when the channel closes or a
-    /// [`Msg::Shutdown`] sentinel arrives.
+    /// empty and the drain deadline has arrived (or the turn cap is
+    /// hit), then run the turn. Returns metrics when the channel closes
+    /// or a [`Msg::Shutdown`] sentinel arrives.
+    ///
+    /// Batch formation is EDF-ish: the drain deadline is the *earlier*
+    /// of the batch window's end and the most urgent in-hand request's
+    /// deadline minus [`EngineConfig::deadline_slack`] (the budget
+    /// reserved for dispatch + execution), so a request inside its
+    /// slack ships now instead of waiting out `batch_window`. With
+    /// `batch_window == 0` (pure drain) the loop never sleeps once a
+    /// request is in hand — the `now >= by` check precedes every
+    /// blocking receive.
     pub(crate) fn serve_batched(mut self, rx: mpsc::Receiver<Msg>, cfg: &EngineConfig) -> Metrics {
         let mut closing = false;
         while !closing {
@@ -832,8 +969,19 @@ impl Coordinator {
                 Err(_) => break,
             };
             let mut queue = vec![first];
-            let deadline = Instant::now() + cfg.batch_window;
+            let window_end = Instant::now() + cfg.batch_window;
             while queue.len() < cfg.max_batch {
+                // Earliest in-hand deadline (less the execution slack)
+                // caps the wait; recomputed each iteration because
+                // every drained request can tighten it.
+                let by = queue
+                    .iter()
+                    .filter_map(|r| r.deadline)
+                    .min()
+                    .map_or(window_end, |d| {
+                        let urgent = d.checked_sub(cfg.deadline_slack).unwrap_or(d);
+                        urgent.min(window_end)
+                    });
                 match rx.try_recv() {
                     Ok(Msg::Run(r)) => queue.push(r),
                     Ok(Msg::Control(c)) => {
@@ -845,10 +993,10 @@ impl Coordinator {
                     Err(mpsc::TryRecvError::Disconnected) => break,
                     Err(mpsc::TryRecvError::Empty) => {
                         let now = Instant::now();
-                        if now >= deadline {
+                        if now >= by {
                             break;
                         }
-                        match rx.recv_timeout(deadline - now) {
+                        match rx.recv_timeout(by - now) {
                             Ok(Msg::Run(r)) => queue.push(r),
                             Ok(Msg::Control(c)) => {
                                 if self.answer_control(c) {
@@ -1068,6 +1216,8 @@ mod tests {
                 inputs: RequestInputs::Synth { seed: 7 },
                 variant: None, // let the plan cache decide
                 enqueued: Instant::now(),
+                deadline: None,
+                priority: 0,
                 reply: Reply::new(rtx, None),
             }
         };
@@ -1153,6 +1303,8 @@ mod tests {
                 inputs: RequestInputs::Synth { seed: i },
                 variant: Some(PlanChoice::Fused),
                 enqueued: Instant::now(),
+                deadline: None,
+                priority: 0,
                 reply: Reply::new(rtx, None),
             }))
             .unwrap();
@@ -1184,6 +1336,8 @@ mod tests {
             inputs: RequestInputs::Explicit(BTreeMap::new()),
             variant: Some(PlanChoice::Fused),
             enqueued: Instant::now(),
+            deadline: None,
+            priority: 0,
             reply: Reply::new(rtx, None),
         };
         coord.run_turn(vec![req]);
@@ -1192,6 +1346,87 @@ mod tests {
         assert!(err.contains("no artifacts"), "{err}");
         assert_eq!(coord.metrics.failures, 1);
         assert_eq!(coord.metrics.requests, 1);
+        // an execution failure is not a shed and not typed
+        assert_eq!(coord.metrics.deadline_sheds, 0);
+        // every terminal outcome leaves one latency sample
+        assert_eq!(coord.metrics.latency.count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An over-deadline request is shed with a typed error before any
+    /// plan resolution or execution — no batch runs, the shed counter
+    /// moves, and the client can downcast the reason.
+    #[test]
+    fn expired_deadline_sheds_instead_of_executing() {
+        let dir = stub_catalog("dlshed", &["waxpby"], false);
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        let (rtx, rrx) = mpsc::channel();
+        let enqueued = Instant::now() - Duration::from_millis(50);
+        let req = Request {
+            seq: "waxpby".into(),
+            m: 32,
+            n: 65536,
+            inputs: RequestInputs::Synth { seed: 7 },
+            variant: Some(PlanChoice::Fused),
+            enqueued,
+            deadline: Some(enqueued + Duration::from_millis(1)), // long past
+            priority: 0,
+            reply: Reply::new(rtx, None),
+        };
+        coord.run_turn(vec![req]);
+        let err = rrx.recv().unwrap().err().expect("shed request must error");
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::DeadlineExpired { late_by }) => {
+                assert!(*late_by >= Duration::from_millis(40), "late_by {late_by:?}");
+            }
+            other => panic!("expected DeadlineExpired, got {other:?} ({err:#})"),
+        }
+        assert_eq!(coord.metrics.deadline_sheds, 1);
+        assert_eq!(coord.metrics.failures, 1);
+        assert_eq!(coord.metrics.requests, 1);
+        assert_eq!(coord.metrics.batches, 0, "shed requests never execute");
+        assert_eq!(coord.metrics.slo_misses, 1, "a shed is an SLO miss");
+        assert_eq!(coord.metrics.deadline_requests, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A mixed turn (deadline + no-deadline requests) executes both
+    /// batches and accounts SLO metrics only for the deadline-carrying
+    /// request. (Batch *ordering* itself is unit-tested in `batch`.)
+    #[test]
+    fn turn_accounts_slo_only_for_deadline_requests() {
+        let dir = stub_catalog("sloacct", &["waxpby", "vadd"], false);
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        let now = Instant::now();
+        let req = |seq: &str, deadline: Option<Duration>| {
+            let (rtx, rrx) = mpsc::channel();
+            let r = Request {
+                seq: seq.into(),
+                m: 32,
+                n: 65536,
+                inputs: RequestInputs::Synth { seed: 7 },
+                variant: Some(PlanChoice::Fused),
+                enqueued: now,
+                deadline: deadline.map(|d| now + d),
+                priority: 0,
+                reply: Reply::new(rtx, None),
+            };
+            (r, rrx)
+        };
+        let (r1, rx1) = req("waxpby", None);
+        let (r2, rx2) = req("vadd", Some(Duration::from_secs(60)));
+        coord.run_turn(vec![r1, r2]);
+        let e1 = rx1.recv().unwrap();
+        let e2 = rx2.recv().unwrap();
+        assert!(e1.is_err() && e2.is_err(), "stub backend cannot execute");
+        assert_eq!(coord.metrics.batches, 2);
+        assert_eq!(coord.metrics.latency.count(), 2);
+        // only the deadline-carrying request is SLO-accounted, and a
+        // generous deadline is not a miss
+        assert_eq!(coord.metrics.deadline_requests, 1);
+        assert_eq!(coord.metrics.slo_misses, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -40,5 +40,5 @@ pub mod sequences;
 pub mod sim;
 pub mod util;
 
-pub use coordinator::{Client, Engine, EngineConfig, FleetMetrics, SubmitRequest, Ticket};
+pub use coordinator::{Client, Engine, EngineConfig, FleetMetrics, ServeError, SubmitRequest, Ticket};
 pub use fleet::{DeviceId, DeviceRegistry};

@@ -89,10 +89,11 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 /// Fixed-bucket latency histogram (seconds). Buckets are geometric —
-/// the default grid spans 1 µs to ~4 s in ×4 steps — so one histogram
+/// the default grid spans 1 µs to ~4 s in ×2 steps — so one histogram
 /// covers both sub-millisecond dispatch waits and multi-second queue
-/// buildups without storing samples. Mergeable across workers (the
-/// fleet aggregates one per device).
+/// buildups without storing samples, and p99 reads are never off by
+/// more than a factor of two. Mergeable across workers (the fleet
+/// aggregates one per device).
 #[derive(Clone, Debug)]
 pub struct Histogram {
     /// Upper bound (inclusive) of each bucket; the last bucket is open.
@@ -105,9 +106,9 @@ pub struct Histogram {
 }
 
 impl Default for Histogram {
-    /// 1 µs … ~4.2 s in ×4 steps (12 bounds, 13 buckets).
+    /// 1 µs … ~4.2 s in ×2 steps (23 bounds, 24 buckets).
     fn default() -> Self {
-        Histogram::new((0..12).map(|k| 1e-6 * 4f64.powi(k)).collect())
+        Histogram::new((0..23).map(|k| 1e-6 * 2f64.powi(k)).collect())
     }
 }
 
@@ -158,31 +159,48 @@ impl Histogram {
         self.max
     }
 
-    pub fn mean(&self) -> f64 {
+    /// Mean of the recorded samples, `None` when empty (an empty
+    /// histogram has no mean — callers must not read 0.0 as "fast").
+    pub fn mean(&self) -> Option<f64> {
         if self.count == 0 {
-            0.0
+            None
         } else {
-            self.sum / self.count as f64
+            Some(self.sum / self.count as f64)
         }
     }
 
-    /// Upper bound of the bucket holding the q-quantile (clamped to the
-    /// observed max — bucket edges, not interpolation, so the answer is
-    /// conservative by at most one bucket width).
-    pub fn quantile(&self, q: f64) -> f64 {
+    /// Bucket-edge estimate of the q-quantile, `None` when empty.
+    ///
+    /// For q > 0 this is the *upper* bound of the bucket holding the
+    /// ⌈q·n⌉-th sample, clamped to the observed max — conservative by
+    /// at most one bucket width, which is the right bias for SLO
+    /// reporting (a reported p99 is never below the true p99 by more
+    /// than clamping allows). For q ≤ 0 it is the *lower* edge of the
+    /// first non-empty bucket (0 for the first bucket), a lower bound
+    /// on the minimum — not the first bucket's upper edge, which would
+    /// overstate the min by a bucket width.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
         if self.count == 0 {
-            return 0.0;
+            return None;
         }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        if q <= 0.0 {
+            let i = self
+                .counts
+                .iter()
+                .position(|&c| c > 0)
+                .expect("count > 0 implies a non-empty bucket");
+            return Some(if i == 0 { 0.0 } else { self.bounds[i - 1] });
+        }
+        let target = (q.min(1.0) * self.count as f64).ceil().max(1.0) as u64;
         let mut seen = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen >= target {
                 let edge = self.bounds.get(i).copied().unwrap_or(self.max);
-                return edge.min(self.max);
+                return Some(edge.min(self.max));
             }
         }
-        self.max
+        Some(self.max)
     }
 
     /// Merge another histogram with the same bucket grid (the fleet
@@ -236,17 +254,85 @@ mod tests {
     fn histogram_records_and_summarizes() {
         let mut h = Histogram::default();
         assert!(h.is_empty());
-        assert_eq!(h.quantile(0.5), 0.0);
         for s in [2e-6, 2e-6, 2e-6, 1e-3] {
             h.record(s);
         }
         assert_eq!(h.count(), 4);
-        assert!((h.mean() - (6e-6 + 1e-3) / 4.0).abs() < 1e-12);
+        assert!((h.mean().unwrap() - (6e-6 + 1e-3) / 4.0).abs() < 1e-12);
         assert_eq!(h.max(), 1e-3);
-        // three of four samples sit in the 1–4 µs bucket
-        assert_eq!(h.quantile(0.5), 4e-6);
+        // three of four samples sit in the 1–2 µs bucket
+        assert_eq!(h.quantile(0.5), Some(2e-6));
         // the top quantile is clamped to the observed max
-        assert!(h.quantile(1.0) <= h.max());
+        assert!(h.quantile(1.0).unwrap() <= h.max());
+    }
+
+    #[test]
+    fn empty_histogram_has_no_quantile_or_mean() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.0), None);
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.quantile(1.0), None);
+        assert_eq!(h.mean(), None);
+    }
+
+    /// q-quantile of a sorted sample vector by the same ⌈q·n⌉ rank rule
+    /// the histogram approximates (q=0 → the minimum).
+    fn reference_quantile(sorted: &[f64], q: f64) -> f64 {
+        assert!(!sorted.is_empty());
+        if q <= 0.0 {
+            return sorted[0];
+        }
+        let rank = (q.min(1.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+        sorted[rank - 1]
+    }
+
+    /// The bucket that `v` lands in on the default grid: (lower, upper].
+    fn default_grid_bucket(v: f64) -> (f64, f64) {
+        let bounds: Vec<f64> = (0..23).map(|k| 1e-6 * 2f64.powi(k)).collect();
+        match bounds.iter().position(|&b| v <= b) {
+            Some(0) => (0.0, bounds[0]),
+            Some(i) => (bounds[i - 1], bounds[i]),
+            None => (*bounds.last().unwrap(), f64::INFINITY),
+        }
+    }
+
+    #[test]
+    fn quantiles_agree_with_sorted_vec_reference() {
+        // Deterministic spread across several decades of the grid.
+        let mut samples: Vec<f64> = (0..200)
+            .map(|i| 1e-6 * (1.0 + (i as f64 * 37.0) % 977.0))
+            .collect();
+        let mut h = Histogram::default();
+        for &s in &samples {
+            h.record(s);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let truth = reference_quantile(&samples, q);
+            let (lo, hi) = default_grid_bucket(truth);
+            let got = h.quantile(q).unwrap();
+            // The histogram answer must bracket the true quantile's
+            // bucket: q=0 reports that bucket's lower edge, q>0 its
+            // upper edge (clamped to the observed max).
+            if q <= 0.0 {
+                assert_eq!(got, lo, "q={q}: lower edge of min's bucket");
+            } else {
+                assert_eq!(got, hi.min(h.max()), "q={q}");
+                assert!(got >= truth.min(h.max()), "q={q}: never understates");
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_zero_is_lower_edge_not_upper() {
+        let mut h = Histogram::default();
+        h.record(3e-6); // lands in the (2µs, 4µs] bucket
+        // q=0 must report the 2µs lower edge, not the 4µs upper edge.
+        assert_eq!(h.quantile(0.0), Some(2e-6));
+        // ...and 0.0 when the min sits in the very first bucket.
+        let mut h2 = Histogram::default();
+        h2.record(5e-7);
+        assert_eq!(h2.quantile(0.0), Some(0.0));
     }
 
     #[test]
@@ -256,7 +342,7 @@ mod tests {
         h.record(100.0); // overflow bucket
         assert_eq!(h.count(), 2);
         assert_eq!(h.max(), 100.0);
-        assert_eq!(h.quantile(1.0), 100.0);
+        assert_eq!(h.quantile(1.0), Some(100.0));
     }
 
     #[test]
@@ -271,6 +357,6 @@ mod tests {
         assert_eq!(a.max(), 1e-3);
         assert!((a.sum() - (2e-6 + 2e-3)).abs() < 1e-12);
         // median of {2µs, 1ms, 1ms} lands in a millisecond bucket
-        assert!(a.quantile(0.5) >= 1e-4);
+        assert!(a.quantile(0.5).unwrap() >= 1e-4);
     }
 }

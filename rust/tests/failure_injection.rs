@@ -203,6 +203,68 @@ fn shard_chunks_fall_back_locally_on_wedged_or_dead_workers() {
     let _ = fs::remove_dir_all(&cal);
 }
 
+/// Router depth-leak regression: the per-device queue depths must
+/// return to zero after a burst in which *every* terminal outcome is an
+/// error — stub execution failures, admission-control sheds and
+/// deadline sheds all mixed. The depth slot is released by the reply's
+/// RAII guard on any terminal path; before that guard, error paths that
+/// dropped the request without replying leaked the slot and the router
+/// permanently saw phantom backlog.
+#[test]
+fn queue_depths_return_to_zero_after_all_error_burst() {
+    let dir = fusebla::bench_support::stub_catalog("depthleak", &["waxpby"]);
+    let cal = scratch_dir("depthleak_cal");
+    let registry = Arc::new(
+        DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], &cal).unwrap(),
+    );
+    let engine = Engine::start_fleet(
+        registry,
+        &dir,
+        EngineConfig {
+            batch_window: Duration::from_millis(100),
+            queue_cap: 3,
+            deadline_slack: Duration::ZERO,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let client = engine.client();
+    let mut tickets = Vec::new();
+    let mut queue_sheds = 0usize;
+    for i in 0..12u64 {
+        // a 30 ms deadline under a 100 ms window: admitted requests
+        // either get shed at the turn boundary (DeadlineExpired) or
+        // execute and fail at the stub backend — every outcome errors
+        let req = fusebla::SubmitRequest::new("waxpby", 32, 65536)
+            .synth(i)
+            .deadline(Duration::from_millis(30));
+        match client.submit(req) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                assert!(
+                    matches!(
+                        e.downcast_ref::<fusebla::ServeError>(),
+                        Some(fusebla::ServeError::QueueFull { .. })
+                    ),
+                    "submit-path errors in this burst are sheds: {e:#}"
+                );
+                queue_sheds += 1;
+            }
+        }
+    }
+    assert!(!tickets.is_empty(), "some requests must be admitted");
+    for t in tickets {
+        assert!(t.wait().is_err(), "every outcome of this burst is an error");
+    }
+    // every slot released: replies release before sending, so after all
+    // waits return the depths are deterministically back to zero
+    let depths = client.queue_depths();
+    assert_eq!(depths, vec![0, 0], "{queue_sheds} queue shed(s), depths {depths:?}");
+    let _ = engine.shutdown_fleet();
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
+}
+
 #[test]
 fn duplicate_artifact_keys_rejected() {
     let dir = scratch_dir("dup");

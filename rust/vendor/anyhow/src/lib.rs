@@ -2,23 +2,33 @@
 //! in this build environment).
 //!
 //! Implements exactly the surface the workspace uses: [`Error`],
-//! [`Result`], the [`anyhow!`] and [`bail!`] macros, and the [`Context`]
-//! extension trait. Like the real crate, `Error` deliberately does *not*
-//! implement `std::error::Error`, which is what makes the blanket
-//! `From<E: std::error::Error>` conversion coherent.
+//! [`Result`], the [`anyhow!`] and [`bail!`] macros, the [`Context`]
+//! extension trait, and typed-root-cause recovery via
+//! [`Error::new`]/[`Error::downcast_ref`]/[`Error::is`]. Like the real
+//! crate, `Error` deliberately does *not* implement `std::error::Error`,
+//! which is what makes the blanket `From<E: std::error::Error>`
+//! conversion coherent.
 //!
 //! `Display` shows the outermost message; the alternate form (`{:#}`)
 //! joins the whole context chain with `": "`.
 
+use std::any::Any;
 use std::fmt;
 
 /// `Result<T, anyhow::Error>` with the error type defaulted.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// A dynamic error: a root cause plus the contexts wrapped around it.
+/// When built from a concrete `std::error::Error` value (via
+/// [`Error::new`], the blanket `From`, or `?`), the original value is
+/// retained and recoverable with [`Error::downcast_ref`] — context
+/// layers never hide it.
 pub struct Error {
     /// Context chain, outermost first (index 0 is what `Display` shows).
     chain: Vec<String>,
+    /// The concrete root-cause value, when the error was built from one
+    /// (string-built errors carry no payload).
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
@@ -26,13 +36,42 @@ impl Error {
     pub fn msg<M: fmt::Display>(message: M) -> Error {
         Error {
             chain: vec![message.to_string()],
+            payload: None,
         }
+    }
+
+    /// Build an error from a concrete error value, retaining it for
+    /// [`Error::downcast_ref`] (mirrors `anyhow::Error::new`).
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error::from(error)
     }
 
     /// Wrap the error in one more layer of context.
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// The retained root-cause value, if this error was built from a
+    /// concrete `E` (mirrors `anyhow::Error::downcast_ref`). Context
+    /// layers added later do not affect the result.
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        self.payload.as_ref()?.downcast_ref::<E>()
+    }
+
+    /// Whether the retained root cause is an `E` (mirrors
+    /// `anyhow::Error::is`).
+    pub fn is<E>(&self) -> bool
+    where
+        E: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        self.downcast_ref::<E>().is_some()
     }
 
     /// The context chain, outermost first.
@@ -77,7 +116,10 @@ where
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error {
+            chain,
+            payload: Some(Box::new(e)),
+        }
     }
 }
 
@@ -159,5 +201,17 @@ mod tests {
             Ok(())
         }
         assert!(inner().unwrap_err().to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn downcast_recovers_concrete_root_cause() {
+        let e = Error::new(io_err()).context("submitting request");
+        // Context layers do not hide the retained payload.
+        let io = e.downcast_ref::<std::io::Error>().expect("payload survives context");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.is::<std::io::Error>());
+        assert!(!e.is::<std::fmt::Error>());
+        // String-built errors carry no payload.
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 }
