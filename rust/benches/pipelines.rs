@@ -1,0 +1,127 @@
+//! Dynamic pipeline study — what a user-submitted script costs to
+//! register and serve, and what fusion buys it, for the two exemplar
+//! pipelines.
+//!
+//! Fully offline-safe: the engine starts over a stub catalog, and
+//! registered pipelines execute through their interpreter-backed
+//! resolved plans, so register → route → batch → execute runs for real.
+//! Measured per pipeline:
+//!
+//! * `register_ms` — full `Client::register_pipeline` round trip
+//!   (client precheck + compile, worker compile + catalog insert,
+//!   roster publish).
+//! * `first_execute_ms` / `warm_execute_ms` — cold dispatch (plan +
+//!   resolve miss) vs steady-state dispatch (both caches hit,
+//!   counter-verified before the numbers are written).
+//! * `predicted_fused_s` / `predicted_unfused_s` — the planner's
+//!   best-variant prediction against the GTX 480 model vs the
+//!   per-call CUBLAS-style baseline, i.e. what kernel fusion is
+//!   predicted to buy this script (the paper's core claim, applied to
+//!   user-submitted sequences).
+//!
+//! Results merge into `BENCH_pipelines.json`, one section per pipeline.
+//!
+//! `cargo bench --bench pipelines`
+
+use fusebla::bench_support::report::update_bench_json;
+use fusebla::bench_support::stub_catalog;
+use fusebla::coordinator::Context;
+use fusebla::ir::elem::ProblemSize;
+use fusebla::pipelines;
+use fusebla::planner::{self, PlannerConfig};
+use fusebla::predict::predict_seq;
+use fusebla::util::Json;
+use fusebla::{Engine, EngineConfig, SubmitRequest};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+const BENCH_JSON: &str = "BENCH_pipelines.json";
+const M: usize = 32;
+const N: usize = 65536;
+const WARM_ITERS: u64 = 8;
+
+fn main() {
+    let report = Path::new(BENCH_JSON);
+    let dir = stub_catalog("bench_pipelines", &["waxpby", "vadd"]);
+    let ctx = Context::new();
+    let p = ProblemSize::new(M, N).padded();
+
+    for (name, src) in [
+        ("add_mul_exp", pipelines::examples::ADD_MUL_EXP),
+        ("quantize_int8", pipelines::examples::QUANTIZE_INT8),
+    ] {
+        // Fresh engine per pipeline: caches start cold, so the first
+        // execute really is the cold path.
+        let engine = Engine::with_config(Arc::new(Context::new()), &dir, EngineConfig::default())
+            .expect("stub engine");
+        let client = engine.client();
+
+        let t0 = Instant::now();
+        let fp = client.register_pipeline(name, src).expect("register");
+        let register_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t0 = Instant::now();
+        let t = client.submit(SubmitRequest::new(name, M, N).synth(1)).expect("submit");
+        t.wait().expect("cold execute");
+        let first_execute_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // steady state: min over a few runs (dispatch jitter dominates)
+        let mut warm_execute_ms = f64::INFINITY;
+        for seed in 0..WARM_ITERS {
+            let t0 = Instant::now();
+            let t = client
+                .submit(SubmitRequest::new(name, M, N).synth(seed + 2))
+                .expect("submit");
+            t.wait().expect("warm execute");
+            warm_execute_ms = warm_execute_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        }
+
+        let m = engine.shutdown();
+        assert_eq!(m.failures, 0, "{name}: every serve must succeed");
+        assert_eq!(m.plan_cache_misses, 1, "{name}: exactly the cold execute plans");
+        assert_eq!(m.resolve_misses, 1, "{name}: exactly the cold execute resolves");
+        assert_eq!(
+            m.plan_cache_hits + m.resolve_hits,
+            2 * WARM_ITERS,
+            "{name}: every warm execute hits both caches"
+        );
+
+        // Fused-vs-unfused prediction: the planner's pick over the
+        // pipeline's own fusion space vs the per-call baseline plan.
+        let c = pipelines::compile(name, src, &ctx.lib).expect("compile");
+        let planned = planner::plan_space(
+            &c.pipeline.program,
+            &c.space,
+            &ctx.db,
+            p,
+            &PlannerConfig::default(),
+        );
+        let unfused = predict_seq(&ctx.db, &c.baseline, p);
+        assert!(
+            planned.predicted <= unfused,
+            "{name}: the planner never does worse than the baseline"
+        );
+        println!(
+            "{name} ({fp:#018x}): register {register_ms:.2} ms, first execute \
+             {first_execute_ms:.3} ms, warm {warm_execute_ms:.3} ms, predicted fused \
+             {:.3e} s vs unfused {:.3e} s ({:.2}x)",
+            planned.predicted,
+            unfused,
+            unfused / planned.predicted
+        );
+
+        let section = Json::Obj(vec![
+            ("m".into(), Json::num(M as f64)),
+            ("n".into(), Json::num(N as f64)),
+            ("register_ms".into(), Json::num(register_ms)),
+            ("first_execute_ms".into(), Json::num(first_execute_ms)),
+            ("warm_execute_ms".into(), Json::num(warm_execute_ms)),
+            ("predicted_fused_s".into(), Json::num(planned.predicted)),
+            ("predicted_unfused_s".into(), Json::num(unfused)),
+            ("fusion_speedup".into(), Json::num(unfused / planned.predicted)),
+        ]);
+        update_bench_json(report, name, section).expect("write BENCH_pipelines.json");
+    }
+    println!("wrote {BENCH_JSON}");
+}

@@ -9,10 +9,13 @@
 //! fusebla serve-demo [--requests N] [--batch-window MS] [--devices N]
 //!                    [--scenario poisson|bursty|diurnal|hotkey] [--seed N]
 //!                    [--rate R] [--duration-ms MS] [--deadline-ms MS]
-//!                    [--priority P] [--queue-cap N]
+//!                    [--priority P] [--queue-cap N] [--script FILE]
 //!                                         batched (fleet) serve demo; with
 //!                                         --scenario, a seeded open-loop
-//!                                         traffic run with SLO reporting
+//!                                         traffic run with SLO reporting;
+//!                                         --script registers the file as a
+//!                                         user pipeline and mixes it into
+//!                                         the served traffic
 //! fusebla list                            sequences + artifact catalog
 //! ```
 
@@ -51,7 +54,7 @@ usage:
   fusebla serve-demo [--requests N] [--batch-window MS] [--devices N]
                      [--scenario poisson|bursty|diurnal|hotkey] [--seed N]
                      [--rate R] [--duration-ms MS] [--deadline-ms MS]
-                     [--priority P] [--queue-cap N]
+                     [--priority P] [--queue-cap N] [--script FILE]
   fusebla list"
     );
     2
@@ -410,6 +413,29 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    // --script FILE: register the file's pipeline under its stem name
+    // and mix it into the served traffic alongside the built-ins.
+    let script: Option<(String, String)> = match flag_value(args, "--script") {
+        Ok(None) => None,
+        Ok(Some(path)) => {
+            let src = match std::fs::read_to_string(&path) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("serve-demo: --script {path}: {e}");
+                    return 1;
+                }
+            };
+            let name = PathBuf::from(&path)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "pipeline".into());
+            Some((name, src))
+        }
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
     // Size discovery from the manifest alone (no PJRT on this thread —
     // the client is !Send and lives on the engine's worker).
     let manifest = match crate::util::manifest::Manifest::load(&artifacts_dir().join("manifest.txt")) {
@@ -420,13 +446,13 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     let mix = ["waxpby", "vadd", "sscal", "axpydot"];
-    let mut prepared = Vec::new();
+    let mut prepared: Vec<(String, usize, usize)> = Vec::new();
     for seq in mix {
         let Some(&(m, n)) = manifest.sizes(seq, "fused").first() else {
             eprintln!("serve-demo: missing artifacts for {seq}");
             return 1;
         };
-        prepared.push((seq, m, n));
+        prepared.push((seq.to_string(), m, n));
     }
     let cfg = EngineConfig {
         batch_window: Duration::from_millis(window_ms),
@@ -451,6 +477,20 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     let client = engine.client();
+    if let Some((name, src)) = script {
+        match client.register_pipeline(&name, &src) {
+            Ok(fp) => {
+                println!("registered pipeline '{name}' ({fp:#018x}) on every device");
+                // the fleet agreed on the name: serve it like a built-in
+                prepared.push((name, 32, 65536));
+            }
+            Err(e) => {
+                eprintln!("serve-demo: --script: {e:#}");
+                let _ = engine.shutdown();
+                return 1;
+            }
+        }
+    }
     // Open-loop SLO mode: replayable seeded arrivals instead of the
     // closed-loop burst, with shed/SLO accounting printed at the end.
     if let Some(scenario) = scenario {
@@ -459,7 +499,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             seed,
             rate,
             horizon: Duration::from_millis(duration_ms),
-            keys: prepared.iter().map(|&(s, m, n)| (s.to_string(), m, n)).collect(),
+            keys: prepared.clone(),
         };
         let opts = traffic::OpenLoopOptions {
             deadline: deadline_ms.map(Duration::from_millis),
@@ -504,7 +544,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut tickets = Vec::new();
     for i in 0..n_requests {
         let (seq, m, n) = &prepared[i % prepared.len()];
-        match client.submit(SubmitRequest::new(*seq, *m, *n).synth(i as u64)) {
+        match client.submit(SubmitRequest::new(seq.clone(), *m, *n).synth(i as u64)) {
             Ok(t) => tickets.push(t),
             Err(e) => {
                 eprintln!("serve-demo: {e:#}");

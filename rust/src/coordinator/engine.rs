@@ -52,6 +52,7 @@ use crate::fusion::space::Space;
 use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
 use crate::ir::program::Program;
+use crate::pipelines;
 use crate::planner::{self, PlannerConfig};
 use crate::runtime::{RunResult, Runtime, Tensor};
 use crate::sequences;
@@ -93,10 +94,23 @@ pub struct EngineConfig {
     /// Admission-control bound on a device's in-flight requests
     /// (submitted, not yet answered). A best-effort submit beyond the
     /// cap is refused with [`ServeError::QueueFull`] instead of
-    /// queueing unboundedly; nonzero-priority submits get 2× headroom,
-    /// so load shedding hits best-effort traffic first.
+    /// queueing unboundedly; with the default empty
+    /// [`EngineConfig::priority_caps`], nonzero-priority submits get 2×
+    /// headroom, so load shedding hits best-effort traffic first.
     /// `usize::MAX` (the default) disables shedding.
     pub queue_cap: usize,
+    /// Explicit per-priority admission caps, replacing the blanket 2×
+    /// headroom rule: entry `i` is the in-flight cap applied to
+    /// priority-`i` submissions (the last entry covers every higher
+    /// priority). Empty (the default) keeps the legacy derivation from
+    /// [`EngineConfig::queue_cap`]: best-effort gets `queue_cap`, any
+    /// nonzero priority 2×. Sheds are counted per priority either way
+    /// ([`Metrics::queue_sheds_by_priority`]).
+    pub priority_caps: Vec<usize>,
+    /// Cap on user pipelines concurrently registered per worker
+    /// ([`Client::register_pipeline`]); a registration beyond it is
+    /// refused with [`ServeError::PipelineQuota`].
+    pub pipeline_quota: usize,
     /// EDF slack: the per-request deadline budget reserved for dispatch
     /// and execution. Batch formation stops collecting once the most
     /// urgent in-hand request is within this slack of its deadline —
@@ -112,6 +126,8 @@ impl Default for EngineConfig {
             shard_deadline: Duration::from_secs(5),
             forecast_deadline: Duration::from_secs(1),
             queue_cap: usize::MAX,
+            priority_caps: Vec::new(),
+            pipeline_quota: Coordinator::DEFAULT_PIPELINE_QUOTA,
             deadline_slack: Duration::from_millis(5),
         }
     }
@@ -184,9 +200,10 @@ impl SubmitRequest {
     }
 
     /// Scheduling priority (default 0 = best effort): higher executes
-    /// earlier among a turn's batches after deadline order, and gets 2×
-    /// admission-control headroom so overload sheds best-effort traffic
-    /// first.
+    /// earlier among a turn's batches after deadline order, and gets
+    /// more admission-control headroom (2× by default, or the class's
+    /// [`EngineConfig::priority_caps`] entry) so overload sheds
+    /// best-effort traffic first.
     pub fn priority(mut self, p: u8) -> SubmitRequest {
         self.priority = p;
         self
@@ -233,9 +250,16 @@ struct Shared {
     /// request never reaches a worker — and overlaid onto the device's
     /// [`Metrics`] snapshot when metrics are collected.
     sheds: Vec<AtomicU64>,
+    /// Per-device sheds split by request priority (same engine-side
+    /// overlay; decomposes `sheds`). A Mutex'd map per device is fine:
+    /// sheds are the refusal path, not the hot path.
+    priority_sheds: Vec<Mutex<BTreeMap<u8, u64>>>,
     /// Best-effort in-flight cap per device
-    /// ([`EngineConfig::queue_cap`]); priority submits get 2×.
+    /// ([`EngineConfig::queue_cap`]); see [`Shared::cap_for`].
     queue_cap: u64,
+    /// Explicit per-priority caps ([`EngineConfig::priority_caps`]);
+    /// empty = derive from `queue_cap` (legacy 2× headroom).
+    priority_caps: Vec<u64>,
     /// Submitter-side wait bound for `PlanShard` chunk replies
     /// ([`EngineConfig::shard_deadline`]).
     deadline: Duration,
@@ -255,6 +279,26 @@ impl Shared {
     /// Point-in-time queue depths, parallel to registry indices.
     fn snapshot(&self) -> Vec<u64> {
         self.depths.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The admission cap applied to one priority class: the explicit
+    /// per-priority table when configured (its last entry covers every
+    /// higher priority), else the legacy derivation — best-effort gets
+    /// `queue_cap`, any nonzero priority 2×.
+    fn cap_for(&self, priority: u8) -> u64 {
+        match self.priority_caps.last() {
+            None => {
+                if priority > 0 {
+                    self.queue_cap.saturating_mul(2)
+                } else {
+                    self.queue_cap
+                }
+            }
+            Some(&last) => *self
+                .priority_caps
+                .get(priority as usize)
+                .unwrap_or(&last),
+        }
     }
 
     /// Lane index for a request: the pin when present (an unknown name
@@ -318,13 +362,10 @@ impl Client {
             .shared
             .lane_for(req.device.as_deref(), &req.seq, req.m, req.n, &self.txs)?;
         let depth = &self.shared.depths[lane];
-        // Priority traffic gets double the best-effort cap, so overload
-        // sheds best-effort submissions first.
-        let cap = if req.priority > 0 {
-            self.shared.queue_cap.saturating_mul(2)
-        } else {
-            self.shared.queue_cap
-        };
+        // Priority classes get their own caps (explicit table, or the
+        // legacy 2×-headroom derivation), so overload sheds best-effort
+        // submissions first.
+        let cap = self.shared.cap_for(req.priority);
         let (reply, rx) = mpsc::channel();
         // Count the request before sending so a racing router on
         // another thread sees it; undo on shed. (A concurrent burst can
@@ -335,6 +376,11 @@ impl Client {
         if prev >= cap {
             depth.fetch_sub(1, Ordering::Relaxed);
             self.shared.sheds[lane].fetch_add(1, Ordering::Relaxed);
+            *self.shared.priority_sheds[lane]
+                .lock()
+                .unwrap()
+                .entry(req.priority)
+                .or_insert(0) += 1;
             return Err(anyhow::Error::new(ServeError::QueueFull {
                 depth: prev,
                 cap,
@@ -446,7 +492,33 @@ impl Client {
         k: usize,
         device: Option<&str>,
     ) -> Result<planner::Planned> {
-        let sq = sequences::by_name(seq).ok_or_else(|| anyhow!("unknown sequence '{seq}'"))?;
+        self.search_sharded_inner(seq, m, n, Some(k), device)
+    }
+
+    /// [`Client::search_sharded`] with the shard count derived from
+    /// live fleet state instead of chosen by the caller: one chunk per
+    /// currently-idle lane (at least one), capped by the space's
+    /// partition count — an idle fleet fans the search out wide, a
+    /// saturated fleet collapses to a single chunk on the shallowest
+    /// lane rather than queueing chunk work behind serving traffic.
+    pub fn search_sharded_auto(
+        &self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        device: Option<&str>,
+    ) -> Result<planner::Planned> {
+        self.search_sharded_inner(seq, m, n, None, device)
+    }
+
+    fn search_sharded_inner(
+        &self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        k: Option<usize>,
+        device: Option<&str>,
+    ) -> Result<planner::Planned> {
         let registry = self.shared.model.registry().clone();
         let target = match device {
             Some(name) => registry
@@ -459,11 +531,15 @@ impl Client {
         // Build (or reuse) the sequence's space: deterministic per
         // name, so every client clone shares one construction. Built
         // outside the lock — a racing duplicate build keeps the first
-        // insert and both are identical anyway.
+        // insert and both are identical anyway. Registered pipelines
+        // published their space here at registration time, so a cache
+        // miss that also fails the built-in lookup is an unknown name.
         let cached = self.shared.spaces.lock().unwrap().get(seq).cloned();
         let entry = match cached {
             Some(e) => e,
             None => {
+                let sq = sequences::by_name(seq)
+                    .ok_or_else(|| anyhow!("unknown sequence '{seq}'"))?;
                 let (prog, _graph, space) = sq.space(registry.library(), &ImplAxes::minimal());
                 let built = Arc::new((prog, space));
                 self.shared
@@ -485,6 +561,12 @@ impl Client {
         let depths = self.shared.snapshot();
         let mut order: Vec<usize> = (0..self.txs.len()).collect();
         order.sort_by_key(|&i| depths[i]);
+        // Adaptive shard count: one chunk per idle lane, bounded by the
+        // partition count (an explicit `k` skips the adaptation).
+        let k = k.unwrap_or_else(|| {
+            let idle = depths.iter().filter(|&&d| d == 0).count().max(1);
+            idle.min(space.partitions.len()).max(1)
+        });
         let ranges = planner::chunk_ranges(space.partitions.len(), k);
         let pending: Vec<_> = ranges
             .into_iter()
@@ -522,6 +604,154 @@ impl Client {
             })
             .collect();
         Ok(planner::shard::merge(prog, space, chunks))
+    }
+
+    /// Register a user-defined script pipeline fleet-wide and return
+    /// its content fingerprint. The source is compiled *on every
+    /// worker* (script → typecheck → IR → fusion space → planner inputs
+    /// → codegen) and the name only becomes routable once all of them
+    /// acked the same fingerprint — a partial registration (a worker
+    /// rejecting, dying, or disagreeing) is rolled back from the
+    /// workers that accepted, and the first error is returned.
+    ///
+    /// Typed rejections ([`ServeError`]): `InvalidScript` (the script
+    /// fails to compile — checked client-side before any worker sees
+    /// it), `DuplicatePipeline` (the name collides with a built-in, or
+    /// with a registered pipeline of *different* source; identical
+    /// source is an idempotent dedup that returns the existing
+    /// fingerprint), `PipelineQuota` (a worker's dynamic catalog is
+    /// full). After success the pipeline is a first-class sequence:
+    /// submits route to it, plan/resolve caches apply, and
+    /// [`Client::search_sharded`] shards its space.
+    pub fn register_pipeline(&self, name: &str, src: &str) -> Result<u64> {
+        // Client-side prechecks, so the common rejections never cost a
+        // control-plane round trip: built-in names are never
+        // shadowable, and the routable roster already knows whether
+        // this name is taken (and with what content).
+        if sequences::by_name(name).is_some() {
+            return Err(anyhow::Error::new(ServeError::DuplicatePipeline {
+                name: name.to_string(),
+            }));
+        }
+        let lib = self.shared.model.registry().library();
+        let fp = pipelines::fingerprint(src, lib);
+        if let Some(existing) = self.shared.model.pipeline_fingerprint(name) {
+            if existing == fp {
+                return Ok(fp);
+            }
+            return Err(anyhow::Error::new(ServeError::DuplicatePipeline {
+                name: name.to_string(),
+            }));
+        }
+        // Compile locally once: an invalid script is rejected typed
+        // without perturbing any worker, and the compiled planning
+        // inputs feed the router roster after the fleet agrees.
+        let compiled = pipelines::compile(name, src, lib).map_err(|e| {
+            anyhow::Error::new(ServeError::InvalidScript {
+                line: e.line,
+                msg: e.msg,
+            })
+        })?;
+        debug_assert_eq!(compiled.pipeline.fingerprint, fp);
+        // Scatter to every worker before gathering any reply, so the
+        // compiles overlap.
+        let pending: Vec<_> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (reply, rx) = mpsc::channel();
+                let sent = tx
+                    .send(Msg::Control(Control::RegisterPipeline {
+                        name: name.to_string(),
+                        src: src.to_string(),
+                        reply,
+                    }))
+                    .is_ok();
+                sent.then_some(rx)
+            })
+            .collect();
+        let mut failure: Option<anyhow::Error> = None;
+        let mut acked: Vec<usize> = Vec::with_capacity(pending.len());
+        for (i, rx) in pending.into_iter().enumerate() {
+            let res = match rx {
+                Some(rx) => rx
+                    .recv()
+                    .unwrap_or_else(|_| Err(anyhow!("a worker died during registration"))),
+                None => Err(anyhow!("engine is shut down")),
+            };
+            match res {
+                Ok(wfp) if wfp == fp => acked.push(i),
+                Ok(wfp) => {
+                    if failure.is_none() {
+                        failure = Some(anyhow!(
+                            "pipeline '{name}': worker {i} compiled fingerprint \
+                             {wfp:#018x}, submitter computed {fp:#018x}"
+                        ));
+                    }
+                }
+                Err(e) => {
+                    if failure.is_none() {
+                        failure = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // All-or-nothing: roll the acked workers back so a partial
+            // registration never leaves the fleet disagreeing on what
+            // the name means. Only the lanes that *just* accepted are
+            // touched — a pre-existing same-name pipeline on other
+            // lanes (the degraded case this guards) stays as it was.
+            for i in acked {
+                let (reply, rx) = mpsc::channel();
+                if self.txs[i]
+                    .send(Msg::Control(Control::UnregisterPipeline {
+                        name: name.to_string(),
+                        reply,
+                    }))
+                    .is_ok()
+                {
+                    let _ = rx.recv();
+                }
+            }
+            return Err(e);
+        }
+        // Every worker agreed: publish the name to the router roster
+        // and the shared space cache, making it routable + shardable.
+        self.shared.model.register_pipeline(&compiled);
+        self.shared.spaces.lock().unwrap().insert(
+            name.to_string(),
+            Arc::new((compiled.pipeline.program.clone(), compiled.space)),
+        );
+        Ok(fp)
+    }
+
+    /// Remove a registered pipeline fleet-wide (workers, router roster,
+    /// shared space cache). Returns whether any worker had it; removing
+    /// an unknown name is a no-op. Built-ins cannot be removed — their
+    /// names never enter the dynamic catalog.
+    pub fn unregister_pipeline(&self, name: &str) -> bool {
+        let pending: Vec<_> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (reply, rx) = mpsc::channel();
+                let sent = tx
+                    .send(Msg::Control(Control::UnregisterPipeline {
+                        name: name.to_string(),
+                        reply,
+                    }))
+                    .is_ok();
+                sent.then_some(rx)
+            })
+            .collect();
+        let mut any = false;
+        for rx in pending.into_iter().flatten() {
+            any |= rx.recv().unwrap_or(false);
+        }
+        self.shared.model.unregister_pipeline(name);
+        self.shared.spaces.lock().unwrap().remove(name);
+        any
     }
 }
 
@@ -639,12 +869,17 @@ impl Engine {
             return Err(e);
         }
         let sheds = (0..depths.len()).map(|_| AtomicU64::new(0)).collect();
+        let priority_sheds = (0..depths.len())
+            .map(|_| Mutex::new(BTreeMap::new()))
+            .collect();
         Ok(Engine {
             shared: Arc::new(Shared {
                 model: CostModel::new(registry),
                 depths,
                 sheds,
+                priority_sheds,
                 queue_cap: cfg.queue_cap as u64,
+                priority_caps: cfg.priority_caps.iter().map(|&c| c as u64).collect(),
                 deadline: cfg.shard_deadline,
                 forecast_deadline: cfg.forecast_deadline,
                 spaces: Mutex::new(BTreeMap::new()),
@@ -700,6 +935,8 @@ impl Engine {
                     None => Metrics::default(),
                 };
                 m.queue_sheds = self.shared.sheds[i].load(Ordering::Relaxed);
+                m.queue_sheds_by_priority =
+                    self.shared.priority_sheds[i].lock().unwrap().clone();
                 m
             }))
             .collect();
@@ -734,6 +971,7 @@ impl Engine {
                     None => Metrics::default(),
                 };
                 m.queue_sheds = shared.sheds[i].load(Ordering::Relaxed);
+                m.queue_sheds_by_priority = shared.priority_sheds[i].lock().unwrap().clone();
                 m
             }))
             .collect();
@@ -1031,6 +1269,105 @@ mod tests {
         assert_eq!(m.requests, 2, "shed requests never reach a worker");
         assert_eq!(m.slo_misses, 0, "generous deadlines are met");
         assert_eq!(m.deadline_requests, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Explicit per-priority caps replace the 2×-headroom rule: each
+    /// class sheds at its own bound (the table's last entry covering
+    /// higher priorities), and sheds are counted per class.
+    #[test]
+    fn per_priority_queue_caps_shed_by_class() {
+        let dir = stub_dir("priocaps");
+        let cfg = EngineConfig {
+            batch_window: Duration::from_secs(60),
+            queue_cap: 1,
+            priority_caps: vec![1, 3],
+            // hold admitted requests in flight while the rest submit
+            deadline_slack: Duration::from_millis(59_500),
+            ..EngineConfig::default()
+        };
+        let engine = Engine::with_config(Arc::new(Context::new()), &dir, cfg).unwrap();
+        let client = engine.client();
+        let sub = || SubmitRequest::new("waxpby", 32, 65536).deadline(Duration::from_secs(60));
+        let t1 = client.submit(sub()).unwrap(); // p0: depth 0 < cap 1
+        let e0 = client.submit(sub()).err().expect("p0 must shed at its cap");
+        match e0.downcast_ref::<ServeError>() {
+            Some(ServeError::QueueFull { depth: 1, cap: 1 }) => {}
+            other => panic!("expected QueueFull(1,1), got {other:?} ({e0:#})"),
+        }
+        let t2 = client.submit(sub().priority(1)).unwrap(); // depth 1 < cap 3
+        let t3 = client.submit(sub().priority(1)).unwrap(); // depth 2 < cap 3
+        let e1 = client.submit(sub().priority(1)).err().expect("p1 cap");
+        assert!(e1.is::<ServeError>());
+        // priorities past the table's end use its last entry
+        let e5 = client.submit(sub().priority(5)).err().expect("p5 uses last cap");
+        assert!(e5.is::<ServeError>());
+        let live = engine.fleet_metrics();
+        assert_eq!(live.devices[0].1.queue_sheds, 3);
+        let by_prio = &live.devices[0].1.queue_sheds_by_priority;
+        assert_eq!(by_prio.get(&0), Some(&1));
+        assert_eq!(by_prio.get(&1), Some(&1));
+        assert_eq!(by_prio.get(&5), Some(&1));
+        for t in [t1, t2, t3] {
+            let _ = t.wait();
+        }
+        let m = engine.shutdown();
+        assert_eq!(m.queue_sheds, 3);
+        assert_eq!(m.queue_sheds_by_priority.values().sum::<u64>(), 3);
+        assert_eq!(m.requests, 3, "shed requests never reach a worker");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Fleet-wide pipeline registration: every worker compiles and
+    /// acks, the name becomes routable and executable (interpreter
+    /// backend succeeds even on the stub), re-registration of identical
+    /// source dedups, an invalid script is rejected typed before any
+    /// worker sees it, and the registered space shards.
+    #[test]
+    fn register_pipeline_fans_out_and_serves() {
+        let (dir, engine) = stub_fleet("pipereg", EngineConfig::default());
+        let client = engine.client();
+        let fp = client
+            .register_pipeline("amx", pipelines::examples::ADD_MUL_EXP)
+            .unwrap();
+        assert_ne!(fp, 0);
+        // identical source: idempotent dedup, same fingerprint
+        assert_eq!(
+            client
+                .register_pipeline("amx", pipelines::examples::ADD_MUL_EXP)
+                .unwrap(),
+            fp
+        );
+        // invalid script: typed, client-side, no worker perturbed
+        let err = client.register_pipeline("bad", "return z;").err().expect("invalid");
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::InvalidScript { .. })
+        ));
+        // built-in collision: typed duplicate
+        let err = client
+            .register_pipeline("waxpby", pipelines::examples::ADD_MUL_EXP)
+            .err()
+            .expect("built-in name");
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::DuplicatePipeline { .. })
+        ));
+        // the registered name executes end to end (routed, interp-backed)
+        let t = client.submit(SubmitRequest::new("amx", 32, 256).synth(7)).unwrap();
+        let res = t.wait().expect("interp execution succeeds on the stub backend");
+        assert!(res.env.contains_key("z"));
+        // and its space shards like a built-in's
+        let planned = client.search_sharded_auto("amx", 32, 256, None).unwrap();
+        assert!(planned.predicted > 0.0);
+        assert!(client.search_sharded_auto("ghost", 32, 32, None).is_err());
+        let m = engine.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.failures, 0);
+        // one registration per worker; the idempotent re-register and
+        // both rejections resolved client-side, before any worker
+        assert_eq!(m.pipeline_registrations, 2);
+        assert_eq!(m.pipeline_rejections, 0, "rejections were client-side");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

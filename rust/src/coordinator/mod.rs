@@ -50,6 +50,7 @@ use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
 use crate::ir::plan::SeqPlan;
 use crate::library::Library;
+use crate::pipelines;
 use crate::planner::{self, PlannerConfig, VariantForecast};
 use crate::predict::{predict_seq, RoutineDb};
 use crate::runtime::{refcheck, RunResult, Runtime, Tensor};
@@ -222,6 +223,23 @@ pub(crate) enum Control {
         db: Arc<RoutineDb>,
         reply: mpsc::Sender<Result<planner::ShardEval>>,
     },
+    /// Compile a client-submitted script on this worker and register
+    /// the result into the dynamic catalog. Replies with the content
+    /// fingerprint; rejections are typed [`ServeError`]s. The engine
+    /// fans one of these out per device and only declares the name
+    /// routable when every worker acked the same fingerprint.
+    RegisterPipeline {
+        name: String,
+        src: String,
+        reply: mpsc::Sender<Result<u64>>,
+    },
+    /// Remove a registered pipeline (the rollback half of a partial
+    /// fleet registration); replies whether the name was registered on
+    /// this worker.
+    UnregisterPipeline {
+        name: String,
+        reply: mpsc::Sender<bool>,
+    },
     /// Stop serving even while client handles keep the channel open
     /// (an engine shutdown must not wait for every `Client` clone to
     /// drop).
@@ -233,7 +251,7 @@ pub(crate) enum Control {
 /// failures. Carried as the retained root cause of the `anyhow::Error`
 /// a [`Ticket`] resolves to, so callers distinguish a shed from an
 /// execution failure with `err.downcast_ref::<ServeError>()`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
     /// Admission control refused the request at submit: the target
     /// device's in-flight queue was at capacity.
@@ -241,6 +259,18 @@ pub enum ServeError {
     /// The request's deadline had already passed when the scheduler
     /// picked it up; it was shed instead of executed late.
     DeadlineExpired { late_by: Duration },
+    /// A pipeline registration's script failed to compile
+    /// (lex/parse/typecheck); carries the script line the frontend
+    /// reported.
+    InvalidScript { line: usize, msg: String },
+    /// A pipeline registration was refused because the dynamic catalog
+    /// is at its registration quota.
+    PipelineQuota { count: usize, quota: usize },
+    /// The submitted pipeline name is already taken — by a built-in
+    /// sequence, or by a registered pipeline with *different* source
+    /// (re-submitting identical source is an idempotent dedup, not an
+    /// error).
+    DuplicatePipeline { name: String },
 }
 
 impl std::fmt::Display for ServeError {
@@ -254,6 +284,16 @@ impl std::fmt::Display for ServeError {
                 "shed: deadline expired {:.3} ms before dispatch",
                 late_by.as_secs_f64() * 1e3
             ),
+            ServeError::InvalidScript { line, msg } => {
+                write!(f, "rejected: invalid pipeline script (line {line}): {msg}")
+            }
+            ServeError::PipelineQuota { count, quota } => write!(
+                f,
+                "rejected: pipeline quota reached ({count} registered, quota {quota})"
+            ),
+            ServeError::DuplicatePipeline { name } => {
+                write!(f, "rejected: pipeline name '{name}' is already taken")
+            }
         }
     }
 }
@@ -370,6 +410,19 @@ pub struct Metrics {
     /// reaches a worker — and overlaid onto this device's snapshot by
     /// the engine when metrics are collected.
     pub queue_sheds: u64,
+    /// Admission-control sheds split by request priority. Engine-side
+    /// overlay like `queue_sheds` (whose total it decomposes).
+    pub queue_sheds_by_priority: BTreeMap<u8, u64>,
+    /// User pipelines accepted into this worker's dynamic catalog
+    /// (control-plane `RegisterPipeline`, including idempotent
+    /// re-registrations of identical source).
+    pub pipeline_registrations: u64,
+    /// Pipeline registrations rejected with a typed error (invalid
+    /// script, quota, duplicate name).
+    pub pipeline_rejections: u64,
+    /// Wall time this worker spent handling registrations (script →
+    /// IR → fusion space → codegen, plus validation).
+    pub pipeline_compile_seconds: f64,
     /// Requests shed by the scheduler because their deadline had
     /// already expired when picked up (typed
     /// [`ServeError::DeadlineExpired`] instead of a late execution).
@@ -428,6 +481,12 @@ impl Metrics {
         self.shard_served += other.shard_served;
         self.planner_on_worker += other.planner_on_worker;
         self.queue_sheds += other.queue_sheds;
+        for (prio, n) in &other.queue_sheds_by_priority {
+            *self.queue_sheds_by_priority.entry(*prio).or_insert(0) += n;
+        }
+        self.pipeline_registrations += other.pipeline_registrations;
+        self.pipeline_rejections += other.pipeline_rejections;
+        self.pipeline_compile_seconds += other.pipeline_compile_seconds;
         self.deadline_sheds += other.deadline_sheds;
         self.deadline_requests += other.deadline_requests;
         self.slo_misses += other.slo_misses;
@@ -573,9 +632,14 @@ pub struct Coordinator {
     /// baseline plan), reused across `PlanShard` chunks *and* fresh
     /// per-size forecasts — the space is size-independent, so a new
     /// problem size never re-runs fusion enumeration or space
-    /// construction. Deterministic per sequence and the set of
-    /// sequences is closed, so no eviction is needed.
+    /// construction. Deterministic per sequence; built-ins are a closed
+    /// set and registered pipelines are bounded by `pipeline_quota`, so
+    /// no eviction is needed.
     space_cache: BTreeMap<String, PlanningEntry>,
+    /// Cap on concurrently registered user pipelines (the dynamic half
+    /// of the catalog). Set from [`EngineConfig::pipeline_quota`] when
+    /// serving.
+    pipeline_quota: usize,
     pub metrics: Metrics,
 }
 
@@ -592,6 +656,10 @@ impl Coordinator {
     /// against size-scanning clients).
     const FORECAST_CAP: usize = 4096;
 
+    /// Default registration quota for user pipelines (see
+    /// [`EngineConfig::pipeline_quota`]).
+    pub const DEFAULT_PIPELINE_QUOTA: usize = 32;
+
     pub fn new(ctx: Arc<Context>, artifacts_dir: &Path) -> Result<Coordinator> {
         Self::with_manifest(ctx, Runtime::load_manifest(artifacts_dir)?)
     }
@@ -606,6 +674,7 @@ impl Coordinator {
             forecast_cache: BTreeMap::new(),
             forecast_order: VecDeque::new(),
             space_cache: BTreeMap::new(),
+            pipeline_quota: Self::DEFAULT_PIPELINE_QUOTA,
             metrics: Metrics::default(),
         })
     }
@@ -620,10 +689,10 @@ impl Coordinator {
     /// variant, else the baseline decomposition. Repeat requests for the
     /// same `(seq, m, n)` on the same device skip planning entirely.
     pub fn choose_plan(&mut self, seq_name: &str, m: usize, n: usize) -> Result<PlanChoice> {
-        // Validate the name before touching the cache so unknown
-        // sequences never pollute the hit/miss counters.
-        let seq: Sequence = sequences::by_name(seq_name)
-            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
+        // Validate the name (built-in or registered pipeline) before
+        // touching the cache so unknown sequences never pollute the
+        // hit/miss counters.
+        self.ensure_planning_entry(seq_name)?;
         // Pad exactly once: the padded size is both the plan-cache key
         // and the size the planner plans at (PlanKey::new asserts it).
         let p = ProblemSize::new(m, n).padded();
@@ -641,31 +710,35 @@ impl Coordinator {
         // comparison is what makes this a per-size decision.) The same
         // forecast, on each device's own calibration, is what the fleet
         // router ranks devices by — one definition of "fast" everywhere.
-        let (forecast, _) = self.forecast_memo(&seq, p);
+        let (forecast, _) = self.forecast_memo(seq_name, p)?;
         let choice = PlanChoice::from_forecast(&forecast);
         self.plan_cache.insert(key, choice);
         self.sync_plan_cache_metrics();
         Ok(choice)
     }
 
-    /// This sequence's cached planning inputs, built on first use. One
-    /// build serves every `PlanShard` chunk and every problem size's
-    /// forecast of the sequence.
-    fn planning_entry(&mut self, seq: &Sequence) -> &PlanningEntry {
-        if !self.space_cache.contains_key(seq.name) {
-            let (prog, _graph, space) = seq.space(&self.ctx.lib, &ImplAxes::minimal());
-            let baseline =
-                autotune::baseline_plan(&seq.cublas_program(&self.ctx.lib), &self.ctx.lib);
-            self.space_cache.insert(
-                seq.name.to_string(),
-                PlanningEntry {
-                    prog,
-                    space,
-                    baseline,
-                },
-            );
+    /// Build (once) the planning inputs of a name: a built-in
+    /// sequence's space and baseline, or — for registered pipelines —
+    /// the entry that registration inserted. One build serves every
+    /// `PlanShard` chunk and every problem size's forecast. Errors on
+    /// names that are neither built-in nor registered.
+    fn ensure_planning_entry(&mut self, seq_name: &str) -> Result<()> {
+        if self.space_cache.contains_key(seq_name) {
+            return Ok(());
         }
-        &self.space_cache[seq.name]
+        let seq: Sequence = sequences::by_name(seq_name)
+            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
+        let (prog, _graph, space) = seq.space(&self.ctx.lib, &ImplAxes::minimal());
+        let baseline = autotune::baseline_plan(&seq.cublas_program(&self.ctx.lib), &self.ctx.lib);
+        self.space_cache.insert(
+            seq_name.to_string(),
+            PlanningEntry {
+                prog,
+                space,
+                baseline,
+            },
+        );
+        Ok(())
     }
 
     /// The planner's per-variant forecast for a sequence at a padded
@@ -676,24 +749,26 @@ impl Coordinator {
     /// identical space fresh (both are pure functions of the same
     /// inputs), so worker-side and submitter-fallback forecasts always
     /// agree.
-    fn forecast_memo(&mut self, seq: &Sequence, p: ProblemSize) -> (VariantForecast, bool) {
+    fn forecast_memo(&mut self, seq_name: &str, p: ProblemSize) -> Result<(VariantForecast, bool)> {
         debug_assert_eq!(p, p.padded(), "forecasts are memoized per padded size");
-        let memo_key = (seq.name.to_string(), p.m, p.n);
+        let memo_key = (seq_name.to_string(), p.m, p.n);
         if let Some(&f) = self.forecast_cache.get(&memo_key) {
-            return (f, false);
+            return Ok((f, false));
         }
-        let db = self.ctx.db.clone();
-        let entry = self.planning_entry(seq);
-        let planned = planner::plan_space(
-            &entry.prog,
-            &entry.space,
-            &db,
-            p,
-            &PlannerConfig::default(),
-        );
-        let forecast = VariantForecast {
-            planned: planned.predicted,
-            baseline: predict_seq(&db, &entry.baseline, p),
+        self.ensure_planning_entry(seq_name)?;
+        let forecast = {
+            let entry = &self.space_cache[seq_name];
+            let planned = planner::plan_space(
+                &entry.prog,
+                &entry.space,
+                &self.ctx.db,
+                p,
+                &PlannerConfig::default(),
+            );
+            VariantForecast {
+                planned: planned.predicted,
+                baseline: predict_seq(&self.ctx.db, &entry.baseline, p),
+            }
         };
         while self.forecast_order.len() >= Self::FORECAST_CAP {
             if let Some(old) = self.forecast_order.pop_front() {
@@ -702,7 +777,7 @@ impl Coordinator {
         }
         self.forecast_order.push_back(memo_key.clone());
         self.forecast_cache.insert(memo_key, forecast);
-        (forecast, true)
+        Ok((forecast, true))
     }
 
     /// Answer a control-plane `Forecast`: plan the key on this device's
@@ -710,10 +785,8 @@ impl Coordinator {
     /// `planner_on_worker`) and seed the plan cache so the first routed
     /// execution of the key hits instead of re-planning.
     fn forecast_for(&mut self, seq_name: &str, m: usize, n: usize) -> Result<VariantForecast> {
-        let seq: Sequence = sequences::by_name(seq_name)
-            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
         let p = ProblemSize::new(m, n).padded();
-        let (forecast, fresh) = self.forecast_memo(&seq, p);
+        let (forecast, fresh) = self.forecast_memo(seq_name, p)?;
         if fresh {
             self.metrics.planner_on_worker += 1;
         }
@@ -738,9 +811,8 @@ impl Coordinator {
         db: &RoutineDb,
     ) -> Result<planner::ShardEval> {
         let p = ProblemSize::new(m, n).padded();
-        let seq: Sequence = sequences::by_name(seq_name)
-            .ok_or_else(|| anyhow!("unknown sequence '{seq_name}'"))?;
-        let space = &self.planning_entry(&seq).space;
+        self.ensure_planning_entry(seq_name)?;
+        let space = &self.space_cache[seq_name].space;
         if range.end > space.partitions.len() {
             return Err(anyhow!(
                 "shard range {}..{} exceeds the {} partitions of '{seq_name}'",
@@ -756,6 +828,86 @@ impl Coordinator {
             &PlannerConfig::default(),
             range,
         ))
+    }
+
+    /// Answer a control-plane `RegisterPipeline`: compile the script
+    /// end to end and insert the result into this worker's dynamic
+    /// catalog and planning caches. Returns the content fingerprint on
+    /// success. Rejections are typed [`ServeError`]s; every outcome is
+    /// counted, and all time spent (compile + validation) accrues to
+    /// `pipeline_compile_seconds`.
+    pub(crate) fn register_pipeline(&mut self, name: &str, src: &str) -> Result<u64> {
+        let t0 = Instant::now();
+        let res = self.register_pipeline_inner(name, src);
+        self.metrics.pipeline_compile_seconds += t0.elapsed().as_secs_f64();
+        match &res {
+            Ok(_) => self.metrics.pipeline_registrations += 1,
+            Err(_) => self.metrics.pipeline_rejections += 1,
+        }
+        res
+    }
+
+    fn register_pipeline_inner(&mut self, name: &str, src: &str) -> Result<u64> {
+        // Built-in names are never shadowable: a pipeline must not
+        // change what "bicgk" means mid-serve.
+        if sequences::by_name(name).is_some() {
+            return Err(anyhow::Error::new(ServeError::DuplicatePipeline {
+                name: name.to_string(),
+            }));
+        }
+        let fp = pipelines::fingerprint(src, &self.ctx.lib);
+        if let Some(existing) = self.runtime.pipeline(name) {
+            if existing.fingerprint == fp {
+                // Identical content: an idempotent dedup hit, so a
+                // rollback retry or a re-sync never errors.
+                return Ok(fp);
+            }
+            return Err(anyhow::Error::new(ServeError::DuplicatePipeline {
+                name: name.to_string(),
+            }));
+        }
+        let count = self.runtime.pipeline_names().len();
+        if count >= self.pipeline_quota {
+            return Err(anyhow::Error::new(ServeError::PipelineQuota {
+                count,
+                quota: self.pipeline_quota,
+            }));
+        }
+        let compiled = pipelines::compile(name, src, &self.ctx.lib).map_err(|e| {
+            anyhow::Error::new(ServeError::InvalidScript {
+                line: e.line,
+                msg: e.msg,
+            })
+        })?;
+        debug_assert_eq!(compiled.pipeline.fingerprint, fp);
+        // The compiled planning inputs slot straight into the same
+        // space cache built-ins use, so choose_plan/forecast/shard
+        // treat the pipeline exactly like a built-in from here on.
+        self.space_cache.insert(
+            name.to_string(),
+            PlanningEntry {
+                prog: compiled.pipeline.program.clone(),
+                space: compiled.space,
+                baseline: compiled.baseline,
+            },
+        );
+        self.runtime.register_pipeline(compiled.pipeline);
+        Ok(fp)
+    }
+
+    /// Remove a registered pipeline and every cache entry derived from
+    /// it (planning inputs, forecasts, plan decisions, resolved plans).
+    /// Returns whether the name was registered. Built-ins are
+    /// unaffected: their names never enter the runtime's registry.
+    pub(crate) fn unregister_pipeline(&mut self, name: &str) -> bool {
+        let was = self.runtime.unregister_pipeline(name);
+        if was {
+            self.space_cache.remove(name);
+            self.forecast_cache.retain(|k, _| k.0 != name);
+            self.forecast_order.retain(|k| k.0 != name);
+            self.plan_cache.entries.retain(|(k, _)| k.seq != name);
+        }
+        was
     }
 
     /// Mirror the plan cache's counters into the metrics snapshot.
@@ -938,6 +1090,14 @@ impl Coordinator {
                 let _ = reply.send(res);
                 false
             }
+            Control::RegisterPipeline { name, src, reply } => {
+                let _ = reply.send(self.register_pipeline(&name, &src));
+                false
+            }
+            Control::UnregisterPipeline { name, reply } => {
+                let _ = reply.send(self.unregister_pipeline(&name));
+                false
+            }
         }
     }
 
@@ -956,6 +1116,7 @@ impl Coordinator {
     /// request is in hand — the `now >= by` check precedes every
     /// blocking receive.
     pub(crate) fn serve_batched(mut self, rx: mpsc::Receiver<Msg>, cfg: &EngineConfig) -> Metrics {
+        self.pipeline_quota = cfg.pipeline_quota;
         let mut closing = false;
         while !closing {
             let first = match rx.recv() {
@@ -1044,10 +1205,18 @@ pub fn synth_inputs(
     seed: u64,
 ) -> BTreeMap<String, Tensor> {
     use crate::util::Prng;
+    let stages = runtime.manifest.stages(seq, variant, m, n);
+    if stages.is_empty() {
+        // Dynamically registered pipelines have no manifest entries;
+        // their free inputs come from the compiled program instead.
+        if let Some(p) = runtime.pipeline(seq) {
+            return p.synth_inputs(m, n, seed).unwrap_or_default();
+        }
+    }
     let mut produced: Vec<String> = vec![];
     let mut inputs = BTreeMap::new();
     let mut rng = Prng::new(seed);
-    for e in runtime.manifest.stages(seq, variant, m, n) {
+    for e in stages {
         for spec in &e.inputs {
             if !produced.contains(&spec.name) && !inputs.contains_key(&spec.name) {
                 let len: usize = spec.dims.iter().product::<usize>().max(1);
@@ -1388,6 +1557,115 @@ mod tests {
         assert_eq!(coord.metrics.batches, 0, "shed requests never execute");
         assert_eq!(coord.metrics.slo_misses, 1, "a shed is an SLO miss");
         assert_eq!(coord.metrics.deadline_requests, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Registration end to end on one worker: typed rejections
+    /// (invalid script, duplicate name, built-in collision, quota),
+    /// idempotent dedup of identical source, and metrics accounting.
+    #[test]
+    fn register_pipeline_typed_rejections_and_dedup() {
+        let dir = stub_catalog("pipereg", &["waxpby"], false);
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        coord.pipeline_quota = 1;
+        // invalid script → typed InvalidScript carrying the frontend's line
+        let err = coord
+            .register_pipeline("bad", "vector<N> x;\ninput x;\ny = nosuch(x);\nreturn y;")
+            .unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::InvalidScript { line: 3, msg }) => {
+                assert!(msg.contains("unknown library function"), "{msg}");
+            }
+            other => panic!("expected InvalidScript at line 3, got {other:?} ({err:#})"),
+        }
+        let fp = coord
+            .register_pipeline("amx", pipelines::examples::ADD_MUL_EXP)
+            .unwrap();
+        // identical source re-registration: dedup hit, same fingerprint
+        assert_eq!(
+            coord
+                .register_pipeline("amx", pipelines::examples::ADD_MUL_EXP)
+                .unwrap(),
+            fp
+        );
+        // same name, different source → typed duplicate
+        let err = coord
+            .register_pipeline("amx", pipelines::examples::QUANTIZE_INT8)
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::DuplicatePipeline { .. })
+        ));
+        // a built-in name is never shadowable
+        let err = coord
+            .register_pipeline("waxpby", pipelines::examples::ADD_MUL_EXP)
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::DuplicatePipeline { .. })
+        ));
+        // quota counts registered pipelines, not attempts
+        let err = coord
+            .register_pipeline("q8", pipelines::examples::QUANTIZE_INT8)
+            .unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<ServeError>(),
+            Some(ServeError::PipelineQuota { count: 1, quota: 1 })
+        ));
+        assert_eq!(coord.metrics.pipeline_registrations, 2);
+        assert_eq!(coord.metrics.pipeline_rejections, 4);
+        assert!(coord.metrics.pipeline_compile_seconds > 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A registered pipeline serves scheduling turns exactly like a
+    /// built-in: the plan cache decides once, repeats hit both the plan
+    /// cache and the runtime's resolve cache, and — because pipeline
+    /// stages run on the interpreter — execution succeeds even on the
+    /// offline stub backend. Unregistration purges every derived cache
+    /// entry, so the name stops resolving.
+    #[test]
+    fn registered_pipeline_serves_turns_like_a_builtin() {
+        let dir = stub_catalog("pipeserve", &["waxpby"], false);
+        let ctx = Arc::new(Context::new());
+        let mut coord = Coordinator::new(ctx, &dir).unwrap();
+        coord
+            .register_pipeline("amx", pipelines::examples::ADD_MUL_EXP)
+            .unwrap();
+        let request = |seed: u64| {
+            let (rtx, rrx) = mpsc::channel();
+            let r = Request {
+                seq: "amx".into(),
+                m: 32,
+                n: 256,
+                inputs: RequestInputs::Synth { seed },
+                variant: None, // let the plan cache decide
+                enqueued: Instant::now(),
+                deadline: None,
+                priority: 0,
+                reply: Reply::new(rtx, None),
+            };
+            (r, rrx)
+        };
+        let (r1, rx1) = request(7);
+        coord.run_turn(vec![r1]); // cold: plans + resolves
+        let (r2, rx2) = request(8);
+        coord.run_turn(vec![r2]); // warm: plan-cache + resolve-cache hit
+        assert!(rx1.recv().unwrap().is_ok(), "interp execution must succeed");
+        let res = rx2.recv().unwrap().unwrap();
+        assert!(res.env.contains_key("z"), "pipeline output must be returned");
+        assert_eq!(coord.metrics.failures, 0);
+        assert_eq!(coord.metrics.plan_cache_misses, 1);
+        assert_eq!(coord.metrics.plan_cache_hits, 1);
+        assert_eq!(coord.metrics.resolve_misses, 1);
+        assert!(coord.metrics.resolve_hits >= 1, "warm turn must reuse the resolved plan");
+        // forecasting works off the registered planning entry
+        assert!(coord.forecast_for("amx", 32, 256).is_ok());
+        // unregister purges plan + forecast + planning caches
+        assert!(coord.unregister_pipeline("amx"));
+        assert!(!coord.unregister_pipeline("amx"), "second unregister is a no-op");
+        assert!(coord.choose_plan("amx", 32, 256).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -47,6 +47,7 @@ use crate::graph::DepGraph;
 use crate::ir::elem::ProblemSize;
 use crate::ir::plan::SeqPlan;
 use crate::ir::program::Program;
+use crate::pipelines;
 use crate::planner::{self, PlannerConfig};
 use crate::sequences;
 use std::collections::{BTreeMap, VecDeque};
@@ -75,6 +76,11 @@ pub struct CostModel {
     /// path when no lanes are supplied, the fallback when a worker
     /// missed the deadline or is gone.
     local_forecasts: AtomicU64,
+    /// Routable roster of registered script pipelines: name → planning
+    /// inputs, published by [`crate::Client::register_pipeline`] once
+    /// every worker acked. Entries make the name forecastable (and thus
+    /// predictor-routed) exactly like a built-in sequence.
+    pipelines: Mutex<BTreeMap<String, Arc<PipelinePlanning>>>,
 }
 
 #[derive(Default)]
@@ -105,6 +111,25 @@ struct LocalPlanning {
     baseline: SeqPlan,
 }
 
+/// A registered pipeline's routing entry: the content fingerprint the
+/// fleet agreed on plus the planning inputs a local forecast needs
+/// (already compiled once at registration — no script work on the
+/// submit path, ever).
+struct PipelinePlanning {
+    fingerprint: u64,
+    prog: Program,
+    graph: DepGraph,
+    baseline: SeqPlan,
+}
+
+/// What a cold key forecasts against: a built-in sequence (planning
+/// inputs built lazily from the catalog) or a registered pipeline
+/// (planning inputs cloned from the roster).
+enum Target {
+    Builtin(sequences::Sequence),
+    Pipeline(Arc<PipelinePlanning>),
+}
+
 impl CostModel {
     /// Cap on cached `(seq, padded size)` forecasts. Generous — the
     /// whole catalog is far smaller — but keeps a size-scanning client
@@ -118,11 +143,44 @@ impl CostModel {
             cold_keys: AtomicU64::new(0),
             worker_forecasts: AtomicU64::new(0),
             local_forecasts: AtomicU64::new(0),
+            pipelines: Mutex::new(BTreeMap::new()),
         }
     }
 
     pub fn registry(&self) -> &Arc<DeviceRegistry> {
         &self.registry
+    }
+
+    /// Publish a compiled pipeline to the routable roster. Any cached
+    /// forecasts under the name are dropped — they could only belong to
+    /// an earlier registration with different content.
+    pub(crate) fn register_pipeline(&self, c: &pipelines::Compiled) {
+        let name = c.pipeline.name.clone();
+        let entry = Arc::new(PipelinePlanning {
+            fingerprint: c.pipeline.fingerprint,
+            prog: c.pipeline.program.clone(),
+            graph: c.graph.clone(),
+            baseline: c.baseline.clone(),
+        });
+        self.pipelines.lock().unwrap().insert(name.clone(), entry);
+        let mut cache = self.cache.lock().unwrap();
+        cache.by_seq.remove(&name);
+        cache.order.retain(|(s, _)| s != &name);
+    }
+
+    /// Drop a pipeline from the roster and purge its cached forecasts;
+    /// subsequent submissions under the name route to the shallowest
+    /// queue (and fail on the worker), exactly like any unknown name.
+    pub(crate) fn unregister_pipeline(&self, name: &str) {
+        self.pipelines.lock().unwrap().remove(name);
+        let mut cache = self.cache.lock().unwrap();
+        cache.by_seq.remove(name);
+        cache.order.retain(|(s, _)| s != name);
+    }
+
+    /// Fingerprint a registered name currently routes under, if any.
+    pub(crate) fn pipeline_fingerprint(&self, name: &str) -> Option<u64> {
+        self.pipelines.lock().unwrap().get(name).map(|p| p.fingerprint)
     }
 
     /// Point-in-time snapshot of the cold-path counters.
@@ -172,8 +230,13 @@ impl CostModel {
         }
         // Forecast outside the lock: workers plan concurrently, and a
         // racing duplicate forecast is bit-identical anyway (pure
-        // function of calibration + size).
-        let sq = sequences::by_name(seq)?;
+        // function of calibration + size). Built-ins and registered
+        // pipelines forecast identically; only truly unknown names
+        // return `None` (→ shallowest-queue routing).
+        let target = match sequences::by_name(seq) {
+            Some(sq) => Target::Builtin(sq),
+            None => Target::Pipeline(self.pipelines.lock().unwrap().get(seq)?.clone()),
+        };
         self.cold_keys.fetch_add(1, Ordering::Relaxed);
         let mut local: Option<LocalPlanning> = None;
         let seconds: Vec<f64> = match lanes {
@@ -210,13 +273,13 @@ impl CostModel {
                                 self.worker_forecasts.fetch_add(1, Ordering::Relaxed);
                                 f.best_seconds()
                             }
-                            None => self.forecast_local(&sq, i, p, &mut local),
+                            None => self.forecast_local(&target, i, p, &mut local),
                         }
                     })
                     .collect()
             }
             None => (0..self.registry.len())
-                .map(|i| self.forecast_local(&sq, i, p, &mut local))
+                .map(|i| self.forecast_local(&target, i, p, &mut local))
                 .collect(),
         };
         let entry = Arc::new(seconds);
@@ -258,21 +321,30 @@ impl CostModel {
     /// every device that falls back during this cold key.
     fn forecast_local(
         &self,
-        sq: &sequences::Sequence,
+        target: &Target,
         device: usize,
         p: ProblemSize,
         local: &mut Option<LocalPlanning>,
     ) -> f64 {
         self.local_forecasts.fetch_add(1, Ordering::Relaxed);
         let lib = self.registry.library();
-        let lp = local.get_or_insert_with(|| {
-            let (prog, graph) = sq.graph(lib);
-            let baseline = autotune::baseline_plan(&sq.cublas_program(lib), lib);
-            LocalPlanning {
-                prog,
-                graph,
-                baseline,
+        let lp = local.get_or_insert_with(|| match target {
+            Target::Builtin(sq) => {
+                let (prog, graph) = sq.graph(lib);
+                let baseline = autotune::baseline_plan(&sq.cublas_program(lib), lib);
+                LocalPlanning {
+                    prog,
+                    graph,
+                    baseline,
+                }
             }
+            // pipelines compiled their planning inputs at registration;
+            // a fallback just clones them off the roster entry
+            Target::Pipeline(pp) => LocalPlanning {
+                prog: pp.prog.clone(),
+                graph: pp.graph.clone(),
+                baseline: pp.baseline.clone(),
+            },
         });
         let ctx = self.registry.context(device);
         planner::forecast_variants(
@@ -477,6 +549,34 @@ mod tests {
                 .insert((32, 65536), Arc::new(vec![f64::NAN, 1.0]));
         }
         assert_eq!(model.route("waxpby", 32, 65536, &[0, 5]), 1);
+    }
+
+    /// A registered pipeline forecasts and routes exactly like a
+    /// built-in; unregistering purges its cached forecasts so the name
+    /// degrades to unknown (shallowest-queue) routing.
+    #[test]
+    fn registered_pipelines_route_like_builtins() {
+        let model = two_device_model("pipeline");
+        assert!(model.costs("amx", 32, 65536).is_none(), "unknown before registration");
+        let compiled = pipelines::compile(
+            "amx",
+            pipelines::examples::ADD_MUL_EXP,
+            model.registry().library(),
+        )
+        .unwrap();
+        model.register_pipeline(&compiled);
+        assert_eq!(
+            model.pipeline_fingerprint("amx"),
+            Some(compiled.pipeline.fingerprint)
+        );
+        let costs = model.costs("amx", 32, 65536).expect("registered name forecasts");
+        assert!(costs.iter().all(|c| c.is_finite() && *c > 0.0));
+        assert!(costs[0] < costs[1], "BLAS-1 pipeline: GTX 480 beats GT 430");
+        assert_eq!(model.route("amx", 32, 65536, &[0, 0]), 0);
+        model.unregister_pipeline("amx");
+        assert_eq!(model.pipeline_fingerprint("amx"), None);
+        assert!(model.costs("amx", 32, 65536).is_none(), "forecast cache purged");
+        assert_eq!(model.route("amx", 32, 65536, &[3, 1]), 1, "back to shallowest");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod fusion;
 pub mod graph;
 pub mod ir;
 pub mod library;
+pub mod pipelines;
 pub mod planner;
 pub mod predict;
 pub mod runtime;

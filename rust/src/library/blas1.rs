@@ -310,6 +310,66 @@ pub fn snrm2sq() -> ElemFunc {
     }
 }
 
+/// `y ← exp(x)` — elementwise exponential. Not a BLAS routine, but the
+/// map/reduce framework is generic over elementary functions (§3.1);
+/// user-submitted pipelines (e.g. the fused `exp((x + y) * 2)` chain)
+/// need it. `exp` costs several flops on GPU SFUs; 2 per word is the
+/// model's throughput-equivalent charge.
+pub fn vexp() -> ElemFunc {
+    ElemFunc {
+        name: "vexp".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("x")],
+        outputs: vec![vparam("y")],
+        scalars: vec![],
+        flops_per_instance: 2 * W,
+        routines: vec![
+            vec_load("vexp", 0),
+            vec_compute("vexp", 2 * W),
+            vec_store("vexp", 0),
+        ],
+        variants: vec_variants(10),
+    }
+}
+
+/// `y ← x + α` — elementwise scalar shift (the zero-point add of an
+/// int8 quantization chain).
+pub fn vshift() -> ElemFunc {
+    ElemFunc {
+        name: "vshift".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("x")],
+        outputs: vec![vparam("y")],
+        scalars: vec!["alpha".into()],
+        flops_per_instance: W,
+        routines: vec![
+            vec_load("vshift", 0),
+            vec_compute("vshift", W),
+            vec_store("vshift", 0),
+        ],
+        variants: vec_variants(10),
+    }
+}
+
+/// `y ← clamp(round(x), lo, hi)` — round-then-saturate, the tail of an
+/// int8 quantization chain (`clamp(round(x/s + z), -128, 127)`).
+pub fn vclampr() -> ElemFunc {
+    ElemFunc {
+        name: "vclampr".into(),
+        hof: HigherOrder::Map,
+        inputs: vec![vparam("x")],
+        outputs: vec![vparam("y")],
+        scalars: vec!["lo".into(), "hi".into()],
+        flops_per_instance: 3 * W,
+        routines: vec![
+            vec_load("vclampr", 0),
+            vec_compute("vclampr", 3 * W),
+            vec_store("vclampr", 0),
+        ],
+        variants: vec_variants(10),
+    }
+}
+
 /// `r ← Σ |x|` — SASUM's reduction.
 pub fn sasum() -> ElemFunc {
     ElemFunc {

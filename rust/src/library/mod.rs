@@ -45,6 +45,9 @@ impl Library {
         lib.register(blas1::sdot());
         lib.register(blas1::snrm2sq());
         lib.register(blas1::sasum());
+        lib.register(blas1::vexp());
+        lib.register(blas1::vshift());
+        lib.register(blas1::vclampr());
         // BLAS-2 (depth 2, TILE32x32 elements)
         lib.register(blas2::mcopy());
         lib.register(blas2::madd());
@@ -152,12 +155,12 @@ mod tests {
         let lib = Library::standard();
         for name in [
             "scopy", "sscal", "saxpy", "waxpby", "vadd3", "vadd2", "sdot", "snrm2sq",
-            "sasum", "mcopy", "madd", "sger", "sger2", "sgemv", "sgemvpy", "sgemtv",
-            "sgemtvpz",
+            "sasum", "vexp", "vshift", "vclampr", "mcopy", "madd", "sger", "sger2",
+            "sgemv", "sgemvpy", "sgemtv", "sgemtvpz",
         ] {
             assert!(lib.lookup(name).is_some(), "missing {name}");
         }
-        assert_eq!(lib.len(), 17);
+        assert_eq!(lib.len(), 20);
     }
 
     #[test]

@@ -1,0 +1,737 @@
+//! User-defined pipelines: from client-submitted script source to a
+//! first-class servable sequence.
+//!
+//! The paper's compiler fuses *sequences* of map/reduce BLAS calls; the
+//! `script` frontend can compile any such pipeline, but until now only
+//! the eleven built-in sequences were servable — the catalog was fixed
+//! at manifest parse time. This module is the bridge: [`compile`] takes
+//! script source through typecheck → IR → fusion-space enumeration →
+//! codegen, and the resulting [`Pipeline`] can be registered into the
+//! runtime's *dynamic* catalog ([`crate::runtime::Runtime::register_pipeline`])
+//! so the plan cache, resolve-once execution, routing, batching and SLO
+//! handling all apply to it exactly as to built-ins.
+//!
+//! Registrations are content-addressed: [`fingerprint`] hashes the
+//! source together with [`Library::fingerprint`], so two workers accept
+//! the same submission iff they would compile it identically, and
+//! re-submitting identical source is detectable as a dedup hit rather
+//! than a conflict.
+//!
+//! # Execution
+//!
+//! The offline `xla` stub cannot run HLO, so pipeline stages execute on
+//! a pure-Rust interpreter ([`InterpStage`]) with exactly the kernel
+//! boundaries the fused plan chose: one stage per fused kernel, tensors
+//! crossing stages through the same slot-interned environment the PJRT
+//! path uses. Grouping is *structural* — the partition with the fewest
+//! parts, ties to the lowest index — so every worker derives the same
+//! stage list with no device-dependent planner input, mirroring how
+//! built-in artifacts fix kernel structure while the planner retunes
+//! fused-vs-cublas per device and size.
+
+use crate::autotune;
+use crate::codegen;
+use crate::fusion::implgen::FusionImpl;
+use crate::fusion::space::Space;
+use crate::fusion::{enumerate_fusions, ImplAxes};
+use crate::graph::DepGraph;
+use crate::ir::elem::{DimSym, VarType};
+use crate::ir::plan::SeqPlan;
+use crate::ir::program::{Program, VarDecl, VarId};
+use crate::library::Library;
+use crate::runtime::Tensor;
+use crate::script::{compile_script, ScriptError};
+use crate::util::manifest::{ArtifactEntry, DType, TensorSpec};
+use crate::util::Prng;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Content address of a pipeline submission: FNV-1a over the
+/// length-prefixed source plus the library fingerprint. Two workers
+/// agree on a fingerprint iff they hold byte-identical source *and*
+/// byte-compatible libraries — the pair that determines compile output.
+pub fn fingerprint(src: &str, lib: &Library) -> u64 {
+    fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    h = eat(h, &(src.len() as u64).to_le_bytes());
+    h = eat(h, src.as_bytes());
+    h = eat(h, &lib.fingerprint().to_le_bytes());
+    h
+}
+
+/// One interpreted call: a library function applied to named tensors.
+/// Function/variable names are resolved at compile time so execution
+/// needs no [`Library`] or [`Program`] in hand.
+#[derive(Clone, Debug)]
+pub struct InterpCall {
+    pub func: String,
+    pub args: Vec<String>,
+    pub outs: Vec<String>,
+    pub scalars: BTreeMap<String, f32>,
+}
+
+/// One executable stage of a pipeline: the calls of one (possibly
+/// fused) kernel, in execution order. The interpreter stands in for the
+/// kernel launch — tensors enter and leave through the stage boundary
+/// exactly as they would through global memory.
+#[derive(Clone, Debug)]
+pub struct InterpStage {
+    pub calls: Vec<InterpCall>,
+}
+
+impl InterpStage {
+    /// Run every call against a name → tensor environment. Intra-stage
+    /// intermediates stay local to `env`, mirroring registers/shared
+    /// memory of a fused kernel.
+    pub fn run(&self, env: &mut BTreeMap<String, Tensor>) -> Result<()> {
+        for call in &self.calls {
+            eval_call(call, env)?;
+        }
+        Ok(())
+    }
+}
+
+fn arg<'e>(
+    env: &'e BTreeMap<String, Tensor>,
+    call: &InterpCall,
+    i: usize,
+) -> Result<&'e Tensor> {
+    let name = &call.args[i];
+    env.get(name)
+        .ok_or_else(|| anyhow!("interp {}: '{}' not in environment", call.func, name))
+}
+
+fn same_len(a: &Tensor, b: &Tensor, func: &str) -> Result<()> {
+    if a.data.len() != b.data.len() {
+        bail!(
+            "interp {func}: input lengths differ ({} vs {})",
+            a.data.len(),
+            b.data.len()
+        );
+    }
+    Ok(())
+}
+
+fn as_matrix(t: &Tensor, func: &str) -> Result<(usize, usize)> {
+    if t.dims.len() != 2 {
+        bail!("interp {func}: expected a matrix, got dims {:?}", t.dims);
+    }
+    Ok((t.dims[0], t.dims[1]))
+}
+
+fn map1(x: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor {
+        dims: x.dims.clone(),
+        data: x.data.iter().map(|&v| f(v)).collect(),
+    }
+}
+
+fn map2(x: &Tensor, y: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    Tensor {
+        dims: x.dims.clone(),
+        data: x.data.iter().zip(&y.data).map(|(&a, &b)| f(a, b)).collect(),
+    }
+}
+
+fn matvec(a: &Tensor, x: &[f32], m: usize, n: usize) -> Vec<f32> {
+    (0..m)
+        .map(|i| {
+            let row = &a.data[i * n..(i + 1) * n];
+            row.iter().zip(x).map(|(r, v)| r * v).sum()
+        })
+        .collect()
+}
+
+fn matvec_t(a: &Tensor, y: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        let row = &a.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            out[j] += row[j] * y[i];
+        }
+    }
+    out
+}
+
+/// Evaluate one library call. Semantics mirror the doc contracts in
+/// `library::blas1`/`blas2` (and the refcheck oracle); reductions sum
+/// sequentially so results are deterministic across workers.
+fn eval_call(call: &InterpCall, env: &mut BTreeMap<String, Tensor>) -> Result<()> {
+    let s = |k: &str| call.scalars.get(k).copied().unwrap_or(1.0);
+    let out = match call.func.as_str() {
+        "scopy" => arg(env, call, 0)?.clone(),
+        "sscal" => {
+            let alpha = s("alpha");
+            map1(arg(env, call, 0)?, |x| alpha * x)
+        }
+        "saxpy" => {
+            let (x, y) = (arg(env, call, 0)?, arg(env, call, 1)?);
+            same_len(x, y, &call.func)?;
+            let alpha = s("alpha");
+            map2(x, y, |x, y| alpha * x + y)
+        }
+        "waxpby" => {
+            let (x, y) = (arg(env, call, 0)?, arg(env, call, 1)?);
+            same_len(x, y, &call.func)?;
+            let (alpha, beta) = (s("alpha"), s("beta"));
+            map2(x, y, |x, y| alpha * x + beta * y)
+        }
+        "vadd3" => {
+            let (w, y, z) = (arg(env, call, 0)?, arg(env, call, 1)?, arg(env, call, 2)?);
+            same_len(w, y, &call.func)?;
+            same_len(w, z, &call.func)?;
+            Tensor {
+                dims: w.dims.clone(),
+                data: w
+                    .data
+                    .iter()
+                    .zip(&y.data)
+                    .zip(&z.data)
+                    .map(|((&w, &y), &z)| w + y + z)
+                    .collect(),
+            }
+        }
+        "vadd2" => {
+            let (y, z) = (arg(env, call, 0)?, arg(env, call, 1)?);
+            same_len(y, z, &call.func)?;
+            map2(y, z, |y, z| y + z)
+        }
+        "vexp" => map1(arg(env, call, 0)?, f32::exp),
+        "vshift" => {
+            let alpha = s("alpha");
+            map1(arg(env, call, 0)?, |x| x + alpha)
+        }
+        "vclampr" => {
+            let (lo, hi) = (s("lo"), s("hi"));
+            // max/min instead of clamp: a user-supplied lo > hi must
+            // not panic the worker.
+            map1(arg(env, call, 0)?, |x| x.round().max(lo).min(hi))
+        }
+        "sdot" => {
+            let (x, y) = (arg(env, call, 0)?, arg(env, call, 1)?);
+            same_len(x, y, &call.func)?;
+            let r: f32 = x.data.iter().zip(&y.data).map(|(a, b)| a * b).sum();
+            Tensor::new(vec![1], vec![r])
+        }
+        "snrm2sq" => {
+            let x = arg(env, call, 0)?;
+            let r: f32 = x.data.iter().map(|a| a * a).sum();
+            Tensor::new(vec![1], vec![r])
+        }
+        "sasum" => {
+            let x = arg(env, call, 0)?;
+            let r: f32 = x.data.iter().map(|a| a.abs()).sum();
+            Tensor::new(vec![1], vec![r])
+        }
+        "mcopy" => arg(env, call, 0)?.clone(),
+        "madd" => {
+            let (a, b) = (arg(env, call, 0)?, arg(env, call, 1)?);
+            same_len(a, b, &call.func)?;
+            map2(a, b, |a, b| a + b)
+        }
+        "sger" => {
+            let (a, u, v) = (arg(env, call, 0)?, arg(env, call, 1)?, arg(env, call, 2)?);
+            let (m, n) = as_matrix(a, &call.func)?;
+            if u.data.len() != m || v.data.len() != n {
+                bail!("interp sger: rank-1 vectors don't match {m}x{n}");
+            }
+            let alpha = s("alpha");
+            let mut b = a.data.clone();
+            for i in 0..m {
+                for j in 0..n {
+                    b[i * n + j] += alpha * u.data[i] * v.data[j];
+                }
+            }
+            Tensor::matrix(m, n, b)
+        }
+        "sger2" => {
+            let a = arg(env, call, 0)?;
+            let (u1, v1) = (arg(env, call, 1)?, arg(env, call, 2)?);
+            let (u2, v2) = (arg(env, call, 3)?, arg(env, call, 4)?);
+            let (m, n) = as_matrix(a, &call.func)?;
+            if u1.data.len() != m || v1.data.len() != n || u2.data.len() != m || v2.data.len() != n
+            {
+                bail!("interp sger2: rank-1 vectors don't match {m}x{n}");
+            }
+            let mut b = a.data.clone();
+            for i in 0..m {
+                for j in 0..n {
+                    b[i * n + j] += u1.data[i] * v1.data[j] + u2.data[i] * v2.data[j];
+                }
+            }
+            Tensor::matrix(m, n, b)
+        }
+        "sgemv" => {
+            let (a, x) = (arg(env, call, 0)?, arg(env, call, 1)?);
+            let (m, n) = as_matrix(a, &call.func)?;
+            if x.data.len() != n {
+                bail!("interp sgemv: x has {} elements, A is {m}x{n}", x.data.len());
+            }
+            let alpha = s("alpha");
+            Tensor::vector(matvec(a, &x.data, m, n).into_iter().map(|v| alpha * v).collect())
+        }
+        "sgemvpy" => {
+            let (a, x, y) = (arg(env, call, 0)?, arg(env, call, 1)?, arg(env, call, 2)?);
+            let (m, n) = as_matrix(a, &call.func)?;
+            if x.data.len() != n || y.data.len() != m {
+                bail!("interp sgemvpy: vector sizes don't match {m}x{n}");
+            }
+            let (alpha, beta) = (s("alpha"), s("beta"));
+            let ax = matvec(a, &x.data, m, n);
+            Tensor::vector(
+                ax.iter()
+                    .zip(&y.data)
+                    .map(|(ax, y)| alpha * ax + beta * y)
+                    .collect(),
+            )
+        }
+        "sgemtv" => {
+            let (a, r) = (arg(env, call, 0)?, arg(env, call, 1)?);
+            let (m, n) = as_matrix(a, &call.func)?;
+            if r.data.len() != m {
+                bail!("interp sgemtv: r has {} elements, A is {m}x{n}", r.data.len());
+            }
+            let alpha = s("alpha");
+            Tensor::vector(
+                matvec_t(a, &r.data, m, n)
+                    .into_iter()
+                    .map(|v| alpha * v)
+                    .collect(),
+            )
+        }
+        "sgemtvpz" => {
+            let (a, y, z) = (arg(env, call, 0)?, arg(env, call, 1)?, arg(env, call, 2)?);
+            let (m, n) = as_matrix(a, &call.func)?;
+            if y.data.len() != m || z.data.len() != n {
+                bail!("interp sgemtvpz: vector sizes don't match {m}x{n}");
+            }
+            let beta = s("beta");
+            let aty = matvec_t(a, &y.data, m, n);
+            Tensor::vector(
+                aty.iter()
+                    .zip(&z.data)
+                    .map(|(a, z)| beta * a + z)
+                    .collect(),
+            )
+        }
+        other => bail!("interp: no interpreter for library function '{other}'"),
+    };
+    if call.outs.len() != 1 {
+        bail!("interp {}: expected exactly one output", call.func);
+    }
+    env.insert(call.outs[0].clone(), out);
+    Ok(())
+}
+
+/// A compiled, servable user pipeline. Everything execution needs is
+/// device-independent and derived deterministically from the source, so
+/// every fleet worker holding the same `(source, library)` pair builds
+/// a bit-identical `Pipeline`.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    pub name: String,
+    pub source: String,
+    /// Content address: [`fingerprint`] of `(source, Library::fingerprint)`.
+    pub fingerprint: u64,
+    pub program: Program,
+    /// Kernel grouping of the "fused" variant: each group is one
+    /// kernel's member calls (indices into `program.calls`) in
+    /// execution order.
+    pub fused_groups: Vec<Vec<usize>>,
+    /// Per-call interpreter templates, parallel to `program.calls`.
+    interp_calls: Vec<InterpCall>,
+}
+
+impl Pipeline {
+    /// The servable variants, mirroring the built-in catalog's labels.
+    pub const VARIANTS: [&'static str; 2] = ["fused", "cublas"];
+
+    /// Kernel groups of a variant: the structural fusion choice for
+    /// "fused", one call per kernel for "cublas".
+    pub fn groups(&self, variant: &str) -> Result<Vec<Vec<usize>>> {
+        match variant {
+            "fused" => Ok(self.fused_groups.clone()),
+            "cublas" => Ok((0..self.program.calls.len()).map(|i| vec![i]).collect()),
+            other => bail!(
+                "pipeline '{}' has no variant '{other}' (expected fused|cublas)",
+                self.name
+            ),
+        }
+    }
+
+    fn spec_dims(&self, decl: &VarDecl, m: usize, n: usize) -> Result<Vec<usize>> {
+        fn resolve(sym: &DimSym, m: usize, n: usize) -> Result<usize> {
+            match sym.0.as_str() {
+                "M" => Ok(m),
+                "N" => Ok(n),
+                other => bail!("pipeline dimension '{other}' is neither M nor N"),
+            }
+        }
+        match decl.ty {
+            VarType::Scalar => Ok(vec![1]),
+            _ => decl.dims.iter().map(|s| resolve(s, m, n)).collect(),
+        }
+    }
+
+    fn spec_of(&self, v: VarId, m: usize, n: usize) -> Result<TensorSpec> {
+        let decl = self.program.var(v);
+        Ok(TensorSpec {
+            name: decl.name.clone(),
+            dtype: DType::F32,
+            dims: self.spec_dims(decl, m, n)?,
+        })
+    }
+
+    /// Synthesize the catalog view of one variant at one problem size:
+    /// ordered stage entries (keyed like built-in artifacts) paired
+    /// with their interpreter stages. This is what the runtime resolves
+    /// instead of a manifest lookup — the dynamic half of the catalog.
+    pub fn stage_entries(
+        &self,
+        variant: &str,
+        m: usize,
+        n: usize,
+    ) -> Result<Vec<(ArtifactEntry, InterpStage)>> {
+        let groups = self.groups(variant)?;
+        let mut out = Vec::with_capacity(groups.len());
+        for (k, group) in groups.iter().enumerate() {
+            let in_group = |ci: usize| group.contains(&ci);
+            // Stage inputs: read before (or without) being produced in
+            // this group, first-use order. Outputs: produced here and
+            // either consumed by another stage or live-out.
+            let mut inputs: Vec<VarId> = Vec::new();
+            let mut outputs: Vec<VarId> = Vec::new();
+            for &ci in group {
+                let call = &self.program.calls[ci];
+                for &v in &call.args {
+                    let produced_here = self
+                        .program
+                        .producer(v)
+                        .map(|c| in_group(c.0))
+                        .unwrap_or(false);
+                    if !produced_here && !inputs.contains(&v) {
+                        inputs.push(v);
+                    }
+                }
+                for &v in &call.outs {
+                    let escapes = self.program.is_output(v)
+                        || self.program.consumers(v).iter().any(|c| !in_group(c.0));
+                    if escapes && !outputs.contains(&v) {
+                        outputs.push(v);
+                    }
+                }
+            }
+            let key = format!("{}.{variant}.m{m}n{n}.s{k}", self.name);
+            let entry = ArtifactEntry {
+                file: PathBuf::from(format!("{key}.interp")),
+                seq: self.name.clone(),
+                variant: variant.to_string(),
+                stage: k,
+                inputs: inputs
+                    .iter()
+                    .map(|&v| self.spec_of(v, m, n))
+                    .collect::<Result<_>>()?,
+                outputs: outputs
+                    .iter()
+                    .map(|&v| self.spec_of(v, m, n))
+                    .collect::<Result<_>>()?,
+                attrs: BTreeMap::from([
+                    ("m".to_string(), m.to_string()),
+                    ("n".to_string(), n.to_string()),
+                    ("backend".to_string(), "interp".to_string()),
+                ]),
+                m: Some(m),
+                n: Some(n),
+                key,
+            };
+            let stage = InterpStage {
+                calls: group.iter().map(|&ci| self.interp_calls[ci].clone()).collect(),
+            };
+            out.push((entry, stage));
+        }
+        Ok(out)
+    }
+
+    /// Deterministic synthetic inputs for the pipeline's free inputs at
+    /// one problem size — the demo/bench equivalent of the coordinator's
+    /// manifest-driven input synthesis.
+    pub fn synth_inputs(&self, m: usize, n: usize, seed: u64) -> Result<BTreeMap<String, Tensor>> {
+        let mut rng = Prng::new(seed);
+        let mut env = BTreeMap::new();
+        for &v in &self.program.inputs {
+            let decl = self.program.var(v);
+            let dims = self.spec_dims(decl, m, n)?;
+            let len = dims.iter().product::<usize>().max(1);
+            env.insert(decl.name.clone(), Tensor::new(dims, rng.f32_vec(len)));
+        }
+        Ok(env)
+    }
+
+    /// Run the whole pipeline offline (no runtime, no catalog): bind
+    /// inputs, execute every stage of `variant` in order. This is the
+    /// reference the serve path is property-tested bit-identical to.
+    pub fn run_offline(
+        &self,
+        variant: &str,
+        m: usize,
+        n: usize,
+        inputs: &BTreeMap<String, Tensor>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let mut env = inputs.clone();
+        for (_, stage) in self.stage_entries(variant, m, n)? {
+            stage.run(&mut env)?;
+        }
+        Ok(env)
+    }
+}
+
+/// The planning-side companion of a [`Pipeline`]: the dependency graph,
+/// pruned fusion space and CUBLAS-style baseline plan the coordinator
+/// needs to treat the pipeline exactly like a built-in sequence
+/// (plan choice, forecasting, sharded search).
+pub struct Compiled {
+    pub pipeline: Arc<Pipeline>,
+    pub graph: DepGraph,
+    pub space: Space,
+    pub baseline: SeqPlan,
+    /// The structurally-fused plan whose kernel boundaries define
+    /// [`Pipeline::fused_groups`].
+    pub fused: SeqPlan,
+}
+
+/// Compile script source end to end: lex/parse/typecheck → IR → fusion
+/// enumeration → space build → codegen of the fused and baseline plans.
+/// Pure function of `(name, src, lib)` — no device state — so all fleet
+/// workers produce interchangeable results.
+pub fn compile(name: &str, src: &str, lib: &Library) -> Result<Compiled, ScriptError> {
+    let program = compile_script(name, src, lib)?;
+    let graph = DepGraph::build(&program, lib);
+    let fusions = enumerate_fusions(&program, lib, &graph);
+    let space = Space::build(&program, lib, &graph, &fusions, &ImplAxes::minimal());
+    let baseline = autotune::baseline_plan(&program, lib);
+    // Structural fusion choice: the partition with the fewest kernels
+    // (ties → lowest index) whose every part has a surviving impl. The
+    // all-singleton partition always qualifies, so this cannot miss.
+    let pi = (0..space.partitions.len())
+        .filter(|&i| space.impls[i].iter().all(|cands| !cands.is_empty()))
+        .min_by_key(|&i| (space.partitions[i].parts.len(), i))
+        .ok_or_else(|| ScriptError::new(0, "no implementable fusion partition"))?;
+    let impls: Vec<FusionImpl> = space.impls[pi].iter().map(|c| c[0].fi.clone()).collect();
+    let fused = codegen::compile_seq(&program, lib, &impls, "fused");
+    let fused_groups: Vec<Vec<usize>> = fused
+        .kernels
+        .iter()
+        .map(|k| k.members.iter().map(|c| c.0).collect())
+        .collect();
+    let interp_calls = program
+        .calls
+        .iter()
+        .map(|c| InterpCall {
+            func: lib.get(c.func).name.clone(),
+            args: c.args.iter().map(|&v| program.var(v).name.clone()).collect(),
+            outs: c.outs.iter().map(|&v| program.var(v).name.clone()).collect(),
+            scalars: c.scalar_args.clone(),
+        })
+        .collect();
+    let pipeline = Arc::new(Pipeline {
+        name: name.to_string(),
+        source: src.to_string(),
+        fingerprint: fingerprint(src, lib),
+        program,
+        fused_groups,
+        interp_calls,
+    });
+    Ok(Compiled {
+        pipeline,
+        graph,
+        space,
+        baseline,
+        fused,
+    })
+}
+
+/// The two SNIPPETS exemplar pipelines, used by the demo, the smoke
+/// tests and `benches/pipelines.rs`.
+pub mod examples {
+    /// `z = exp((x + y) * 2)` — a three-call map chain that fuses to a
+    /// single kernel.
+    pub const ADD_MUL_EXP: &str = "
+        vector<N> x, y, s, t, z;
+        input x, y;
+        s = vadd2(x, y);
+        t = sscal(s, alpha=2.0);
+        z = vexp(t);
+        return z;
+    ";
+
+    /// `q = clamp(round(x / scale + zero_point), -128, 127)` — an int8
+    /// quantization chain (scale 4.0 → alpha 0.25, zero point 8).
+    pub const QUANTIZE_INT8: &str = "
+        vector<N> x, s, t, q;
+        input x;
+        s = sscal(x, alpha=0.25);
+        t = vshift(s, alpha=8.0);
+        q = vclampr(t, lo=-128.0, hi=127.0);
+        return q;
+    ";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lib() -> Library {
+        Library::standard()
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_addressed() {
+        let l = lib();
+        let a = fingerprint(examples::ADD_MUL_EXP, &l);
+        let b = fingerprint(examples::ADD_MUL_EXP, &l);
+        assert_eq!(a, b);
+        assert_ne!(a, fingerprint(examples::QUANTIZE_INT8, &l));
+        // library content participates in the address
+        let mut small = Library::new();
+        small.register(crate::library::scopy());
+        small.register(crate::library::vadd2());
+        small.register(crate::library::sscal());
+        small.register(crate::library::vexp());
+        assert_ne!(a, fingerprint(examples::ADD_MUL_EXP, &small));
+    }
+
+    #[test]
+    fn add_mul_exp_fuses_to_one_kernel() {
+        let l = lib();
+        let c = compile("add_mul_exp", examples::ADD_MUL_EXP, &l).unwrap();
+        assert_eq!(c.pipeline.program.calls.len(), 3);
+        assert_eq!(
+            c.pipeline.fused_groups.len(),
+            1,
+            "three map calls must fuse into one kernel"
+        );
+        assert_eq!(c.fused.kernels.len(), 1);
+        assert_eq!(c.baseline.kernels.len(), 3);
+        assert_eq!(c.baseline.variant, "cublas");
+    }
+
+    #[test]
+    fn interpreter_matches_closed_form() {
+        let l = lib();
+        let c = compile("add_mul_exp", examples::ADD_MUL_EXP, &l).unwrap();
+        let (m, n) = (32, 64);
+        let inputs = c.pipeline.synth_inputs(m, n, 7).unwrap();
+        let env = c.pipeline.run_offline("fused", m, n, &inputs).unwrap();
+        let (x, y) = (&inputs["x"], &inputs["y"]);
+        for i in 0..n {
+            let want = ((x.data[i] + y.data[i]) * 2.0).exp();
+            assert!((env["z"].data[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quantize_int8_saturates() {
+        let l = lib();
+        let c = compile("quantize_int8", examples::QUANTIZE_INT8, &l).unwrap();
+        let mut inputs = BTreeMap::new();
+        inputs.insert(
+            "x".to_string(),
+            Tensor::vector(vec![0.0, 4.0, -4.0, 1000.0, -1000.0]),
+        );
+        let env = c.pipeline.run_offline("fused", 32, 5, &inputs).unwrap();
+        // x/4 + 8, rounded, clamped to [-128, 127]
+        assert_eq!(env["q"].data, vec![8.0, 9.0, 7.0, 127.0, -128.0]);
+    }
+
+    #[test]
+    fn fused_and_cublas_variants_agree_bitwise() {
+        let l = lib();
+        for (name, src) in [
+            ("add_mul_exp", examples::ADD_MUL_EXP),
+            ("quantize_int8", examples::QUANTIZE_INT8),
+        ] {
+            let c = compile(name, src, &l).unwrap();
+            let (m, n) = (32, 96);
+            let inputs = c.pipeline.synth_inputs(m, n, 3).unwrap();
+            let f = c.pipeline.run_offline("fused", m, n, &inputs).unwrap();
+            let u = c.pipeline.run_offline("cublas", m, n, &inputs).unwrap();
+            for &v in &c.pipeline.program.outputs {
+                let name = &c.pipeline.program.var(v).name;
+                let (a, b) = (&f[name], &u[name]);
+                assert_eq!(a.dims, b.dims);
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "output '{name}' differs");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stage_entries_chain_outputs_to_inputs() {
+        let l = lib();
+        let c = compile("quantize_int8", examples::QUANTIZE_INT8, &l).unwrap();
+        let stages = c.pipeline.stage_entries("cublas", 32, 64).unwrap();
+        assert_eq!(stages.len(), 3);
+        // each unfused stage's output feeds the next stage's input
+        for w in stages.windows(2) {
+            let produced = &w[0].0.outputs[0].name;
+            assert!(w[1].0.inputs.iter().any(|i| &i.name == produced));
+        }
+        // keys follow the artifact naming scheme
+        assert_eq!(stages[0].0.key, "quantize_int8.cublas.m32n64.s0");
+        assert_eq!(stages[0].0.seq, "quantize_int8");
+        // fused collapses to a single stage with only free inputs
+        let fused = c.pipeline.stage_entries("fused", 32, 64).unwrap();
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].0.inputs.len(), 1);
+        assert_eq!(fused[0].0.inputs[0].name, "x");
+        assert_eq!(fused[0].0.outputs[0].name, "q");
+        assert_eq!(fused[0].0.inputs[0].dims, vec![64]);
+    }
+
+    #[test]
+    fn unknown_variant_is_an_error() {
+        let l = lib();
+        let c = compile("add_mul_exp", examples::ADD_MUL_EXP, &l).unwrap();
+        let err = c.pipeline.stage_entries("turbo", 32, 64).unwrap_err();
+        assert!(err.to_string().contains("no variant"), "{err}");
+    }
+
+    #[test]
+    fn blas2_pipeline_compiles_and_runs() {
+        let l = lib();
+        // a BLAS-2 call exercising the matrix interpreter path
+        let src = "
+            matrix<MxN> A; vector<M> q; vector<N> x;
+            input A, x;
+            q = sgemv(A, x, alpha=2.0);
+            return q;
+        ";
+        let c = compile("mv2", src, &l).unwrap();
+        let (m, n) = (4, 3);
+        let mut inputs = BTreeMap::new();
+        inputs.insert(
+            "A".to_string(),
+            Tensor::matrix(m, n, vec![1., 0., 0., 0., 1., 0., 0., 0., 1., 1., 1., 1.]),
+        );
+        inputs.insert("x".to_string(), Tensor::vector(vec![1.0, 2.0, 3.0]));
+        let env = c.pipeline.run_offline("fused", m, n, &inputs).unwrap();
+        assert_eq!(env["q"].data, vec![2.0, 4.0, 6.0, 12.0]);
+    }
+
+    #[test]
+    fn invalid_script_reports_typed_error() {
+        let l = lib();
+        let err = compile("bad", "vector<N> x;\ninput x;\ny = nosuch(x);\nreturn y;", &l)
+            .unwrap_err();
+        assert!(err.msg.contains("unknown library function"), "{err}");
+        assert_eq!(err.line, 3);
+    }
+}

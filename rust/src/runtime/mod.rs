@@ -38,6 +38,7 @@
 
 pub mod refcheck;
 
+use crate::pipelines::{InterpStage, Pipeline};
 use crate::util::manifest::{ArtifactEntry, Manifest, TensorSpec};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap};
@@ -285,6 +286,15 @@ impl SlotEnv {
     }
 }
 
+/// The executable form of one resolved stage: an AOT artifact compiled
+/// through PJRT (built-in catalog entries), or a pure-Rust interpreter
+/// stage (dynamically registered pipelines — the offline stub cannot
+/// execute HLO, and the interpreter keeps the same kernel boundaries).
+pub enum StageExe {
+    Pjrt(Arc<xla::PjRtLoadedExecutable>),
+    Interp(Arc<InterpStage>),
+}
+
 /// A fully resolved execution plan: the slot plan plus the pinned
 /// per-stage executables. Once a request holds one of these (behind an
 /// `Arc` from the resolve cache), executing it touches no lock, no
@@ -292,7 +302,7 @@ impl SlotEnv {
 pub struct ResolvedSeq {
     plan: SlotPlan,
     /// Pinned executables, parallel to `plan.stages()`.
-    exes: Vec<Arc<xla::PjRtLoadedExecutable>>,
+    exes: Vec<StageExe>,
 }
 
 impl ResolvedSeq {
@@ -342,6 +352,11 @@ pub struct Runtime {
     exe_cache: RwLock<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// (seq, variant, m, n) → resolved plan, same read-mostly regime.
     plan_cache: RwLock<HashMap<(String, String, usize, usize), Arc<ResolvedSeq>>>,
+    /// The dynamic half of the catalog: pipelines registered at runtime
+    /// ([`Runtime::register_pipeline`]). Resolve consults it when the
+    /// parsed manifest has no entries for a sequence, so registered
+    /// pipelines flow through the same plan/resolve caches as built-ins.
+    pipelines: RwLock<BTreeMap<String, Arc<Pipeline>>>,
     stats: RuntimeStats,
 }
 
@@ -369,8 +384,34 @@ impl Runtime {
             manifest,
             exe_cache: RwLock::new(HashMap::new()),
             plan_cache: RwLock::new(HashMap::new()),
+            pipelines: RwLock::new(BTreeMap::new()),
             stats: RuntimeStats::default(),
         })
+    }
+
+    /// Register (or replace) a dynamic pipeline. Stale resolved plans
+    /// for the name are purged so a re-registration with different
+    /// content can never serve the old stage list.
+    pub fn register_pipeline(&self, p: Arc<Pipeline>) {
+        self.plan_cache.write().unwrap().retain(|k, _| k.0 != p.name);
+        self.pipelines.write().unwrap().insert(p.name.clone(), p);
+    }
+
+    /// Remove a dynamic pipeline and its resolved plans. Returns whether
+    /// the name was registered.
+    pub fn unregister_pipeline(&self, name: &str) -> bool {
+        self.plan_cache.write().unwrap().retain(|k, _| k.0 != name);
+        self.pipelines.write().unwrap().remove(name).is_some()
+    }
+
+    /// Look up a registered pipeline by name.
+    pub fn pipeline(&self, name: &str) -> Option<Arc<Pipeline>> {
+        self.pipelines.read().unwrap().get(name).cloned()
+    }
+
+    /// Names of all registered pipelines.
+    pub fn pipeline_names(&self) -> Vec<String> {
+        self.pipelines.read().unwrap().keys().cloned().collect()
     }
 
     pub fn platform(&self) -> String {
@@ -443,17 +484,32 @@ impl Runtime {
             .into_iter()
             .cloned()
             .collect();
-        if entries.is_empty() {
-            bail!(
-                "no artifacts for {seq}.{variant} at m{m} n{n}; available: {:?}",
-                self.sizes_of(seq, variant)
-            );
-        }
-        let plan = SlotPlan::build(seq, variant, m, n, entries);
-        let mut exes = Vec::with_capacity(plan.stage_count());
-        for st in plan.stages() {
-            exes.push(self.executable(&st.entry.key)?);
-        }
+        let (plan, exes) = if entries.is_empty() {
+            // Not in the parsed manifest — try the dynamic catalog. A
+            // registered pipeline synthesizes its stage entries for any
+            // size, executed on the interpreter backend.
+            let pipeline = self.pipelines.read().unwrap().get(seq).cloned();
+            let Some(p) = pipeline else {
+                bail!(
+                    "no artifacts for {seq}.{variant} at m{m} n{n}; available: {:?}",
+                    self.sizes_of(seq, variant)
+                );
+            };
+            let (entries, stages): (Vec<_>, Vec<_>) =
+                p.stage_entries(variant, m, n)?.into_iter().unzip();
+            let exes = stages
+                .into_iter()
+                .map(|s: InterpStage| StageExe::Interp(Arc::new(s)))
+                .collect();
+            (SlotPlan::build(seq, variant, m, n, entries), exes)
+        } else {
+            let plan = SlotPlan::build(seq, variant, m, n, entries);
+            let mut exes = Vec::with_capacity(plan.stage_count());
+            for st in plan.stages() {
+                exes.push(StageExe::Pjrt(self.executable(&st.entry.key)?));
+            }
+            (plan, exes)
+        };
         let resolved = Arc::new(ResolvedSeq { plan, exes });
         let mut cache = self.plan_cache.write().unwrap();
         Ok(cache.entry(key).or_insert(resolved).clone())
@@ -517,6 +573,54 @@ impl Runtime {
         Ok(seconds)
     }
 
+    /// Execute one interpreter-backed stage: materialize the stage's
+    /// named environment from the slots, run the fused call group, and
+    /// write the declared outputs back by slot index. Same input/output
+    /// dim validation as the PJRT path.
+    fn run_stage_interp(
+        &self,
+        st: &StageSlots,
+        stage: &InterpStage,
+        env: &mut SlotEnv,
+    ) -> Result<f64> {
+        let entry = &st.entry;
+        let mut locals: BTreeMap<String, Tensor> = BTreeMap::new();
+        for (spec, &slot) in entry.inputs.iter().zip(&st.input_slots) {
+            let t = env
+                .get(slot)
+                .ok_or_else(|| anyhow!("stage {} needs '{}' (not in env)", entry.key, spec.name))?;
+            if t.dims != spec.dims {
+                bail!(
+                    "stage {}: '{}' has dims {:?}, artifact expects {:?}",
+                    entry.key,
+                    spec.name,
+                    t.dims,
+                    spec.dims
+                );
+            }
+            locals.insert(spec.name.clone(), t.clone());
+        }
+        let t0 = Instant::now();
+        stage.run(&mut locals)?;
+        let seconds = t0.elapsed().as_secs_f64();
+        for (spec, &slot) in entry.outputs.iter().zip(&st.output_slots) {
+            let t = locals.remove(&spec.name).ok_or_else(|| {
+                anyhow!("stage {}: interpreter produced no '{}'", entry.key, spec.name)
+            })?;
+            if t.dims != spec.dims {
+                bail!(
+                    "stage {}: interpreter output '{}' has dims {:?}, expected {:?}",
+                    entry.key,
+                    spec.name,
+                    t.dims,
+                    spec.dims
+                );
+            }
+            env.set(slot, t);
+        }
+        Ok(seconds)
+    }
+
     /// Execute every stage of a resolved plan over a bound environment
     /// and materialize the result. The per-request hot path: slot reads,
     /// slot writes, pinned executables — no locks, scans or name maps.
@@ -524,7 +628,10 @@ impl Runtime {
         let mut stats = Vec::with_capacity(r.plan.stage_count());
         let t0 = Instant::now();
         for (st, exe) in r.plan.stages().iter().zip(&r.exes) {
-            let secs = self.run_stage_slots(st, exe, &mut env)?;
+            let secs = match exe {
+                StageExe::Pjrt(e) => self.run_stage_slots(st, e, &mut env)?,
+                StageExe::Interp(s) => self.run_stage_interp(st, s, &mut env)?,
+            };
             stats.push(StageStats {
                 key: st.entry.key.clone(),
                 seconds: secs,
@@ -710,5 +817,75 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "tensor '{name}' differs");
             }
         }
+    }
+
+    // ---- dynamic pipeline catalog (interpreter backend; no artifacts
+    // or PJRT compilation involved, so these always run) ----
+
+    fn empty_runtime() -> Runtime {
+        Runtime::with_manifest(Arc::new(Manifest::default())).expect("runtime")
+    }
+
+    fn registered(rt: &Runtime, name: &str, src: &str) -> Arc<crate::pipelines::Pipeline> {
+        let lib = crate::library::Library::standard();
+        let c = crate::pipelines::compile(name, src, &lib).expect("compile");
+        rt.register_pipeline(c.pipeline.clone());
+        c.pipeline
+    }
+
+    #[test]
+    fn registered_pipeline_executes_through_run_seq() {
+        let rt = empty_runtime();
+        let p = registered(&rt, "amx", crate::pipelines::examples::ADD_MUL_EXP);
+        let (m, n) = (32, 64);
+        let inputs = p.synth_inputs(m, n, 11).unwrap();
+        let got = rt.run_seq("amx", "fused", m, n, &inputs).unwrap();
+        let want = p.run_offline("fused", m, n, &inputs).unwrap();
+        assert_eq!(got.variant, "fused");
+        for (x, y) in got.env["z"].data.iter().zip(&want["z"].data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn pipeline_repeat_requests_hit_the_resolve_cache() {
+        let rt = empty_runtime();
+        let p = registered(&rt, "q8", crate::pipelines::examples::QUANTIZE_INT8);
+        let (m, n) = (32, 128);
+        let inputs = p.synth_inputs(m, n, 5).unwrap();
+        let a = rt.run_seq("q8", "fused", m, n, &inputs).unwrap();
+        let c0 = rt.counters();
+        assert_eq!(c0.resolve_misses, 1);
+        assert_eq!(c0.resolve_hits, 0);
+        let b = rt.run_seq("q8", "fused", m, n, &inputs).unwrap();
+        let c1 = rt.counters();
+        assert_eq!(c1.resolve_misses, 1, "second request must not re-resolve");
+        assert_eq!(c1.resolve_hits, 1);
+        for (x, y) in a.env["q"].data.iter().zip(&b.env["q"].data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn unregister_purges_resolved_plans() {
+        let rt = empty_runtime();
+        let p = registered(&rt, "amx", crate::pipelines::examples::ADD_MUL_EXP);
+        let (m, n) = (32, 64);
+        let inputs = p.synth_inputs(m, n, 2).unwrap();
+        rt.run_seq("amx", "fused", m, n, &inputs).unwrap();
+        assert!(rt.unregister_pipeline("amx"));
+        assert!(!rt.unregister_pipeline("amx"), "second remove is a no-op");
+        let err = rt.run_seq("amx", "fused", m, n, &inputs).unwrap_err().to_string();
+        assert!(err.contains("no artifacts"), "{err}");
+    }
+
+    #[test]
+    fn pipeline_unknown_size_mismatch_reports() {
+        let rt = empty_runtime();
+        let p = registered(&rt, "amx", crate::pipelines::examples::ADD_MUL_EXP);
+        // inputs synthesized for a different n than requested → dim check
+        let inputs = p.synth_inputs(32, 64, 2).unwrap();
+        let err = rt.run_seq("amx", "fused", 32, 256, &inputs).unwrap_err().to_string();
+        assert!(err.contains("dims"), "{err}");
     }
 }

@@ -1,0 +1,172 @@
+//! Dynamic pipeline registration, exercised through the public API
+//! only: a client-submitted script becomes a first-class servable
+//! sequence — registered fleet-wide, routed, plan-cached and executed —
+//! and the served bits are identical to the offline reference
+//! interpretation of the same compiled pipeline.
+//!
+//! Everything here runs over a stub catalog with no built artifacts:
+//! built-in execution fails at the offline stub backend, but registered
+//! pipelines execute for real through their interpreter-backed resolved
+//! plans, so the full register → route → batch → execute path is
+//! testable offline.
+
+use fusebla::bench_support::stub_catalog;
+use fusebla::coordinator::Context;
+use fusebla::pipelines;
+use fusebla::util::proptest::check;
+use fusebla::{Engine, EngineConfig, ServeError, SubmitRequest};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn engine_over_stub(tag: &str, cfg: EngineConfig) -> (std::path::PathBuf, Engine) {
+    let dir = stub_catalog(&format!("pipelines_{tag}"), &["waxpby", "vadd"]);
+    let engine = Engine::with_config(Arc::new(Context::new()), &dir, cfg).unwrap();
+    (dir, engine)
+}
+
+/// The acceptance-criteria property: for both exemplar pipelines,
+/// random sizes and seeds, a registered pipeline served through the
+/// fleet produces bit-identical output tensors to the offline
+/// `pipelines::compile` + `run_offline` reference on the same explicit
+/// inputs — and the serve path reports which variant it picked, so the
+/// reference runs the same one.
+#[test]
+fn served_pipeline_is_bit_identical_to_offline_reference() {
+    let cfg = EngineConfig {
+        batch_window: Duration::from_millis(2),
+        ..EngineConfig::default()
+    };
+    let (dir, engine) = engine_over_stub("prop", cfg);
+    let client = engine.client();
+    client.register_pipeline("amx", pipelines::examples::ADD_MUL_EXP).unwrap();
+    client.register_pipeline("q8", pipelines::examples::QUANTIZE_INT8).unwrap();
+    // independent offline compile — shares nothing with the engine
+    let ctx = Context::new();
+    let amx = pipelines::compile("amx", pipelines::examples::ADD_MUL_EXP, &ctx.lib).unwrap();
+    let q8 = pipelines::compile("q8", pipelines::examples::QUANTIZE_INT8, &ctx.lib).unwrap();
+    check("served pipeline output matches the offline reference bitwise", 10, |g| {
+        let (name, c) = if g.bool() { ("amx", &amx) } else { ("q8", &q8) };
+        let n = *g.choose(&[64usize, 256, 1024]);
+        let seed = g.usize(0, 1 << 16) as u64;
+        let inputs = c.pipeline.synth_inputs(32, n, seed).unwrap();
+        let t = client
+            .submit(SubmitRequest::new(name, 32, n).inputs(inputs.clone()))
+            .unwrap();
+        let res = t.wait().expect("registered pipelines execute on the stub backend");
+        let offline = c.pipeline.run_offline(&res.variant, 32, n, &inputs).unwrap();
+        for &v in &c.pipeline.program.outputs {
+            let out = &c.pipeline.program.var(v).name;
+            assert_eq!(
+                res.env.get(out),
+                offline.get(out),
+                "{name} n={n} seed={seed}: served '{out}' must match offline bits"
+            );
+        }
+    });
+    let m = engine.shutdown();
+    assert_eq!(m.failures, 0, "every served pipeline execution succeeded");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Second execution of the same key is a plan-cache hit *and* a
+/// resolve-cache hit: registered pipelines ride the same caches as
+/// built-ins, counter-asserted.
+#[test]
+fn warm_pipeline_execute_hits_plan_and_resolve_caches() {
+    let (dir, engine) = engine_over_stub("warm", EngineConfig::default());
+    let client = engine.client();
+    client.register_pipeline("amx", pipelines::examples::ADD_MUL_EXP).unwrap();
+    for seed in [1u64, 2] {
+        let t = client.submit(SubmitRequest::new("amx", 32, 256).synth(seed)).unwrap();
+        let res = t.wait().expect("pipeline executes");
+        assert!(res.env.contains_key("z"));
+    }
+    let m = engine.shutdown();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.failures, 0);
+    assert_eq!(m.plan_cache_misses, 1, "first execute plans");
+    assert_eq!(m.plan_cache_hits, 1, "second execute reuses the plan");
+    assert_eq!(m.resolve_misses, 1, "first execute resolves and caches");
+    assert_eq!(m.resolve_hits, 1, "second execute is resolve-once");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Registration quota and the typed rejection surface: invalid scripts
+/// report their line, duplicates and built-in collisions are refused,
+/// over-quota registration is refused — and none of it perturbs the
+/// already-registered pipeline or the built-in serve path.
+#[test]
+fn typed_rejections_leave_serving_state_untouched() {
+    let cfg = EngineConfig {
+        pipeline_quota: 1,
+        ..EngineConfig::default()
+    };
+    let (dir, engine) = engine_over_stub("typed", cfg);
+    let client = engine.client();
+    let fp = client.register_pipeline("amx", pipelines::examples::ADD_MUL_EXP).unwrap();
+
+    // invalid script: typed, with the offending line
+    let bad = "vector<N> x;\ninput x;\ny = nosuch(x);\nreturn y;";
+    let err = client.register_pipeline("bad", bad).err().expect("invalid script");
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::InvalidScript { line, msg }) => {
+            assert_eq!(*line, 3, "the bad call is on line 3");
+            assert!(msg.contains("unknown library function"), "{msg}");
+        }
+        other => panic!("expected InvalidScript, got {other:?}"),
+    }
+    // same name, different source: duplicate
+    let err = client
+        .register_pipeline("amx", pipelines::examples::QUANTIZE_INT8)
+        .err()
+        .expect("name taken");
+    assert!(matches!(
+        err.downcast_ref::<ServeError>(),
+        Some(ServeError::DuplicatePipeline { .. })
+    ));
+    // identical source: idempotent, same fingerprint, not an error
+    assert_eq!(
+        client.register_pipeline("amx", pipelines::examples::ADD_MUL_EXP).unwrap(),
+        fp
+    );
+    // built-in names are never shadowable
+    let err = client
+        .register_pipeline("waxpby", pipelines::examples::ADD_MUL_EXP)
+        .err()
+        .expect("built-in collision");
+    assert!(matches!(
+        err.downcast_ref::<ServeError>(),
+        Some(ServeError::DuplicatePipeline { .. })
+    ));
+    // quota of 1 is spent on 'amx'
+    let err = client
+        .register_pipeline("q8", pipelines::examples::QUANTIZE_INT8)
+        .err()
+        .expect("over quota");
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::PipelineQuota { count, quota }) => assert_eq!((*count, *quota), (1, 1)),
+        other => panic!("expected PipelineQuota, got {other:?}"),
+    }
+
+    // nothing above perturbed serving: queues are idle, the registered
+    // pipeline still executes, and built-ins still route and deliver
+    assert_eq!(client.queue_depths().iter().sum::<u64>(), 0);
+    let t = client.submit(SubmitRequest::new("amx", 32, 256).synth(3)).unwrap();
+    assert!(t.wait().is_ok(), "registered pipeline unaffected by rejections");
+    let t = client.submit(SubmitRequest::new("waxpby", 32, 65536).synth(3)).unwrap();
+    let e = t.wait().err().expect("stub backend fails builtin execution");
+    assert!(e.downcast_ref::<ServeError>().is_none(), "delivered, not shed: {e:#}");
+
+    // unregistration frees the name and the quota slot
+    assert!(client.unregister_pipeline("amx"));
+    assert!(!client.unregister_pipeline("amx"), "second removal is a no-op");
+    let t = client.submit(SubmitRequest::new("amx", 32, 256).synth(4)).unwrap();
+    assert!(t.wait().is_err(), "unregistered name no longer serves");
+    client
+        .register_pipeline("q8", pipelines::examples::QUANTIZE_INT8)
+        .expect("quota slot freed by unregistration");
+    let m = engine.shutdown();
+    assert!(m.pipeline_registrations >= 2);
+    assert!(m.pipeline_rejections >= 1, "the worker-side quota rejection counted");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,106 @@
+//! Script front-end error paths: lexer, parser and typecheck failures
+//! must report the offending line and never panic — including on
+//! arbitrarily mutated input, which the fuzz-style property at the
+//! bottom drives through the whole front end.
+
+use fusebla::coordinator::Context;
+use fusebla::pipelines;
+use fusebla::script::compile_script;
+use fusebla::util::proptest::check;
+
+fn err_of(src: &str) -> fusebla::script::ScriptError {
+    let ctx = Context::new();
+    compile_script("t", src, &ctx.lib).expect_err("script must be rejected")
+}
+
+#[test]
+fn lexer_errors_carry_the_offending_line() {
+    // stray character on line 3
+    let e = err_of("vector<N> x;\ninput x;\ny @ sscal(x);\nreturn y;");
+    assert_eq!(e.line, 3);
+    assert!(e.msg.contains("unexpected character '@'"), "{e}");
+    // malformed number on line 2
+    let e = err_of("vector<N> x, y;\ny = sscal(x, alpha=1.2.3);\nreturn y;");
+    assert_eq!(e.line, 2);
+    assert!(e.msg.contains("bad number"), "{e}");
+    // the Display form is the serve-facing message shape
+    assert!(e.to_string().starts_with("script line 2: "), "{e}");
+}
+
+#[test]
+fn parser_errors_carry_the_offending_line() {
+    // unterminated call on line 2
+    let e = err_of("vector<N> x, y;\ny = sscal(x\nreturn y;");
+    assert_eq!(e.line, 2, "{e}");
+    assert!(e.msg.contains("expected"), "{e}");
+    // structurally empty scripts are whole-script errors (line 0)
+    let e = err_of("vector<N> x;\ninput x;");
+    assert_eq!((e.line, e.msg.as_str()), (0, "script has no calls"));
+    let e = err_of("vector<N> x, y;\ninput x;\ny = sscal(x, alpha=2.0);");
+    assert_eq!((e.line, e.msg.as_str()), (0, "script has no return statement"));
+}
+
+#[test]
+fn typecheck_errors_carry_the_offending_line() {
+    let e = err_of("vector<N> x, y;\ninput x;\ny = nosuch(x);\nreturn y;");
+    assert_eq!(e.line, 3);
+    assert!(e.msg.contains("unknown library function 'nosuch'"), "{e}");
+    let e = err_of("vector<N> x;\nvector<N> x;\ninput x;\nx = vexp(x);\nreturn x;");
+    assert_eq!(e.line, 2);
+    assert!(e.msg.contains("declared twice"), "{e}");
+    let e = err_of("vector<N> x, y;\ninput z;\ny = vexp(x);\nreturn y;");
+    assert_eq!(e.line, 2);
+    assert!(e.msg.contains("undeclared"), "{e}");
+}
+
+/// Fuzz-style property over mutated valid scripts: whatever bytes the
+/// front end is fed, `compile_script` returns — `Ok` or a `ScriptError`
+/// whose line number is within the script — and never panics. A panic
+/// anywhere in lexing/parsing/typechecking fails this test directly.
+#[test]
+fn mutated_scripts_never_panic_and_report_in_range_lines() {
+    let ctx = Context::new();
+    let seeds = [
+        pipelines::examples::ADD_MUL_EXP,
+        pipelines::examples::QUANTIZE_INT8,
+        "matrix<MxN> A;\nvector<N> p, s;\nvector<M> q, r;\ninput A, p, r;\n\
+         q = sgemv(A, p);\ns = sgemtv(A, r);\nreturn q, s;",
+    ];
+    // characters chosen to hit every lexer class plus structural tokens
+    let alphabet: Vec<char> = "abz_109.;,=<>()#@$ \n\te-".chars().collect();
+    check("mutated scripts fail typed, with in-range lines", 400, |g| {
+        let mut src: Vec<char> = g.choose(&seeds).chars().collect();
+        for _ in 0..g.usize(1, 4) {
+            let c = *g.choose(&alphabet);
+            // g.usize bounds are inclusive
+            match g.usize(0, 3) {
+                0 if !src.is_empty() => {
+                    let i = g.usize(0, src.len() - 1);
+                    src[i] = c; // replace
+                }
+                1 if !src.is_empty() => {
+                    let i = g.usize(0, src.len() - 1);
+                    src.remove(i); // delete
+                }
+                _ => {
+                    let i = g.usize(0, src.len());
+                    src.insert(i, c); // insert
+                }
+            }
+        }
+        let src: String = src.into_iter().collect();
+        if let Err(e) = compile_script("fuzz", &src, &ctx.lib) {
+            // newline count + 1, not lines(): an EOF-adjacent error
+            // after a trailing newline legitimately reports the final
+            // (empty) line
+            let lines = src.chars().filter(|&c| c == '\n').count() + 1;
+            assert!(
+                e.line <= lines,
+                "line {} out of range for a {}-line script: {} — source:\n{src}",
+                e.line,
+                lines,
+                e.msg
+            );
+        }
+    });
+}
