@@ -1,0 +1,207 @@
+//! Chaos study — serving throughput and tail latency with the fault
+//! injector disabled vs. a seeded plan that kills every lane at least
+//! once mid-run.
+//!
+//! Fully offline-safe by construction (same footing as `slo.rs`): the
+//! fleet starts over a stub catalog, so execution fails at the offline
+//! stub backend, but everything this bench measures — supervision,
+//! worker respawn, failover, breaker re-admission and the submit→reply
+//! latency histogram — runs for real. The numbers are *control-plane*
+//! rates: terminal outcomes per second of wall clock, including the
+//! time the supervisor spends rebuilding killed workers.
+//!
+//! Both modes run the identical seeded schedule: a pinned trigger burst
+//! per lane (in chaos mode those turns carry the scripted kills, so
+//! each lane provably dies and respawns) followed by a seeded poisson
+//! open loop. The acceptance bar from the fault-tolerance work is that
+//! chaos-mode throughput stays within 2x of fault-free; the ratio is
+//! asserted and recorded in `BENCH_chaos.json`.
+//!
+//! `cargo bench --bench chaos`
+
+use fusebla::bench_support::report::update_bench_json;
+use fusebla::bench_support::stub_catalog;
+use fusebla::coordinator::traffic;
+use fusebla::sim::DeviceModel;
+use fusebla::util::Json;
+use fusebla::{DeviceRegistry, Engine, EngineConfig, Fault, FaultPlan, SubmitRequest, Ticket};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const BENCH_CHAOS_JSON: &str = "BENCH_chaos.json";
+const RATE: f64 = 800.0;
+const HORIZON_MS: u64 = 600;
+/// Pinned requests sent to each lane before the open loop; in chaos
+/// mode these guarantee every lane takes the turns its scripted kills
+/// target, independent of how the router spreads the open-loop load.
+const TRIGGERS_PER_LANE: u64 = 3;
+
+struct ModeResult {
+    throughput_req_s: f64,
+    p99_ms: f64,
+    submitted: u64,
+    worker_restarts: u64,
+    failovers: u64,
+    worker_lost: u64,
+    sheds: u64,
+}
+
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fusebla_bench_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_mode(dir: &Path, cal: &Path, plan: FaultPlan, label: &str) -> ModeResult {
+    let registry = Arc::new(
+        DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], cal)
+            .expect("device registry"),
+    );
+    let n_lanes = 2u64;
+    let cfg = EngineConfig {
+        batch_window: Duration::from_millis(2),
+        max_batch: 256,
+        retry_budget: 3,
+        fault_plan: plan,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start_fleet(registry, dir, cfg).expect("stub fleet");
+    let client = engine.client();
+    let names: Vec<String> = client.devices().iter().map(|d| d.name().to_string()).collect();
+
+    let t0 = Instant::now();
+    // trigger burst: drive each lane through its first few turns so the
+    // scripted kills land inside the measured window
+    let mut tickets = Vec::new();
+    for name in &names {
+        for i in 0..TRIGGERS_PER_LANE {
+            tickets.push(
+                client
+                    .submit(SubmitRequest::new("waxpby", 32, 65536).synth(i).pin(name))
+                    .expect("pinned trigger admits"),
+            );
+        }
+    }
+    let triggers = tickets.len() as u64;
+    let _ = tickets.into_iter().map(Ticket::wait).count();
+
+    let spec = traffic::TrafficSpec {
+        scenario: traffic::Scenario::Poisson,
+        seed: 42,
+        rate: RATE,
+        horizon: Duration::from_millis(HORIZON_MS),
+        keys: vec![
+            ("waxpby".into(), 32, 65536),
+            ("vadd".into(), 32, 65536),
+            ("sscal".into(), 32, 65536),
+            ("axpydot".into(), 32, 65536),
+        ],
+    };
+    let rep = traffic::run_open_loop(&client, &spec, &traffic::OpenLoopOptions::default());
+    let dt = t0.elapsed().as_secs_f64();
+
+    let fleet = engine.shutdown_fleet();
+    assert!(
+        fleet.lost.is_empty(),
+        "recoverable kills must lose no lane: {:?}",
+        fleet.lost
+    );
+    let m = fleet.aggregate();
+    // every submission reaches exactly one terminal outcome
+    assert_eq!(
+        rep.completed + rep.failed + rep.sheds() + rep.other_errors,
+        rep.submitted,
+        "lost tickets in {label} mode: {rep:?}"
+    );
+    let submitted = triggers + rep.submitted;
+    let result = ModeResult {
+        throughput_req_s: submitted as f64 / dt,
+        p99_ms: m.latency.quantile(0.99).map_or(f64::INFINITY, |s| s * 1e3),
+        submitted,
+        worker_restarts: m.worker_restarts,
+        failovers: m.failovers,
+        worker_lost: m.worker_lost_sheds,
+        sheds: rep.sheds(),
+    };
+    println!(
+        "{label:8}: {} submitted in {:.3} s → {:.0} req/s terminal, p99 {:.3} ms, \
+         {} restart(s), {} failover(s), {} worker-lost shed(s)",
+        result.submitted,
+        dt,
+        result.throughput_req_s,
+        result.p99_ms,
+        result.worker_restarts,
+        result.failovers,
+        result.worker_lost
+    );
+    if label == "chaos" {
+        assert!(
+            result.worker_restarts >= n_lanes,
+            "chaos plan must kill and respawn every lane: {} restart(s)",
+            result.worker_restarts
+        );
+    } else {
+        assert_eq!(result.worker_restarts, 0, "baseline must not restart");
+    }
+    result
+}
+
+fn section(r: &ModeResult) -> Json {
+    Json::Obj(vec![
+        ("throughput_req_s".into(), Json::num(r.throughput_req_s)),
+        ("p99_ms".into(), Json::num(r.p99_ms)),
+        ("submitted".into(), Json::num(r.submitted as f64)),
+        ("worker_restarts".into(), Json::num(r.worker_restarts as f64)),
+        ("failovers".into(), Json::num(r.failovers as f64)),
+        ("worker_lost_sheds".into(), Json::num(r.worker_lost as f64)),
+        ("sheds".into(), Json::num(r.sheds as f64)),
+    ])
+}
+
+fn main() {
+    let report = Path::new(BENCH_CHAOS_JSON);
+    let dir = stub_catalog("bench_chaos", &["waxpby", "vadd", "sscal", "axpydot"]);
+    let cal = scratch_dir("chaos_cal");
+    println!(
+        "chaos study (stub backend, 2-lane fleet): poisson seed 42 @ {RATE:.0} req/s \
+         over {HORIZON_MS} ms, {TRIGGERS_PER_LANE} pinned trigger(s) per lane"
+    );
+
+    let baseline = run_mode(&dir, &cal, FaultPlan::default(), "baseline");
+
+    // seeded mix plus one guaranteed kill per lane, timed to land
+    // during the trigger burst (turns count from 1, monotonically)
+    let mut plan = FaultPlan::seeded(42, 2, 4);
+    plan.faults.push(Fault::Kill { lane: 0, turn: 2 });
+    plan.faults.push(Fault::Kill { lane: 1, turn: 1 });
+    println!("chaos plan: {} fault(s), digest {:016x}", plan.faults.len(), plan.digest());
+    let plan_digest = plan.digest();
+    let chaos = run_mode(&dir, &cal, plan, "chaos");
+
+    let ratio = baseline.throughput_req_s / chaos.throughput_req_s.max(f64::MIN_POSITIVE);
+    let within_2x = ratio <= 2.0;
+    println!(
+        "throughput under chaos is {:.2}x below fault-free ({})",
+        ratio,
+        if within_2x { "within the 2x bar" } else { "OVER the 2x bar" }
+    );
+    assert!(within_2x, "chaos throughput degraded {ratio:.2}x (> 2x bar)");
+
+    update_bench_json(report, "baseline", section(&baseline)).expect("write BENCH_chaos.json");
+    update_bench_json(report, "chaos", section(&chaos)).expect("write BENCH_chaos.json");
+    update_bench_json(
+        report,
+        "comparison",
+        Json::Obj(vec![
+            ("throughput_ratio".into(), Json::num(ratio)),
+            ("within_2x".into(), Json::Bool(within_2x)),
+            ("plan_digest".into(), Json::Str(format!("{plan_digest:016x}"))),
+        ]),
+    )
+    .expect("write BENCH_chaos.json");
+    let _ = fs::remove_dir_all(&cal);
+    println!("wrote {BENCH_CHAOS_JSON}");
+}

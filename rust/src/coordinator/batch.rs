@@ -147,6 +147,9 @@ mod tests {
             enqueued: Instant::now(),
             deadline: None,
             priority: 0,
+            attempts: 0,
+            pinned: false,
+            lot: None,
             reply: Reply::new(tx, None),
         }
     }

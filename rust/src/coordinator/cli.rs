@@ -10,12 +10,17 @@
 //!                    [--scenario poisson|bursty|diurnal|hotkey] [--seed N]
 //!                    [--rate R] [--duration-ms MS] [--deadline-ms MS]
 //!                    [--priority P] [--queue-cap N] [--script FILE]
+//!                    [--chaos-seed N] [--chaos-faults N]
+//!                    [--retry-budget N] [--wedge-timeout-ms MS]
 //!                                         batched (fleet) serve demo; with
 //!                                         --scenario, a seeded open-loop
 //!                                         traffic run with SLO reporting;
 //!                                         --script registers the file as a
 //!                                         user pipeline and mixes it into
-//!                                         the served traffic
+//!                                         the served traffic; --chaos-seed
+//!                                         injects a seeded fault plan
+//!                                         (worker kills, reply chaos) the
+//!                                         supervisor must absorb
 //! fusebla list                            sequences + artifact catalog
 //! ```
 
@@ -23,8 +28,8 @@ use crate::autotune;
 use crate::bench_support as bench;
 use crate::codegen;
 use crate::coordinator::{
-    synth_inputs, traffic, Context, Coordinator, Engine, EngineConfig, Metrics, PlanChoice,
-    SubmitRequest, Ticket,
+    synth_inputs, traffic, Context, Coordinator, Engine, EngineConfig, FaultPlan, Metrics,
+    PlanChoice, SubmitRequest, Ticket,
 };
 use crate::fleet::DeviceRegistry;
 use crate::fusion::ImplAxes;
@@ -55,6 +60,8 @@ usage:
                      [--scenario poisson|bursty|diurnal|hotkey] [--seed N]
                      [--rate R] [--duration-ms MS] [--deadline-ms MS]
                      [--priority P] [--queue-cap N] [--script FILE]
+                     [--chaos-seed N] [--chaos-faults N]
+                     [--retry-budget N] [--wedge-timeout-ms MS]
   fusebla list"
     );
     2
@@ -413,6 +420,34 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let chaos_seed: Option<u64> = match parse_flag(args, "--chaos-seed") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let chaos_faults: usize = match parse_flag(args, "--chaos-faults") {
+        Ok(v) => v.unwrap_or(4),
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let retry_budget: Option<u32> = match parse_flag(args, "--retry-budget") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    let wedge_timeout_ms: Option<u64> = match parse_flag(args, "--wedge-timeout-ms") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
     // --script FILE: register the file's pipeline under its stem name
     // and mix it into the served traffic alongside the built-ins.
     let script: Option<(String, String)> = match flag_value(args, "--script") {
@@ -454,11 +489,28 @@ fn cmd_serve(args: &[String]) -> i32 {
         };
         prepared.push((seq.to_string(), m, n));
     }
+    // A seeded fault plan turns the demo into a chaos run: the plan is
+    // a pure function of the seed, so the same flags replay the same
+    // kills against the same (seeded) arrival schedule.
+    let fault_plan = chaos_seed
+        .map(|s| FaultPlan::seeded(s, n_devices, chaos_faults))
+        .unwrap_or_default();
+    if let Some(s) = chaos_seed {
+        println!(
+            "chaos: {} fault(s) from seed {s} (plan {:016x})",
+            fault_plan.faults.len(),
+            fault_plan.digest()
+        );
+    }
+    let defaults = EngineConfig::default();
     let cfg = EngineConfig {
         batch_window: Duration::from_millis(window_ms),
         max_batch: 256,
         queue_cap: queue_cap.unwrap_or(usize::MAX),
-        ..EngineConfig::default()
+        fault_plan,
+        retry_budget: retry_budget.unwrap_or(defaults.retry_budget),
+        wedge_timeout: wedge_timeout_ms.map(Duration::from_millis),
+        ..defaults
     };
     // One device serves the classic single-device path (no router in
     // the way); more cycle the heterogeneous simulated profiles, each
@@ -515,7 +567,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         let metrics = fleet.aggregate();
         println!(
             "open-loop {} (seed {seed}, schedule {digest:016x}): {} submitted in {} — \
-             {} completed, {} failed, {} queue shed(s), {} deadline shed(s), {} other error(s)",
+             {} completed, {} failed, {} queue shed(s), {} deadline shed(s), \
+             {} worker-lost shed(s), {} other error(s)",
             scenario.as_str(),
             report.submitted,
             fmt_duration(dt),
@@ -523,6 +576,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             report.failed,
             report.queue_sheds,
             report.deadline_sheds,
+            report.worker_lost,
             report.other_errors
         );
         if fleet.devices.len() > 1 {
@@ -537,6 +591,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
         println!("{}", slo_line(&metrics));
         println!("{}", queued_line(&metrics));
+        if let Some(line) = fault_line(&metrics) {
+            println!("{line}");
+        }
         return i32::from(report.other_errors != 0);
     }
     let t0 = std::time::Instant::now();
@@ -607,7 +664,27 @@ fn cmd_serve(args: &[String]) -> i32 {
     );
     println!("{}", slo_line(&metrics));
     println!("{}", queued_line(&metrics));
+    if let Some(line) = fault_line(&metrics) {
+        println!("{line}");
+    }
     i32::from(ok != n_requests)
+}
+
+/// One-line fault-tolerance summary, printed only when supervision saw
+/// action (chaos runs, real crashes) — healthy demos stay unchanged.
+fn fault_line(m: &Metrics) -> Option<String> {
+    if m.worker_restarts == 0
+        && m.failovers == 0
+        && m.worker_lost_sheds == 0
+        && m.breaker_transitions == 0
+    {
+        return None;
+    }
+    Some(format!(
+        "supervision: {} restart(s), {} failover(s) ({} retried execution(s)), \
+         {} worker-lost shed(s), {} breaker transition(s)",
+        m.worker_restarts, m.failovers, m.retries, m.worker_lost_sheds, m.breaker_transitions
+    ))
 }
 
 /// One-line queued-duration summary (submission → batch dispatch) from

@@ -33,7 +33,7 @@
 //! load error) back before `start_fleet` returns. The catalog manifest
 //! is parsed once and shared across the per-device runtimes. Each
 //! worker runs the drain-and-group scheduler
-//! (`Coordinator::serve_batched`) over its own plan cache, so
+//! (`Coordinator::serve_session`) over its own plan cache, so
 //! concurrent submissions sharing a `(seq, padded size, device, plan)`
 //! key execute as one batch on one device.
 //!
@@ -44,8 +44,8 @@
 //! bit-identical to a single-device engine (`tests/fleet_serving.rs`).
 
 use super::{
-    Context, Control, Coordinator, Metrics, Msg, PlanChoice, Reply, Request, RequestInputs,
-    ServeError,
+    Context, Control, Coordinator, Metrics, Msg, Parked, PlanChoice, Reply, Request,
+    RequestInputs, ServeError,
 };
 use crate::fleet::{CostModel, DeviceId, DeviceRegistry, RoutingStats};
 use crate::fusion::space::Space;
@@ -53,13 +53,16 @@ use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
 use crate::ir::program::Program;
 use crate::pipelines;
+use crate::pipelines::store::CatalogStore;
 use crate::planner::{self, PlannerConfig};
 use crate::runtime::{RunResult, Runtime, Tensor};
 use crate::sequences;
+use crate::util::manifest::Manifest;
+use crate::util::Prng;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -116,6 +119,23 @@ pub struct EngineConfig {
     /// urgent in-hand request is within this slack of its deadline —
     /// shipping *at* the deadline would already be too late.
     pub deadline_slack: Duration,
+    /// Deterministic fault-injection plan for chaos runs: each entry
+    /// fires on a specific lane's Nth scheduling turn (logical time, so
+    /// a seeded plan composes with the seeded
+    /// [`super::traffic`] schedules and replays byte-identically).
+    /// Empty (the default) injects nothing; supervision itself is
+    /// always on for fleet workers.
+    pub fault_plan: FaultPlan,
+    /// How many times a request reclaimed from a dead lane may be
+    /// re-executed on surviving devices before it fails fast with
+    /// [`ServeError::WorkerLost`]. Executions are pure, so re-running
+    /// is safe; the budget bounds ping-pong under cascading failures.
+    pub retry_budget: u32,
+    /// Heartbeat staleness bound for the wedge detector: a lane with
+    /// queued work whose heartbeat has not advanced for this long is
+    /// quarantined (breaker opens) until it beats again. `None` (the
+    /// default) disables the detector thread.
+    pub wedge_timeout: Option<Duration>,
 }
 
 impl Default for EngineConfig {
@@ -129,7 +149,418 @@ impl Default for EngineConfig {
             priority_caps: Vec::new(),
             pipeline_quota: Coordinator::DEFAULT_PIPELINE_QUOTA,
             deadline_slack: Duration::from_millis(5),
+            fault_plan: FaultPlan::default(),
+            retry_budget: 2,
+            wedge_timeout: None,
         }
+    }
+}
+
+/// One injected fault for chaos runs. Faults trigger on a lane's Nth
+/// scheduling turn — logical time, not wall clock — so a plan replays
+/// identically against the seeded [`super::traffic`] arrival schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic the lane's worker at the start of turn `turn`, after its
+    /// drained queue is parked: the supervisor fails the turn over to
+    /// surviving lanes and respawns the worker.
+    Kill { lane: usize, turn: u64 },
+    /// Panic mid-`execute_batch`, after the batch's inputs are consumed
+    /// — the worst spot: explicit-input requests can no longer be
+    /// replayed and shed typed instead.
+    PanicInExecute { lane: usize, turn: u64 },
+    /// Kill the lane beyond recovery: the supervisor fails over what it
+    /// can, quarantines the lane permanently, and lets the thread die
+    /// panicked (exercises partial [`FleetMetrics`] at shutdown).
+    HardKill { lane: usize, turn: u64 },
+    /// Sleep `delay` between executing a turn's batches and sending its
+    /// replies — late answers, not lost ones.
+    DelayReplies { lane: usize, turn: u64, delay: Duration },
+    /// Drop the turn's replies instead of sending them. The parked
+    /// reply half keeps each ticket connected: callers get the
+    /// request's next outcome (failover or typed shed), never a hang.
+    DropReplies { lane: usize, turn: u64 },
+    /// Stall the worker for `hold` at the start of the turn without
+    /// panicking — what the wedge detector exists to catch.
+    Wedge { lane: usize, turn: u64, hold: Duration },
+}
+
+/// A replayable set of [`Fault`]s ([`EngineConfig::fault_plan`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Derive a plan of `count` recoverable faults (kill, mid-execute
+    /// panic, delayed replies, dropped replies) spread over `lanes`
+    /// lanes and early turns, deterministically from `seed`. Hard kills
+    /// and wedges are never generated — opt into those explicitly.
+    pub fn seeded(seed: u64, lanes: usize, count: usize) -> FaultPlan {
+        let mut rng = Prng::new(seed ^ 0xfa01_7b1a);
+        let lanes = lanes.max(1) as u64;
+        let faults = (0..count)
+            .map(|_| {
+                let lane = rng.below(lanes) as usize;
+                let turn = 1 + rng.below(8);
+                match rng.below(4) {
+                    0 => Fault::Kill { lane, turn },
+                    1 => Fault::PanicInExecute { lane, turn },
+                    2 => Fault::DelayReplies {
+                        lane,
+                        turn,
+                        delay: Duration::from_millis(1 + rng.below(20)),
+                    },
+                    _ => Fault::DropReplies { lane, turn },
+                }
+            })
+            .collect();
+        FaultPlan { faults }
+    }
+
+    /// FNV-1a digest of the plan — the replay witness, same scheme as
+    /// the traffic schedules' digest.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        for f in &self.faults {
+            let (kind, lane, turn, param) = match *f {
+                Fault::Kill { lane, turn } => (0u64, lane as u64, turn, 0u64),
+                Fault::PanicInExecute { lane, turn } => (1, lane as u64, turn, 0),
+                Fault::HardKill { lane, turn } => (2, lane as u64, turn, 0),
+                Fault::DelayReplies { lane, turn, delay } => {
+                    (3, lane as u64, turn, delay.as_nanos() as u64)
+                }
+                Fault::DropReplies { lane, turn } => (4, lane as u64, turn, 0),
+                Fault::Wedge { lane, turn, hold } => {
+                    (5, lane as u64, turn, hold.as_nanos() as u64)
+                }
+            };
+            eat(kind);
+            eat(lane);
+            eat(turn);
+            eat(param);
+        }
+        h
+    }
+}
+
+/// Markers and plumbing for injected panics: every scripted panic
+/// carries one of these `&'static str` payloads so the supervisor (and
+/// the quiet panic hook) can tell chaos from a genuine bug — genuine
+/// panics keep the default noisy report and are salvaged identically.
+pub(crate) mod chaos {
+    use std::sync::Once;
+
+    /// Payload of a recoverable injected kill ([`super::Fault::Kill`]).
+    pub(crate) const KILL_MARKER: &str = "fusebla-chaos-kill";
+    /// Payload of an unrecoverable kill ([`super::Fault::HardKill`]).
+    pub(crate) const HARD_KILL_MARKER: &str = "fusebla-chaos-hard-kill";
+    /// Payload of a mid-execute panic
+    /// ([`super::Fault::PanicInExecute`]).
+    pub(crate) const EXEC_PANIC_MARKER: &str = "fusebla-chaos-exec-panic";
+
+    fn payload_marker(payload: &(dyn std::any::Any + Send)) -> Option<&'static str> {
+        payload
+            .downcast_ref::<&'static str>()
+            .copied()
+            .filter(|s| [KILL_MARKER, HARD_KILL_MARKER, EXEC_PANIC_MARKER].contains(s))
+    }
+
+    pub(crate) fn is_hard_kill(payload: &(dyn std::any::Any + Send)) -> bool {
+        payload_marker(payload) == Some(HARD_KILL_MARKER)
+    }
+
+    /// Keep injected panics off stderr (they are scripted, not bugs)
+    /// while leaving every other panic's report intact. Installed once,
+    /// process-wide, only when a fault plan is active.
+    pub(crate) fn install_quiet_panic_hook() {
+        static INSTALL: Once = Once::new();
+        INSTALL.call_once(|| {
+            let default = std::panic::take_hook();
+            std::panic::set_hook(Box::new(move |info| {
+                if payload_marker(info.payload()).is_none() {
+                    default(info);
+                }
+            }));
+        });
+    }
+}
+
+/// Reply-path chaos for one scheduling turn, staged by `begin_turn` and
+/// consumed inside the turn's execute/finish path.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct TurnChaos {
+    pub panic_in_execute: bool,
+    pub delay: Option<Duration>,
+    pub drop_replies: bool,
+}
+
+/// Everything the fault plan injects on one (lane, turn).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct TurnActions {
+    pub kill: bool,
+    pub hard_kill: bool,
+    pub wedge: Option<Duration>,
+    pub chaos: Option<TurnChaos>,
+}
+
+/// Circuit-breaker states, one `AtomicU8` per lane.
+pub(crate) const BREAKER_CLOSED: u8 = 0;
+pub(crate) const BREAKER_OPEN: u8 = 1;
+pub(crate) const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Fleet-wide supervision state shared by the engine handle, routing,
+/// and every lane's supervisor: per-lane circuit breakers with
+/// half-open probe slots, heartbeats for the wedge detector, fault
+/// tolerance counters (overlaid onto per-device [`Metrics`]), and the
+/// persistent dynamic-pipeline catalog that respawned workers replay.
+pub(crate) struct FleetState {
+    breakers: Vec<AtomicU8>,
+    /// One probe in flight per half-open lane: the request that wins
+    /// the CAS routes there; everyone else treats the lane as blocked
+    /// until the probe's turn completes (or the lane dies again).
+    probes: Vec<AtomicBool>,
+    /// Heartbeats, bumped at turn boundaries (and after a scripted
+    /// wedge clears) — the wedge detector quarantines a lane whose beat
+    /// goes stale while work is queued.
+    pub(crate) beats: Vec<AtomicU64>,
+    /// Set by the wedge detector when *it* opened the breaker, so it
+    /// only closes what it opened — supervisor-opened breakers follow
+    /// the respawn protocol instead.
+    pub(crate) wedged: Vec<AtomicBool>,
+    pub(crate) restarts: Vec<AtomicU64>,
+    pub(crate) failovers: Vec<AtomicU64>,
+    pub(crate) retries: Vec<AtomicU64>,
+    pub(crate) worker_lost: Vec<AtomicU64>,
+    pub(crate) transitions: Vec<AtomicU64>,
+    pub(crate) catalog: CatalogStore,
+}
+
+impl FleetState {
+    fn new(lanes: usize, catalog: CatalogStore) -> FleetState {
+        fn column<T: Default>(lanes: usize) -> Vec<T> {
+            (0..lanes).map(|_| T::default()).collect()
+        }
+        FleetState {
+            breakers: column(lanes),
+            probes: column(lanes),
+            beats: column(lanes),
+            wedged: column(lanes),
+            restarts: column(lanes),
+            failovers: column(lanes),
+            retries: column(lanes),
+            worker_lost: column(lanes),
+            transitions: column(lanes),
+            catalog,
+        }
+    }
+
+    pub(crate) fn breaker_state(&self, lane: usize) -> u8 {
+        self.breakers[lane].load(Ordering::Relaxed)
+    }
+
+    /// Move a lane's breaker, counting the transition when the state
+    /// actually changes and releasing any stale half-open probe slot.
+    pub(crate) fn set_breaker(&self, lane: usize, state: u8) {
+        let prev = self.breakers[lane].swap(state, Ordering::Relaxed);
+        if prev != state {
+            self.transitions[lane].fetch_add(1, Ordering::Relaxed);
+        }
+        if state != BREAKER_HALF_OPEN {
+            self.probes[lane].store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Close the breaker if it is half-open — called by the lane itself
+    /// at the end of any completed scheduling turn: surviving a whole
+    /// turn *is* the probe succeeding.
+    pub(crate) fn close_if_half_open(&self, lane: usize) {
+        if self.breakers[lane]
+            .compare_exchange(
+                BREAKER_HALF_OPEN,
+                BREAKER_CLOSED,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            )
+            .is_ok()
+        {
+            self.transitions[lane].fetch_add(1, Ordering::Relaxed);
+            self.probes[lane].store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Try to claim a half-open lane's single probe slot.
+    fn try_probe(&self, lane: usize) -> bool {
+        self.probes[lane]
+            .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Release a probe slot that was claimed but not used (routing
+    /// picked another lane, or admission control shed the request).
+    fn release_probe(&self, lane: usize) {
+        if self.breaker_state(lane) == BREAKER_HALF_OPEN {
+            self.probes[lane].store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Which lanes routing should avoid (breaker not closed), or `None`
+    /// when no lane is quarantined — the healthy-path fast answer.
+    pub(crate) fn blocked(&self) -> Option<Vec<bool>> {
+        let mask: Vec<bool> = (0..self.breakers.len())
+            .map(|i| self.breaker_state(i) != BREAKER_CLOSED)
+            .collect();
+        mask.iter().any(|&b| b).then_some(mask)
+    }
+}
+
+/// Per-lane supervision context, shared between a lane's worker (which
+/// parks/unparks requests and reads its chaos script at turn
+/// boundaries) and its supervisor wrapper (which reclaims and fails
+/// over after a death).
+pub(crate) struct LaneCtx {
+    pub(crate) index: usize,
+    /// Registered device name — the identity reported by
+    /// [`ServeError::WorkerLost`].
+    device: String,
+    /// Scheduling turns taken — the fault plan's logical clock.
+    pub(crate) turns: AtomicU64,
+    /// The parking lot: a tethered reply (plus enough of the request to
+    /// re-submit it) per in-flight request, slot-addressed so `finish`
+    /// unparks in O(1). Entries left behind by a death are exactly the
+    /// requests that still owe an answer.
+    lot: Mutex<Vec<Option<Parked>>>,
+    pub(crate) fleet: Arc<FleetState>,
+    /// Request lanes of the whole fleet — failover re-sends through
+    /// these.
+    txs: Vec<mpsc::Sender<Msg>>,
+    depths: Vec<Arc<AtomicU64>>,
+    plan: FaultPlan,
+    retry_budget: u32,
+}
+
+impl LaneCtx {
+    pub(crate) fn beat(&self) {
+        self.fleet.beats[self.index].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Park a request for the duration of its turn; returns the slot
+    /// for [`LaneCtx::unpark`].
+    pub(crate) fn park(&self, p: Parked) -> usize {
+        let mut lot = self.lot.lock().unwrap();
+        match lot.iter().position(Option::is_none) {
+            Some(i) => {
+                lot[i] = Some(p);
+                i
+            }
+            None => {
+                lot.push(Some(p));
+                lot.len() - 1
+            }
+        }
+    }
+
+    /// Drop a parked entry — its request reached a terminal outcome on
+    /// this lane (the tethered reply's drop releases nothing: the
+    /// in-flight half owns the channel, the parked half held the depth
+    /// slot only until `finish` released it).
+    pub(crate) fn unpark(&self, slot: usize) {
+        self.lot.lock().unwrap()[slot] = None;
+    }
+
+    /// Take every parked entry — the dead session's unanswered
+    /// requests.
+    fn reclaim(&self) -> Vec<Parked> {
+        self.lot.lock().unwrap().iter_mut().filter_map(Option::take).collect()
+    }
+
+    /// The fault plan's actions for this lane's turn `turn`.
+    pub(crate) fn chaos_for(&self, turn: u64) -> TurnActions {
+        let mut a = TurnActions::default();
+        let mut chaos = TurnChaos::default();
+        let mut any = false;
+        for f in &self.plan.faults {
+            match *f {
+                Fault::Kill { lane, turn: t } if lane == self.index && t == turn => a.kill = true,
+                Fault::HardKill { lane, turn: t } if lane == self.index && t == turn => {
+                    a.hard_kill = true;
+                }
+                Fault::Wedge { lane, turn: t, hold } if lane == self.index && t == turn => {
+                    a.wedge = Some(hold);
+                }
+                Fault::PanicInExecute { lane, turn: t } if lane == self.index && t == turn => {
+                    chaos.panic_in_execute = true;
+                    any = true;
+                }
+                Fault::DelayReplies { lane, turn: t, delay }
+                    if lane == self.index && t == turn =>
+                {
+                    chaos.delay = Some(delay);
+                    any = true;
+                }
+                Fault::DropReplies { lane, turn: t } if lane == self.index && t == turn => {
+                    chaos.drop_replies = true;
+                    any = true;
+                }
+                _ => {}
+            }
+        }
+        if any {
+            a.chaos = Some(chaos);
+        }
+        a
+    }
+
+    /// Re-route one reclaimed request: re-execute it on the shallowest
+    /// surviving (breaker-closed) lane when the retry budget and the
+    /// request's nature allow — executions are pure, so re-running is
+    /// safe — else fail fast with [`ServeError::WorkerLost`]. Pinned
+    /// requests never migrate, and a request whose explicit inputs were
+    /// consumed mid-execute cannot be replayed.
+    fn failover(&self, p: Parked) {
+        let Parked { spec, mut reply } = p;
+        let target = (0..self.txs.len())
+            .filter(|&j| j != self.index && self.fleet.breaker_state(j) == BREAKER_CLOSED)
+            .min_by_key(|&j| self.depths[j].load(Ordering::Relaxed));
+        let give_up = spec.pinned
+            || spec.inputs.is_none()
+            || spec.attempts >= self.retry_budget
+            || target.is_none();
+        if give_up {
+            self.fleet.worker_lost[self.index].fetch_add(1, Ordering::Relaxed);
+            reply.send(Err(anyhow::Error::new(ServeError::WorkerLost {
+                device: self.device.clone(),
+                attempts: spec.attempts,
+            })));
+            return;
+        }
+        let target = target.expect("give_up covers the no-target case");
+        reply.retarget(self.depths[target].clone());
+        self.fleet.failovers[self.index].fetch_add(1, Ordering::Relaxed);
+        self.fleet.retries[self.index].fetch_add(1, Ordering::Relaxed);
+        // A failed send hands the request back; its dropped Reply
+        // releases the depth slot and disconnects the ticket, which
+        // surfaces as a typed shutdown error at the caller.
+        let _ = self.txs[target].send(Msg::Run(Request {
+            seq: spec.seq,
+            m: spec.m,
+            n: spec.n,
+            inputs: spec.inputs.expect("give_up covers the consumed-inputs case"),
+            variant: spec.variant,
+            enqueued: spec.enqueued,
+            deadline: spec.deadline,
+            priority: spec.priority,
+            attempts: spec.attempts + 1,
+            pinned: false,
+            lot: None,
+            reply,
+        }));
     }
 }
 
@@ -273,6 +704,9 @@ struct Shared {
     /// cache. Keyed by validated sequence names only (a closed set),
     /// so no eviction is needed.
     spaces: Mutex<BTreeMap<String, Arc<(Program, Space)>>>,
+    /// Supervision state: breakers (consulted on every route), probe
+    /// slots, heartbeats, fault-tolerance counters, pipeline catalog.
+    fleet: Arc<FleetState>,
 }
 
 impl Shared {
@@ -331,13 +765,44 @@ impl Shared {
                 )),
             },
             None if self.depths.len() == 1 => Ok(0),
-            None => Ok(self.model.route_via(
-                seq,
-                m,
-                n,
-                &self.snapshot(),
-                Some((lanes, self.forecast_deadline)),
-            )),
+            None => {
+                // Quarantined lanes (breaker open) are skipped; a
+                // half-open lane admits exactly one probe request — the
+                // CAS winner — and blocks everyone else. If that leaves
+                // no lane at all, route unmasked: serving on a
+                // quarantined lane beats refusing outright.
+                let count = self.depths.len();
+                let mut blocked = vec![false; count];
+                let mut won: Vec<usize> = Vec::new();
+                for i in 0..count {
+                    match self.fleet.breaker_state(i) {
+                        BREAKER_OPEN => blocked[i] = true,
+                        BREAKER_HALF_OPEN => {
+                            if self.fleet.try_probe(i) {
+                                won.push(i);
+                            } else {
+                                blocked[i] = true;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                let mask = (!blocked.iter().all(|&b| b)).then_some(blocked.as_slice());
+                let lane = self.model.route_via(
+                    seq,
+                    m,
+                    n,
+                    &self.snapshot(),
+                    Some((lanes, self.forecast_deadline)),
+                    mask,
+                );
+                for w in won {
+                    if w != lane {
+                        self.fleet.release_probe(w);
+                    }
+                }
+                Ok(lane)
+            }
         }
     }
 }
@@ -375,6 +840,9 @@ impl Client {
         let prev = depth.fetch_add(1, Ordering::Relaxed);
         if prev >= cap {
             depth.fetch_sub(1, Ordering::Relaxed);
+            // The request may have won a half-open lane's probe slot in
+            // routing; shedding it must not leave the slot claimed.
+            self.shared.fleet.release_probe(lane);
             self.shared.sheds[lane].fetch_add(1, Ordering::Relaxed);
             *self.shared.priority_sheds[lane]
                 .lock()
@@ -396,6 +864,9 @@ impl Client {
             enqueued,
             deadline: req.deadline.map(|d| enqueued + d),
             priority: req.priority,
+            attempts: 0,
+            pinned: req.device.is_some(),
+            lot: None,
             reply: Reply::new(reply, Some(depth.clone())),
         }));
         if sent.is_err() {
@@ -463,6 +934,7 @@ impl Client {
                 n,
                 &vec![0; self.txs.len()],
                 Some((&self.txs, self.shared.forecast_deadline)),
+                None,
             )
         }
     }
@@ -559,12 +1031,31 @@ impl Client {
         // queue first (stable on ties → deterministic), all sends
         // before any gather so workers overlap.
         let depths = self.shared.snapshot();
-        let mut order: Vec<usize> = (0..self.txs.len()).collect();
+        // Quarantined lanes (breaker not closed) are skipped by the
+        // scatter — chunk work queued behind a dead or probing lane
+        // would just ride out the local-fallback deadline. If every
+        // lane is quarantined, scatter anyway: the local fallback still
+        // guarantees the merge.
+        let blocked = self.shared.fleet.blocked();
+        let mut order: Vec<usize> = match &blocked {
+            Some(mask) => (0..self.txs.len()).filter(|&i| !mask[i]).collect(),
+            None => (0..self.txs.len()).collect(),
+        };
+        if blocked.is_some() {
+            if order.is_empty() {
+                order = (0..self.txs.len()).collect();
+            } else {
+                self.shared
+                    .model
+                    .note_quarantined((self.txs.len() - order.len()) as u64);
+            }
+        }
         order.sort_by_key(|&i| depths[i]);
-        // Adaptive shard count: one chunk per idle lane, bounded by the
-        // partition count (an explicit `k` skips the adaptation).
+        // Adaptive shard count: one chunk per idle *eligible* lane,
+        // bounded by the partition count (an explicit `k` skips the
+        // adaptation).
         let k = k.unwrap_or_else(|| {
-            let idle = depths.iter().filter(|&&d| d == 0).count().max(1);
+            let idle = order.iter().filter(|&&i| depths[i] == 0).count().max(1);
             idle.min(space.partitions.len()).max(1)
         });
         let ranges = planner::chunk_ranges(space.partitions.len(), k);
@@ -717,12 +1208,15 @@ impl Client {
             return Err(e);
         }
         // Every worker agreed: publish the name to the router roster
-        // and the shared space cache, making it routable + shardable.
+        // and the shared space cache, making it routable + shardable,
+        // and persist it so registrations survive engine restarts and
+        // worker respawns replay it with the same fingerprint.
         self.shared.model.register_pipeline(&compiled);
         self.shared.spaces.lock().unwrap().insert(
             name.to_string(),
             Arc::new((compiled.pipeline.program.clone(), compiled.space)),
         );
+        self.shared.fleet.catalog.insert(name, src, fp);
         Ok(fp)
     }
 
@@ -751,6 +1245,7 @@ impl Client {
         }
         self.shared.model.unregister_pipeline(name);
         self.shared.spaces.lock().unwrap().remove(name);
+        self.shared.fleet.catalog.remove(name);
         any
     }
 }
@@ -759,6 +1254,10 @@ impl Client {
 /// device, in registry order, plus the aggregate view.
 pub struct FleetMetrics {
     pub devices: Vec<(DeviceId, Metrics)>,
+    /// Lanes whose worker could not be joined cleanly at shutdown
+    /// (hard-killed, or panicked beyond supervision) — their entry in
+    /// `devices` carries only the engine-side counters.
+    pub lost: Vec<DeviceId>,
 }
 
 impl FleetMetrics {
@@ -781,6 +1280,9 @@ pub struct Engine {
     txs: Vec<mpsc::Sender<Msg>>,
     ids: Vec<DeviceId>,
     workers: Vec<Option<JoinHandle<Metrics>>>,
+    /// The wedge-detector watchdog ([`EngineConfig::wedge_timeout`])
+    /// and its stop flag; joined at shutdown.
+    wedge: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 impl Engine {
@@ -820,34 +1322,45 @@ impl Engine {
     ) -> Result<Engine> {
         let manifest = Runtime::load_manifest(artifacts_dir)?;
         let ids = registry.ids();
-        let mut txs = Vec::with_capacity(registry.len());
-        let mut depths = Vec::with_capacity(registry.len());
-        let mut workers = Vec::with_capacity(registry.len());
-        let mut readies = Vec::with_capacity(registry.len());
-        for i in 0..registry.len() {
+        let n = registry.len();
+        if !cfg.fault_plan.faults.is_empty() {
+            chaos::install_quiet_panic_hook();
+        }
+        // Supervision state exists before any worker: lanes are born
+        // with closed breakers, and the persisted pipeline catalog is
+        // loaded once for both the start-time replay below and every
+        // later worker respawn.
+        let fleet = Arc::new(FleetState::new(n, CatalogStore::load(artifacts_dir)));
+        let mut txs = Vec::with_capacity(n);
+        let mut rxs = Vec::with_capacity(n);
+        for _ in 0..n {
             let (tx, rx) = mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let depths: Vec<Arc<AtomicU64>> = (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let mut workers = Vec::with_capacity(n);
+        let mut readies = Vec::with_capacity(n);
+        for (i, rx) in rxs.into_iter().enumerate() {
             let (ready_tx, ready_rx) = mpsc::channel();
+            let lane = Arc::new(LaneCtx {
+                index: i,
+                device: ids[i].name().to_string(),
+                turns: AtomicU64::new(0),
+                lot: Mutex::new(Vec::new()),
+                fleet: fleet.clone(),
+                txs: txs.clone(),
+                depths: depths.clone(),
+                plan: cfg.fault_plan.clone(),
+                retry_budget: cfg.retry_budget,
+            });
             let reg = registry.clone();
             let man = manifest.clone();
             let cfg = cfg.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("fusebla-dev{i}"))
-                .spawn(move || {
-                    let coord = match Coordinator::with_manifest(reg.context(i), man) {
-                        Ok(c) => {
-                            let _ = ready_tx.send(Ok(()));
-                            c
-                        }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return Metrics::default();
-                        }
-                    };
-                    coord.serve_batched(rx, &cfg)
-                })
+                .spawn(move || worker_loop(rx, lane, reg, man, cfg, ready_tx))
                 .expect("spawning a fleet worker thread");
-            txs.push(tx);
-            depths.push(Arc::new(AtomicU64::new(0)));
             workers.push(Some(worker));
             readies.push(ready_rx);
         }
@@ -868,11 +1381,15 @@ impl Engine {
             }
             return Err(e);
         }
-        let sheds = (0..depths.len()).map(|_| AtomicU64::new(0)).collect();
-        let priority_sheds = (0..depths.len())
-            .map(|_| Mutex::new(BTreeMap::new()))
-            .collect();
-        Ok(Engine {
+        let sheds = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let priority_sheds = (0..n).map(|_| Mutex::new(BTreeMap::new())).collect();
+        let wedge = cfg.wedge_timeout.map(|timeout| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let handle =
+                spawn_wedge_detector(fleet.clone(), depths.clone(), timeout, stop.clone());
+            (stop, handle)
+        });
+        let engine = Engine {
             shared: Arc::new(Shared {
                 model: CostModel::new(registry),
                 depths,
@@ -883,11 +1400,28 @@ impl Engine {
                 deadline: cfg.shard_deadline,
                 forecast_deadline: cfg.forecast_deadline,
                 spaces: Mutex::new(BTreeMap::new()),
+                fleet: fleet.clone(),
             }),
             txs,
             ids,
             workers,
-        })
+            wedge,
+        };
+        // Replay the persisted dynamic catalog so registrations survive
+        // engine restarts. Entries that no longer reproduce their
+        // recorded fingerprint (source drift, library change) are
+        // evicted rather than served with different semantics.
+        let persisted = fleet.catalog.entries();
+        if !persisted.is_empty() {
+            let client = engine.client();
+            for (name, src, fp) in persisted {
+                match client.register_pipeline(&name, &src) {
+                    Ok(got) if got == fp => {}
+                    _ => fleet.catalog.remove(&name),
+                }
+            }
+        }
+        Ok(engine)
     }
 
     /// A new submission handle (cheap; clone freely across threads).
@@ -934,13 +1468,25 @@ impl Engine {
                     Some(rx) => rx.recv().unwrap_or_default(),
                     None => Metrics::default(),
                 };
-                m.queue_sheds = self.shared.sheds[i].load(Ordering::Relaxed);
-                m.queue_sheds_by_priority =
-                    self.shared.priority_sheds[i].lock().unwrap().clone();
+                Self::overlay(&self.shared, i, &mut m);
                 m
             }))
             .collect();
-        FleetMetrics { devices }
+        FleetMetrics { devices, lost: Vec::new() }
+    }
+
+    /// Engine-side counter overlay for one lane: admission sheds and
+    /// the supervision counters, all owned outside the worker — a
+    /// restarted (or even lost) worker loses none of them.
+    fn overlay(shared: &Shared, i: usize, m: &mut Metrics) {
+        m.queue_sheds = shared.sheds[i].load(Ordering::Relaxed);
+        m.queue_sheds_by_priority = shared.priority_sheds[i].lock().unwrap().clone();
+        let fleet = &shared.fleet;
+        m.worker_restarts = fleet.restarts[i].load(Ordering::Relaxed);
+        m.failovers = fleet.failovers[i].load(Ordering::Relaxed);
+        m.retries = fleet.retries[i].load(Ordering::Relaxed);
+        m.worker_lost_sheds = fleet.worker_lost[i].load(Ordering::Relaxed);
+        m.breaker_transitions = fleet.transitions[i].load(Ordering::Relaxed);
     }
 
     /// Stop every worker after it finishes everything submitted before
@@ -960,22 +1506,36 @@ impl Engine {
         for tx in &self.txs {
             let _ = tx.send(Msg::Control(Control::Shutdown));
         }
+        if let Some((stop, handle)) = self.wedge.take() {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
         let shared = self.shared.clone();
+        let mut lost = Vec::new();
         let devices = self
             .ids
             .iter()
             .cloned()
             .zip(self.workers.iter_mut().enumerate().map(|(i, w)| {
-                let mut m = match w.take() {
-                    Some(w) => w.join().expect("fleet worker panicked"),
+                let mut m = match w.take().map(JoinHandle::join) {
+                    Some(Ok(m)) => m,
+                    Some(Err(_)) => {
+                        // The worker died beyond supervision (hard
+                        // kill, or a panic outside the guarded turn
+                        // loop). Report the fleet partially instead of
+                        // poisoning shutdown — the engine-side overlay
+                        // below is everything that survives for the
+                        // lane.
+                        lost.push(self.ids[i].clone());
+                        Metrics::default()
+                    }
                     None => Metrics::default(),
                 };
-                m.queue_sheds = shared.sheds[i].load(Ordering::Relaxed);
-                m.queue_sheds_by_priority = shared.priority_sheds[i].lock().unwrap().clone();
+                Self::overlay(&shared, i, &mut m);
                 m
             }))
             .collect();
-        FleetMetrics { devices }
+        FleetMetrics { devices, lost }
     }
 }
 
@@ -984,10 +1544,188 @@ impl Drop for Engine {
         for tx in &self.txs {
             let _ = tx.send(Msg::Control(Control::Shutdown));
         }
+        if let Some((stop, handle)) = self.wedge.take() {
+            stop.store(true, Ordering::Relaxed);
+            let _ = handle.join();
+        }
         for w in self.workers.iter_mut().filter_map(Option::take) {
             let _ = w.join();
         }
     }
+}
+
+/// One fleet worker's supervised lifetime: build the coordinator on
+/// this thread (the runtime is `!Send`), serve scheduling turns inside
+/// `catch_unwind`, and on a panic — injected or genuine — salvage the
+/// lane: quarantine it, fail its stranded requests over, respawn the
+/// coordinator on a fresh context, replay the dynamic pipeline catalog,
+/// and re-enter the *same* receiver, so the lane's channel (and every
+/// client clone holding its sender) stays valid across the restart.
+fn worker_loop(
+    rx: mpsc::Receiver<Msg>,
+    lane: Arc<LaneCtx>,
+    reg: Arc<DeviceRegistry>,
+    man: Arc<Manifest>,
+    cfg: EngineConfig,
+    ready_tx: mpsc::Sender<Result<()>>,
+) -> Metrics {
+    let i = lane.index;
+    let mut coord = match Coordinator::with_manifest(reg.context(i), man.clone()) {
+        Ok(mut c) => {
+            c.attach_lane(lane.clone(), Metrics::default());
+            let _ = ready_tx.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return Metrics::default();
+        }
+    };
+    let mut rx_slot = Some(rx);
+    loop {
+        let served = {
+            let rx = rx_slot.as_ref().expect("receiver held while serving");
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                coord.serve_session(rx, &cfg)
+            }))
+        };
+        let payload = match served {
+            Ok(()) => return coord.full_metrics(),
+            Err(payload) => payload,
+        };
+        // The session died mid-turn. Quarantine the lane first so
+        // routing stops feeding it, then salvage: metrics survive in
+        // the carried base, parked requests fail over or shed typed,
+        // and anything still queued behind the dead session drains the
+        // same way.
+        lane.fleet.wedged[i].store(false, Ordering::Relaxed);
+        lane.fleet.set_breaker(i, BREAKER_OPEN);
+        let carried = coord.full_metrics();
+        for p in lane.reclaim() {
+            lane.failover(p);
+        }
+        let mut shutdown = false;
+        {
+            let rx = rx_slot.as_ref().expect("receiver held while draining");
+            loop {
+                match rx.try_recv() {
+                    Ok(Msg::Run(r)) => lane.failover(Parked::from_request(r)),
+                    Ok(Msg::Control(Control::Metrics(reply))) => {
+                        let _ = reply.send(carried.clone());
+                    }
+                    Ok(Msg::Control(Control::Shutdown)) => shutdown = true,
+                    // Other control queries lose their reply sender;
+                    // every such caller has a disconnect fallback
+                    // (local planning, typed error, or timeout).
+                    Ok(Msg::Control(_)) => {}
+                    Err(_) => break,
+                }
+            }
+        }
+        if shutdown {
+            return carried;
+        }
+        if chaos::is_hard_kill(&*payload) {
+            // Scripted as unrecoverable: drop the receiver so later
+            // submissions fail fast at send instead of queueing
+            // forever, then die for real — shutdown reports the lane in
+            // [`FleetMetrics::lost`].
+            drop(rx_slot.take());
+            std::panic::resume_unwind(payload);
+        }
+        // Respawn: fresh context over the same device (persistent
+        // calibration makes this a reload, not a re-run), replay the
+        // dynamic catalog with fingerprint verification, re-admit
+        // through a half-open breaker probe.
+        match Coordinator::with_manifest(reg.rebuild_context(i), man.clone()) {
+            Ok(mut c) => {
+                c.attach_lane(lane.clone(), carried);
+                for (name, src, fp) in lane.fleet.catalog.entries() {
+                    match c.register_pipeline(&name, &src) {
+                        Ok(got) if got == fp => {}
+                        // An entry that cannot reproduce its recorded
+                        // fingerprint must not serve silently-different
+                        // results on this lane.
+                        _ => {
+                            c.unregister_pipeline(&name);
+                        }
+                    }
+                }
+                lane.fleet.restarts[i].fetch_add(1, Ordering::Relaxed);
+                lane.fleet.set_breaker(i, BREAKER_HALF_OPEN);
+                coord = c;
+            }
+            Err(_) => {
+                // The device cannot come back: stay quarantined and
+                // keep answering, so every future request gets a
+                // terminal outcome instead of a hang.
+                let rx = rx_slot.take().expect("receiver held for the drain");
+                return degraded_drain(&rx, &lane, carried);
+            }
+        }
+    }
+}
+
+/// Terminal state of a lane whose respawn failed: the breaker stays
+/// open and the channel is drained until shutdown, so every request
+/// gets a typed answer and every control query a sane fallback.
+fn degraded_drain(rx: &mpsc::Receiver<Msg>, lane: &LaneCtx, carried: Metrics) -> Metrics {
+    loop {
+        match rx.recv() {
+            Ok(Msg::Run(r)) => lane.failover(Parked::from_request(r)),
+            Ok(Msg::Control(Control::Metrics(reply))) => {
+                let _ = reply.send(carried.clone());
+            }
+            Ok(Msg::Control(Control::Shutdown)) | Err(_) => return carried,
+            Ok(Msg::Control(_)) => {}
+        }
+    }
+}
+
+/// Watchdog for wedged (stalled, not panicked) lanes: a lane with
+/// queued work whose heartbeat has not advanced within `timeout` gets
+/// its breaker opened; when the beat moves again the detector closes
+/// what it opened — and only that; supervisor-opened breakers follow
+/// the respawn protocol instead.
+fn spawn_wedge_detector(
+    fleet: Arc<FleetState>,
+    depths: Vec<Arc<AtomicU64>>,
+    timeout: Duration,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("fusebla-wedge".into())
+        .spawn(move || {
+            let lanes = depths.len();
+            let mut last: Vec<(u64, Instant)> = (0..lanes)
+                .map(|i| (fleet.beats[i].load(Ordering::Relaxed), Instant::now()))
+                .collect();
+            let poll = (timeout / 4).max(Duration::from_millis(1));
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(poll);
+                let now = Instant::now();
+                for i in 0..lanes {
+                    let beat = fleet.beats[i].load(Ordering::Relaxed);
+                    if beat != last[i].0 {
+                        last[i] = (beat, now);
+                        if fleet.wedged[i].swap(false, Ordering::Relaxed) {
+                            fleet.set_breaker(i, BREAKER_CLOSED);
+                        }
+                        continue;
+                    }
+                    let stale = now.duration_since(last[i].1) >= timeout;
+                    let busy = depths[i].load(Ordering::Relaxed) > 0;
+                    if stale
+                        && busy
+                        && fleet.breaker_state(i) == BREAKER_CLOSED
+                        && !fleet.wedged[i].swap(true, Ordering::Relaxed)
+                    {
+                        fleet.set_breaker(i, BREAKER_OPEN);
+                    }
+                }
+            }
+        })
+        .expect("spawning the wedge detector thread")
 }
 
 #[cfg(test)]
@@ -1388,5 +2126,74 @@ mod tests {
         assert_eq!(live.aggregate().requests, engine.metrics().requests);
         let _ = engine.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The fault plan is a pure function of its seed — the property the
+    /// byte-identical chaos replays rest on — and its digest witnesses
+    /// every field of every fault.
+    #[test]
+    fn fault_plan_seeded_is_deterministic() {
+        let a = FaultPlan::seeded(7, 3, 12);
+        let b = FaultPlan::seeded(7, 3, 12);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.faults.len(), 12);
+        assert_ne!(a.digest(), FaultPlan::seeded(8, 3, 12).digest());
+        assert_eq!(FaultPlan::default().digest(), FaultPlan::seeded(7, 3, 0).digest());
+        for f in &a.faults {
+            match *f {
+                Fault::Kill { lane, turn }
+                | Fault::PanicInExecute { lane, turn }
+                | Fault::DropReplies { lane, turn }
+                | Fault::DelayReplies { lane, turn, .. } => {
+                    assert!(lane < 3, "lane {lane} out of range");
+                    assert!((1..=8).contains(&turn), "turn {turn} out of range");
+                }
+                other => panic!("seeded plans never script {other:?}"),
+            }
+        }
+        // the digest covers the delay parameter, not just (kind, lane, turn)
+        let base = FaultPlan {
+            faults: vec![Fault::DelayReplies {
+                lane: 0,
+                turn: 1,
+                delay: Duration::from_millis(5),
+            }],
+        };
+        let slower = FaultPlan {
+            faults: vec![Fault::DelayReplies {
+                lane: 0,
+                turn: 1,
+                delay: Duration::from_millis(6),
+            }],
+        };
+        assert_ne!(base.digest(), slower.digest());
+    }
+
+    /// The per-lane circuit breaker: open quarantines, half-open admits
+    /// exactly one probe, a survived turn closes, and `blocked()` is
+    /// `None` on an all-healthy fleet (the fast path routing takes).
+    #[test]
+    fn breaker_state_machine_and_probe_slot() {
+        let fleet = FleetState::new(2, CatalogStore::in_memory());
+        assert_eq!(fleet.blocked(), None);
+        fleet.set_breaker(1, BREAKER_OPEN);
+        assert_eq!(fleet.blocked(), Some(vec![false, true]));
+        // closing from open is the supervisor's job, not the turn's
+        fleet.close_if_half_open(1);
+        assert_eq!(fleet.breaker_state(1), BREAKER_OPEN);
+        fleet.set_breaker(1, BREAKER_HALF_OPEN);
+        // one probe slot: first claimant wins, second is turned away
+        assert!(fleet.try_probe(1));
+        assert!(!fleet.try_probe(1));
+        fleet.release_probe(1);
+        assert!(fleet.try_probe(1));
+        // surviving a turn closes the breaker and frees the slot
+        fleet.close_if_half_open(1);
+        assert_eq!(fleet.breaker_state(1), BREAKER_CLOSED);
+        assert_eq!(fleet.blocked(), None);
+        // closed → open → half-open → closed: 3 transitions, all lane 1
+        assert_eq!(fleet.transitions[1].load(Ordering::Relaxed), 3);
+        assert_eq!(fleet.transitions[0].load(Ordering::Relaxed), 0);
     }
 }

@@ -42,7 +42,9 @@ pub mod cli;
 pub mod engine;
 pub mod traffic;
 
-pub use engine::{Client, Engine, EngineConfig, FleetMetrics, SubmitRequest, Ticket};
+pub use engine::{
+    Client, Engine, EngineConfig, Fault, FaultPlan, FleetMetrics, SubmitRequest, Ticket,
+};
 
 use crate::autotune;
 use crate::fusion::space::Space;
@@ -271,6 +273,12 @@ pub enum ServeError {
     /// (re-submitting identical source is an idempotent dedup, not an
     /// error).
     DuplicatePipeline { name: String },
+    /// The worker serving the request died and the request could not be
+    /// re-executed elsewhere: it was pinned to the dead device, its
+    /// inputs were consumed mid-execute and are not reconstructible, the
+    /// retry budget was exhausted, or no healthy lane survived.
+    /// `attempts` counts re-executions already spent on the request.
+    WorkerLost { device: String, attempts: u32 },
 }
 
 impl std::fmt::Display for ServeError {
@@ -294,6 +302,10 @@ impl std::fmt::Display for ServeError {
             ServeError::DuplicatePipeline { name } => {
                 write!(f, "rejected: pipeline name '{name}' is already taken")
             }
+            ServeError::WorkerLost { device, attempts } => write!(
+                f,
+                "shed: worker for device '{device}' lost (after {attempts} re-execution attempts)"
+            ),
         }
     }
 }
@@ -328,6 +340,26 @@ impl Reply {
         self.release();
         let _ = self.tx.send(res);
     }
+
+    /// Split off a parked copy for the supervisor's reclamation lot: the
+    /// parked half takes the depth slot (so a worker panic can't leak
+    /// the router's backlog view) and a clone of the ticket sender (so
+    /// the ticket stays pending — not disconnected — while the in-flight
+    /// half unwinds). `self` keeps delivering the normal reply.
+    pub(crate) fn tether(&mut self) -> Reply {
+        Reply {
+            tx: self.tx.clone(),
+            depth: self.depth.take(),
+        }
+    }
+
+    /// Move the request's queue-depth slot to another device (failover):
+    /// release the dead lane's slot and take one on the target.
+    pub(crate) fn retarget(&mut self, depth: Arc<AtomicU64>) {
+        self.release();
+        depth.fetch_add(1, Ordering::Relaxed);
+        self.depth = Some(depth);
+    }
 }
 
 impl Drop for Reply {
@@ -357,7 +389,73 @@ pub(crate) struct Request {
     /// batches (after deadline order) and gets admission-control
     /// headroom. 0 = best effort.
     pub priority: u8,
+    /// Re-executions already spent on this request (failover hops). The
+    /// supervisor fails the request fast once this reaches the engine's
+    /// retry budget.
+    pub attempts: u32,
+    /// Pinned to a specific device by the client: never failed over —
+    /// the pin is a correctness contract (bit-identity tests depend on
+    /// which calibration executes), so lane death turns into a typed
+    /// [`ServeError::WorkerLost`] instead.
+    pub pinned: bool,
+    /// Index of this request's entry in the supervising lane's parking
+    /// lot, set when a turn begins on a supervised worker. `None` until
+    /// then (and always on unsupervised coordinators).
+    pub lot: Option<usize>,
     pub reply: Reply,
+}
+
+/// What the supervisor needs to re-execute (or fail fast) a request
+/// stranded by a worker panic: everything except the input tensors,
+/// which are reconstructible only for `Synth` payloads.
+pub(crate) struct RetrySpec {
+    pub seq: String,
+    pub m: usize,
+    pub n: usize,
+    pub variant: Option<PlanChoice>,
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    pub priority: u8,
+    pub attempts: u32,
+    pub pinned: bool,
+    /// The input payload to re-submit with. `None` when the original
+    /// inputs were explicit tensors already consumed by the dead
+    /// worker's execute path — such requests fail fast with
+    /// [`ServeError::WorkerLost`].
+    pub inputs: Option<RequestInputs>,
+}
+
+/// One parked request in a supervised lane's reclamation lot: the retry
+/// spec plus the tethered reply half holding the ticket sender and the
+/// queue-depth slot. Dropped (released) on normal completion; drained
+/// and failed over when the lane dies.
+pub(crate) struct Parked {
+    pub spec: RetrySpec,
+    pub reply: Reply,
+}
+
+impl Parked {
+    /// Park a request that never reached a worker turn (reclaimed
+    /// straight off a dead lane's channel): the reply moves whole —
+    /// depth slot included — and explicit inputs survive, since nothing
+    /// consumed them yet.
+    pub(crate) fn from_request(r: Request) -> Parked {
+        Parked {
+            spec: RetrySpec {
+                seq: r.seq,
+                m: r.m,
+                n: r.n,
+                variant: r.variant,
+                enqueued: r.enqueued,
+                deadline: r.deadline,
+                priority: r.priority,
+                attempts: r.attempts,
+                pinned: r.pinned,
+                inputs: Some(r.inputs),
+            },
+            reply: r.reply,
+        }
+    }
 }
 
 /// Aggregated metrics.
@@ -434,6 +532,26 @@ pub struct Metrics {
     /// shed — came after the deadline. Sheds count: the client did not
     /// get its result in time either way.
     pub slo_misses: u64,
+    /// Times this worker's lane was respawned by the supervisor after a
+    /// panic (fresh `Context`, reloaded calibration, replayed pipeline
+    /// catalog). Engine-side overlay like `queue_sheds`.
+    pub worker_restarts: u64,
+    /// Requests reclaimed from this lane on death and re-routed to a
+    /// surviving device. Engine-side overlay.
+    pub failovers: u64,
+    /// Re-execution attempts spent on requests reclaimed from this lane
+    /// (executions are pure, so re-running is safe). Engine-side
+    /// overlay.
+    pub retries: u64,
+    /// Requests that died with this lane and could not be re-executed
+    /// (pinned, retry budget exhausted, inputs unreconstructible, or no
+    /// surviving lane): typed [`ServeError::WorkerLost`] sheds.
+    /// Engine-side overlay.
+    pub worker_lost_sheds: u64,
+    /// Circuit-breaker state changes on this lane (closed → open on
+    /// failure or wedge, open → half-open on respawn, half-open →
+    /// closed on a served probe). Engine-side overlay.
+    pub breaker_transitions: u64,
     /// Time executed requests spent queued before their batch was
     /// dispatched (submission → batch start). Per device this is the
     /// routing-vs-queueing signal: a device whose queue wait dwarfs its
@@ -490,6 +608,11 @@ impl Metrics {
         self.deadline_sheds += other.deadline_sheds;
         self.deadline_requests += other.deadline_requests;
         self.slo_misses += other.slo_misses;
+        self.worker_restarts += other.worker_restarts;
+        self.failovers += other.failovers;
+        self.retries += other.retries;
+        self.worker_lost_sheds += other.worker_lost_sheds;
+        self.breaker_transitions += other.breaker_transitions;
         self.queued.merge(&other.queued);
         self.latency.merge(&other.latency);
         for (seq, (count, secs)) in &other.per_seq {
@@ -640,6 +763,21 @@ pub struct Coordinator {
     /// of the catalog). Set from [`EngineConfig::pipeline_quota`] when
     /// serving.
     pipeline_quota: usize,
+    /// Supervision context of the fleet lane this coordinator serves
+    /// (`None` for unsupervised/embedded use): parking lot, heartbeat,
+    /// fault plan, breaker. Set by the engine's worker loop before
+    /// serving.
+    lane: Option<Arc<engine::LaneCtx>>,
+    /// Fault-injection actions scheduled for the turn in flight
+    /// (deterministic chaos from [`EngineConfig::fault_plan`]); cleared
+    /// when the turn ends.
+    chaos: Option<engine::TurnChaos>,
+    /// Metrics carried over from this lane's previous incarnations
+    /// (before supervisor respawns). Snapshots and the final return
+    /// value fold this in; the live `metrics` field only covers the
+    /// current incarnation, because cache counters are mirrored by
+    /// assignment.
+    metrics_base: Metrics,
     pub metrics: Metrics,
 }
 
@@ -675,8 +813,27 @@ impl Coordinator {
             forecast_order: VecDeque::new(),
             space_cache: BTreeMap::new(),
             pipeline_quota: Self::DEFAULT_PIPELINE_QUOTA,
+            lane: None,
+            chaos: None,
+            metrics_base: Metrics::default(),
             metrics: Metrics::default(),
         })
+    }
+
+    /// Attach the engine's per-lane supervision context (and the metrics
+    /// carried over from the lane's previous incarnation, on respawn).
+    pub(crate) fn attach_lane(&mut self, lane: Arc<engine::LaneCtx>, base: Metrics) {
+        self.lane = Some(lane);
+        self.metrics_base = base;
+    }
+
+    /// This incarnation's metrics folded over the carried-over base —
+    /// what snapshots and the worker's final return value report.
+    pub(crate) fn full_metrics(&mut self) -> Metrics {
+        self.sync_runtime_metrics();
+        let mut m = self.metrics_base.clone();
+        m.merge(&self.metrics);
+        m
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -953,7 +1110,13 @@ impl Coordinator {
                     synth_inputs(&self.runtime, &key.seq, variant, m, n, seed)
                 }
             });
-            replies.push((r.enqueued, r.deadline, r.reply));
+            replies.push((r.enqueued, r.deadline, r.lot, r.reply));
+        }
+        // Injected mid-execute panic: fires after the batch consumed its
+        // requests (explicit inputs are gone — the worst case the
+        // supervisor must handle), before any result exists.
+        if self.chaos.as_ref().is_some_and(|c| c.panic_in_execute) {
+            std::panic::panic_any(engine::chaos::EXEC_PANIC_MARKER);
         }
         let t0 = Instant::now();
         // Resolve once per batch key: the runtime's resolve cache makes
@@ -982,8 +1145,13 @@ impl Coordinator {
         e.1 += dt;
         self.metrics.failures += results.iter().filter(|r| r.is_err()).count() as u64;
         self.sync_runtime_metrics();
-        for ((enqueued, deadline, reply), res) in replies.into_iter().zip(results) {
-            self.finish(enqueued, deadline, reply, res);
+        // Injected reply delay: ship the batch's replies late (heartbeat
+        // stays live — this models a slow lane, not a wedged one).
+        if let Some(d) = self.chaos.as_ref().and_then(|c| c.delay) {
+            std::thread::sleep(d);
+        }
+        for ((enqueued, deadline, lot, reply), res) in replies.into_iter().zip(results) {
+            self.finish(enqueued, deadline, lot, reply, res);
         }
     }
 
@@ -995,6 +1163,7 @@ impl Coordinator {
         &mut self,
         enqueued: Instant,
         deadline: Option<Instant>,
+        lot: Option<usize>,
         reply: Reply,
         res: Result<RunResult>,
     ) {
@@ -1008,7 +1177,19 @@ impl Coordinator {
                 self.metrics.slo_misses += 1;
             }
         }
-        reply.send(res);
+        // Unpark before replying: the parked half holds the queue-depth
+        // slot, so releasing it first preserves the invariant that a
+        // client observing its reply also observes the depth released.
+        if let (Some(lane), Some(idx)) = (&self.lane, lot) {
+            lane.unpark(idx);
+        }
+        // Injected reply drop: the ticket resolves to a disconnect error
+        // once both reply halves are gone — never a hang.
+        if self.chaos.as_ref().is_some_and(|c| c.drop_replies) {
+            drop(reply);
+        } else {
+            reply.send(res);
+        }
     }
 
     /// One scheduling turn: shed already-expired requests, group the
@@ -1032,6 +1213,7 @@ impl Coordinator {
                     self.finish(
                         req.enqueued,
                         req.deadline,
+                        req.lot,
                         req.reply,
                         Err(anyhow::Error::new(ServeError::DeadlineExpired { late_by })),
                     );
@@ -1049,7 +1231,7 @@ impl Coordinator {
         for (req, err) in failed {
             self.metrics.requests += 1;
             self.metrics.failures += 1;
-            self.finish(req.enqueued, req.deadline, req.reply, Err(err));
+            self.finish(req.enqueued, req.deadline, req.lot, req.reply, Err(err));
         }
         batch::order_edf(&mut batches);
         for b in batches {
@@ -1062,8 +1244,7 @@ impl Coordinator {
         match c {
             Control::Shutdown => true,
             Control::Metrics(reply) => {
-                self.sync_runtime_metrics();
-                let _ = reply.send(self.metrics.clone());
+                let _ = reply.send(self.full_metrics());
                 false
             }
             Control::Plan { seq, m, n, reply } => {
@@ -1115,7 +1296,12 @@ impl Coordinator {
     /// `batch_window == 0` (pure drain) the loop never sleeps once a
     /// request is in hand — the `now >= by` check precedes every
     /// blocking receive.
-    pub(crate) fn serve_batched(mut self, rx: mpsc::Receiver<Msg>, cfg: &EngineConfig) -> Metrics {
+    /// One serving session over a borrowed receiver, so the engine's
+    /// supervisor can wrap it in `catch_unwind` and re-enter with a
+    /// rebuilt coordinator on the *same* channel after a lane panic
+    /// (client handles stay valid across respawns). Returns when the
+    /// channel closes or a shutdown sentinel arrives.
+    pub(crate) fn serve_session(&mut self, rx: &mpsc::Receiver<Msg>, cfg: &EngineConfig) {
         self.pipeline_quota = cfg.pipeline_quota;
         let mut closing = false;
         while !closing {
@@ -1170,10 +1356,73 @@ impl Coordinator {
                     }
                 }
             }
+            self.begin_turn(&mut queue);
             self.run_turn(queue);
+            self.end_turn();
         }
         self.sync_runtime_metrics();
-        self.metrics
+    }
+
+    /// Supervision hooks at a turn boundary (no-ops without a lane):
+    /// advance the heartbeat, park every request of the turn in the
+    /// lane's reclamation lot, and trigger any fault-plan actions
+    /// scheduled for this turn number — injected panics fire *after*
+    /// parking, so the supervisor always finds the turn's requests.
+    fn begin_turn(&mut self, queue: &mut [Request]) {
+        let Some(lane) = self.lane.clone() else {
+            return;
+        };
+        let turn = lane.turns.fetch_add(1, Ordering::Relaxed) + 1;
+        lane.beat();
+        for req in queue.iter_mut() {
+            let spec = RetrySpec {
+                seq: req.seq.clone(),
+                m: req.m,
+                n: req.n,
+                variant: req.variant,
+                enqueued: req.enqueued,
+                deadline: req.deadline,
+                priority: req.priority,
+                attempts: req.attempts,
+                pinned: req.pinned,
+                // Explicit tensors are about to be consumed by the
+                // execute path; only synthetic payloads replay.
+                inputs: match req.inputs {
+                    RequestInputs::Synth { seed } => Some(RequestInputs::Synth { seed }),
+                    RequestInputs::Explicit(_) => None,
+                },
+            };
+            let reply = req.reply.tether();
+            req.lot = Some(lane.park(Parked { spec, reply }));
+        }
+        let actions = lane.chaos_for(turn);
+        if let Some(hold) = actions.wedge {
+            // Wedge: go dark mid-turn. The heartbeat was stamped at turn
+            // start and now goes stale; with a wedge timeout configured
+            // the detector opens the breaker, then closes it when the
+            // beat advances again below.
+            std::thread::sleep(hold);
+            lane.beat();
+        }
+        self.chaos = actions.chaos;
+        if actions.hard_kill {
+            std::panic::panic_any(engine::chaos::HARD_KILL_MARKER);
+        }
+        if actions.kill {
+            std::panic::panic_any(engine::chaos::KILL_MARKER);
+        }
+    }
+
+    /// Close out a turn's supervision state: clear one-turn chaos,
+    /// advance the heartbeat, and — if the lane was half-open — count
+    /// the served turn as the breaker's successful probe and close it.
+    fn end_turn(&mut self) {
+        self.chaos = None;
+        let Some(lane) = &self.lane else {
+            return;
+        };
+        lane.beat();
+        lane.fleet.close_if_half_open(lane.index);
     }
 
     /// Execute + verify one sequence against the Rust reference oracle;
@@ -1387,6 +1636,9 @@ mod tests {
                 enqueued: Instant::now(),
                 deadline: None,
                 priority: 0,
+                attempts: 0,
+                pinned: false,
+                lot: None,
                 reply: Reply::new(rtx, None),
             }
         };
@@ -1459,8 +1711,9 @@ mod tests {
         // worker thread; producers send Synth inputs.
         let handle = std::thread::spawn(move || {
             let ctx = Arc::new(Context::new());
-            let coord = Coordinator::new(ctx, &dir).unwrap();
-            coord.serve_batched(rx, &EngineConfig::default())
+            let mut coord = Coordinator::new(ctx, &dir).unwrap();
+            coord.serve_session(&rx, &EngineConfig::default());
+            coord.full_metrics()
         });
         let mut replies = vec![];
         for i in 0..3 {
@@ -1474,6 +1727,9 @@ mod tests {
                 enqueued: Instant::now(),
                 deadline: None,
                 priority: 0,
+                attempts: 0,
+                pinned: false,
+                lot: None,
                 reply: Reply::new(rtx, None),
             }))
             .unwrap();
@@ -1507,6 +1763,9 @@ mod tests {
             enqueued: Instant::now(),
             deadline: None,
             priority: 0,
+            attempts: 0,
+            pinned: false,
+            lot: None,
             reply: Reply::new(rtx, None),
         };
         coord.run_turn(vec![req]);
@@ -1541,6 +1800,9 @@ mod tests {
             enqueued,
             deadline: Some(enqueued + Duration::from_millis(1)), // long past
             priority: 0,
+            attempts: 0,
+            pinned: false,
+            lot: None,
             reply: Reply::new(rtx, None),
         };
         coord.run_turn(vec![req]);
@@ -1644,6 +1906,9 @@ mod tests {
                 enqueued: Instant::now(),
                 deadline: None,
                 priority: 0,
+                attempts: 0,
+                pinned: false,
+                lot: None,
                 reply: Reply::new(rtx, None),
             };
             (r, rrx)
@@ -1689,6 +1954,9 @@ mod tests {
                 enqueued: now,
                 deadline: deadline.map(|d| now + d),
                 priority: 0,
+                attempts: 0,
+                pinned: false,
+                lot: None,
                 reply: Reply::new(rtx, None),
             };
             (r, rrx)

@@ -234,6 +234,23 @@ impl DeviceRegistry {
             })
             .clone()
     }
+
+    /// A *fresh* context for the device — the worker-respawn path: the
+    /// supervisor must not reuse state from the context its lane just
+    /// panicked with. The persistent per-device calibration written by
+    /// the first build is reloaded from disk, so a rebuild is a cache
+    /// read, not a recalibration. The cached [`DeviceRegistry::context`]
+    /// slot is left untouched (a `from_context` registry keeps handing
+    /// out its original single-device context there).
+    pub fn rebuild_context(&self, index: usize) -> Arc<Context> {
+        let slot = &self.slots[index];
+        Arc::new(Context::for_device_interned(
+            self.lib.clone(),
+            slot.dev.clone(),
+            slot.name.clone(),
+            &self.cal_dir,
+        ))
+    }
 }
 
 #[cfg(test)]

@@ -76,6 +76,10 @@ pub struct CostModel {
     /// path when no lanes are supplied, the fallback when a worker
     /// missed the deadline or is gone.
     local_forecasts: AtomicU64,
+    /// Lanes skipped by routing or scatter because their circuit
+    /// breaker was not closed (quarantined by the supervisor or wedge
+    /// detector, or half-open with the probe slot already claimed).
+    quarantine_skips: AtomicU64,
     /// Routable roster of registered script pipelines: name → planning
     /// inputs, published by [`crate::Client::register_pipeline`] once
     /// every worker acked. Entries make the name forecastable (and thus
@@ -101,6 +105,9 @@ pub struct RoutingStats {
     pub worker_forecasts: u64,
     /// Per-device forecasts computed locally on the calling thread.
     pub local_forecasts: u64,
+    /// Lanes skipped because their circuit breaker was not closed —
+    /// routing decisions and shard/forecast scatters both count here.
+    pub quarantine_skips: u64,
 }
 
 /// What a local fallback needs to forecast a sequence: built lazily at
@@ -143,6 +150,7 @@ impl CostModel {
             cold_keys: AtomicU64::new(0),
             worker_forecasts: AtomicU64::new(0),
             local_forecasts: AtomicU64::new(0),
+            quarantine_skips: AtomicU64::new(0),
             pipelines: Mutex::new(BTreeMap::new()),
         }
     }
@@ -189,6 +197,15 @@ impl CostModel {
             cold_keys: self.cold_keys.load(Ordering::Relaxed),
             worker_forecasts: self.worker_forecasts.load(Ordering::Relaxed),
             local_forecasts: self.local_forecasts.load(Ordering::Relaxed),
+            quarantine_skips: self.quarantine_skips.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Count `n` lanes skipped because their breaker was not closed
+    /// (routing masks and the planner-shard scatter both report here).
+    pub(crate) fn note_quarantined(&self, n: u64) {
+        if n > 0 {
+            self.quarantine_skips.fetch_add(n, Ordering::Relaxed);
         }
     }
 
@@ -199,7 +216,7 @@ impl CostModel {
     /// path uses [`CostModel::costs_via`] with worker lanes instead —
     /// and repeats are a read of the cache.
     pub fn costs(&self, seq: &str, m: usize, n: usize) -> Option<Arc<Vec<f64>>> {
-        self.costs_via(seq, m, n, None)
+        self.costs_via(seq, m, n, None, None)
     }
 
     /// [`CostModel::costs`] with the cold path scattered over worker
@@ -210,12 +227,17 @@ impl CostModel {
     /// the deadline, is gone, or errors are forecast locally — a
     /// bit-identical fallback, since the forecast is a pure function of
     /// (key, calibration).
+    /// `blocked[i]` marks a quarantined lane: its worker gets no
+    /// `Forecast` query (a dead or wedged worker would just burn the
+    /// gather deadline) and its entry is forecast locally instead —
+    /// bit-identical, so the cached vector is the same either way.
     pub(crate) fn costs_via(
         &self,
         seq: &str,
         m: usize,
         n: usize,
         lanes: Option<(&[mpsc::Sender<Msg>], Duration)>,
+        blocked: Option<&[bool]>,
     ) -> Option<Arc<Vec<f64>>> {
         let p = ProblemSize::new(m, n).padded();
         if let Some(c) = self
@@ -246,7 +268,12 @@ impl CostModel {
                 // so the per-device planner runs overlap.
                 let pending: Vec<_> = txs
                     .iter()
-                    .map(|tx| {
+                    .enumerate()
+                    .map(|(i, tx)| {
+                        match blocked {
+                            Some(mask) if mask[i] => return None,
+                            _ => {}
+                        }
                         let (reply, rx) = mpsc::channel();
                         tx.send(Msg::Control(Control::Forecast {
                             seq: seq.to_string(),
@@ -364,11 +391,15 @@ impl CostModel {
     /// (parallel to registry indices). Ties break to the lowest index,
     /// so routing is deterministic.
     pub fn route(&self, seq: &str, m: usize, n: usize, depths: &[u64]) -> usize {
-        self.route_via(seq, m, n, depths, None)
+        self.route_via(seq, m, n, depths, None, None)
     }
 
     /// [`CostModel::route`] with the cold-path forecasts running on the
-    /// supplied worker lanes (see [`CostModel::costs_via`]).
+    /// supplied worker lanes (see [`CostModel::costs_via`]) and an
+    /// optional quarantine mask: `blocked[i]` lanes never win the
+    /// argmin (nor the shallowest-queue fallback). The caller
+    /// guarantees at least one unblocked lane — an all-true mask is
+    /// passed as `None` instead.
     pub(crate) fn route_via(
         &self,
         seq: &str,
@@ -376,11 +407,16 @@ impl CostModel {
         n: usize,
         depths: &[u64],
         lanes: Option<(&[mpsc::Sender<Msg>], Duration)>,
+        blocked: Option<&[bool]>,
     ) -> usize {
         debug_assert_eq!(depths.len(), self.registry.len());
-        match self.costs_via(seq, m, n, lanes) {
-            Some(costs) => score_argmin(&costs, depths).unwrap_or_else(|| shallowest(depths)),
-            None => shallowest(depths),
+        if let Some(mask) = blocked {
+            self.note_quarantined(mask.iter().filter(|&&b| b).count() as u64);
+        }
+        match self.costs_via(seq, m, n, lanes, blocked) {
+            Some(costs) => score_argmin_masked(&costs, depths, blocked)
+                .unwrap_or_else(|| shallowest_masked(depths, blocked)),
+            None => shallowest_masked(depths, blocked),
         }
     }
 }
@@ -393,9 +429,20 @@ impl CostModel {
 /// caller to [`shallowest`]. Public within the crate's tests so scoring
 /// is testable without an engine.
 pub fn score_argmin(costs: &[f64], depths: &[u64]) -> Option<usize> {
+    score_argmin_masked(costs, depths, None)
+}
+
+/// [`score_argmin`] with quarantined lanes (`blocked[i]`) excluded from
+/// the argmin.
+fn score_argmin_masked(costs: &[f64], depths: &[u64], blocked: Option<&[bool]>) -> Option<usize> {
     assert_eq!(costs.len(), depths.len());
     let mut best: Option<(usize, f64)> = None;
     for (i, (&c, &d)) in costs.iter().zip(depths).enumerate() {
+        if let Some(mask) = blocked {
+            if mask[i] {
+                continue;
+            }
+        }
         let score = c * (d as f64 + 1.0);
         if !score.is_finite() {
             continue;
@@ -414,12 +461,29 @@ pub fn score_argmin(costs: &[f64], depths: &[u64]) -> Option<usize> {
 /// Fallback for unroutable (unknown-sequence) submissions: the
 /// shallowest queue, ties to the lowest index.
 pub fn shallowest(depths: &[u64]) -> usize {
-    depths
+    shallowest_masked(depths, None)
+}
+
+/// [`shallowest`] with quarantined lanes excluded; an all-blocked mask
+/// degrades to the unmasked answer rather than refusing to route.
+fn shallowest_masked(depths: &[u64], blocked: Option<&[bool]>) -> usize {
+    let eligible = depths
         .iter()
         .enumerate()
+        .filter(|&(i, _)| match blocked {
+            Some(mask) => !mask[i],
+            None => true,
+        })
         .min_by_key(|&(_, &d)| d)
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+        .map(|(i, _)| i);
+    eligible.unwrap_or_else(|| {
+        depths
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &d)| d)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    })
 }
 
 #[cfg(test)]

@@ -41,5 +41,7 @@ pub mod sequences;
 pub mod sim;
 pub mod util;
 
-pub use coordinator::{Client, Engine, EngineConfig, FleetMetrics, ServeError, SubmitRequest, Ticket};
+pub use coordinator::{
+    Client, Engine, EngineConfig, Fault, FaultPlan, FleetMetrics, ServeError, SubmitRequest, Ticket,
+};
 pub use fleet::{DeviceId, DeviceRegistry};

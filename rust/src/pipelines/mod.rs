@@ -29,6 +29,8 @@
 //! built-in artifacts fix kernel structure while the planner retunes
 //! fused-vs-cublas per device and size.
 
+pub mod store;
+
 use crate::autotune;
 use crate::codegen;
 use crate::fusion::implgen::FusionImpl;

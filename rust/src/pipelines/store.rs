@@ -1,0 +1,190 @@
+//! Persistent dynamic-pipeline catalog: the `(name, source,
+//! fingerprint)` roster of registered script pipelines, written beside
+//! the artifacts directory so registrations survive engine restarts.
+//!
+//! Two paths replay it:
+//!
+//! * **engine start** re-registers every persisted entry through the
+//!   normal fleet-wide registration (compile on every worker,
+//!   all-or-nothing), evicting entries whose recomputed fingerprint no
+//!   longer matches the recorded one;
+//! * **worker respawn** replays the same store onto the rebuilt
+//!   coordinator only, verifying each fingerprint against the roster —
+//!   a restarted lane must serve exactly what the surviving lanes
+//!   serve.
+//!
+//! The format is deliberately dumb and self-delimiting: a version
+//! line, then per entry a header line `name fingerprint byte-len`
+//! followed by exactly `byte-len` bytes of source and a newline.
+//! Sources contain newlines, so length-prefixing (not line-splitting)
+//! is what makes round-trips exact. IO failures never fail serving: a
+//! store that cannot be read starts empty, a store that cannot be
+//! written keeps the in-memory roster authoritative for this process.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+const FILE_NAME: &str = "pipelines.catalog.txt";
+const VERSION_LINE: &str = "fusebla-pipeline-catalog v1";
+
+/// Thread-safe persistent roster of registered pipelines. Cheap enough
+/// to rewrite whole on every mutation — registration is a control-plane
+/// event, not a hot path.
+pub struct CatalogStore {
+    /// `None` for in-memory stores (tests, engines without a directory).
+    path: Option<PathBuf>,
+    entries: Mutex<BTreeMap<String, (String, u64)>>,
+}
+
+impl CatalogStore {
+    /// Load the catalog persisted beside `dir` (the artifacts
+    /// directory), or an empty store bound to that location. Unreadable
+    /// or malformed files yield an empty store — the catalog is a
+    /// convenience roster, never a correctness input (fingerprints are
+    /// re-verified at every replay).
+    pub fn load(dir: &Path) -> CatalogStore {
+        let path = dir.join(FILE_NAME);
+        let entries = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| parse(&text))
+            .unwrap_or_default();
+        CatalogStore {
+            path: Some(path),
+            entries: Mutex::new(entries),
+        }
+    }
+
+    /// A store with no backing file — registrations live for the
+    /// process only.
+    pub fn in_memory() -> CatalogStore {
+        CatalogStore {
+            path: None,
+            entries: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Snapshot of every entry as `(name, source, fingerprint)`, in
+    /// name order (deterministic replay order).
+    pub fn entries(&self) -> Vec<(String, String, u64)> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, (src, fp))| (name.clone(), src.clone(), *fp))
+            .collect()
+    }
+
+    /// Record (or overwrite) a registration and persist. Write errors
+    /// are swallowed: the in-memory roster stays authoritative for this
+    /// process, and the next successful write catches the file up.
+    pub fn insert(&self, name: &str, src: &str, fingerprint: u64) {
+        let mut entries = self.entries.lock().unwrap();
+        entries.insert(name.to_string(), (src.to_string(), fingerprint));
+        self.persist(&entries);
+    }
+
+    /// Drop a registration and persist. Removing an unknown name is a
+    /// no-op (no rewrite).
+    pub fn remove(&self, name: &str) {
+        let mut entries = self.entries.lock().unwrap();
+        if entries.remove(name).is_some() {
+            self.persist(&entries);
+        }
+    }
+
+    fn persist(&self, entries: &BTreeMap<String, (String, u64)>) {
+        let Some(path) = &self.path else { return };
+        let mut out = String::from(VERSION_LINE);
+        out.push('\n');
+        for (name, (src, fp)) in entries {
+            out.push_str(&format!("{name} {fp:#018x} {}\n", src.len()));
+            out.push_str(src);
+            out.push('\n');
+        }
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let _ = std::fs::write(path, out);
+    }
+}
+
+/// Parse the persisted format; `None` on any structural violation (the
+/// caller treats that as an empty catalog).
+fn parse(text: &str) -> Option<BTreeMap<String, (String, u64)>> {
+    let mut entries = BTreeMap::new();
+    let rest = text.strip_prefix(VERSION_LINE)?.strip_prefix('\n')?;
+    let mut cursor = rest;
+    while !cursor.is_empty() {
+        let (header, tail) = cursor.split_once('\n')?;
+        let mut parts = header.split_whitespace();
+        let name = parts.next()?.to_string();
+        let fp_text = parts.next()?;
+        let fp = u64::from_str_radix(fp_text.strip_prefix("0x")?, 16).ok()?;
+        let len: usize = parts.next()?.parse().ok()?;
+        if parts.next().is_some() || !tail.is_char_boundary(len) || tail.len() < len + 1 {
+            return None;
+        }
+        let src = tail[..len].to_string();
+        cursor = tail[len..].strip_prefix('\n')?;
+        entries.insert(name, (src, fp));
+    }
+    Some(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fusebla_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn round_trips_multiline_sources_exactly() {
+        let dir = scratch("roundtrip");
+        let store = CatalogStore::load(&dir);
+        assert!(store.entries().is_empty(), "fresh directory starts empty");
+        let src = "let a = x + y\nlet b = a * a\nreturn b\n";
+        store.insert("amx", src, 0xdead_beef);
+        store.insert("other", "return x\n", 7);
+        let reloaded = CatalogStore::load(&dir);
+        assert_eq!(
+            reloaded.entries(),
+            vec![
+                ("amx".to_string(), src.to_string(), 0xdead_beef),
+                ("other".to_string(), "return x\n".to_string(), 7),
+            ]
+        );
+        reloaded.remove("amx");
+        assert_eq!(CatalogStore::load(&dir).entries().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_files_load_as_empty() {
+        let dir = scratch("malformed");
+        std::fs::write(dir.join(FILE_NAME), "not a catalog\n").unwrap();
+        assert!(CatalogStore::load(&dir).entries().is_empty());
+        // truncated payload: header promises more bytes than exist
+        std::fs::write(
+            dir.join(FILE_NAME),
+            format!("{VERSION_LINE}\nname 0x0000000000000001 9999\nshort\n"),
+        )
+        .unwrap();
+        assert!(CatalogStore::load(&dir).entries().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn in_memory_store_never_touches_disk() {
+        let store = CatalogStore::in_memory();
+        store.insert("amx", "return x\n", 1);
+        assert_eq!(store.entries().len(), 1);
+        store.remove("amx");
+        assert!(store.entries().is_empty());
+    }
+}

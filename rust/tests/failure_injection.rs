@@ -3,18 +3,19 @@
 //! a deployment requirement the paper's compiler (which controls its own
 //! binaries) never faced, but ours (AOT catalog + separate runtime) does.
 
+use fusebla::coordinator::traffic;
 use fusebla::fusion::ImplAxes;
 use fusebla::ir::elem::ProblemSize;
 use fusebla::planner::{plan_space, PlannerConfig};
 use fusebla::runtime::{Runtime, Tensor};
 use fusebla::sequences;
 use fusebla::sim::DeviceModel;
-use fusebla::{DeviceRegistry, Engine, EngineConfig};
+use fusebla::{DeviceRegistry, Engine, EngineConfig, Fault, FaultPlan, ServeError, SubmitRequest};
 use std::collections::BTreeMap;
 use std::fs;
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn scratch_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("fusebla_fi_{name}_{}", std::process::id()));
@@ -261,6 +262,360 @@ fn queue_depths_return_to_zero_after_all_error_burst() {
     let depths = client.queue_depths();
     assert_eq!(depths, vec![0, 0], "{queue_sheds} queue shed(s), depths {depths:?}");
     let _ = engine.shutdown_fleet();
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
+}
+
+/// A two-lane chaos fleet (GTX 480 + GT 430) over a stub catalog, with
+/// the given fault plan active from the first turn.
+fn chaos_fleet(tag: &str, plan: FaultPlan, cfg: EngineConfig) -> (PathBuf, PathBuf, Engine) {
+    let dir = fusebla::bench_support::stub_catalog(tag, &["waxpby", "vadd"]);
+    let cal = scratch_dir(&format!("{tag}_cal"));
+    let registry = Arc::new(
+        DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], &cal).unwrap(),
+    );
+    let engine = Engine::start_fleet(
+        registry,
+        &dir,
+        EngineConfig {
+            fault_plan: plan,
+            ..cfg
+        },
+    )
+    .unwrap();
+    (dir, cal, engine)
+}
+
+/// Block until the lane's supervisor has respawned its worker at least
+/// `want` times (the restart counter is overlaid onto the per-device
+/// metrics snapshot).
+fn await_restarts(engine: &Engine, lane: usize, want: u64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if engine.fleet_metrics().devices[lane].1.worker_restarts >= want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "lane {lane} never reached {want} restart(s)"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The acceptance scenario: a seeded fault plan that kills *every* lane
+/// at least once while a seeded poisson schedule keeps arriving. Zero
+/// lost tickets — every submission reaches a terminal outcome (the
+/// open-loop harness waits them all), the accounting adds up, queue
+/// depths return to zero, both lanes restarted, and the engine shuts
+/// down without a panic.
+#[test]
+fn seeded_chaos_kills_every_lane_and_loses_no_tickets() {
+    let mut plan = FaultPlan::seeded(0xC0FFEE, 2, 4);
+    // guarantee the "each lane dies at least once" coverage on top of
+    // the seeded mix (still deterministic — the plan is plain data)
+    plan.faults.push(Fault::Kill { lane: 0, turn: 2 });
+    plan.faults.push(Fault::Kill { lane: 1, turn: 1 });
+    let (dir, cal, engine) = chaos_fleet(
+        "chaoscore",
+        plan,
+        EngineConfig {
+            batch_window: Duration::from_millis(5),
+            retry_budget: 3,
+            ..EngineConfig::default()
+        },
+    );
+    let client = engine.client();
+    // seed lane 1 with a pinned request so the weak device takes its
+    // first (fatal) turn even if the router would starve it; pinned
+    // requests never migrate, so this one sheds typed
+    let gt430 = client.devices()[1].name().to_string();
+    let pinned = client
+        .submit(SubmitRequest::new("waxpby", 32, 65536).pin(&gt430))
+        .unwrap();
+    let err = pinned.wait().err().expect("pinned to a killed lane");
+    match err.downcast_ref::<ServeError>() {
+        Some(ServeError::WorkerLost { device, attempts }) => {
+            assert_eq!(device, &gt430);
+            assert_eq!(*attempts, 0);
+        }
+        other => panic!("expected WorkerLost, got {other:?} ({err:#})"),
+    }
+    let spec = traffic::TrafficSpec {
+        scenario: traffic::Scenario::Poisson,
+        seed: 42,
+        rate: 400.0,
+        horizon: Duration::from_millis(500),
+        keys: vec![("waxpby".into(), 32, 65536), ("vadd".into(), 32, 65536)],
+    };
+    let report = traffic::run_open_loop(&client, &spec, &traffic::OpenLoopOptions::default());
+    assert!(report.submitted > 0);
+    // zero lost tickets: every submission is accounted for by exactly
+    // one terminal outcome
+    assert_eq!(
+        report.completed + report.failed + report.sheds() + report.other_errors,
+        report.submitted,
+        "{report:?}"
+    );
+    assert_eq!(client.queue_depths(), vec![0, 0], "depths must drain to zero");
+    let fleet = engine.shutdown_fleet();
+    assert!(fleet.lost.is_empty(), "recoverable kills lose no lane: {:?}", fleet.lost);
+    let agg = fleet.aggregate();
+    assert!(
+        agg.worker_restarts >= 2,
+        "both lanes must die and respawn at least once: {} restart(s)",
+        agg.worker_restarts
+    );
+    assert!(agg.breaker_transitions >= 4, "open + re-admit per kill");
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
+}
+
+/// A restarted lane must serve registered pipelines bit-identically to
+/// a lane that never died: the supervisor replays the persisted catalog
+/// onto the rebuilt coordinator and verifies each fingerprint.
+#[test]
+fn restarted_lane_serves_pipelines_bit_identically() {
+    let plan = FaultPlan {
+        faults: vec![Fault::Kill { lane: 1, turn: 1 }],
+    };
+    let (dir, cal, engine) = chaos_fleet("chaosident", plan, EngineConfig::default());
+    let client = engine.client();
+    let fp = client
+        .register_pipeline("amx", fusebla::pipelines::examples::ADD_MUL_EXP)
+        .unwrap();
+    assert_ne!(fp, 0);
+    assert!(
+        dir.join("pipelines.catalog.txt").exists(),
+        "registration must persist beside the artifacts"
+    );
+    let names: Vec<String> = client.devices().iter().map(|d| d.name().to_string()).collect();
+    // first turn on lane 1 is scripted fatal; the pinned trigger sheds
+    let trigger = client
+        .submit(SubmitRequest::new("amx", 32, 256).synth(7).pin(&names[1]))
+        .unwrap();
+    assert!(matches!(
+        trigger.wait().err().expect("killed lane").downcast_ref::<ServeError>(),
+        Some(ServeError::WorkerLost { .. })
+    ));
+    await_restarts(&engine, 1, 1);
+    // same key, same synthetic seed, on the respawned lane and on a
+    // never-killed lane: the interpreter-backed pipeline runs on both
+    let on_restarted = client
+        .submit(SubmitRequest::new("amx", 32, 256).synth(7).pin(&names[1]))
+        .unwrap()
+        .wait()
+        .expect("respawned lane serves the replayed pipeline");
+    let on_survivor = client
+        .submit(SubmitRequest::new("amx", 32, 256).synth(7).pin(&names[0]))
+        .unwrap()
+        .wait()
+        .expect("surviving lane serves the pipeline");
+    let (a, b) = (&on_restarted.env["z"], &on_survivor.env["z"]);
+    assert_eq!(a.dims, b.dims);
+    assert_eq!(a.data.len(), b.data.len());
+    for (x, y) in a.data.iter().zip(&b.data) {
+        assert_eq!(x.to_bits(), y.to_bits(), "restart must not change results");
+    }
+    let fleet = engine.shutdown_fleet();
+    assert!(fleet.lost.is_empty());
+    assert_eq!(fleet.devices[1].1.worker_restarts, 1);
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
+}
+
+/// Satellite regression: `shutdown_fleet` used to panic when a worker
+/// thread had died. A scripted hard kill leaves lane 1 dead for real;
+/// shutdown must return partial metrics with the lane reported in
+/// `lost`, and the surviving lane's counters intact.
+#[test]
+fn hard_kill_reports_partial_fleet_metrics_at_shutdown() {
+    let plan = FaultPlan {
+        faults: vec![Fault::HardKill { lane: 1, turn: 1 }],
+    };
+    let (dir, cal, engine) = chaos_fleet("chaoshard", plan, EngineConfig::default());
+    let client = engine.client();
+    let names: Vec<String> = client.devices().iter().map(|d| d.name().to_string()).collect();
+    // the surviving lane works before and after the neighbour dies
+    let t0 = client
+        .submit(SubmitRequest::new("waxpby", 32, 65536).pin(&names[0]))
+        .unwrap();
+    assert!(t0.wait().is_err(), "stub backend fails execution, typed-free");
+    let trigger = client
+        .submit(SubmitRequest::new("waxpby", 32, 65536).pin(&names[1]))
+        .unwrap();
+    let err = trigger.wait().err().expect("hard-killed lane");
+    assert!(matches!(
+        err.downcast_ref::<ServeError>(),
+        Some(ServeError::WorkerLost { .. })
+    ));
+    // wait until the lane's receiver is gone — submits to it fail at
+    // send — so shutdown deterministically joins a dead thread
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match client.submit(SubmitRequest::new("waxpby", 32, 65536).pin(&names[1])) {
+            Err(_) => break,
+            Ok(t) => {
+                let _ = t.wait();
+            }
+        }
+        assert!(Instant::now() < deadline, "lane 1 never died for real");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let fleet = engine.shutdown_fleet();
+    assert_eq!(fleet.devices.len(), 2, "partial metrics keep the full roster");
+    assert_eq!(fleet.lost.len(), 1, "exactly one lane died: {:?}", fleet.lost);
+    assert_eq!(fleet.lost[0].name(), names[1]);
+    assert_eq!(fleet.devices[0].1.requests, 1, "survivor's counters intact");
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
+}
+
+/// Chaos property: under randomized (but seeded) fault plans every
+/// submitted ticket terminates and the queue depths return to zero —
+/// across several seeds, on one shared registry (calibration is paid
+/// once and reloaded).
+#[test]
+fn randomized_fault_plans_terminate_every_ticket() {
+    let dir = fusebla::bench_support::stub_catalog("chaosprop", &["waxpby", "vadd"]);
+    let cal = scratch_dir("chaosprop_cal");
+    let registry = Arc::new(
+        DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], &cal).unwrap(),
+    );
+    for seed in [1u64, 2, 5] {
+        let plan = FaultPlan::seeded(seed, 2, 5);
+        assert_eq!(plan.faults, FaultPlan::seeded(seed, 2, 5).faults, "plans replay");
+        let engine = Engine::start_fleet(
+            registry.clone(),
+            &dir,
+            EngineConfig {
+                batch_window: Duration::from_millis(2),
+                fault_plan: plan,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let client = engine.client();
+        let tickets: Vec<_> = (0..16u64)
+            .map(|i| {
+                let seq = if i % 2 == 0 { "waxpby" } else { "vadd" };
+                client.submit(SubmitRequest::new(seq, 32, 65536).synth(i)).unwrap()
+            })
+            .collect();
+        // termination is the property: every wait returns (the typed
+        // shed, the stub execution error, or a disconnect — never a hang)
+        for t in tickets {
+            let _ = t.wait();
+        }
+        assert_eq!(client.queue_depths(), vec![0, 0], "seed {seed}");
+        let fleet = engine.shutdown_fleet();
+        assert!(fleet.lost.is_empty(), "seeded plans are recoverable: seed {seed}");
+    }
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
+}
+
+/// A scripted wedge (stall without a panic) must trip the watchdog:
+/// the stale heartbeat under queued work opens the lane's breaker, and
+/// the detector closes it again once the lane's beat advances — no
+/// respawn, because the worker never died.
+#[test]
+fn wedge_detector_opens_and_closes_the_breaker() {
+    let plan = FaultPlan {
+        faults: vec![Fault::Wedge {
+            lane: 0,
+            turn: 1,
+            hold: Duration::from_millis(400),
+        }],
+    };
+    let (dir, cal, engine) = chaos_fleet(
+        "chaoswedge",
+        plan,
+        EngineConfig {
+            wedge_timeout: Some(Duration::from_millis(50)),
+            ..EngineConfig::default()
+        },
+    );
+    let client = engine.client();
+    let name0 = client.devices()[0].name().to_string();
+    let t = client
+        .submit(SubmitRequest::new("waxpby", 32, 65536).pin(&name0))
+        .unwrap();
+    // the wedged turn finishes late but finishes: the stub execution
+    // error arrives after the 400 ms stall, never a hang
+    assert!(t.wait().is_err());
+    // open (stale beat under load) + close (beat advanced) = 2
+    // transitions; poll because the close happens on the detector's
+    // clock, not the reply's
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = &engine.fleet_metrics().devices[0].1;
+        if m.breaker_transitions >= 2 {
+            assert_eq!(m.worker_restarts, 0, "a wedge is not a death");
+            break;
+        }
+        assert!(Instant::now() < deadline, "detector never cycled the breaker");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let fleet = engine.shutdown_fleet();
+    assert!(fleet.lost.is_empty());
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&cal);
+}
+
+/// Satellite: the dynamic pipeline catalog survives engine restarts —
+/// a registration made by one engine is served by the next engine over
+/// the same artifacts directory, and an unregistration sticks too.
+#[test]
+fn pipeline_catalog_persists_across_engine_restarts() {
+    let dir = fusebla::bench_support::stub_catalog("catpersist", &["waxpby"]);
+    let cal = scratch_dir("catpersist_cal");
+    let fresh_engine = || {
+        let registry = Arc::new(
+            DeviceRegistry::new(vec![DeviceModel::gtx480(), DeviceModel::gt430()], &cal).unwrap(),
+        );
+        Engine::start_fleet(registry, &dir, EngineConfig::default()).unwrap()
+    };
+    let a = fresh_engine();
+    let fp = a
+        .client()
+        .register_pipeline("amx", fusebla::pipelines::examples::ADD_MUL_EXP)
+        .unwrap();
+    assert!(dir.join("pipelines.catalog.txt").exists());
+    let _ = a.shutdown_fleet();
+    // a brand-new engine re-registers the persisted entry at start and
+    // serves it without any client-side registration
+    let b = fresh_engine();
+    let res = b
+        .client()
+        .submit(SubmitRequest::new("amx", 32, 256).synth(3))
+        .unwrap()
+        .wait()
+        .expect("persisted pipeline serves after restart");
+    assert!(res.env.contains_key("z"));
+    // re-registering identical source is an idempotent dedup with the
+    // same fingerprint — proof the replay restored the same program
+    assert_eq!(
+        b.client()
+            .register_pipeline("amx", fusebla::pipelines::examples::ADD_MUL_EXP)
+            .unwrap(),
+        fp
+    );
+    assert!(b.client().unregister_pipeline("amx"));
+    let _ = b.shutdown_fleet();
+    // the unregistration persisted: the next engine knows nothing of it
+    // (pinned, so the unknown name reaches a worker instead of the router)
+    let c = fresh_engine();
+    let pin = c.client().devices()[0].name().to_string();
+    let err = c
+        .client()
+        .submit(SubmitRequest::new("amx", 32, 256).synth(3).pin(&pin))
+        .unwrap()
+        .wait()
+        .err()
+        .expect("unregistered pipeline is gone after restart");
+    assert!(format!("{err:#}").contains("unknown sequence"), "{err:#}");
+    let _ = c.shutdown_fleet();
     let _ = fs::remove_dir_all(&dir);
     let _ = fs::remove_dir_all(&cal);
 }
