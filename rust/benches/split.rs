@@ -1,0 +1,105 @@
+//! Split-serving study — where G-way row-block splitting starts to
+//! win, and what the split-aware routing decision costs.
+//!
+//! Entirely offline-safe: [`CostModel::split_profiles`] is a pure
+//! function of the simulated calibrations and the interconnect
+//! profile, so the crossover sweep and the per-submit decision cost
+//! need no built artifacts.
+//!
+//! Two axes:
+//! - **Crossover**: the smallest square bicgk size whose 2-way split
+//!   is forecast faster than single-device execution, on PCIe 2.0 x16
+//!   vs NVLink twins — the interconnect moves the crossover, which is
+//!   the point of modelling it.
+//! - **Decision overhead**: the warm split-aware `decide` cost — the
+//!   number that must stay tiny for the router to sit on the submit
+//!   path.
+//!
+//! Results merge into `BENCH_fleet.json` under `split` so the
+//! trajectory stays diffable across PRs.
+//!
+//! `cargo bench --bench split`
+
+use fusebla::bench_support::report::update_bench_json;
+use fusebla::fleet::{CostModel, DeviceRegistry, SplitPolicy};
+use fusebla::sim::multi::Interconnect;
+use fusebla::sim::DeviceModel;
+use fusebla::util::stats::{bench, black_box};
+use fusebla::util::{Json, Summary};
+use std::path::Path;
+use std::sync::Arc;
+
+const BENCH_FLEET_JSON: &str = "BENCH_fleet.json";
+const SIZES: [usize; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// Twin GTX 480s over the given link — identical devices, so the
+/// forecast ratio isolates the split's own costs (scatter, partial
+/// reduces, gather) from heterogeneity.
+fn twin_model(tag: &str, link: Interconnect) -> CostModel {
+    let dir = std::env::temp_dir().join(format!("fusebla_splitbench_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut twin = DeviceModel::gtx480();
+    twin.name = "GeForce GTX 480 (model) #2".into();
+    let reg = DeviceRegistry::new(vec![DeviceModel::gtx480(), twin], &dir)
+        .expect("twin registry")
+        .with_link(link);
+    CostModel::new(Arc::new(reg))
+}
+
+/// The smallest swept square size whose G-way ratio beats 1.0 on
+/// device 0 (0 when splitting never wins in the sweep).
+fn crossover(model: &CostModel, g: usize) -> usize {
+    for m in SIZES {
+        let profiles = model.split_profiles("bicgk", m, m).expect("bicgk is a built-in");
+        let Some(p) = profiles.first() else { return 0 };
+        if p.ratio(g) < 1.0 {
+            return m;
+        }
+    }
+    0
+}
+
+fn main() {
+    let report = Path::new(BENCH_FLEET_JSON);
+    let mut section: Vec<(String, Json)> = Vec::new();
+
+    for (name, link) in [("pcie", Interconnect::pcie2_x16()), ("nvlink", Interconnect::nvlink())] {
+        let model = twin_model(name, link);
+        for g in [2usize, 4] {
+            let at = crossover(&model, g);
+            println!("crossover {name} G={g}: m = {at} (0 = never in sweep)");
+            section.push((format!("crossover_m_{name}_g{g}"), Json::num(at as f64)));
+        }
+        let profiles = model.split_profiles("bicgk", 8192, 8192).expect("bicgk is a built-in");
+        let p = profiles.first().expect("twin registry has devices");
+        println!(
+            "{name} @ 8192x8192: ratio(2) = {:.3}, ratio(4) = {:.3}, best G = {}",
+            p.ratio(2),
+            p.ratio(4),
+            p.best_g()
+        );
+        section.push((format!("ratio_g2_m8192_{name}"), Json::num(p.ratio(2))));
+        section.push((format!("ratio_g4_m8192_{name}"), Json::num(p.ratio(4))));
+        section.push((format!("best_g_m8192_{name}"), Json::num(p.best_g() as f64)));
+    }
+
+    // Warm split-aware decision cost: forecasts cached, so this is the
+    // steady-state per-submit price of considering a split at all.
+    let model = twin_model("decide", Interconnect::pcie2_x16());
+    let policy = Some(SplitPolicy {
+        max_g: 2,
+        min_rows: 256,
+    });
+    let _ = model.decide("bicgk", 8192, 8192, &[0, 0], policy); // warm the caches
+    let samples = bench(100, 10_000, || {
+        black_box(model.decide("bicgk", 8192, 8192, &[0, 0], policy).owner())
+    });
+    let s = Summary::from_samples(&samples);
+    let ns = s.median * 1e9;
+    println!("split-aware routing decision (warm, twins): median {ns:.0} ns over {} samples", s.n);
+    section.push(("decision_ns_median".into(), Json::num(ns)));
+
+    update_bench_json(report, "split", Json::Obj(section)).expect("write BENCH_fleet.json");
+    println!("wrote {BENCH_FLEET_JSON}");
+}

@@ -150,6 +150,9 @@ mod tests {
             attempts: 0,
             pinned: false,
             lot: None,
+            split: None,
+            split_block: false,
+            admission: None,
             reply: Reply::new(tx, None),
         }
     }

@@ -12,6 +12,7 @@
 //!                    [--priority P] [--queue-cap N] [--script FILE]
 //!                    [--chaos-seed N] [--chaos-faults N]
 //!                    [--retry-budget N] [--wedge-timeout-ms MS]
+//!                    [--split G] [--link pcie|nvlink]
 //!                                         batched (fleet) serve demo; with
 //!                                         --scenario, a seeded open-loop
 //!                                         traffic run with SLO reporting;
@@ -20,7 +21,11 @@
 //!                                         the served traffic; --chaos-seed
 //!                                         injects a seeded fault plan
 //!                                         (worker kills, reply chaos) the
-//!                                         supervisor must absorb
+//!                                         supervisor must absorb; --split
+//!                                         lets the router scatter one
+//!                                         request across up to G lanes,
+//!                                         with --link picking the priced
+//!                                         interconnect profile
 //! fusebla list                            sequences + artifact catalog
 //! ```
 
@@ -31,9 +36,10 @@ use crate::coordinator::{
     synth_inputs, traffic, Context, Coordinator, Engine, EngineConfig, FaultPlan, Metrics,
     PlanChoice, SubmitRequest, Ticket,
 };
-use crate::fleet::DeviceRegistry;
+use crate::fleet::{DeviceRegistry, SplitPolicy};
 use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
+use crate::sim::multi::Interconnect;
 use crate::script::compile_script;
 use crate::sequences;
 use crate::util::fmt_duration;
@@ -62,6 +68,7 @@ usage:
                      [--priority P] [--queue-cap N] [--script FILE]
                      [--chaos-seed N] [--chaos-faults N]
                      [--retry-budget N] [--wedge-timeout-ms MS]
+                     [--split G] [--link pcie|nvlink]
   fusebla list"
     );
     2
@@ -448,6 +455,31 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 2;
         }
     };
+    let split_g: Option<usize> = match parse_flag(args, "--split") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
+    if split_g.is_some_and(|g| g < 2) {
+        eprintln!("serve-demo: --split must be at least 2");
+        return 2;
+    }
+    let link: Interconnect = match flag_value(args, "--link") {
+        Ok(None) => Interconnect::pcie2_x16(),
+        Ok(Some(name)) => match Interconnect::by_name(&name) {
+            Some(l) => l,
+            None => {
+                eprintln!("serve-demo: unknown link profile '{name}' (expected pcie|nvlink)");
+                return 2;
+            }
+        },
+        Err(e) => {
+            eprintln!("serve-demo: {e}");
+            return 2;
+        }
+    };
     // --script FILE: register the file's pipeline under its stem name
     // and mix it into the served traffic alongside the built-ins.
     let script: Option<(String, String)> = match flag_value(args, "--script") {
@@ -510,6 +542,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         fault_plan,
         retry_budget: retry_budget.unwrap_or(defaults.retry_budget),
         wedge_timeout: wedge_timeout_ms.map(Duration::from_millis),
+        split: split_g.map(|g| SplitPolicy {
+            max_g: g,
+            ..SplitPolicy::default()
+        }),
         ..defaults
     };
     // One device serves the classic single-device path (no router in
@@ -518,7 +554,8 @@ fn cmd_serve(args: &[String]) -> i32 {
     let engine = if n_devices == 1 {
         Engine::with_config(Arc::new(Context::new()), &artifacts_dir(), cfg)
     } else {
-        let registry = Arc::new(DeviceRegistry::simulated(n_devices, artifacts_dir()));
+        let registry =
+            Arc::new(DeviceRegistry::simulated(n_devices, artifacts_dir()).with_link(link));
         Engine::start_fleet(registry, &artifacts_dir(), cfg)
     };
     let engine = match engine {
@@ -591,6 +628,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
         println!("{}", slo_line(&metrics));
         println!("{}", queued_line(&metrics));
+        if let Some(line) = split_line(&metrics, &client, split_g.is_some()) {
+            println!("{line}");
+        }
         if let Some(line) = fault_line(&metrics) {
             println!("{line}");
         }
@@ -664,10 +704,29 @@ fn cmd_serve(args: &[String]) -> i32 {
     );
     println!("{}", slo_line(&metrics));
     println!("{}", queued_line(&metrics));
+    if let Some(line) = split_line(&metrics, &client, split_g.is_some()) {
+        println!("{line}");
+    }
     if let Some(line) = fault_line(&metrics) {
         println!("{line}");
     }
     i32::from(ok != n_requests)
+}
+
+/// One-line split-plane summary: how many requests the router scattered
+/// across lanes, the row blocks executed fleet-wide, and the attempts
+/// that degraded back to whole single-device execution. Printed always
+/// under `--split`, and whenever a split actually happened otherwise.
+fn split_line(m: &Metrics, client: &crate::coordinator::Client, forced: bool) -> Option<String> {
+    let decisions = client.routing_stats().split_decisions;
+    if !forced && m.splits == 0 && m.split_fallbacks == 0 && decisions == 0 {
+        return None;
+    }
+    Some(format!(
+        "split plane: {} split decision(s) routed — {} served split ({} row block(s)), \
+         {} fallback(s) to whole single-device",
+        decisions, m.splits, m.split_blocks, m.split_fallbacks
+    ))
 }
 
 /// One-line fault-tolerance summary, printed only when supervision saw

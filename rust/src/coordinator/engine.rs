@@ -47,7 +47,7 @@ use super::{
     Context, Control, Coordinator, Metrics, Msg, Parked, PlanChoice, Reply, Request,
     RequestInputs, ServeError,
 };
-use crate::fleet::{CostModel, DeviceId, DeviceRegistry, RoutingStats};
+use crate::fleet::{CostModel, DeviceId, DeviceRegistry, RouteDecision, RoutingStats, SplitPolicy};
 use crate::fusion::space::Space;
 use crate::fusion::ImplAxes;
 use crate::ir::elem::ProblemSize;
@@ -136,6 +136,19 @@ pub struct EngineConfig {
     /// quarantined (breaker opens) until it beats again. `None` (the
     /// default) disables the detector thread.
     pub wedge_timeout: Option<Duration>,
+    /// Opt-in G-way request splitting: when set, the router scores
+    /// "best single device" against "row-block across the G cheapest
+    /// eligible lanes" (scatter/partial-reduce/gather priced over the
+    /// registry's interconnect) and a winning split executes as one
+    /// ticket — block 0 inline on the owning lane, the rest scattered
+    /// as pinned sub-executions and gathered/combined there. `None`
+    /// (the default) serves every request whole on one device.
+    pub split: Option<SplitPolicy>,
+    /// How long a split's owning lane waits for each scattered block
+    /// before re-executing that block locally (counting into the
+    /// retry metrics) — and, with the retry budget exhausted, falling
+    /// the whole request back to single-device execution.
+    pub split_gather: Duration,
 }
 
 impl Default for EngineConfig {
@@ -152,6 +165,8 @@ impl Default for EngineConfig {
             fault_plan: FaultPlan::default(),
             retry_budget: 2,
             wedge_timeout: None,
+            split: None,
+            split_gather: Duration::from_secs(5),
         }
     }
 }
@@ -438,11 +453,12 @@ pub(crate) struct LaneCtx {
     lot: Mutex<Vec<Option<Parked>>>,
     pub(crate) fleet: Arc<FleetState>,
     /// Request lanes of the whole fleet — failover re-sends through
-    /// these.
-    txs: Vec<mpsc::Sender<Msg>>,
-    depths: Vec<Arc<AtomicU64>>,
+    /// these, and a split's owning coordinator scatters row blocks to
+    /// its peers the same way.
+    pub(crate) txs: Vec<mpsc::Sender<Msg>>,
+    pub(crate) depths: Vec<Arc<AtomicU64>>,
     plan: FaultPlan,
-    retry_budget: u32,
+    pub(crate) retry_budget: u32,
 }
 
 impl LaneCtx {
@@ -559,6 +575,12 @@ impl LaneCtx {
             attempts: spec.attempts + 1,
             pinned: false,
             lot: None,
+            // A reclaimed split owner retries whole on one device: the
+            // surviving fleet's shape no longer matches the decided
+            // lane set, and single-device execution is always legal.
+            split: None,
+            split_block: false,
+            admission: None,
             reply,
         }));
     }
@@ -707,6 +729,45 @@ struct Shared {
     /// Supervision state: breakers (consulted on every route), probe
     /// slots, heartbeats, fault-tolerance counters, pipeline catalog.
     fleet: Arc<FleetState>,
+    /// Opt-in split routing ([`EngineConfig::split`]): `None` keeps
+    /// every request whole on one device.
+    split: Option<SplitPolicy>,
+    /// Per-lane admission ledger for cost-aware shedding: one entry per
+    /// queued-but-not-yet-drained request, so an overflowing submit can
+    /// displace the most expensive lowest-class entry instead of
+    /// refusing the newcomer unconditionally. Maintained only when some
+    /// admission cap is finite — the unbounded default pays nothing.
+    ledger: Vec<Arc<Mutex<BTreeMap<u64, LedgerEntry>>>>,
+    /// Monotonic ledger keys (fleet-wide — uniqueness is all that
+    /// matters; larger = admitted later).
+    ledger_seq: AtomicU64,
+}
+
+/// One queued request's admission record: enough of its key to forecast
+/// its cost, plus the shed flag the worker checks when it drains the
+/// request ([`ServeError::Displaced`]).
+pub(crate) struct LedgerEntry {
+    priority: u8,
+    seq: String,
+    m: usize,
+    n: usize,
+    shed: Arc<AtomicBool>,
+}
+
+/// A queued request's handle on its ledger entry, carried inside the
+/// [`Request`]. Dropping it (the request was drained, failed over, or
+/// abandoned) retires the entry, so the ledger tracks exactly the
+/// displaceable — still-queued — population.
+pub(crate) struct Admission {
+    pub(crate) shed: Arc<AtomicBool>,
+    ledger: Arc<Mutex<BTreeMap<u64, LedgerEntry>>>,
+    key: u64,
+}
+
+impl Drop for Admission {
+    fn drop(&mut self) {
+        self.ledger.lock().unwrap().remove(&self.key);
+    }
 }
 
 impl Shared {
@@ -735,24 +796,27 @@ impl Shared {
         }
     }
 
-    /// Lane index for a request: the pin when present (an unknown name
+    /// Placement for a request: the pin when present (an unknown name
     /// is an error, not a silent reroute), otherwise the router's
-    /// argmin — short-circuited on one-device fleets so the
+    /// decision — a single-lane argmin, or (with [`EngineConfig::split`]
+    /// set) a G-way row-block split when the split forecast beats the
+    /// best single device. Short-circuited on one-device fleets so the
     /// single-device serve path never pays a forecast. `lanes` are the
     /// caller's request senders: a cold key's forecasts run *on* the
     /// workers behind them (seeding their plan caches), not here on the
     /// submitting thread.
-    fn lane_for(
+    fn route_for(
         &self,
         pin: Option<&str>,
         seq: &str,
         m: usize,
         n: usize,
         lanes: &[mpsc::Sender<Msg>],
-    ) -> Result<usize> {
+        slack: Option<f64>,
+    ) -> Result<RouteDecision> {
         match pin {
             Some(name) => match self.model.registry().find(name) {
-                Some(id) => Ok(id.index()),
+                Some(id) => Ok(RouteDecision::Single(id.index())),
                 None => Err(anyhow!(
                     "unknown device '{name}' (registered: {})",
                     self.model
@@ -764,7 +828,7 @@ impl Shared {
                         .join(", ")
                 )),
             },
-            None if self.depths.len() == 1 => Ok(0),
+            None if self.depths.len() == 1 => Ok(RouteDecision::Single(0)),
             None => {
                 // Quarantined lanes (breaker open) are skipped; a
                 // half-open lane admits exactly one probe request — the
@@ -788,22 +852,125 @@ impl Shared {
                     }
                 }
                 let mask = (!blocked.iter().all(|&b| b)).then_some(blocked.as_slice());
-                let lane = self.model.route_via(
+                let decision = self.model.decide_via(
                     seq,
                     m,
                     n,
                     &self.snapshot(),
                     Some((lanes, self.forecast_deadline)),
                     mask,
+                    slack,
+                    self.split,
                 );
                 for w in won {
-                    if w != lane {
+                    let kept = match &decision {
+                        RouteDecision::Single(i) => *i == w,
+                        RouteDecision::Split(ls) => ls.contains(&w),
+                    };
+                    if !kept {
                         self.fleet.release_probe(w);
                     }
                 }
-                Ok(lane)
+                Ok(decision)
             }
         }
+    }
+
+    /// Is any admission cap finite? Only then is the ledger maintained.
+    fn sheddable(&self) -> bool {
+        self.queue_cap != u64::MAX || !self.priority_caps.is_empty()
+    }
+
+    /// Record an admitted request in its lane's ledger (no-op with
+    /// unbounded caps). The returned handle rides inside the request;
+    /// its drop retires the entry.
+    fn admit(&self, lane: usize, priority: u8, seq: &str, m: usize, n: usize) -> Option<Admission> {
+        if !self.sheddable() {
+            return None;
+        }
+        let key = self.ledger_seq.fetch_add(1, Ordering::Relaxed);
+        let shed = Arc::new(AtomicBool::new(false));
+        self.ledger[lane].lock().unwrap().insert(
+            key,
+            LedgerEntry {
+                priority,
+                seq: seq.to_string(),
+                m,
+                n,
+                shed: shed.clone(),
+            },
+        );
+        Some(Admission {
+            shed,
+            ledger: self.ledger[lane].clone(),
+            key,
+        })
+    }
+
+    /// Cost-aware shedding: on queue-cap overflow, look for a queued
+    /// request that is a better refusal than the newcomer — within the
+    /// *lowest* priority class in the lane's ledger, the entry with the
+    /// highest forecast cost (refusing it frees the most device time
+    /// per refusal). Returns `true` after marking such a victim shed
+    /// (counted into the same engine-side shed metrics as a submit-time
+    /// refusal) — the newcomer then takes the freed slot. Returns
+    /// `false` when the newcomer itself is the cheapest-to-refuse
+    /// candidate (ties included, so a uniform workload keeps the legacy
+    /// refuse-the-newest behavior) and should be refused as before.
+    fn displace_for(
+        &self,
+        lane: usize,
+        seq: &str,
+        m: usize,
+        n: usize,
+        priority: u8,
+        lanes: &[mpsc::Sender<Msg>],
+    ) -> bool {
+        if !self.sheddable() {
+            return false;
+        }
+        let cost_of = |s: &str, m: usize, n: usize| -> f64 {
+            self.model
+                .costs_via(s, m, n, Some((lanes, self.forecast_deadline)), None)
+                .map(|c| c[lane])
+                .filter(|c| c.is_finite())
+                // An unforecastable key (unknown sequence) will fail
+                // anyway: the cheapest possible thing to refuse.
+                .unwrap_or(f64::INFINITY)
+        };
+        let mut ledger = self.ledger[lane].lock().unwrap();
+        let Some(class) = ledger.values().map(|e| e.priority).min() else {
+            return false;
+        };
+        if priority < class {
+            // The newcomer alone is the lowest class: it is the shed.
+            return false;
+        }
+        // The most expensive queued entry of the lowest class; cost
+        // ties go to the newest entry (closest to the legacy order).
+        let victim = ledger
+            .iter()
+            .filter(|(_, e)| e.priority == class)
+            .map(|(k, e)| (*k, cost_of(&e.seq, e.m, e.n)))
+            .max_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        let Some((key, victim_cost)) = victim else {
+            return false;
+        };
+        if priority == class && cost_of(seq, m, n) >= victim_cost {
+            // The newcomer is at least as expensive as anything queued
+            // in its class: refusing it is the cheaper refusal.
+            return false;
+        }
+        let entry = ledger.remove(&key).expect("victim key was just scanned");
+        entry.shed.store(true, Ordering::Relaxed);
+        drop(ledger);
+        self.sheds[lane].fetch_add(1, Ordering::Relaxed);
+        *self.priority_sheds[lane]
+            .lock()
+            .unwrap()
+            .entry(entry.priority)
+            .or_insert(0) += 1;
+        true
     }
 }
 
@@ -823,9 +990,18 @@ impl Client {
     /// request ([`ServeError::QueueFull`] — the routed device's
     /// in-flight queue is at capacity).
     pub fn submit(&self, req: SubmitRequest) -> Result<Ticket<RunResult>> {
-        let lane = self
-            .shared
-            .lane_for(req.device.as_deref(), &req.seq, req.m, req.n, &self.txs)?;
+        // Deadline slack for the router's completion-time term: at
+        // submit the full relative deadline is still available.
+        let slack = req.deadline.map(|d| d.as_secs_f64());
+        let decision = self.shared.route_for(
+            req.device.as_deref(),
+            &req.seq,
+            req.m,
+            req.n,
+            &self.txs,
+            slack,
+        )?;
+        let lane = decision.owner();
         let depth = &self.shared.depths[lane];
         // Priority classes get their own caps (explicit table, or the
         // legacy 2×-headroom derivation), so overload sheds best-effort
@@ -836,13 +1012,24 @@ impl Client {
         // another thread sees it; undo on shed. (A concurrent burst can
         // transiently overshoot the cap by the number of racing
         // submitters — admission control bounds the queue, it does not
-        // serialize submits.)
+        // serialize submits.) A split counts one slot on its owning
+        // lane only: the scattered blocks take their peers' slots when
+        // the owner actually sends them.
         let prev = depth.fetch_add(1, Ordering::Relaxed);
-        if prev >= cap {
+        if prev >= cap
+            && !self
+                .shared
+                .displace_for(lane, &req.seq, req.m, req.n, req.priority, &self.txs)
+        {
             depth.fetch_sub(1, Ordering::Relaxed);
-            // The request may have won a half-open lane's probe slot in
-            // routing; shedding it must not leave the slot claimed.
+            // The request may have won half-open probe slots in
+            // routing; shedding it must not leave them claimed.
             self.shared.fleet.release_probe(lane);
+            if let RouteDecision::Split(lanes) = &decision {
+                for &l in &lanes[1..] {
+                    self.shared.fleet.release_probe(l);
+                }
+            }
             self.shared.sheds[lane].fetch_add(1, Ordering::Relaxed);
             *self.shared.priority_sheds[lane]
                 .lock()
@@ -854,6 +1041,13 @@ impl Client {
                 cap,
             }));
         }
+        let admission = self
+            .shared
+            .admit(lane, req.priority, &req.seq, req.m, req.n);
+        let split = match decision {
+            RouteDecision::Single(_) => None,
+            RouteDecision::Split(lanes) => Some(lanes),
+        };
         let enqueued = Instant::now();
         let sent = self.txs[lane].send(Msg::Run(Request {
             seq: req.seq,
@@ -867,6 +1061,9 @@ impl Client {
             attempts: 0,
             pinned: req.device.is_some(),
             lot: None,
+            split,
+            split_block: false,
+            admission,
             reply: Reply::new(reply, Some(depth.clone())),
         }));
         if sent.is_err() {
@@ -1401,6 +1598,9 @@ impl Engine {
                 forecast_deadline: cfg.forecast_deadline,
                 spaces: Mutex::new(BTreeMap::new()),
                 fleet: fleet.clone(),
+                split: cfg.split,
+                ledger: (0..n).map(|_| Arc::new(Mutex::new(BTreeMap::new()))).collect(),
+                ledger_seq: AtomicU64::new(0),
             }),
             txs,
             ids,
@@ -2195,5 +2395,187 @@ mod tests {
         // closed → open → half-open → closed: 3 transitions, all lane 1
         assert_eq!(fleet.transitions[1].load(Ordering::Relaxed), 3);
         assert_eq!(fleet.transitions[0].load(Ordering::Relaxed), 0);
+    }
+
+    /// A bicgk-shaped pipeline (interpreter-backed, so it executes end
+    /// to end on the stub): `q` row-concatenates across blocks
+    /// (order-preserving), `s` is a fixed-order partial sum.
+    const ROWBLOCK_PIPELINE: &str = "
+        matrix<MxN> A; vector<N> p, s; vector<M> q, r;
+        input A, p, r;
+        q = sgemv(A, p);
+        s = sgemtv(A, r);
+        return q, s;
+    ";
+
+    /// Hand a split request straight to its owning lane, bypassing the
+    /// router — the execution path must serve whatever lane set a
+    /// decision names, so these tests do not depend on the forecast
+    /// choosing to split.
+    fn send_split(
+        client: &Client,
+        seq: &str,
+        m: usize,
+        n: usize,
+        seed: u64,
+        lanes: Vec<usize>,
+    ) -> Ticket<RunResult> {
+        let owner = lanes[0];
+        let depth = client.shared.depths[owner].clone();
+        depth.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        client.txs[owner]
+            .send(Msg::Run(Request {
+                seq: seq.into(),
+                m,
+                n,
+                inputs: RequestInputs::Synth { seed },
+                variant: None,
+                enqueued: Instant::now(),
+                deadline: None,
+                priority: 0,
+                attempts: 0,
+                pinned: false,
+                lot: None,
+                split: Some(lanes),
+                split_block: false,
+                admission: None,
+                reply: Reply::new(reply, Some(depth)),
+            }))
+            .expect("engine is serving");
+        Ticket { rx }
+    }
+
+    /// A 2-way split of a registered pipeline serves as one ticket: the
+    /// order-preserving output is bit-identical to the whole
+    /// single-device run, the partial-sum output is numerically close
+    /// and (fixed combine order) bit-stable across replays, and the
+    /// block accounting lands on the decided lanes.
+    #[test]
+    fn split_execution_matches_whole_and_counts_blocks() {
+        let (dir, engine) = stub_fleet("splitexec", EngineConfig::default());
+        let client = engine.client();
+        client.register_pipeline("rowblock", ROWBLOCK_PIPELINE).unwrap();
+        let (m, n, seed) = (96usize, 64usize, 7u64);
+        let owner = client.devices()[0].name().to_string();
+        let whole = client
+            .submit(SubmitRequest::new("rowblock", m, n).synth(seed).pin(&owner))
+            .unwrap()
+            .wait()
+            .expect("interp execution succeeds on the stub backend");
+        let split = send_split(&client, "rowblock", m, n, seed, vec![0, 1])
+            .wait()
+            .expect("split execution succeeds");
+        let replay = send_split(&client, "rowblock", m, n, seed, vec![0, 1])
+            .wait()
+            .expect("split replay succeeds");
+        assert_eq!(split.env["q"].dims, whole.env["q"].dims);
+        for (a, b) in split.env["q"].data.iter().zip(&whole.env["q"].data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "ConcatRows output is bit-identical");
+        }
+        assert_eq!(split.env["s"].dims, whole.env["s"].dims);
+        for (a, b) in split.env["s"].data.iter().zip(&whole.env["s"].data) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        for name in ["q", "s"] {
+            for (a, b) in split.env[name].data.iter().zip(&replay.env[name].data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fixed-order combine replays bitwise");
+            }
+        }
+        assert_eq!(client.queue_depths(), vec![0, 0]);
+        let fleet = engine.shutdown_fleet();
+        let (m0, m1) = (&fleet.devices[0].1, &fleet.devices[1].1);
+        assert_eq!(m0.splits, 2, "the owner served both split tickets");
+        assert_eq!(m0.split_fallbacks, 0);
+        assert_eq!(m0.split_blocks, 2, "block 0 of each split ran inline");
+        assert_eq!(m1.split_blocks, 2, "block 1 of each split scattered to the peer");
+        assert_eq!(m0.requests, 3, "two splits + the pinned whole, one request each");
+        assert_eq!(m1.requests, 0, "scattered blocks are sub-executions, not requests");
+        assert_eq!(m0.failures + m1.failures, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A peer lane killed mid-split: the scattered block comes back as
+    /// a typed WorkerLost reply, the owner re-executes it locally under
+    /// the retry budget, and the ticket resolves with the correct
+    /// combined result — no lost tickets, no whole-run fallback.
+    #[test]
+    fn split_survives_peer_kill_by_local_retry() {
+        let cfg = EngineConfig {
+            fault_plan: FaultPlan {
+                faults: vec![Fault::Kill { lane: 1, turn: 1 }],
+            },
+            ..EngineConfig::default()
+        };
+        let (dir, engine) = stub_fleet("splitkill", cfg);
+        let client = engine.client();
+        client.register_pipeline("rowblock", ROWBLOCK_PIPELINE).unwrap();
+        let (m, n, seed) = (96usize, 64usize, 3u64);
+        let split = send_split(&client, "rowblock", m, n, seed, vec![0, 1])
+            .wait()
+            .expect("the split ticket must survive the peer kill");
+        let owner = client.devices()[0].name().to_string();
+        let whole = client
+            .submit(SubmitRequest::new("rowblock", m, n).synth(seed).pin(&owner))
+            .unwrap()
+            .wait()
+            .unwrap();
+        for (a, b) in split.env["q"].data.iter().zip(&whole.env["q"].data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "the retried block keeps bit-identity");
+        }
+        assert_eq!(client.queue_depths(), vec![0, 0]);
+        let fleet = engine.shutdown_fleet();
+        let (m0, m1) = (&fleet.devices[0].1, &fleet.devices[1].1);
+        assert_eq!(m0.splits, 1);
+        assert_eq!(m0.split_fallbacks, 0, "local retry, not whole-run fallback");
+        assert_eq!(m0.split_blocks, 2, "own block + the locally retried block");
+        assert_eq!(m1.split_blocks, 0, "the peer died before executing its block");
+        assert_eq!(m0.retries, 1, "the lost block cost one retry");
+        assert_eq!(m1.worker_lost_sheds, 1, "the pinned block shed typed on the dead lane");
+        assert_eq!(m1.worker_restarts, 1, "the killed lane respawned");
+        assert!(fleet.lost.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Cost-aware shedding: on queue-cap overflow the most expensive
+    /// queued request of the lowest priority class is displaced (typed
+    /// [`ServeError::Displaced`]) in favor of a cheaper newcomer, while
+    /// a newcomer at least as expensive as everything queued still
+    /// sheds itself with the legacy [`ServeError::QueueFull`].
+    #[test]
+    fn queue_overflow_displaces_the_most_expensive_queued_request() {
+        let dir = stub_dir("displace");
+        let cfg = EngineConfig {
+            batch_window: Duration::from_secs(60),
+            queue_cap: 1,
+            // hold admitted requests in flight while the rest submit
+            deadline_slack: Duration::from_millis(59_500),
+            ..EngineConfig::default()
+        };
+        let engine = Engine::with_config(Arc::new(Context::new()), &dir, cfg).unwrap();
+        let client = engine.client();
+        let sub = |n: usize| SubmitRequest::new("waxpby", 32, n).deadline(Duration::from_secs(60));
+        // expensive in, cheap arrives: the expensive one is displaced
+        let costly = client.submit(sub(65536)).unwrap();
+        let cheap = client.submit(sub(256)).unwrap();
+        let err = costly.wait().err().expect("must be displaced");
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Displaced)),
+            "{err:#}"
+        );
+        let e = cheap.wait().err().expect("stub backend fails execution");
+        assert!(e.downcast_ref::<ServeError>().is_none(), "served, not shed: {e:#}");
+        // cheap in, expensive arrives: the newcomer is the better refusal
+        let cheap2 = client.submit(sub(256)).unwrap();
+        let err2 = client.submit(sub(65536)).err().expect("refused at submit");
+        assert!(
+            matches!(err2.downcast_ref::<ServeError>(), Some(ServeError::QueueFull { .. })),
+            "{err2:#}"
+        );
+        let _ = cheap2.wait();
+        let m = engine.shutdown();
+        assert_eq!(m.queue_sheds, 2, "one displacement + one refusal");
+        assert_eq!(m.requests, 2, "only the two cheap requests executed");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

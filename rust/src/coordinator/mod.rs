@@ -58,6 +58,7 @@ use crate::predict::{predict_seq, RoutineDb};
 use crate::runtime::{refcheck, RunResult, Runtime, Tensor};
 use crate::sequences::{self, Sequence};
 use crate::sim::DeviceModel;
+use crate::split;
 use crate::util::manifest::Manifest;
 use crate::util::Histogram;
 use anyhow::{anyhow, Result};
@@ -279,6 +280,12 @@ pub enum ServeError {
     /// retry budget was exhausted, or no healthy lane survived.
     /// `attempts` counts re-executions already spent on the request.
     WorkerLost { device: String, attempts: u32 },
+    /// The request was displaced from the queue by cost-aware admission
+    /// control: the queue filled and this request was the most
+    /// expensive entry of the lowest priority class, so refusing it
+    /// (instead of the cheaper newcomer) freed the most device time.
+    /// Counted into the same shed metrics as a submit-time refusal.
+    Displaced,
 }
 
 impl std::fmt::Display for ServeError {
@@ -305,6 +312,10 @@ impl std::fmt::Display for ServeError {
             ServeError::WorkerLost { device, attempts } => write!(
                 f,
                 "shed: worker for device '{device}' lost (after {attempts} re-execution attempts)"
+            ),
+            ServeError::Displaced => write!(
+                f,
+                "shed: displaced from the queue by cost-aware admission control"
             ),
         }
     }
@@ -402,6 +413,22 @@ pub(crate) struct Request {
     /// lot, set when a turn begins on a supervised worker. `None` until
     /// then (and always on unsupervised coordinators).
     pub lot: Option<usize>,
+    /// A routed split decision: the lanes of the G-way row-block
+    /// partition, in block order, with `lanes[0]` this (owning) lane.
+    /// The owner executes block 0 inline, scatters the rest as pinned
+    /// sub-executions, and gathers/combines — one ticket throughout.
+    /// `None` = serve whole (the only shape on single-device engines).
+    pub split: Option<Vec<usize>>,
+    /// An owner-scattered row block of some split request: executes and
+    /// replies like any request but is excluded from request-level
+    /// accounting (requests/failures/latency/SLO), counting into
+    /// [`Metrics::split_blocks`] instead — the owning lane accounts the
+    /// split as one request.
+    pub split_block: bool,
+    /// Admission-ledger handle for cost-aware shedding (`None` with
+    /// unbounded caps). Checked when the request is drained: a set shed
+    /// flag means admission control displaced it while it queued.
+    pub admission: Option<engine::Admission>,
     pub reply: Reply,
 }
 
@@ -552,6 +579,18 @@ pub struct Metrics {
     /// failure or wedge, open → half-open on respawn, half-open →
     /// closed on a served probe). Engine-side overlay.
     pub breaker_transitions: u64,
+    /// Requests this worker served as G-way splits (scatter /
+    /// partial-reduce / gather across the fleet, one ticket each). The
+    /// owning lane counts the split; the blocks land in `split_blocks`.
+    pub splits: u64,
+    /// Row blocks executed on this lane on behalf of split requests:
+    /// sub-executions scattered here by some owner, plus the owner's
+    /// own inline block and any gather-timeout local retries.
+    pub split_blocks: u64,
+    /// Split attempts that fell back to whole single-device execution
+    /// (no legal row-blocking, a failed block past the retry budget, or
+    /// a scatter that could not reach its peers).
+    pub split_fallbacks: u64,
     /// Time executed requests spent queued before their batch was
     /// dispatched (submission → batch start). Per device this is the
     /// routing-vs-queueing signal: a device whose queue wait dwarfs its
@@ -613,6 +652,9 @@ impl Metrics {
         self.retries += other.retries;
         self.worker_lost_sheds += other.worker_lost_sheds;
         self.breaker_transitions += other.breaker_transitions;
+        self.splits += other.splits;
+        self.split_blocks += other.split_blocks;
+        self.split_fallbacks += other.split_fallbacks;
         self.queued.merge(&other.queued);
         self.latency.merge(&other.latency);
         for (seq, (count, secs)) in &other.per_seq {
@@ -772,6 +814,9 @@ pub struct Coordinator {
     /// (deterministic chaos from [`EngineConfig::fault_plan`]); cleared
     /// when the turn ends.
     chaos: Option<engine::TurnChaos>,
+    /// Per-block gather bound for split requests this lane owns
+    /// ([`EngineConfig::split_gather`], set when serving).
+    split_gather: Duration,
     /// Metrics carried over from this lane's previous incarnations
     /// (before supervisor respawns). Snapshots and the final return
     /// value fold this in; the live `metrics` field only covers the
@@ -815,6 +860,7 @@ impl Coordinator {
             pipeline_quota: Self::DEFAULT_PIPELINE_QUOTA,
             lane: None,
             chaos: None,
+            split_gather: Duration::from_secs(5),
             metrics_base: Metrics::default(),
             metrics: Metrics::default(),
         })
@@ -1099,18 +1145,27 @@ impl Coordinator {
         let dispatched = Instant::now();
         let mut inputs = Vec::with_capacity(reqs.len());
         let mut replies = Vec::with_capacity(reqs.len());
+        let mut block_members = 0u64;
         for r in reqs {
-            // queued = submission → batch dispatch, per member
-            self.metrics
-                .queued
-                .record(dispatched.duration_since(r.enqueued).as_secs_f64());
+            if r.split_block {
+                // Scattered row block of a split request another lane
+                // owns: the owner recorded the ticket's queue time and
+                // carries its accounting, so blocks only count into the
+                // split plane below.
+                block_members += 1;
+            } else {
+                // queued = submission → batch dispatch, per member
+                self.metrics
+                    .queued
+                    .record(dispatched.duration_since(r.enqueued).as_secs_f64());
+            }
             inputs.push(match r.inputs {
                 RequestInputs::Explicit(map) => map,
                 RequestInputs::Synth { seed } => {
                     synth_inputs(&self.runtime, &key.seq, variant, m, n, seed)
                 }
             });
-            replies.push((r.enqueued, r.deadline, r.lot, r.reply));
+            replies.push((r.enqueued, r.deadline, r.lot, r.split_block, r.reply));
         }
         // Injected mid-execute panic: fires after the batch consumed its
         // requests (explicit inputs are gone — the worst case the
@@ -1138,21 +1193,236 @@ impl Coordinator {
         if size > 1 {
             self.metrics.batched_requests += size;
         }
-        self.metrics.requests += size;
+        // Scattered split blocks are sub-executions of a ticket the
+        // owning lane accounts for — they count into split_blocks and
+        // batch occupancy, never into request/latency/SLO planes.
+        self.metrics.requests += size - block_members;
+        self.metrics.split_blocks += block_members;
         self.metrics.seconds_total += dt;
         let e = self.metrics.per_seq.entry(key.seq.clone()).or_insert((0, 0.0));
-        e.0 += size;
+        e.0 += size - block_members;
         e.1 += dt;
-        self.metrics.failures += results.iter().filter(|r| r.is_err()).count() as u64;
         self.sync_runtime_metrics();
         // Injected reply delay: ship the batch's replies late (heartbeat
         // stays live — this models a slow lane, not a wedged one).
         if let Some(d) = self.chaos.as_ref().and_then(|c| c.delay) {
             std::thread::sleep(d);
         }
-        for ((enqueued, deadline, lot, reply), res) in replies.into_iter().zip(results) {
-            self.finish(enqueued, deadline, lot, reply, res);
+        for ((enqueued, deadline, lot, split_block, reply), res) in
+            replies.into_iter().zip(results)
+        {
+            if split_block {
+                // Reply straight to the owner's gather channel: the
+                // owner does the ticket-level latency/SLO bookkeeping.
+                if let (Some(lane), Some(idx)) = (&self.lane, lot) {
+                    lane.unpark(idx);
+                }
+                if self.chaos.as_ref().is_some_and(|c| c.drop_replies) {
+                    drop(reply);
+                } else {
+                    reply.send(res);
+                }
+            } else {
+                if res.is_err() {
+                    self.metrics.failures += 1;
+                }
+                self.finish(enqueued, deadline, lot, reply, res);
+            }
         }
+    }
+
+    /// Execute one routed split request as the owning lane: resolve the
+    /// plan choice once, row-block the problem per the router's lane
+    /// set, scatter the non-owner blocks as pinned sub-executions,
+    /// execute block 0 inline, then gather and combine — accounting the
+    /// whole exchange as ONE request (one latency sample, one SLO
+    /// outcome) on this lane. A structural refusal (the sequence does
+    /// not row-block) or a mid-split failure degrades to whole
+    /// single-device execution; the ticket is never lost.
+    fn execute_split(&mut self, req: Request) {
+        let Request {
+            seq,
+            m,
+            n,
+            inputs,
+            variant,
+            enqueued,
+            deadline,
+            priority,
+            lot,
+            split,
+            reply,
+            ..
+        } = req;
+        let lanes = split.expect("run_turn peels only split requests");
+        self.metrics
+            .queued
+            .record(Instant::now().duration_since(enqueued).as_secs_f64());
+        // The planning entry backs both the plan decision and the
+        // split analysis of the sequence's dataflow.
+        if let Err(e) = self.ensure_planning_entry(&seq) {
+            self.metrics.requests += 1;
+            self.metrics.failures += 1;
+            self.finish(enqueued, deadline, lot, reply, Err(e));
+            return;
+        }
+        let choice = match variant.map(Ok).unwrap_or_else(|| self.choose_plan(&seq, m, n)) {
+            Ok(c) => c,
+            Err(e) => {
+                self.metrics.requests += 1;
+                self.metrics.failures += 1;
+                self.finish(enqueued, deadline, lot, reply, Err(e));
+                return;
+            }
+        };
+        let full = match inputs {
+            RequestInputs::Explicit(map) => map,
+            RequestInputs::Synth { seed } => {
+                synth_inputs(&self.runtime, &seq, choice.as_str(), m, n, seed)
+            }
+        };
+        let spec = split::analyze(&self.space_cache[seq.as_str()].prog);
+        let blocks = split::block_rows(m, lanes.len());
+        let t0 = Instant::now();
+        let res = match spec {
+            // TILE-alignment can merge blocks below the decided G; a
+            // shrunken partition no longer matches the lane set the
+            // router priced, so serve whole instead of improvising.
+            Some(spec) if blocks.len() == lanes.len() && lanes.len() >= 2 => {
+                match self.run_split(&seq, choice, n, &spec, &blocks, &lanes, &full, priority) {
+                    Ok(r) => {
+                        self.metrics.splits += 1;
+                        Ok(r)
+                    }
+                    Err(err) => {
+                        self.metrics.split_fallbacks += 1;
+                        self.runtime
+                            .run_seq(&seq, choice.as_str(), m, n, &full)
+                            .map_err(|e| e.context(format!("whole fallback after: {err:#}")))
+                    }
+                }
+            }
+            _ => {
+                self.metrics.split_fallbacks += 1;
+                self.runtime.run_seq(&seq, choice.as_str(), m, n, &full)
+            }
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.requests += 1;
+        self.metrics.seconds_total += dt;
+        let e = self.metrics.per_seq.entry(seq.clone()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        if res.is_err() {
+            self.metrics.failures += 1;
+        }
+        self.sync_runtime_metrics();
+        self.finish(enqueued, deadline, lot, reply, res);
+    }
+
+    /// The scatter → partial-execute → gather → combine exchange of a
+    /// split request. Blocks 1..G go to the decided peer lanes as
+    /// pinned sub-requests (pinned so a peer death surfaces as a typed
+    /// reply on the gather channel instead of migrating to a lane the
+    /// cost model never priced); block 0 runs inline. A lost, failed or
+    /// late block is re-executed locally under the engine's retry
+    /// budget; an error return here means the caller falls back to
+    /// whole single-device execution.
+    #[allow(clippy::too_many_arguments)]
+    fn run_split(
+        &mut self,
+        seq: &str,
+        choice: PlanChoice,
+        n: usize,
+        spec: &split::SplitSpec,
+        blocks: &[(usize, usize)],
+        lanes: &[usize],
+        inputs: &BTreeMap<String, Tensor>,
+        priority: u8,
+    ) -> Result<RunResult> {
+        let lane = self
+            .lane
+            .clone()
+            .ok_or_else(|| anyhow!("split execution needs a supervised fleet lane"))?;
+        debug_assert_eq!(lanes[0], lane.index, "block 0 belongs to the owning lane");
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(lanes.len() - 1);
+        for (k, (&peer, &(start, rows))) in lanes.iter().zip(blocks).enumerate().skip(1) {
+            let sliced = split::slice_inputs(spec, inputs, start, rows)?;
+            let (stx, srx) = mpsc::channel();
+            // The sub-request takes its own depth slot on the peer (the
+            // router already counted the scatter when it decided), and
+            // its Reply gives the slot back on every terminal outcome —
+            // including a failed send, whose dropped message drops the
+            // Reply and leaves `srx` disconnected for the gather loop.
+            lane.depths[peer].fetch_add(1, Ordering::Relaxed);
+            let _ = lane.txs[peer].send(Msg::Run(Request {
+                seq: seq.to_string(),
+                m: rows,
+                n,
+                inputs: RequestInputs::Explicit(sliced),
+                variant: Some(choice),
+                enqueued: Instant::now(),
+                deadline: None,
+                priority,
+                attempts: 0,
+                pinned: true,
+                lot: None,
+                split: None,
+                split_block: true,
+                admission: None,
+                reply: Reply::new(stx, Some(lane.depths[peer].clone())),
+            }));
+            pending.push((k, srx));
+        }
+        let (start0, rows0) = blocks[0];
+        let own_inputs = split::slice_inputs(spec, inputs, start0, rows0)?;
+        let own = self
+            .runtime
+            .run_seq(seq, choice.as_str(), rows0, n, &own_inputs)?;
+        self.metrics.split_blocks += 1;
+        let RunResult {
+            env: own_env,
+            stages,
+            variant,
+            ..
+        } = own;
+        let mut envs = Vec::with_capacity(blocks.len());
+        envs.push(own_env);
+        // Gather with a shared bound: every peer gets the remainder of
+        // one gather window, not a fresh one each.
+        let by = Instant::now() + self.split_gather;
+        for (k, srx) in pending {
+            let got = match srx.recv_timeout(by.saturating_duration_since(Instant::now())) {
+                Ok(Ok(r)) => Some(r.env),
+                Ok(Err(_)) | Err(_) => None,
+            };
+            let env = match got {
+                Some(env) => env,
+                None => {
+                    if lane.retry_budget == 0 {
+                        return Err(anyhow!(
+                            "split block {k} of '{seq}' lost and the retry budget is 0"
+                        ));
+                    }
+                    lane.fleet.retries[lane.index].fetch_add(1, Ordering::Relaxed);
+                    let (start, rows) = blocks[k];
+                    let retry = split::slice_inputs(spec, inputs, start, rows)?;
+                    let r = self.runtime.run_seq(seq, choice.as_str(), rows, n, &retry)?;
+                    self.metrics.split_blocks += 1;
+                    r.env
+                }
+            };
+            envs.push(env);
+        }
+        let mut env = inputs.clone();
+        env.extend(split::combine_outputs(spec, &envs)?);
+        Ok(RunResult {
+            env,
+            stages,
+            seconds: t0.elapsed().as_secs_f64(),
+            variant,
+        })
     }
 
     /// Deliver one request's terminal outcome, recording end-to-end
@@ -1203,7 +1473,24 @@ impl Coordinator {
         // device time that on-time requests need.
         let now = Instant::now();
         let mut live = Vec::with_capacity(queue.len());
-        for req in queue {
+        for mut req in queue {
+            // Cost-aware admission control marked this queued request as
+            // displaced in favor of a cheaper newcomer: reply with the
+            // typed shed without executing. The engine counted the shed
+            // when it picked the victim, so no request/failure counts
+            // here — this mirrors the engine-side refusal path.
+            let displaced = req
+                .admission
+                .take()
+                .is_some_and(|a| a.shed.load(Ordering::Relaxed));
+            if displaced {
+                if let (Some(lane), Some(idx)) = (&self.lane, req.lot) {
+                    lane.unpark(idx);
+                }
+                req.reply
+                    .send(Err(anyhow::Error::new(ServeError::Displaced)));
+                continue;
+            }
             match req.deadline {
                 Some(d) if now > d => {
                     self.metrics.requests += 1;
@@ -1220,6 +1507,13 @@ impl Coordinator {
                 }
                 _ => live.push(req),
             }
+        }
+        // Split requests execute alone: the owning lane scatters row
+        // blocks to its peers and gathers/combines, so they never join
+        // a same-key batch (their member shapes differ per block).
+        let (split, live): (Vec<_>, Vec<_>) = live.into_iter().partition(|r| r.split.is_some());
+        for req in split {
+            self.execute_split(req);
         }
         let device = self.ctx.device.clone();
         let (mut batches, failed) =
@@ -1303,6 +1597,7 @@ impl Coordinator {
     /// channel closes or a shutdown sentinel arrives.
     pub(crate) fn serve_session(&mut self, rx: &mpsc::Receiver<Msg>, cfg: &EngineConfig) {
         self.pipeline_quota = cfg.pipeline_quota;
+        self.split_gather = cfg.split_gather;
         let mut closing = false;
         while !closing {
             let first = match rx.recv() {
@@ -1639,6 +1934,9 @@ mod tests {
                 attempts: 0,
                 pinned: false,
                 lot: None,
+                split: None,
+                split_block: false,
+                admission: None,
                 reply: Reply::new(rtx, None),
             }
         };
@@ -1730,6 +2028,9 @@ mod tests {
                 attempts: 0,
                 pinned: false,
                 lot: None,
+                split: None,
+                split_block: false,
+                admission: None,
                 reply: Reply::new(rtx, None),
             }))
             .unwrap();
@@ -1766,6 +2067,9 @@ mod tests {
             attempts: 0,
             pinned: false,
             lot: None,
+            split: None,
+            split_block: false,
+            admission: None,
             reply: Reply::new(rtx, None),
         };
         coord.run_turn(vec![req]);
@@ -1803,6 +2107,9 @@ mod tests {
             attempts: 0,
             pinned: false,
             lot: None,
+            split: None,
+            split_block: false,
+            admission: None,
             reply: Reply::new(rtx, None),
         };
         coord.run_turn(vec![req]);
@@ -1909,6 +2216,9 @@ mod tests {
                 attempts: 0,
                 pinned: false,
                 lot: None,
+                split: None,
+                split_block: false,
+                admission: None,
                 reply: Reply::new(rtx, None),
             };
             (r, rrx)
@@ -1957,6 +2267,9 @@ mod tests {
                 attempts: 0,
                 pinned: false,
                 lot: None,
+                split: None,
+                split_block: false,
+                admission: None,
                 reply: Reply::new(rtx, None),
             };
             (r, rrx)

@@ -34,11 +34,12 @@
 
 pub mod router;
 
-pub use router::{CostModel, RoutingStats};
+pub use router::{CostModel, RouteDecision, RoutingStats, SplitPolicy};
 
 use crate::coordinator::Context;
 use crate::library::Library;
 use crate::predict::sanitize_device;
+use crate::sim::multi::Interconnect;
 use crate::sim::DeviceModel;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeSet;
@@ -107,6 +108,10 @@ pub struct DeviceRegistry {
     lib: Arc<Library>,
     cal_dir: PathBuf,
     slots: Vec<Slot>,
+    /// The interconnect the split forecast prices scatter/gather over
+    /// (defaults to the paper-era PCIe 2.0 ×16; see
+    /// [`DeviceRegistry::with_link`]).
+    link: Interconnect,
 }
 
 impl DeviceRegistry {
@@ -131,6 +136,7 @@ impl DeviceRegistry {
         Ok(DeviceRegistry {
             lib: Arc::new(Library::standard()),
             cal_dir: cal_dir.into(),
+            link: Interconnect::pcie2_x16(),
             slots: devices
                 .into_iter()
                 .map(|dev| {
@@ -178,8 +184,21 @@ impl DeviceRegistry {
         DeviceRegistry {
             lib: ctx.lib.clone(),
             cal_dir: cal_dir.into(),
+            link: Interconnect::pcie2_x16(),
             slots: vec![slot],
         }
+    }
+
+    /// Select the interconnect profile the split forecast prices the
+    /// scatter/partial-reduce/gather exchange over.
+    pub fn with_link(mut self, link: Interconnect) -> Self {
+        self.link = link;
+        self
+    }
+
+    /// The registered interconnect profile.
+    pub fn link(&self) -> Interconnect {
+        self.link
     }
 
     pub fn len(&self) -> usize {

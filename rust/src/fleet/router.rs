@@ -48,12 +48,56 @@ use crate::ir::elem::ProblemSize;
 use crate::ir::plan::SeqPlan;
 use crate::ir::program::Program;
 use crate::pipelines;
-use crate::planner::{self, PlannerConfig};
+use crate::planner::{self, PlannerConfig, SplitForecast};
 use crate::sequences;
+use crate::split;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Knobs of the router's split decision (off unless the engine supplies
+/// one — see `EngineConfig::split`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SplitPolicy {
+    /// Largest G the router sweeps (additionally bounded by the number
+    /// of eligible lanes and by [`CostModel::MAX_SWEEP_G`]).
+    pub max_g: usize,
+    /// Requests below this many padded rows never split — the small-
+    /// problem side of the crossover where per-block launch and link
+    /// cost swamp the win.
+    pub min_rows: usize,
+}
+
+impl Default for SplitPolicy {
+    fn default() -> Self {
+        SplitPolicy {
+            max_g: 4,
+            min_rows: 1024,
+        }
+    }
+}
+
+/// Where one request executes: a single lane, or row blocks scattered
+/// across several.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteDecision {
+    Single(usize),
+    /// Lanes in block order (block `k` of the row partition lands on
+    /// `lanes[k]`); the first lane owns the request — it executes block
+    /// 0 inline, gathers the rest and answers the ticket.
+    Split(Vec<usize>),
+}
+
+impl RouteDecision {
+    /// The lane that owns the ticket.
+    pub fn owner(&self) -> usize {
+        match self {
+            RouteDecision::Single(i) => *i,
+            RouteDecision::Split(lanes) => lanes[0],
+        }
+    }
+}
 
 /// Per-key, per-device forecast cache over a registry. `Send + Sync`:
 /// lives behind the engine's shared state and is consulted from every
@@ -85,12 +129,24 @@ pub struct CostModel {
     /// every worker acked. Entries make the name forecastable (and thus
     /// predictor-routed) exactly like a built-in sequence.
     pipelines: Mutex<BTreeMap<String, Arc<PipelinePlanning>>>,
+    /// seq → padded (m, n) → per-device G-way split profiles (empty Vec
+    /// = the program refuses to row-split). Cached like forecasts,
+    /// same FIFO cap.
+    splits: Mutex<SplitCache>,
+    /// Requests the router decided to split instead of placing whole.
+    split_decisions: AtomicU64,
 }
 
 #[derive(Default)]
 struct ForecastCache {
     by_seq: BTreeMap<String, BTreeMap<(usize, usize), Arc<Vec<f64>>>>,
     /// Insertion order of every cached `(seq, padded size)` key.
+    order: VecDeque<(String, (usize, usize))>,
+}
+
+#[derive(Default)]
+struct SplitCache {
+    by_seq: BTreeMap<String, BTreeMap<(usize, usize), Arc<Vec<SplitForecast>>>>,
     order: VecDeque<(String, (usize, usize))>,
 }
 
@@ -108,6 +164,9 @@ pub struct RoutingStats {
     /// Lanes skipped because their circuit breaker was not closed —
     /// routing decisions and shard/forecast scatters both count here.
     pub quarantine_skips: u64,
+    /// Requests the router decided to split across lanes rather than
+    /// place whole.
+    pub split_decisions: u64,
 }
 
 /// What a local fallback needs to forecast a sequence: built lazily at
@@ -152,6 +211,8 @@ impl CostModel {
             local_forecasts: AtomicU64::new(0),
             quarantine_skips: AtomicU64::new(0),
             pipelines: Mutex::new(BTreeMap::new()),
+            splits: Mutex::new(SplitCache::default()),
+            split_decisions: AtomicU64::new(0),
         }
     }
 
@@ -174,6 +235,10 @@ impl CostModel {
         let mut cache = self.cache.lock().unwrap();
         cache.by_seq.remove(&name);
         cache.order.retain(|(s, _)| s != &name);
+        drop(cache);
+        let mut splits = self.splits.lock().unwrap();
+        splits.by_seq.remove(&name);
+        splits.order.retain(|(s, _)| s != &name);
     }
 
     /// Drop a pipeline from the roster and purge its cached forecasts;
@@ -184,6 +249,10 @@ impl CostModel {
         let mut cache = self.cache.lock().unwrap();
         cache.by_seq.remove(name);
         cache.order.retain(|(s, _)| s != name);
+        drop(cache);
+        let mut splits = self.splits.lock().unwrap();
+        splits.by_seq.remove(name);
+        splits.order.retain(|(s, _)| s != name);
     }
 
     /// Fingerprint a registered name currently routes under, if any.
@@ -198,6 +267,7 @@ impl CostModel {
             worker_forecasts: self.worker_forecasts.load(Ordering::Relaxed),
             local_forecasts: self.local_forecasts.load(Ordering::Relaxed),
             quarantine_skips: self.quarantine_skips.load(Ordering::Relaxed),
+            split_decisions: self.split_decisions.load(Ordering::Relaxed),
         }
     }
 
@@ -387,11 +457,218 @@ impl CostModel {
         .best_seconds()
     }
 
+    /// Largest G the split forecast sweeps per device; ratios beyond it
+    /// read as 1.0 (no win), so the profile never has to be recomputed
+    /// for a bigger policy.
+    pub const MAX_SWEEP_G: usize = 8;
+
+    /// Per-device G-way split profiles for `(seq, m, n)` (size
+    /// tile-padded like every router key): `profiles[i].ratio(g)` is
+    /// the predicted split-vs-single time ratio at G = g on device `i`,
+    /// scatter/partial-reduce/gather exchange over the registry's
+    /// [`crate::sim::multi::Interconnect`] included
+    /// ([`planner::forecast_split`] on `sim::multi`). An *empty* vector
+    /// is a cached refusal: [`crate::split::analyze`] found no legal
+    /// row-blocking for the program. `None` only for unknown names.
+    /// Cached like [`CostModel::costs`], same FIFO cap.
+    pub fn split_profiles(&self, seq: &str, m: usize, n: usize) -> Option<Arc<Vec<SplitForecast>>> {
+        let p = ProblemSize::new(m, n).padded();
+        if let Some(c) = self
+            .splits
+            .lock()
+            .unwrap()
+            .by_seq
+            .get(seq)
+            .and_then(|sizes| sizes.get(&(p.m, p.n)))
+        {
+            return Some(c.clone());
+        }
+        let target = match sequences::by_name(seq) {
+            Some(sq) => Target::Builtin(sq),
+            None => Target::Pipeline(self.pipelines.lock().unwrap().get(seq)?.clone()),
+        };
+        let lib = self.registry.library();
+        let lp = match &target {
+            Target::Builtin(sq) => {
+                let (prog, graph) = sq.graph(lib);
+                let baseline = autotune::baseline_plan(&sq.cublas_program(lib), lib);
+                LocalPlanning {
+                    prog,
+                    graph,
+                    baseline,
+                }
+            }
+            Target::Pipeline(pp) => LocalPlanning {
+                prog: pp.prog.clone(),
+                graph: pp.graph.clone(),
+                baseline: pp.baseline.clone(),
+            },
+        };
+        let profiles: Vec<SplitForecast> = if split::analyze(&lp.prog).is_none() {
+            Vec::new()
+        } else {
+            let link = self.registry.link();
+            (0..self.registry.len())
+                .map(|i| {
+                    let ctx = self.registry.context(i);
+                    planner::forecast_split(
+                        &lp.prog,
+                        lib,
+                        &lp.graph,
+                        &ctx.db,
+                        &ImplAxes::minimal(),
+                        self.registry.model(i),
+                        &link,
+                        p,
+                        Self::MAX_SWEEP_G,
+                        &PlannerConfig::default(),
+                    )
+                })
+                .collect()
+        };
+        let entry = Arc::new(profiles);
+        let mut cache = self.splits.lock().unwrap();
+        let is_new = match cache.by_seq.get(seq) {
+            Some(sizes) => !sizes.contains_key(&(p.m, p.n)),
+            None => true,
+        };
+        if is_new {
+            while cache.order.len() >= Self::CACHE_CAP {
+                let (old_seq, old_size) = cache.order.pop_front().expect("order tracks the cache");
+                if let Some(sizes) = cache.by_seq.get_mut(&old_seq) {
+                    sizes.remove(&old_size);
+                    if sizes.is_empty() {
+                        cache.by_seq.remove(&old_seq);
+                    }
+                }
+            }
+            cache.order.push_back((seq.to_string(), (p.m, p.n)));
+        }
+        let out = cache
+            .by_seq
+            .entry(seq.to_string())
+            .or_default()
+            .entry((p.m, p.n))
+            .or_insert(entry)
+            .clone();
+        Some(out)
+    }
+
     /// Pick the device for one submission given current queue depths
     /// (parallel to registry indices). Ties break to the lowest index,
     /// so routing is deterministic.
     pub fn route(&self, seq: &str, m: usize, n: usize, depths: &[u64]) -> usize {
         self.route_via(seq, m, n, depths, None, None)
+    }
+
+    /// Split-aware routing without an engine: [`CostModel::decide_via`]
+    /// with local forecasts, no quarantine mask and no deadline slack.
+    pub fn decide(
+        &self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        depths: &[u64],
+        policy: Option<SplitPolicy>,
+    ) -> RouteDecision {
+        self.decide_via(seq, m, n, depths, None, None, None, policy)
+    }
+
+    /// Score "best single device" against "split across the G cheapest
+    /// eligible lanes" and return where the request should run.
+    ///
+    /// The single side scores exactly like [`CostModel::route_via`].
+    /// For each G in `2..=policy.max_g` (bounded by the eligible lane
+    /// count and by how many row blocks the padded height yields), the
+    /// G lanes with the cheapest single scores are chosen and the split
+    /// scores as the *slowest* member: each lane's single-device
+    /// forecast scaled by its [`SplitForecast::ratio`] — which already
+    /// prices the scatter/partial-reduce/gather exchange over the
+    /// registry's interconnect — under the same depth/slack scoring.
+    /// Strict improvement is required, so ties keep the single
+    /// placement. Requests below `policy.min_rows` padded rows, programs
+    /// that refuse row-blocking, and unknown names never split.
+    ///
+    /// `slack` is the submitting request's remaining time to deadline:
+    /// when present, scoring switches to the deadline-aware completion
+    /// estimate of [`score_argmin_slack`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn decide_via(
+        &self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        depths: &[u64],
+        lanes: Option<(&[mpsc::Sender<Msg>], Duration)>,
+        blocked: Option<&[bool]>,
+        slack: Option<f64>,
+        policy: Option<SplitPolicy>,
+    ) -> RouteDecision {
+        debug_assert_eq!(depths.len(), self.registry.len());
+        if let Some(mask) = blocked {
+            self.note_quarantined(mask.iter().filter(|&&b| b).count() as u64);
+        }
+        let Some(costs) = self.costs_via(seq, m, n, lanes, blocked) else {
+            return RouteDecision::Single(shallowest_masked(depths, blocked));
+        };
+        let single = score_argmin_slack_masked(&costs, depths, blocked, slack)
+            .unwrap_or_else(|| shallowest_masked(depths, blocked));
+        let Some(policy) = policy else {
+            return RouteDecision::Single(single);
+        };
+        let p = ProblemSize::new(m, n).padded();
+        if p.m < policy.min_rows || policy.max_g < 2 {
+            return RouteDecision::Single(single);
+        }
+        let profiles = match self.split_profiles(seq, m, n) {
+            Some(pr) if !pr.is_empty() => pr,
+            _ => return RouteDecision::Single(single),
+        };
+        let mean = mean_finite_cost(&costs, blocked);
+        // Eligible lanes in ascending single-score order: the G-way
+        // candidate set is always the G cheapest placements.
+        let mut ranked: Vec<(f64, usize)> = costs
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| blocked.map_or(true, |mask| !mask[i]))
+            .filter_map(|(i, &c)| {
+                let s = score_one(c, depths[i], mean, slack);
+                s.is_finite().then_some((s, i))
+            })
+            .collect();
+        ranked.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let single_score = score_one(costs[single], depths[single], mean, slack);
+        let mut best_score = if single_score.is_finite() {
+            single_score
+        } else {
+            f64::INFINITY
+        };
+        let mut best = RouteDecision::Single(single);
+        for g in 2..=policy.max_g.min(ranked.len()) {
+            // fewer than g row blocks → this G degenerates; skip it
+            if split::block_rows(p.m, g).len() != g {
+                continue;
+            }
+            let mut worst = 0.0f64;
+            let mut feasible = true;
+            for &(_, i) in &ranked[..g] {
+                let t = costs[i] * profiles[i].ratio(g);
+                let s = score_one(t, depths[i], mean, slack);
+                if !s.is_finite() {
+                    feasible = false;
+                    break;
+                }
+                worst = worst.max(s);
+            }
+            if feasible && worst < best_score {
+                best_score = worst;
+                best = RouteDecision::Split(ranked[..g].iter().map(|&(_, i)| i).collect());
+            }
+        }
+        if matches!(best, RouteDecision::Split(_)) {
+            self.split_decisions.fetch_add(1, Ordering::Relaxed);
+        }
+        best
     }
 
     /// [`CostModel::route`] with the cold-path forecasts running on the
@@ -435,7 +712,46 @@ pub fn score_argmin(costs: &[f64], depths: &[u64]) -> Option<usize> {
 /// [`score_argmin`] with quarantined lanes (`blocked[i]`) excluded from
 /// the argmin.
 fn score_argmin_masked(costs: &[f64], depths: &[u64], blocked: Option<&[bool]>) -> Option<usize> {
+    score_argmin_slack_masked(costs, depths, blocked, None)
+}
+
+/// Multiplier applied to a placement whose forecast completion exceeds
+/// the request's remaining deadline slack: large enough that any
+/// deadline-meeting lane beats every deadline-missing one, finite so
+/// that when *no* lane meets the deadline the least-late completion
+/// still wins (and NaN never enters the scan).
+const LATE_PENALTY: f64 = 1e3;
+
+/// Deadline-aware routing score: near its deadline a request prefers
+/// the placement with the lowest *forecast completion time*, not just
+/// `forecast × (depth + 1)`.
+///
+/// The classic score multiplies a lane's own forecast by its backlog —
+/// right for throughput, but the backlog is other requests whose cost
+/// is not this request's cost. The completion estimate prices queued
+/// work at the fleet-mean forecast for this key:
+/// `completion_i = depth_i × mean_cost + cost_i`. Lanes whose
+/// completion fits inside `slack` keep the classic score (generous
+/// deadlines route exactly like [`score_argmin`]); lanes that would
+/// miss are multiplied by a large finite penalty *on their completion*,
+/// so deadline-meeting lanes always win, and an all-late fleet degrades
+/// to least-late — a near-deadline request thereby escapes a fast
+/// device buried behind cheap work for an idle slower one. NaN-safe
+/// exactly like [`score_argmin`]: non-finite scores are skipped,
+/// `None` when nothing is finite, and a NaN `slack` degrades to
+/// least-late ordering rather than poisoning the scan.
+pub fn score_argmin_slack(costs: &[f64], depths: &[u64], slack: f64) -> Option<usize> {
+    score_argmin_slack_masked(costs, depths, None, Some(slack))
+}
+
+fn score_argmin_slack_masked(
+    costs: &[f64],
+    depths: &[u64],
+    blocked: Option<&[bool]>,
+    slack: Option<f64>,
+) -> Option<usize> {
     assert_eq!(costs.len(), depths.len());
+    let mean = mean_finite_cost(costs, blocked);
     let mut best: Option<(usize, f64)> = None;
     for (i, (&c, &d)) in costs.iter().zip(depths).enumerate() {
         if let Some(mask) = blocked {
@@ -443,7 +759,7 @@ fn score_argmin_masked(costs: &[f64], depths: &[u64], blocked: Option<&[bool]>) 
                 continue;
             }
         }
-        let score = c * (d as f64 + 1.0);
+        let score = score_one(c, d, mean, slack);
         if !score.is_finite() {
             continue;
         }
@@ -456,6 +772,51 @@ fn score_argmin_masked(costs: &[f64], depths: &[u64], blocked: Option<&[bool]>) 
         }
     }
     best.map(|(i, _)| i)
+}
+
+/// One placement's score: the classic backlog-multiplied forecast
+/// without a deadline; with one, classic while the completion estimate
+/// fits the slack, penalized completion once it misses (see
+/// [`score_argmin_slack`]).
+fn score_one(cost: f64, depth: u64, mean_cost: f64, slack: Option<f64>) -> f64 {
+    let classic = cost * (depth as f64 + 1.0);
+    match slack {
+        None => classic,
+        Some(s) => {
+            let completion = depth as f64 * mean_cost + cost;
+            // f64::max drops a NaN slack → every lane reads "late" and
+            // the scan degrades to least-late completion ordering.
+            if completion <= s.max(0.0) {
+                classic
+            } else {
+                completion * LATE_PENALTY
+            }
+        }
+    }
+}
+
+/// Mean of the finite, unmasked forecasts — the per-item price the
+/// completion estimate charges queued work at. 0.0 when nothing is
+/// finite (the scan then skips every lane anyway).
+fn mean_finite_cost(costs: &[f64], blocked: Option<&[bool]>) -> f64 {
+    let mut sum = 0.0;
+    let mut k = 0usize;
+    for (i, &c) in costs.iter().enumerate() {
+        if let Some(mask) = blocked {
+            if mask[i] {
+                continue;
+            }
+        }
+        if c.is_finite() {
+            sum += c;
+            k += 1;
+        }
+    }
+    if k == 0 {
+        0.0
+    } else {
+        sum / k as f64
+    }
 }
 
 /// Fallback for unroutable (unknown-sequence) submissions: the
@@ -641,6 +1002,120 @@ mod tests {
         assert_eq!(model.pipeline_fingerprint("amx"), None);
         assert!(model.costs("amx", 32, 65536).is_none(), "forecast cache purged");
         assert_eq!(model.route("amx", 32, 65536, &[3, 1]), 1, "back to shallowest");
+    }
+
+    /// Two identical fast devices so an even row split genuinely halves
+    /// the compute side of the forecast.
+    fn twin_model(tag: &str) -> CostModel {
+        let dir = std::env::temp_dir().join(format!("fusebla_router_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut twin = DeviceModel::gtx480();
+        twin.name = "GeForce GTX 480 (model) #2".into();
+        let reg = DeviceRegistry::new(vec![DeviceModel::gtx480(), twin], dir).unwrap();
+        CostModel::new(Arc::new(reg))
+    }
+
+    /// The tentpole's routing decision: a large gemv-dominated key
+    /// splits across twins, a small key stays whole, a program that
+    /// refuses row-blocking stays whole, and without a policy the
+    /// router never splits.
+    #[test]
+    fn router_splits_large_rowblock_keys_across_twins() {
+        let model = twin_model("split");
+        let policy = Some(SplitPolicy {
+            max_g: 2,
+            min_rows: 256,
+        });
+        let d = model.decide("bicgk", 8192, 8192, &[0, 0], policy);
+        assert_eq!(d, RouteDecision::Split(vec![0, 1]));
+        assert_eq!(d.owner(), 0);
+        assert_eq!(model.stats().split_decisions, 1);
+        // below the row floor: whole
+        assert!(matches!(
+            model.decide("bicgk", 128, 8192, &[0, 0], policy),
+            RouteDecision::Single(_)
+        ));
+        // gemver consumes M-free intermediates → analyze refuses, and
+        // the refusal is cached as an empty profile vector
+        assert!(matches!(
+            model.decide("gemver", 4096, 4096, &[0, 0], policy),
+            RouteDecision::Single(_)
+        ));
+        assert!(model.split_profiles("gemver", 4096, 4096).unwrap().is_empty());
+        // no policy: plain single-device routing
+        assert!(matches!(
+            model.decide("bicgk", 8192, 8192, &[0, 0], None),
+            RouteDecision::Single(_)
+        ));
+        // unknown names still fall back to the shallowest queue
+        assert!(model.split_profiles("ghost", 8192, 8192).is_none());
+        assert_eq!(
+            model.decide("ghost", 8192, 8192, &[3, 1], policy),
+            RouteDecision::Single(1)
+        );
+    }
+
+    /// A quarantined lane never joins a split — with one eligible lane
+    /// the decision degrades to single placement on it.
+    #[test]
+    fn quarantined_lanes_never_join_a_split() {
+        let model = twin_model("splitmask");
+        let policy = Some(SplitPolicy {
+            max_g: 2,
+            min_rows: 256,
+        });
+        let blocked = [false, true];
+        let d = model.decide_via(
+            "bicgk",
+            8192,
+            8192,
+            &[0, 0],
+            None,
+            Some(&blocked),
+            None,
+            policy,
+        );
+        assert_eq!(d, RouteDecision::Single(0));
+    }
+
+    /// The deadline satellite: a near-deadline request escapes a fast
+    /// lane buried behind queued work for the placement whose forecast
+    /// completion fits the slack; generous slack routes classically.
+    #[test]
+    fn deadline_slack_prefers_lowest_forecast_completion() {
+        let costs = [1.0, 5.0];
+        let depths = [3, 0];
+        // classic: 1×4 = 4 beats 5×1 = 5 — the fast lane wins on
+        // throughput even though three requests run before this one
+        assert_eq!(score_argmin(&costs, &depths), Some(0));
+        // completions price the backlog at the fleet mean (3.0):
+        // lane 0 finishes at 3×3+1 = 10, lane 1 at 5. A 6-second slack
+        // makes lane 0 late → the idle slower lane wins.
+        assert_eq!(score_argmin_slack(&costs, &depths, 6.0), Some(1));
+        // generous slack: everyone meets the deadline → classic answer
+        assert_eq!(score_argmin_slack(&costs, &depths, 20.0), Some(0));
+        // no one meets it: least-late completion wins
+        assert_eq!(score_argmin_slack(&costs, &depths, 1.0), Some(1));
+    }
+
+    /// Slack scoring keeps the NaN-safety of [`score_argmin`]: poisoned
+    /// forecasts and even a NaN slack never capture the argmin.
+    #[test]
+    fn slack_scoring_is_nan_safe() {
+        assert_eq!(score_argmin_slack(&[f64::NAN, 2.0], &[0, 0], 1.0), Some(1));
+        assert_eq!(score_argmin_slack(&[f64::INFINITY, 2.0], &[5, 0], 1e-9), Some(1));
+        assert_eq!(
+            score_argmin_slack(&[f64::NAN, f64::INFINITY], &[0, 0], 1.0),
+            None
+        );
+        assert_eq!(score_argmin_slack(&[], &[], 1.0), None);
+        // NaN slack degrades to least-late ordering, not a poisoned scan
+        assert_eq!(score_argmin_slack(&[3.0, 2.0], &[0, 0], f64::NAN), Some(1));
+        assert_eq!(
+            score_argmin_slack(&[1.0, 5.0], &[3, 0], f64::NAN),
+            Some(1),
+            "all-late ranks by completion (10 vs 5)"
+        );
     }
 
     #[test]

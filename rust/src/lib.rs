@@ -39,6 +39,7 @@ pub mod runtime;
 pub mod script;
 pub mod sequences;
 pub mod sim;
+pub mod split;
 pub mod util;
 
 pub use coordinator::{

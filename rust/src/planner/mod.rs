@@ -75,7 +75,7 @@ pub mod shard;
 
 pub use cost::{part_key, CostCache, ImplKey};
 pub use search::{
-    forecast_variants, plan, plan_space, rank_top_k, Planned, PlannerConfig, PlannerStats,
-    RankedCombo, VariantForecast,
+    forecast_split, forecast_variants, plan, plan_space, rank_top_k, Planned, PlannerConfig,
+    PlannerStats, RankedCombo, SplitForecast, VariantForecast,
 };
 pub use shard::{chunk_ranges, plan_space_sharded, ShardEval};

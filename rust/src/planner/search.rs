@@ -13,6 +13,8 @@ use crate::ir::plan::SeqPlan;
 use crate::ir::program::Program;
 use crate::library::Library;
 use crate::predict::RoutineDb;
+use crate::sim::multi::{simulate_seq_multi, Interconnect};
+use crate::sim::DeviceModel;
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeSet, BinaryHeap};
 
@@ -109,6 +111,74 @@ impl VariantForecast {
     pub fn best_seconds(&self) -> f64 {
         self.planned.min(self.baseline)
     }
+}
+
+/// G-way split profile of a sequence's best plan on one device: for
+/// each G in `1..=max_g`, the multi-device simulator's predicted
+/// seconds of executing the plan row-blocked across G copies of the
+/// device with the scatter/partial-reduce/gather exchange priced over
+/// the given [`Interconnect`]. Consumers apply the *ratio* to a
+/// calibrated single-device forecast rather than the absolute seconds,
+/// so the split decision stays consistent with the
+/// [`VariantForecast`]-based routing costs it competes against.
+#[derive(Clone, Debug)]
+pub struct SplitForecast {
+    /// `seconds[g-1]` = predicted seconds at G = g (index 0 is the
+    /// single-device identity the ratios normalize by).
+    pub seconds: Vec<f64>,
+}
+
+impl SplitForecast {
+    /// Predicted speed of a G-way split relative to single-device
+    /// execution on the same hardware: `ratio(1) == 1.0`, and a ratio
+    /// below 1 means the split is forecast to win. Out-of-range G (or a
+    /// degenerate profile) is priced as "no help" rather than panicking.
+    pub fn ratio(&self, g: usize) -> f64 {
+        let t1 = match self.seconds.first() {
+            Some(&t) if t > 0.0 && t.is_finite() => t,
+            _ => return 1.0,
+        };
+        match self.seconds.get(g.wrapping_sub(1)) {
+            Some(&tg) if tg.is_finite() => tg / t1,
+            _ => 1.0,
+        }
+    }
+
+    /// The G with the smallest forecast seconds (1 when splitting never
+    /// helps).
+    pub fn best_g(&self) -> usize {
+        let mut best = 1;
+        for g in 2..=self.seconds.len() {
+            if self.ratio(g) < self.ratio(best) {
+                best = g;
+            }
+        }
+        best
+    }
+}
+
+/// Plan the sequence once and sweep the multi-device simulator over
+/// `1..=max_g`, yielding the [`SplitForecast`] the fleet router caches
+/// beside its single-device costs (same shape as [`forecast_variants`]:
+/// pure planning, no execution).
+#[allow(clippy::too_many_arguments)]
+pub fn forecast_split(
+    prog: &Program,
+    lib: &Library,
+    graph: &DepGraph,
+    db: &RoutineDb,
+    axes: &ImplAxes,
+    dev: &DeviceModel,
+    link: &Interconnect,
+    p: ProblemSize,
+    max_g: usize,
+    cfg: &PlannerConfig,
+) -> SplitForecast {
+    let planned = plan(prog, lib, graph, db, axes, p, cfg);
+    let seconds = (1..=max_g.max(1))
+        .map(|g| simulate_seq_multi(dev, link, g as u32, &planned.best, p, 1.0).seconds)
+        .collect();
+    SplitForecast { seconds }
 }
 
 /// Run the pruned planner and predict the baseline on the same
@@ -393,6 +463,53 @@ mod tests {
         assert_eq!(sums, vec![3.0, 5.0, 11.0]);
         assert_eq!(top[0].choice, vec![0, 0]);
         assert_eq!(top[1].choice, vec![1, 0]);
+    }
+
+    #[test]
+    fn split_forecast_crosses_over_with_size() {
+        let (prog, lib, graph, db) = setup(BICGK);
+        let dev = DeviceModel::gtx480();
+        let link = Interconnect::pcie2_x16();
+        let cfg = PlannerConfig::default();
+        let axes = ImplAxes::minimal();
+        let big = forecast_split(
+            &prog,
+            &lib,
+            &graph,
+            &db,
+            &axes,
+            &dev,
+            &link,
+            ProblemSize::square(8192),
+            4,
+            &cfg,
+        );
+        assert_eq!(big.seconds.len(), 4);
+        assert_eq!(big.ratio(1), 1.0);
+        assert!(big.ratio(2) < 1.0, "large bicgk must win at G=2: {:?}", big.seconds);
+        assert!(big.best_g() >= 2);
+        // a tiny problem must not be forecast to split as well as a big one
+        let small = forecast_split(
+            &prog,
+            &lib,
+            &graph,
+            &db,
+            &axes,
+            &dev,
+            &link,
+            ProblemSize::square(128),
+            4,
+            &cfg,
+        );
+        assert!(
+            small.ratio(4) > big.ratio(4),
+            "small {:.3} vs big {:.3}",
+            small.ratio(4),
+            big.ratio(4)
+        );
+        // out-of-range G is priced as no help, never a panic
+        assert_eq!(big.ratio(99), 1.0);
+        assert_eq!(big.ratio(0), 1.0);
     }
 
     #[test]

@@ -43,6 +43,26 @@ impl Interconnect {
         }
     }
 
+    /// NVLink-class profile: ~7× the point-to-point bandwidth of PCIe
+    /// 2.0 ×16 and a fifth of the per-transfer latency, so reduction
+    /// combines stop dominating and the split crossover moves toward
+    /// smaller problems.
+    pub fn nvlink() -> Self {
+        Interconnect {
+            bandwidth: 40.0e9,
+            latency: 2.0e-6,
+        }
+    }
+
+    /// Look a profile up by its serve-demo name (`pcie` / `nvlink`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "pcie" | "pcie2_x16" => Some(Self::pcie2_x16()),
+            "nvlink" => Some(Self::nvlink()),
+            _ => None,
+        }
+    }
+
     fn transfer_time(&self, bytes: f64) -> f64 {
         if bytes <= 0.0 {
             0.0
@@ -227,5 +247,26 @@ mod tests {
         assert_eq!(link.transfer_time(0.0), 0.0);
         let t = link.transfer_time(6.0e9);
         assert!((t - (1.0 + 10.0e-6)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nvlink_beats_pcie_on_reduce_heavy_splits() {
+        let pcie = Interconnect::pcie2_x16();
+        let nv = Interconnect::nvlink();
+        assert!(nv.bandwidth > pcie.bandwidth);
+        assert!(nv.latency < pcie.latency);
+        // same bytes, strictly cheaper transfer
+        assert!(nv.transfer_time(1.0e6) < pcie.transfer_time(1.0e6));
+        // a reduce-carrying sequence scales no worse under the faster link
+        let ctx = Context::new();
+        let p = ProblemSize::square(4096);
+        let (plan, _) = best_plan(&ctx, "bicgk", p);
+        let eff_pcie = scaling_efficiency(&ctx.dev, &pcie, 4, &plan, p);
+        let eff_nv = scaling_efficiency(&ctx.dev, &nv, 4, &plan, p);
+        assert!(eff_nv >= eff_pcie - 1e-9, "nvlink {eff_nv:.3} vs pcie {eff_pcie:.3}");
+        // name lookup used by the serve demo
+        assert!(Interconnect::by_name("pcie").is_some());
+        assert!(Interconnect::by_name("nvlink").is_some());
+        assert!(Interconnect::by_name("carrier-pigeon").is_none());
     }
 }

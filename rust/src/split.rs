@@ -1,0 +1,405 @@
+//! Row-block splitting of one request across G devices (the paper §6
+//! future-work direction the serve path executes, not just simulates).
+//!
+//! A BLAS-2 sequence whose matrix/vector operands carry their `M`
+//! dimension *leading* can be row-blocked: each of G lanes executes the
+//! full sequence over an `m/G`-row slab, and the owning lane combines.
+//! What combines how is exactly the paper's map/reduce distinction:
+//!
+//! * outputs with a leading `M` partition cleanly — concatenate the
+//!   per-lane row blocks in block order (**bit-identical** to
+//!   single-device execution: the N-reduction inside each row is
+//!   untouched);
+//! * `M`-free outputs *derived from* `M`-bearing data are per-lane
+//!   partials of a reduction over rows (`sgemtv`, dot-over-M) —
+//!   summed in fixed block order, so the result is deterministic but
+//!   may differ from single-device execution in the last bits (a
+//!   different, equally valid reduction order);
+//! * `M`-free outputs derived only from replicated inputs are computed
+//!   identically on every lane — any one copy serves.
+//!
+//! [`analyze`] refuses programs where a partial result would flow back
+//! into later calls (GEMVER: its `N`-vector `x` is an `M`-reduction fed
+//! into a second GEMV — combining per-lane partials mid-sequence would
+//! need an all-gather barrier the execution path does not have).
+
+use crate::ir::elem::{DimSym, TILE};
+use crate::ir::program::Program;
+use crate::runtime::Tensor;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// How one variable participates in a row-block split along `M`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Input with leading `M`: each lane receives its row slab.
+    SliceRows,
+    /// `M`-free input: replicated whole to every lane.
+    Replicate,
+    /// Output with leading `M`: per-lane blocks concatenate in block
+    /// order (order-preserving — bit-identical to unsplit execution).
+    ConcatRows,
+    /// `M`-free output reduced over rows: per-lane partials sum in
+    /// fixed block order (deterministic, reduction order differs).
+    PartialSum,
+    /// `M`-free output independent of `M`-bearing data: every lane
+    /// computes the same value; the first block's copy serves.
+    TakeOwner,
+}
+
+/// The split recipe of one program: per-input slicing and per-output
+/// combining roles, in declaration order.
+#[derive(Clone, Debug)]
+pub struct SplitSpec {
+    pub inputs: Vec<(String, Role)>,
+    pub outputs: Vec<(String, Role)>,
+}
+
+impl SplitSpec {
+    /// Does every output combine order-preservingly (no [`Role::PartialSum`])?
+    /// Only then is split execution bit-identical to single-device.
+    pub fn order_preserving(&self) -> bool {
+        self.outputs.iter().all(|(_, r)| *r != Role::PartialSum)
+    }
+}
+
+fn leading_m(dims: &[DimSym]) -> bool {
+    dims.first().map(|d| d.0 == "M").unwrap_or(false)
+}
+
+/// Decide whether `prog` row-blocks along `M`, and how. `None` means
+/// the program must serve on a single device:
+///
+/// * no input carries a leading `M` (nothing to slice), or
+/// * `M` appears as a non-leading dimension (column-split territory), or
+/// * a dimension symbol other than `M`/`N` appears, or
+/// * an `M`-free value derived from `M`-bearing data is consumed by a
+///   later call — it would be a per-lane partial where the program
+///   needs the combined total (GEMVER's shape).
+pub fn analyze(prog: &Program) -> Option<SplitSpec> {
+    for v in &prog.vars {
+        for (i, d) in v.dims.iter().enumerate() {
+            match d.0.as_str() {
+                "M" if i > 0 => return None,
+                "M" | "N" => {}
+                _ => return None,
+            }
+        }
+    }
+    // Taint: does a variable's value depend (transitively) on any
+    // M-bearing variable? Calls are in execution order and scripts are
+    // SSA-like, so one forward pass settles it.
+    let mut tainted: BTreeSet<usize> = prog
+        .vars
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| leading_m(&v.dims))
+        .map(|(i, _)| i)
+        .collect();
+    for call in &prog.calls {
+        if call.args.iter().any(|a| tainted.contains(&a.0)) {
+            for o in &call.outs {
+                tainted.insert(o.0);
+            }
+        }
+    }
+    // An M-free tainted value is a per-lane partial; feeding it to a
+    // later call would compute on the partial where the full reduction
+    // is meant.
+    for call in &prog.calls {
+        for a in &call.args {
+            if tainted.contains(&a.0) && !leading_m(&prog.var(*a).dims) {
+                return None;
+            }
+        }
+    }
+    let inputs: Vec<(String, Role)> = prog
+        .inputs
+        .iter()
+        .map(|&v| {
+            let decl = prog.var(v);
+            let role = if leading_m(&decl.dims) {
+                Role::SliceRows
+            } else {
+                Role::Replicate
+            };
+            (decl.name.clone(), role)
+        })
+        .collect();
+    if !inputs.iter().any(|(_, r)| *r == Role::SliceRows) {
+        return None;
+    }
+    let outputs = prog
+        .outputs
+        .iter()
+        .map(|&v| {
+            let decl = prog.var(v);
+            let role = if leading_m(&decl.dims) {
+                Role::ConcatRows
+            } else if tainted.contains(&v.0) {
+                Role::PartialSum
+            } else {
+                Role::TakeOwner
+            };
+            (decl.name.clone(), role)
+        })
+        .collect();
+    Some(SplitSpec { inputs, outputs })
+}
+
+/// Partition `m` rows into at most `g` contiguous blocks, tile-aligned
+/// at every cut (only the final block may be a partial tile): returns
+/// `(start_row, rows)` pairs covering `0..m` exactly. Fewer than `g`
+/// blocks come back when `m` has fewer than `g` tiles.
+pub fn block_rows(m: usize, g: usize) -> Vec<(usize, usize)> {
+    if m == 0 || g == 0 {
+        return Vec::new();
+    }
+    let tiles = m.div_ceil(TILE);
+    let per = tiles.div_ceil(g.min(tiles)) * TILE;
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < m {
+        let rows = per.min(m - start);
+        out.push((start, rows));
+        start += rows;
+    }
+    out
+}
+
+/// The leading-dimension slice `start..start+rows` of a vector or
+/// matrix tensor (row-major).
+pub fn slice_rows(t: &Tensor, start: usize, rows: usize) -> Result<Tensor> {
+    let Some(&lead) = t.dims.first() else {
+        bail!("cannot row-slice a dimensionless tensor");
+    };
+    if start + rows > lead {
+        bail!("row slice {start}+{rows} exceeds leading dim {lead}");
+    }
+    let stride: usize = t.dims[1..].iter().product::<usize>().max(1);
+    let mut dims = t.dims.clone();
+    dims[0] = rows;
+    Ok(Tensor::new(
+        dims,
+        t.data[start * stride..(start + rows) * stride].to_vec(),
+    ))
+}
+
+/// Build one block's input environment: sliced rows for
+/// [`Role::SliceRows`] inputs, shared clones for the rest.
+pub fn slice_inputs(
+    spec: &SplitSpec,
+    inputs: &BTreeMap<String, Tensor>,
+    start: usize,
+    rows: usize,
+) -> Result<BTreeMap<String, Tensor>> {
+    let mut out = BTreeMap::new();
+    for (name, role) in &spec.inputs {
+        let Some(t) = inputs.get(name) else {
+            bail!("split input '{name}' missing from the request environment");
+        };
+        let block = match role {
+            Role::SliceRows => slice_rows(t, start, rows)?,
+            _ => t.clone(),
+        };
+        out.insert(name.clone(), block);
+    }
+    Ok(out)
+}
+
+/// Combine per-block output environments (in block order) into the
+/// request's outputs: concatenation for [`Role::ConcatRows`],
+/// fixed-order elementwise sum for [`Role::PartialSum`], the first
+/// block's copy for [`Role::TakeOwner`].
+pub fn combine_outputs(
+    spec: &SplitSpec,
+    envs: &[BTreeMap<String, Tensor>],
+) -> Result<BTreeMap<String, Tensor>> {
+    if envs.is_empty() {
+        bail!("no block results to combine");
+    }
+    let mut out = BTreeMap::new();
+    for (name, role) in &spec.outputs {
+        let parts: Vec<&Tensor> = envs
+            .iter()
+            .map(|e| {
+                e.get(name)
+                    .ok_or_else(|| anyhow::anyhow!("block result lacks output '{name}'"))
+            })
+            .collect::<Result<_>>()?;
+        let combined = match role {
+            Role::ConcatRows => {
+                let mut dims = parts[0].dims.clone();
+                if dims.is_empty() {
+                    bail!("row-concat output '{name}' is dimensionless");
+                }
+                dims[0] = parts.iter().map(|t| t.dims[0]).sum();
+                let mut data = Vec::with_capacity(parts.iter().map(|t| t.data.len()).sum());
+                for p in &parts {
+                    if p.dims[1..] != parts[0].dims[1..] {
+                        bail!("row-concat output '{name}' has mismatched trailing dims");
+                    }
+                    data.extend_from_slice(&p.data);
+                }
+                Tensor::new(dims, data)
+            }
+            Role::PartialSum => {
+                let mut acc = parts[0].clone();
+                for p in &parts[1..] {
+                    if p.dims != acc.dims {
+                        bail!("partial-sum output '{name}' has mismatched dims");
+                    }
+                    for (a, b) in acc.data.iter_mut().zip(&p.data) {
+                        *a += b;
+                    }
+                }
+                acc
+            }
+            Role::TakeOwner => parts[0].clone(),
+            Role::SliceRows | Role::Replicate => {
+                bail!("input role on output '{name}'")
+            }
+        };
+        out.insert(name.clone(), combined);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::library::Library;
+    use crate::pipelines;
+    use crate::sequences;
+
+    fn program(seq: &str) -> Program {
+        sequences::by_name(seq).unwrap().program(&Library::standard())
+    }
+
+    #[test]
+    fn gemv_is_an_order_preserving_split() {
+        let spec = analyze(&program("sgemv")).expect("sgemv must split");
+        assert!(spec.order_preserving());
+        let roles: BTreeMap<_, _> = spec.inputs.iter().cloned().collect();
+        assert_eq!(roles["A"], Role::SliceRows);
+        assert_eq!(roles["x"], Role::Replicate);
+        assert_eq!(roles["y"], Role::SliceRows);
+        assert_eq!(spec.outputs, vec![("z".to_string(), Role::ConcatRows)]);
+    }
+
+    #[test]
+    fn bicgk_partial_reduces_its_transposed_half() {
+        let spec = analyze(&program("bicgk")).expect("bicgk must split");
+        assert!(!spec.order_preserving());
+        let outs: BTreeMap<_, _> = spec.outputs.iter().cloned().collect();
+        assert_eq!(outs["q"], Role::ConcatRows);
+        assert_eq!(outs["s"], Role::PartialSum);
+    }
+
+    #[test]
+    fn gemver_and_blas1_refuse_to_split() {
+        // gemver feeds an M-reduction (x) back into a second gemv — a
+        // per-lane partial would poison the downstream call
+        assert!(analyze(&program("gemver")).is_none());
+        // sgemvt has the same partial-into-gemv shape
+        assert!(analyze(&program("sgemvt")).is_none());
+        // pure BLAS-1 sequences have no M input to slice
+        assert!(analyze(&program("waxpby")).is_none());
+        assert!(analyze(&program("vadd")).is_none());
+    }
+
+    #[test]
+    fn block_rows_cover_exactly_and_tile_align() {
+        for (m, g) in [(256, 2), (256, 3), (100, 4), (32, 8), (8192, 4), (33, 2)] {
+            let blocks = block_rows(m, g);
+            assert!(!blocks.is_empty());
+            assert!(blocks.len() <= g, "m={m} g={g}: {blocks:?}");
+            let mut next = 0;
+            for (i, &(start, rows)) in blocks.iter().enumerate() {
+                assert_eq!(start, next, "m={m} g={g}");
+                assert!(rows > 0);
+                assert_eq!(start % TILE, 0, "cuts are tile-aligned");
+                if i + 1 < blocks.len() {
+                    assert_eq!(rows % TILE, 0, "only the last block may be partial");
+                }
+                next = start + rows;
+            }
+            assert_eq!(next, m, "blocks cover all rows");
+        }
+        assert!(block_rows(0, 2).is_empty());
+        assert!(block_rows(128, 0).is_empty());
+    }
+
+    #[test]
+    fn slice_concat_roundtrip_is_bit_identical() {
+        let t = Tensor::matrix(6, 3, (0..18).map(|v| v as f32 * 0.5).collect());
+        let a = slice_rows(&t, 0, 2).unwrap();
+        let b = slice_rows(&t, 2, 4).unwrap();
+        assert_eq!(a.dims, vec![2, 3]);
+        assert_eq!(b.dims, vec![4, 3]);
+        let spec = SplitSpec {
+            inputs: vec![],
+            outputs: vec![("t".to_string(), Role::ConcatRows)],
+        };
+        let envs = vec![
+            BTreeMap::from([("t".to_string(), a)]),
+            BTreeMap::from([("t".to_string(), b)]),
+        ];
+        let back = combine_outputs(&spec, &envs).unwrap();
+        assert_eq!(back["t"].dims, t.dims);
+        for (x, y) in back["t"].data.iter().zip(&t.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(slice_rows(&t, 4, 4).is_err(), "overrun must be refused");
+    }
+
+    /// The property the serve-path split rests on: running a pipeline
+    /// per row block and combining equals running it whole — bitwise
+    /// for order-preserving programs, deterministically (fixed combine
+    /// order, close to the unsplit value) for partial reductions.
+    #[test]
+    fn split_offline_execution_matches_whole() {
+        let lib = Library::standard();
+        let gemv = sequences::by_name("sgemv").unwrap();
+        let bicgk = sequences::by_name("bicgk").unwrap();
+        for (seq, bitwise) in [(&gemv, true), (&bicgk, false)] {
+            let c = pipelines::compile(seq.name, seq.script, &lib).unwrap();
+            let spec = analyze(&c.pipeline.program).unwrap();
+            let (m, n) = (96, 64);
+            let inputs = c.pipeline.synth_inputs(m, n, 11).unwrap();
+            let whole = c.pipeline.run_offline("fused", m, n, &inputs).unwrap();
+            let run_split = || -> BTreeMap<String, Tensor> {
+                let envs: Vec<_> = block_rows(m, 3)
+                    .into_iter()
+                    .map(|(start, rows)| {
+                        let block = slice_inputs(&spec, &inputs, start, rows).unwrap();
+                        c.pipeline.run_offline("fused", rows, n, &block).unwrap()
+                    })
+                    .collect();
+                combine_outputs(&spec, &envs).unwrap()
+            };
+            let combined = run_split();
+            let again = run_split();
+            for (name, _) in &spec.outputs {
+                assert_eq!(combined[name].dims, whole[name].dims, "{}/{name}", seq.name);
+                for (i, (a, b)) in combined[name].data.iter().zip(&whole[name].data).enumerate() {
+                    if bitwise {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{}/{name}[{i}] must be bit-identical",
+                            seq.name
+                        );
+                    } else {
+                        assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{}/{name}[{i}]", seq.name);
+                    }
+                }
+                // fixed-order combine: split execution is deterministic
+                // even where it is not bit-identical to unsplit
+                for (a, b) in combined[name].data.iter().zip(&again[name].data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}/{name} replays", seq.name);
+                }
+            }
+        }
+    }
+}

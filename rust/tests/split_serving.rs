@@ -1,0 +1,178 @@
+//! Split-serving integration tests — the G-way scatter/partial-reduce/
+//! gather path through the *public* engine API: the router's split
+//! decision on the anchored twin-GTX 480 configuration serves as ONE
+//! ticket end to end, fallback accounting stays consistent on the stub
+//! backend, a registered pipeline's results are placement-invariant
+//! (ConcatRows combines are order-preserving), and seeded chaos over
+//! split-enabled traffic loses no tickets.
+
+use fusebla::fleet::SplitPolicy;
+use fusebla::sim::DeviceModel;
+use fusebla::{Client, DeviceRegistry, Engine, EngineConfig, Fault, FaultPlan, SubmitRequest};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A row-concat-only pipeline: every output carries a leading `M`, so
+/// split and single-device execution are bit-identical wherever the
+/// router places the request (interpreter-backed — it executes end to
+/// end on the offline stub).
+const ROWMAP: &str = "
+    matrix<MxN> A; vector<N> x; vector<M> q;
+    input A, x;
+    q = sgemv(A, x, alpha=2.0);
+    return q;
+";
+
+/// Twin GTX 480s over a stub catalog — the exact configuration the
+/// router unit test anchors `Split([0, 1])` on for bicgk@8192x8192
+/// with `SplitPolicy { max_g: 2, min_rows: 256 }`, so the routing
+/// decision exercised here is deterministic.
+fn twin_fleet(tag: &str, cfg: EngineConfig) -> (PathBuf, Engine) {
+    let dir = fusebla::bench_support::stub_catalog(tag, &["waxpby"]);
+    let mut twin = DeviceModel::gtx480();
+    twin.name = "GeForce GTX 480 (model) #2".into();
+    let reg = Arc::new(DeviceRegistry::new(vec![DeviceModel::gtx480(), twin], &dir).unwrap());
+    let engine = Engine::start_fleet(reg, &dir, cfg).unwrap();
+    (dir, engine)
+}
+
+fn split_cfg() -> EngineConfig {
+    EngineConfig {
+        split: Some(SplitPolicy {
+            max_g: 2,
+            min_rows: 256,
+        }),
+        ..EngineConfig::default()
+    }
+}
+
+/// Every submitted request releases its queue-depth slot on a terminal
+/// outcome; scattered split blocks release their peer slots the same
+/// way — so after all tickets resolve, the depths must drain to zero.
+fn await_drain(client: &Client, lanes: usize) {
+    let by = Instant::now() + Duration::from_secs(10);
+    while client.queue_depths() != vec![0; lanes] {
+        assert!(
+            Instant::now() < by,
+            "queue depths must drain: {:?}",
+            client.queue_depths()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The anchored split decision routes and serves as one ticket on the
+/// stub backend: the built-in cannot execute (no artifacts at the
+/// block sizes), so the split degrades to the whole-run fallback —
+/// counted, surfaced in the error chain, and never a lost ticket.
+#[test]
+fn routed_split_serves_one_ticket_with_fallback_accounting() {
+    let (dir, engine) = twin_fleet("routedsplit", split_cfg());
+    let client = engine.client();
+    let t = client
+        .submit(SubmitRequest::new("bicgk", 8192, 8192).synth(1))
+        .unwrap();
+    let err = t.wait().err().expect("stub backend cannot execute built-ins");
+    assert!(
+        format!("{err:#}").contains("whole fallback after"),
+        "the fallback chain must be visible: {err:#}"
+    );
+    assert_eq!(
+        client.routing_stats().split_decisions,
+        1,
+        "the router chose to split the large row-block key"
+    );
+    await_drain(&client, 2);
+    let fleet = engine.shutdown_fleet();
+    let agg = fleet.aggregate();
+    assert_eq!(agg.splits, 0, "execution failed before a split completed");
+    assert_eq!(agg.split_fallbacks, 1, "the failed split fell back to one whole run");
+    assert_eq!(agg.requests, 1, "one ticket, one request — blocks never double-count");
+    assert_eq!(agg.failures, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A registered map-only pipeline is bit-identical between an unpinned
+/// submit — which the split-enabled router may scatter across the
+/// twins — and a pinned single-device run: placement must never change
+/// the bits of an order-preserving program.
+#[test]
+fn pipeline_results_are_placement_invariant() {
+    let (dir, engine) = twin_fleet("splitpipe", split_cfg());
+    let client = engine.client();
+    client.register_pipeline("rowmap", ROWMAP).unwrap();
+    let pin = client.devices()[0].name().to_string();
+    let pinned = client
+        .submit(SubmitRequest::new("rowmap", 4096, 128).synth(5).pin(&pin))
+        .unwrap()
+        .wait()
+        .expect("interp execution succeeds on the stub backend");
+    let routed = client
+        .submit(SubmitRequest::new("rowmap", 4096, 128).synth(5))
+        .unwrap()
+        .wait()
+        .expect("routed execution succeeds wherever it lands");
+    assert_eq!(routed.env["q"].dims, pinned.env["q"].dims);
+    for (a, b) in routed.env["q"].data.iter().zip(&pinned.env["q"].data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "placement changed the bits");
+    }
+    await_drain(&client, 2);
+    let fleet = engine.shutdown_fleet();
+    let agg = fleet.aggregate();
+    assert_eq!(agg.requests, 2);
+    assert_eq!(agg.failures, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Chaos over split-enabled traffic: a lane killed on its second turn
+/// while pinned and routed pipeline requests keep arriving. Every
+/// ticket reaches a terminal outcome (success or a typed shed — wait()
+/// returning IS the property), queue depths drain, and the killed lane
+/// respawns.
+#[test]
+fn split_traffic_survives_lane_kill_without_ticket_loss() {
+    let cfg = EngineConfig {
+        fault_plan: FaultPlan {
+            faults: vec![Fault::Kill { lane: 1, turn: 2 }],
+        },
+        ..split_cfg()
+    };
+    let (dir, engine) = twin_fleet("splitchaos", cfg);
+    let client = engine.client();
+    client.register_pipeline("rowmap", ROWMAP).unwrap();
+    let lane1 = client.devices()[1].name().to_string();
+    // lane 1's first turn is healthy; its second — guaranteed by the
+    // pinned submissions below — is the scripted kill
+    client
+        .submit(SubmitRequest::new("rowmap", 4096, 128).synth(0).pin(&lane1))
+        .unwrap()
+        .wait()
+        .expect("warmup turn on the doomed lane");
+    let tickets: Vec<_> = (1..=8u64)
+        .map(|i| {
+            let req = SubmitRequest::new("rowmap", 4096, 128).synth(i);
+            let req = if i % 2 == 0 { req.pin(&lane1) } else { req };
+            client.submit(req).unwrap()
+        })
+        .collect();
+    let mut resolved = 0;
+    for t in tickets {
+        // Ok, or a typed error (WorkerLost for requests pinned to the
+        // dead lane) — either is a terminal outcome, never a hang.
+        let _ = t.wait();
+        resolved += 1;
+    }
+    assert_eq!(resolved, 8, "every ticket must resolve");
+    await_drain(&client, 2);
+    // the salvage replies land before the supervisor bumps the restart
+    // counter, so poll rather than assert a snapshot
+    let by = Instant::now() + Duration::from_secs(30);
+    while engine.fleet_metrics().devices[1].1.worker_restarts < 1 {
+        assert!(Instant::now() < by, "the killed lane never respawned");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let fleet = engine.shutdown_fleet();
+    assert!(fleet.lost.is_empty(), "a recoverable kill never loses the lane");
+    let _ = std::fs::remove_dir_all(&dir);
+}
