@@ -1,0 +1,213 @@
+//! Horizontal-fusion study — when does combining a drained turn's
+//! batches into one block-range-dispatched launch beat back-to-back
+//! dispatch, and does the serve path actually take the win?
+//!
+//! Two parts, both offline-safe:
+//!
+//! * **Forecast crossover** (pure planning): price candidate turn
+//!   pairings with `planner::forecast_hfuse` across mixed-traffic
+//!   scenarios — launch-bound BLAS-1 groups at small sizes, where the
+//!   elided launch overhead dominates, through large and
+//!   geometry-mismatched pairings, where the occupancy/cache
+//!   interference penalty eats the savings. The crossover is the
+//!   point of the cost model: fusing must win where launches dominate
+//!   and stop winning where they do not.
+//! * **Served A/B** (real execution): the same mixed workload served
+//!   with horizontal fusion on vs off, over registered pipelines —
+//!   interpreter-backed resolved plans, so fused turns execute for
+//!   real on the stub catalog and the engine's `hfused_batches` /
+//!   `hfuse_launch_savings` counters measure the path actually taken.
+//!
+//! Results merge into `BENCH_hfuse.json`. `cargo bench --bench hfuse`
+
+use fusebla::bench_support::report::update_bench_json;
+use fusebla::bench_support::stub_catalog;
+use fusebla::coordinator::Context;
+use fusebla::fusion::ImplAxes;
+use fusebla::ir::elem::ProblemSize;
+use fusebla::ir::plan::SeqPlan;
+use fusebla::planner::{self, PlannerConfig};
+use fusebla::sequences;
+use fusebla::util::Json;
+use fusebla::{Engine, EngineConfig, SubmitRequest};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const BENCH_HFUSE_JSON: &str = "BENCH_hfuse.json";
+/// Scheduling turns per served configuration.
+const ROUNDS: usize = 20;
+
+/// The planner's best plan for a built-in sequence at a size — the
+/// same plan the serve path prices fusion with.
+fn planned(seq: &str, p: ProblemSize, ctx: &Context) -> SeqPlan {
+    let s = sequences::by_name(seq).expect("built-in sequence");
+    let (prog, graph, _space) = s.space(&ctx.lib, &ImplAxes::minimal());
+    planner::plan(
+        &prog,
+        &ctx.lib,
+        &graph,
+        &ctx.db,
+        &ImplAxes::minimal(),
+        p,
+        &PlannerConfig::default(),
+    )
+    .best
+}
+
+/// Price one scenario's turn: fused vs back-to-back, as the scheduler
+/// would see it.
+fn price(
+    name: &str,
+    members: &[(&SeqPlan, ProblemSize)],
+    ctx: &Context,
+) -> (String, Json, bool) {
+    let f = planner::forecast_hfuse(members, &ctx.db, &ctx.dev);
+    let wins = f.wins();
+    println!(
+        "{name:24} fused {:9.3} µs  back-to-back {:9.3} µs  ({} launch(es) saved) — {}",
+        f.fused * 1e6,
+        f.back_to_back * 1e6,
+        f.launches_saved,
+        if wins { "FUSE" } else { "keep separate" }
+    );
+    let section = Json::Obj(vec![
+        ("fused_us".into(), Json::num(f.fused * 1e6)),
+        ("back_to_back_us".into(), Json::num(f.back_to_back * 1e6)),
+        ("launches_saved".into(), Json::num(f.launches_saved as f64)),
+        ("wins".into(), Json::Bool(wins)),
+    ]);
+    (name.to_string(), section, wins)
+}
+
+fn main() {
+    let report = Path::new(BENCH_HFUSE_JSON);
+    let ctx = Context::new();
+
+    // ---- Forecast crossover over mixed-traffic turn shapes ----------
+    let small = ProblemSize::new(32, 65536);
+    let large = ProblemSize::new(32, 1 << 24);
+    let waxpby_s = planned("waxpby", small, &ctx);
+    let vadd_s = planned("vadd", small, &ctx);
+    let sscal_s = planned("sscal", small, &ctx);
+    let waxpby_l = planned("waxpby", large, &ctx);
+    let vadd_l = planned("vadd", large, &ctx);
+    let sgemv = planned("sgemv", ProblemSize::square(4096), &ctx);
+    println!("forecast crossover (gtx480 model):");
+    let scenarios: Vec<(&str, Vec<(&SeqPlan, ProblemSize)>)> = vec![
+        (
+            "waxpby_pair_small",
+            vec![(&waxpby_s, small), (&waxpby_s, small)],
+        ),
+        (
+            "hetero_blas1_small",
+            vec![(&waxpby_s, small), (&vadd_s, small), (&sscal_s, small)],
+        ),
+        (
+            "blas1_pair_large",
+            vec![(&waxpby_l, large), (&vadd_l, large)],
+        ),
+        (
+            "blas2_blas1_mismatch",
+            vec![(&sgemv, ProblemSize::square(4096)), (&sscal_s, small)],
+        ),
+    ];
+    let mut any_win = false;
+    let mut forecast = Vec::new();
+    for (name, members) in &scenarios {
+        let (key, section, wins) = price(name, members, &ctx);
+        any_win |= wins;
+        forecast.push((key, section));
+    }
+    assert!(
+        any_win,
+        "at least one mixed-traffic scenario must forecast a fusion win"
+    );
+    update_bench_json(report, "forecast", Json::Obj(forecast)).expect("write BENCH_hfuse.json");
+
+    // ---- Served A/B: the same mixed workload, fusion on vs off ------
+    let dir = stub_catalog("bench_hfuse", &["waxpby"]);
+    let mut served = Vec::new();
+    let mut fused_batches_on = 0.0;
+    for hfuse in [true, false] {
+        let cfg = EngineConfig {
+            batch_window: Duration::from_millis(10),
+            max_batch: 256,
+            hfuse,
+            ..EngineConfig::default()
+        };
+        let engine =
+            Engine::with_config(Arc::new(Context::new()), &dir, cfg).expect("stub engine");
+        let client = engine.client();
+        client
+            .register_pipeline("amx", fusebla::pipelines::examples::ADD_MUL_EXP)
+            .expect("register amx");
+        client
+            .register_pipeline("q8", fusebla::pipelines::examples::QUANTIZE_INT8)
+            .expect("register q8");
+        // Mixed heterogeneous burst per turn: two pipelines at three
+        // sizes — six distinct batch keys drained into one turn.
+        let burst: Vec<(&str, usize)> = vec![
+            ("amx", 256),
+            ("q8", 256),
+            ("amx", 1024),
+            ("q8", 1024),
+            ("amx", 4096),
+            ("q8", 4096),
+        ];
+        let t0 = Instant::now();
+        let mut done = 0u64;
+        for round in 0..ROUNDS {
+            let tickets: Vec<_> = burst
+                .iter()
+                .map(|&(seq, n)| {
+                    client
+                        .submit(SubmitRequest::new(seq, 32, n).synth(round as u64))
+                        .expect("submit")
+                })
+                .collect();
+            for t in tickets {
+                t.wait().expect("registered pipelines execute on the stub");
+                done += 1;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let m = engine.shutdown();
+        assert_eq!(m.failures, 0, "pipeline turns execute cleanly");
+        if hfuse {
+            fused_batches_on = m.hfused_batches as f64;
+            assert!(
+                m.hfused_batches > 0,
+                "fusion-on serving must fuse some launch-bound turns"
+            );
+        } else {
+            assert_eq!(m.hfused_batches, 0, "knob off must never fuse");
+        }
+        println!(
+            "served hfuse={hfuse:5}: {done} requests in {secs:.3} s ({:.0} req/s), \
+             {} fused batch(es), {} launch(es) saved",
+            done as f64 / secs,
+            m.hfused_batches,
+            m.hfuse_launch_savings
+        );
+        let key = if hfuse { "hfuse_on" } else { "hfuse_off" };
+        served.push((
+            key.to_string(),
+            Json::Obj(vec![
+                ("requests".into(), Json::num(done as f64)),
+                ("seconds".into(), Json::num(secs)),
+                ("req_s".into(), Json::num(done as f64 / secs)),
+                ("hfused_batches".into(), Json::num(m.hfused_batches as f64)),
+                (
+                    "hfuse_launch_savings".into(),
+                    Json::num(m.hfuse_launch_savings as f64),
+                ),
+            ]),
+        ));
+    }
+    served.push(("rounds".to_string(), Json::num(ROUNDS as f64)));
+    served.push(("fused_batches".to_string(), Json::num(fused_batches_on)));
+    update_bench_json(report, "served", Json::Obj(served)).expect("write BENCH_hfuse.json");
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("wrote {BENCH_HFUSE_JSON}");
+}

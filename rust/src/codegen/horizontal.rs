@@ -1,0 +1,407 @@
+//! Horizontal fusion: combine the kernels of two or more *different*
+//! drained batch groups (different seqs / sizes / plans) into one launch
+//! with block-range dispatch.
+//!
+//! The paper's vertical fusion merges producer/consumer calls *within*
+//! one sequence; this module is the serve-side dual ("Automatic
+//! Horizontal Fusion for GPU Kernels", PAPERS.md): independent kernels
+//! that would launch back-to-back are packed side by side into one
+//! grid. Each source kernel owns a contiguous block-ID range of the
+//! combined grid; the thread geometry is reconciled by padding every
+//! block to the widest fragment's block size (narrower fragments mask
+//! off the excess lanes), and shared memory / registers are sized to
+//! the maximum across fragments because blocks of every fragment
+//! coexist on the SMs.
+//!
+//! Two source *sequences* are zipped stage-wise: combined stage `k`
+//! fuses the `k`-th kernel of every member that still has one, so a
+//! 2-kernel member and a 3-kernel member produce 3 combined launches
+//! instead of 5. The combined plan is documentation + accounting output
+//! (like [`super::emit_cuda`]); the executable form on the offline stub
+//! is the interpreter running each fragment's stages in the combined
+//! launch order, which is bit-identical to back-to-back execution
+//! because the fragments touch disjoint tensors.
+
+use crate::ir::elem::ProblemSize;
+use crate::ir::plan::{KernelPlan, SeqPlan};
+use anyhow::{bail, Result};
+use std::ops::Range;
+
+/// One source kernel inside a combined launch.
+#[derive(Clone, Debug)]
+pub struct HFragment {
+    /// Index of the source member (turn batch) this fragment came from.
+    pub member: usize,
+    /// The source kernel, unchanged.
+    pub plan: KernelPlan,
+    /// Problem size the fragment runs at.
+    pub p: ProblemSize,
+    /// Contiguous block IDs this fragment owns in the combined grid.
+    pub blocks: Range<u64>,
+    /// Threads per block the fragment actually uses (≤ the combined
+    /// padded block size; the rest are masked off).
+    pub active_threads: u32,
+}
+
+/// One combined kernel: every fragment's blocks laid out contiguously,
+/// thread geometry padded to the widest fragment.
+#[derive(Clone, Debug)]
+pub struct HKernel {
+    /// e.g. `h2_cu_waxpby_0+cu_vadd2_0`.
+    pub name: String,
+    /// Padded block shape: the shape of the fragment with the most
+    /// threads per block (every block launches this many threads).
+    pub block: (u32, u32),
+    /// Shared memory per block in words — the max across fragments,
+    /// since the static allocation covers whichever fragment a block
+    /// dispatches to.
+    pub smem_words: u32,
+    /// Register budget per thread — the max across fragments (the
+    /// combined kernel is compiled once, so the fattest fragment sets
+    /// the per-thread footprint for occupancy purposes).
+    pub regs_per_thread: u32,
+    pub fragments: Vec<HFragment>,
+}
+
+impl HKernel {
+    /// Total blocks in the combined grid.
+    pub fn total_blocks(&self) -> u64 {
+        self.fragments.last().map(|f| f.blocks.end).unwrap_or(0)
+    }
+
+    pub fn threads_per_block(&self) -> u32 {
+        self.block.0 * self.block.1
+    }
+
+    /// The combined launch's resource footprint as a [`KernelPlan`],
+    /// for occupancy pricing: padded block shape, max shared memory,
+    /// max registers. Other fields are carried from the widest fragment
+    /// and are not meaningful for the combined launch.
+    pub fn footprint(&self) -> KernelPlan {
+        let widest = self
+            .fragments
+            .iter()
+            .max_by_key(|f| f.plan.grid.threads_per_block())
+            .expect("HKernel has at least one fragment");
+        let mut k = widest.plan.clone();
+        k.name = self.name.clone();
+        k.grid.block = self.block;
+        k.smem_words = self.smem_words;
+        k.regs_per_thread = self.regs_per_thread;
+        k
+    }
+}
+
+/// A combined launch sequence over several source [`SeqPlan`]s.
+#[derive(Clone, Debug)]
+pub struct HFusedPlan {
+    /// e.g. `hfuse(waxpby.m32n65536, vadd.m32n4096)`.
+    pub name: String,
+    /// Combined launches, one per stage of the longest member.
+    pub kernels: Vec<HKernel>,
+    /// Number of source members zipped together.
+    pub members: usize,
+    /// Kernel launches saved vs running the members back-to-back:
+    /// `Σ member stage counts − max member stage count`.
+    pub launches_saved: u64,
+}
+
+/// Blocks a kernel launches at a problem size, as a whole number.
+fn block_count(plan: &KernelPlan, p: ProblemSize) -> u64 {
+    plan.blocks(p).ceil().max(1.0) as u64
+}
+
+/// Combine the `k`-th kernels of several members into one launch.
+/// `parts` pairs each contributing member's index with its kernel and
+/// problem size, in member order (which fixes the block-range layout).
+pub fn fuse_kernels(name: String, parts: &[(usize, &KernelPlan, ProblemSize)]) -> HKernel {
+    assert!(!parts.is_empty(), "fuse_kernels needs at least one part");
+    let mut fragments = Vec::with_capacity(parts.len());
+    let mut next_block = 0u64;
+    let mut block = (1u32, 1u32);
+    let mut smem_words = 0u32;
+    let mut regs = 0u32;
+    for &(member, plan, p) in parts {
+        let n = block_count(plan, p);
+        fragments.push(HFragment {
+            member,
+            plan: plan.clone(),
+            p,
+            blocks: next_block..next_block + n,
+            active_threads: plan.grid.threads_per_block(),
+        });
+        next_block += n;
+        if plan.grid.threads_per_block() > block.0 * block.1 {
+            block = plan.grid.block;
+        }
+        smem_words = smem_words.max(plan.smem_words);
+        regs = regs.max(plan.regs_per_thread);
+    }
+    HKernel {
+        name,
+        block,
+        smem_words,
+        regs_per_thread: regs,
+        fragments,
+    }
+}
+
+/// Zip several source sequences into one combined launch sequence.
+/// Combined stage `k` fuses the `k`-th kernel of every member that has
+/// one; members shorter than the longest simply stop contributing.
+/// A single member passes through unchanged (zero launches saved).
+pub fn fuse_seqs(members: &[(&SeqPlan, ProblemSize)]) -> Result<HFusedPlan> {
+    if members.is_empty() {
+        bail!("horizontal fusion needs at least one member");
+    }
+    for (sp, _) in members {
+        if sp.kernels.is_empty() {
+            bail!("member '{}' has no kernels", sp.seq);
+        }
+    }
+    let stages = members.iter().map(|(sp, _)| sp.kernels.len()).max().unwrap();
+    let total: usize = members.iter().map(|(sp, _)| sp.kernels.len()).sum();
+    let mut kernels = Vec::with_capacity(stages);
+    for k in 0..stages {
+        let parts: Vec<(usize, &KernelPlan, ProblemSize)> = members
+            .iter()
+            .enumerate()
+            .filter_map(|(i, (sp, p))| sp.kernels.get(k).map(|kp| (i, kp, *p)))
+            .collect();
+        let name = format!(
+            "h{}_{}",
+            parts.len(),
+            parts
+                .iter()
+                .map(|(_, kp, _)| kp.name.as_str())
+                .collect::<Vec<_>>()
+                .join("+")
+        );
+        kernels.push(fuse_kernels(name, &parts));
+    }
+    let name = format!(
+        "hfuse({})",
+        members
+            .iter()
+            .map(|(sp, p)| format!("{}.m{}n{}", sp.seq, p.m, p.n))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    Ok(HFusedPlan {
+        name,
+        kernels,
+        members: members.len(),
+        launches_saved: (total - stages) as u64,
+    })
+}
+
+/// Render one combined kernel as pseudo-CUDA with block-range dispatch,
+/// in the style of [`super::emit_cuda`]. Documentation output; the
+/// executable form on the stub is the interpreter path.
+pub fn emit_hkernel(h: &HKernel) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "// horizontal fusion: {} source kernel(s) | {} blocks | block ({}, {}) padded\n",
+        h.fragments.len(),
+        h.total_blocks(),
+        h.block.0,
+        h.block.1
+    ));
+    out.push_str(&format!(
+        "// regs/thread ≈ {} (max) | smem {} words (max)\n",
+        h.regs_per_thread, h.smem_words
+    ));
+    out.push_str(&format!("__global__ void {}(...)\n{{\n", h.name));
+    out.push_str("    int cb = blockIdx.x; // combined block id\n");
+    out.push_str("    int lt = threadIdx.x + threadIdx.y * blockDim.x;\n");
+    if h.smem_words > 0 {
+        out.push_str(&format!(
+            "    __shared__ float s_fusion[{}]; // max over fragments\n",
+            h.smem_words
+        ));
+    }
+    for (i, f) in h.fragments.iter().enumerate() {
+        let cond = format!("cb < {}", f.blocks.end);
+        let kw = if i == 0 {
+            format!("if ({cond})")
+        } else {
+            format!("else if ({cond})")
+        };
+        out.push_str(&format!(
+            "    {kw} {{ // {}: blocks [{}, {}), {}/{} threads active\n",
+            f.plan.name,
+            f.blocks.start,
+            f.blocks.end,
+            f.active_threads,
+            h.threads_per_block()
+        ));
+        out.push_str(&format!(
+            "        int bx = cb - {}; // fragment-local block id\n",
+            f.blocks.start
+        ));
+        if f.active_threads < h.threads_per_block() {
+            out.push_str(&format!(
+                "        if (lt < {}) {{ // mask padded lanes\n            {}_body(bx, lt, ...);\n        }}\n",
+                f.active_threads, f.plan.name
+            ));
+        } else {
+            out.push_str(&format!("        {}_body(bx, lt, ...);\n", f.plan.name));
+        }
+        out.push_str("    }\n");
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Render a whole combined launch sequence.
+pub fn emit_hfused(plan: &HFusedPlan) -> String {
+    let mut out = format!(
+        "// {}: {} member(s), {} combined launch(es), {} launch(es) saved\n\n",
+        plan.name,
+        plan.members,
+        plan.kernels.len(),
+        plan.launches_saved
+    );
+    for k in &plan.kernels {
+        out.push_str(&emit_hkernel(k));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::{enumerate_fusions, gen_impls, ImplAxes};
+    use crate::graph::DepGraph;
+    use crate::library::Library;
+    use crate::script::compile_script;
+
+    fn plan_for(name: &str, src: &str) -> SeqPlan {
+        let lib = Library::standard();
+        let prog = compile_script(name, src, &lib).unwrap();
+        let g = DepGraph::build(&prog, &lib);
+        let f = enumerate_fusions(&prog, &lib, &g).remove(0);
+        let fi = gen_impls(&prog, &lib, &g, &f, &ImplAxes::minimal())
+            .into_iter()
+            .next()
+            .unwrap();
+        crate::codegen::compile_seq(&prog, &lib, &[fi], "fused")
+    }
+
+    fn waxpby() -> SeqPlan {
+        plan_for(
+            "waxpby",
+            "vector<N> x, y, w; input x, y;
+             w = waxpby(x, y, alpha=2.0, beta=3.0); return w;",
+        )
+    }
+
+    fn vadd() -> SeqPlan {
+        plan_for(
+            "vadd",
+            "vector<N> x, y, w; input x, y; w = vadd2(x, y); return w;",
+        )
+    }
+
+    #[test]
+    fn fused_ranges_are_contiguous_and_cover_the_grid() {
+        let a = waxpby();
+        let b = vadd();
+        let h = fuse_seqs(&[
+            (&a, ProblemSize::new(1, 65536)),
+            (&b, ProblemSize::new(1, 4096)),
+        ])
+        .unwrap();
+        assert_eq!(h.members, 2);
+        for hk in &h.kernels {
+            let mut next = 0u64;
+            for f in &hk.fragments {
+                assert_eq!(f.blocks.start, next, "ranges must be contiguous");
+                assert!(f.blocks.end > f.blocks.start, "every fragment owns blocks");
+                next = f.blocks.end;
+            }
+            assert_eq!(hk.total_blocks(), next);
+        }
+    }
+
+    #[test]
+    fn geometry_pads_to_the_widest_fragment() {
+        let a = waxpby();
+        let b = vadd();
+        let h = fuse_seqs(&[
+            (&a, ProblemSize::new(1, 65536)),
+            (&b, ProblemSize::new(1, 65536)),
+        ])
+        .unwrap();
+        for hk in &h.kernels {
+            let max_threads = hk
+                .fragments
+                .iter()
+                .map(|f| f.plan.grid.threads_per_block())
+                .max()
+                .unwrap();
+            assert_eq!(hk.threads_per_block(), max_threads);
+            let max_smem = hk.fragments.iter().map(|f| f.plan.smem_words).max().unwrap();
+            assert_eq!(hk.smem_words, max_smem);
+            let max_regs = hk
+                .fragments
+                .iter()
+                .map(|f| f.plan.regs_per_thread)
+                .max()
+                .unwrap();
+            assert_eq!(hk.regs_per_thread, max_regs);
+            let fp = hk.footprint();
+            assert_eq!(fp.grid.threads_per_block(), max_threads);
+            assert_eq!(fp.smem_words, max_smem);
+        }
+    }
+
+    #[test]
+    fn stage_zip_saves_the_right_launch_count() {
+        let a = waxpby();
+        let b = vadd();
+        let (ka, kb) = (a.kernels.len(), b.kernels.len());
+        let h = fuse_seqs(&[
+            (&a, ProblemSize::new(1, 1024)),
+            (&b, ProblemSize::new(1, 1024)),
+        ])
+        .unwrap();
+        assert_eq!(h.kernels.len(), ka.max(kb));
+        assert_eq!(h.launches_saved, (ka + kb - ka.max(kb)) as u64);
+    }
+
+    #[test]
+    fn singleton_passes_through_with_zero_savings() {
+        let a = waxpby();
+        let h = fuse_seqs(&[(&a, ProblemSize::new(1, 1024))]).unwrap();
+        assert_eq!(h.members, 1);
+        assert_eq!(h.launches_saved, 0);
+        assert_eq!(h.kernels.len(), a.kernels.len());
+        for hk in &h.kernels {
+            assert_eq!(hk.fragments.len(), 1);
+        }
+    }
+
+    #[test]
+    fn empty_member_list_is_an_error() {
+        assert!(fuse_seqs(&[]).is_err());
+    }
+
+    #[test]
+    fn emission_shows_block_range_dispatch() {
+        let a = waxpby();
+        let b = vadd();
+        let h = fuse_seqs(&[
+            (&a, ProblemSize::new(1, 65536)),
+            (&b, ProblemSize::new(1, 4096)),
+        ])
+        .unwrap();
+        let text = emit_hfused(&h);
+        assert!(text.contains("__global__ void h2_"), "{text}");
+        assert!(text.contains("blocks ["), "{text}");
+        assert!(text.contains("else if (cb <"), "{text}");
+        assert!(text.contains("fragment-local block id"), "{text}");
+        assert!(text.contains("launch(es) saved"), "{text}");
+    }
+}

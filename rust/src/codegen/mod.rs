@@ -19,6 +19,7 @@
 //! paper's Appendix A.
 
 pub mod cuda;
+pub mod horizontal;
 pub mod smem;
 
 pub use cuda::emit_cuda;

@@ -29,7 +29,9 @@ use std::sync::Arc;
 /// Identity of one batch: the plan-cache key shape plus the resolved
 /// plan choice. The device name is the context's interned `Arc<str>` —
 /// grouping a turn clones a refcount per request, not a `String`.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// `Ord` compares the interned name's *contents* (via `Arc`'s deref
+/// ordering), so the grouping index below is stable across re-interns.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub(crate) struct BatchKey {
     pub seq: String,
     /// Tile-padded rows (plan granularity).
@@ -63,6 +65,12 @@ pub(crate) fn group(
 ) -> (Vec<Batch>, Vec<(Request, Error)>) {
     let mut batches: Vec<Batch> = Vec::new();
     let mut failed: Vec<(Request, Error)> = Vec::new();
+    // Index of each open batch by (key, raw size) → its position in
+    // `batches`. A linear `position` scan here made a wide-key drain
+    // O(R·B) — every request walked every batch opened before it; the
+    // index keeps membership lookup logarithmic while `batches` itself
+    // still records first-arrival order.
+    let mut index: BTreeMap<(BatchKey, usize, usize), usize> = BTreeMap::new();
     // One resolver call per padded key per turn — failures included, so
     // a burst of unresolvable requests neither repeats the planner
     // lookup nor inflates the plan cache's miss counter.
@@ -97,17 +105,20 @@ pub(crate) fn group(
             device: device.clone(),
             choice,
         };
-        match batches
-            .iter()
-            .position(|b| b.key == key && b.m == req.m && b.n == req.n)
-        {
-            Some(i) => batches[i].reqs.push(req),
-            None => batches.push(Batch {
-                key,
-                m: req.m,
-                n: req.n,
-                reqs: vec![req],
-            }),
+        match index.entry((key, req.m, req.n)) {
+            std::collections::btree_map::Entry::Occupied(e) => {
+                batches[*e.get()].reqs.push(req);
+            }
+            std::collections::btree_map::Entry::Vacant(e) => {
+                let key = e.key().0.clone();
+                e.insert(batches.len());
+                batches.push(Batch {
+                    key,
+                    m: req.m,
+                    n: req.n,
+                    reqs: vec![req],
+                });
+            }
         }
     }
     (batches, failed)
@@ -120,7 +131,18 @@ pub(crate) fn group(
 /// than a full preemptive EDF, which is all a turn-at-a-time scheduler
 /// can express.
 pub(crate) fn order_edf(batches: &mut [Batch]) {
-    batches.sort_by_key(|b| {
+    order_edf_counted(batches, &mut 0);
+}
+
+/// [`order_edf`] with the key-computation count exposed, so a test can
+/// pin the cost contract: the key folds over a batch's *members*
+/// (min deadline, max priority), so it must be computed once per batch
+/// — `sort_by_cached_key` — not once per comparison, which
+/// `sort_by_key` is allowed to do (O(B log B) member folds on a
+/// deadline-diverse turn).
+pub(crate) fn order_edf_counted(batches: &mut [Batch], key_computations: &mut u64) {
+    batches.sort_by_cached_key(|b| {
+        *key_computations += 1;
         let deadline = b.reqs.iter().filter_map(|r| r.deadline).min();
         let priority = b.reqs.iter().map(|r| r.priority).max().unwrap_or(0);
         (deadline.is_none(), deadline, std::cmp::Reverse(priority))
@@ -246,6 +268,68 @@ mod tests {
         assert_eq!(calls, 2, "failures are memoized too — one resolve per key");
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].key.seq, "waxpby");
+    }
+
+    #[test]
+    fn many_distinct_key_burst_groups_by_index_in_arrival_order() {
+        // Regression for the O(R·B) linear `position` scan: a drain
+        // whose keys are almost all distinct opened a new batch per
+        // request and re-walked every prior batch each time. The
+        // indexed grouping must produce the identical result — one
+        // batch per distinct (key, raw size) in first-arrival order,
+        // repeats appended to their original batch.
+        let keys = 200;
+        let mut reqs = Vec::new();
+        for i in 0..keys {
+            // Distinct raw n per i (padding keeps them distinct too);
+            // alternate seqs so the key varies in more than one field.
+            let seq = if i % 2 == 0 { "waxpby" } else { "vadd" };
+            reqs.push(req(seq, 32, 1024 + i * 64, None));
+        }
+        // A second pass over the same keys: every request must join its
+        // existing batch, none may open a new one.
+        for i in 0..keys {
+            let seq = if i % 2 == 0 { "waxpby" } else { "vadd" };
+            reqs.push(req(seq, 32, 1024 + i * 64, None));
+        }
+        let (batches, failed) = group(reqs, &dev("dev0"), |_, _, _| Ok(PlanChoice::Fused));
+        assert!(failed.is_empty());
+        assert_eq!(batches.len(), keys, "one batch per distinct key");
+        for (i, b) in batches.iter().enumerate() {
+            assert_eq!(b.n, 1024 + i * 64, "first-arrival order preserved");
+            assert_eq!(b.reqs.len(), 2, "repeat joined its original batch");
+        }
+    }
+
+    #[test]
+    fn order_edf_computes_one_key_per_batch() {
+        // The EDF key folds over a batch's members; `sort_by_cached_key`
+        // guarantees one fold per batch. `sort_by_key` recomputed it per
+        // comparison — this pins the contract with a counter.
+        let mut reqs = Vec::new();
+        for i in 0..32u64 {
+            // Distinct deadlines in scrambled order force real sorting
+            // work (no pre-sorted fast path); distinct raw sizes keep
+            // the batches distinct.
+            let mut r = req("waxpby", 32, 1024 + ((i * 13) % 32) as usize * 64, None);
+            r.deadline = Some(Instant::now() + Duration::from_millis((i * 37) % 101));
+            reqs.push(r);
+        }
+        let (mut batches, failed) = group(reqs, &dev("dev0"), |_, _, _| Ok(PlanChoice::Fused));
+        assert!(failed.is_empty());
+        assert_eq!(batches.len(), 32);
+        let mut key_computations = 0;
+        order_edf_counted(&mut batches, &mut key_computations);
+        assert_eq!(
+            key_computations, 32,
+            "exactly one key fold per batch, not one per comparison"
+        );
+        // And the order is still EDF: deadlines ascending.
+        let deadlines: Vec<_> = batches
+            .iter()
+            .map(|b| b.reqs[0].deadline.unwrap())
+            .collect();
+        assert!(deadlines.windows(2).all(|w| w[0] <= w[1]));
     }
 
     fn req_slo(seq: &str, deadline: Option<Duration>, priority: u8) -> Request {

@@ -149,6 +149,23 @@ pub struct EngineConfig {
     /// retry metrics) — and, with the retry budget exhausted, falling
     /// the whole request back to single-device execution.
     pub split_gather: Duration,
+    /// Horizontal fusion across a drained turn: when a turn yields
+    /// several batches, the worker prices fusing adjacent EDF-ordered
+    /// groups into one combined launch
+    /// ([`crate::planner::plan_hfuse`]) and dispatches winning
+    /// segments via [`crate::codegen::horizontal`]'s block-range
+    /// interpretation. On by default: fusing happens only when the
+    /// forecast beats back-to-back launches, and the fused execution
+    /// is bit-identical, so the knob exists for A/B measurement and
+    /// paranoia, not safety.
+    pub hfuse: bool,
+    /// Beam width of the turn-segmentation search — the widest fused
+    /// segment [`crate::planner::plan_hfuse`] prices. Cross-kernel
+    /// cost terms break the planner's additivity, so this is the
+    /// exactness-vs-cost knob on the serve path: `None` (the default)
+    /// solves the segmentation exactly; `Some(k)` caps segment width
+    /// at `k` (`Some(1)` disables fusion without disabling pricing).
+    pub hfuse_beam: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -167,6 +184,8 @@ impl Default for EngineConfig {
             wedge_timeout: None,
             split: None,
             split_gather: Duration::from_secs(5),
+            hfuse: true,
+            hfuse_beam: None,
         }
     }
 }

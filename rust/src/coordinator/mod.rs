@@ -591,6 +591,18 @@ pub struct Metrics {
     /// (no legal row-blocking, a failed block past the retry budget, or
     /// a scatter that could not reach its peers).
     pub split_fallbacks: u64,
+    /// Source batches that executed as part of a horizontally fused
+    /// combined dispatch ([`crate::codegen::horizontal`]): the
+    /// scheduler priced adjacent EDF-ordered groups with
+    /// [`crate::planner::forecast_hfuse`] and the combined launch won.
+    /// Each fused turn adds the number of *member* batches, so
+    /// `hfused_batches / batches` is the share of dispatches that
+    /// shared a grid.
+    pub hfused_batches: u64,
+    /// Kernel launches elided by horizontal fusion: for each fused
+    /// dispatch, (sum of member launch counts) − (combined launch
+    /// count). The forecast's launch-overhead savings term, realized.
+    pub hfuse_launch_savings: u64,
     /// Time executed requests spent queued before their batch was
     /// dispatched (submission → batch start). Per device this is the
     /// routing-vs-queueing signal: a device whose queue wait dwarfs its
@@ -655,6 +667,8 @@ impl Metrics {
         self.splits += other.splits;
         self.split_blocks += other.split_blocks;
         self.split_fallbacks += other.split_fallbacks;
+        self.hfused_batches += other.hfused_batches;
+        self.hfuse_launch_savings += other.hfuse_launch_savings;
         self.queued.merge(&other.queued);
         self.latency.merge(&other.latency);
         for (seq, (count, secs)) in &other.per_seq {
@@ -817,6 +831,24 @@ pub struct Coordinator {
     /// Per-block gather bound for split requests this lane owns
     /// ([`EngineConfig::split_gather`], set when serving).
     split_gather: Duration,
+    /// Horizontal fusion on the serve path
+    /// ([`EngineConfig::hfuse`], set when serving): when a drained
+    /// turn yields several batches, price adjacent EDF-ordered groups
+    /// with [`planner::plan_hfuse`] and execute winning segments as
+    /// one combined dispatch ([`crate::codegen::horizontal`]).
+    hfuse: bool,
+    /// Widest fused segment the turn segmentation prices —
+    /// [`PlannerConfig::beam`] handed to [`planner::plan_hfuse`];
+    /// `None` = exact segmentation ([`EngineConfig::hfuse_beam`]).
+    hfuse_beam: Option<usize>,
+    /// Padded `(seq, m, n, choice)` → the paper-level plan (kernels and
+    /// geometry) the hfuse forecast prices that batch key with; `None`
+    /// caches a planning failure so the key stays unfused without
+    /// retrying every turn. FIFO-bounded like `forecast_cache`:
+    /// clients control the keys.
+    hfuse_plans: BTreeMap<(String, usize, usize, PlanChoice), Option<Arc<SeqPlan>>>,
+    /// Insertion order of `hfuse_plans` keys, for FIFO eviction.
+    hfuse_order: VecDeque<(String, usize, usize, PlanChoice)>,
     /// Metrics carried over from this lane's previous incarnations
     /// (before supervisor respawns). Snapshots and the final return
     /// value fold this in; the live `metrics` field only covers the
@@ -831,6 +863,27 @@ struct PlanningEntry {
     prog: crate::ir::program::Program,
     space: Space,
     baseline: SeqPlan,
+}
+
+/// Per-member reply bookkeeping of a prepared batch:
+/// `(enqueued, deadline, lot, split_block, reply)`.
+type ReplySlot = (Instant, Option<Instant>, Option<usize>, bool, Reply);
+
+/// A batch whose requests have been consumed into runnable inputs and
+/// reply handles — what `Coordinator::prepare_batch` hands the plain
+/// and horizontally fused dispatch paths (the inputs travel beside it
+/// so they can move into the runtime without a copy).
+struct PreparedBatch {
+    key: batch::BatchKey,
+    /// Raw (artifact-granularity) rows, for `Runtime::resolve`.
+    m: usize,
+    /// Raw (artifact-granularity) columns.
+    n: usize,
+    size: u64,
+    /// Members that are scattered split blocks (accounted into the
+    /// split plane, not the request plane).
+    block_members: u64,
+    replies: Vec<ReplySlot>,
 }
 
 impl Coordinator {
@@ -861,6 +914,10 @@ impl Coordinator {
             lane: None,
             chaos: None,
             split_gather: Duration::from_secs(5),
+            hfuse: true,
+            hfuse_beam: None,
+            hfuse_plans: BTreeMap::new(),
+            hfuse_order: VecDeque::new(),
             metrics_base: Metrics::default(),
             metrics: Metrics::default(),
         })
@@ -1130,11 +1187,12 @@ impl Coordinator {
         self.metrics.executable_cache_hits = c.executable_cache_hits;
     }
 
-    /// Execute one grouped batch as a multi-input dispatch, record the
-    /// per-batch metrics, and reply to every member. Consumes the
-    /// batch: explicit input tensors move into the runtime without a
+    /// Turn a batch's requests into runnable inputs and reply handles,
+    /// recording the per-member queued durations — the shared front
+    /// half of the plain and horizontally fused dispatch paths.
+    /// Consumes the batch: explicit input tensors move out without a
     /// copy.
-    pub(crate) fn execute_batch(&mut self, b: batch::Batch) {
+    fn prepare_batch(&mut self, b: batch::Batch) -> (PreparedBatch, Vec<BTreeMap<String, Tensor>>) {
         debug_assert_eq!(
             b.key.device, self.ctx.device,
             "batch grouped for another device"
@@ -1167,26 +1225,32 @@ impl Coordinator {
             });
             replies.push((r.enqueued, r.deadline, r.lot, r.split_block, r.reply));
         }
-        // Injected mid-execute panic: fires after the batch consumed its
-        // requests (explicit inputs are gone — the worst case the
-        // supervisor must handle), before any result exists.
-        if self.chaos.as_ref().is_some_and(|c| c.panic_in_execute) {
-            std::panic::panic_any(engine::chaos::EXEC_PANIC_MARKER);
-        }
-        let t0 = Instant::now();
-        // Resolve once per batch key: the runtime's resolve cache makes
-        // a repeat key one read-locked probe, and the batch then runs
-        // entirely on pinned executables and slot-indexed environments.
-        let results = match self.runtime.resolve(&key.seq, variant, m, n) {
-            Ok(plan) => self.runtime.run_resolved_batch(&plan, inputs),
-            Err(e) => {
-                // A missing size or corrupt artifact fails the whole
-                // batch — every request would have hit the same artifact.
-                let msg = format!("{e:#}");
-                inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect()
-            }
-        };
-        let dt = t0.elapsed().as_secs_f64();
+        (
+            PreparedBatch {
+                key,
+                m,
+                n,
+                size,
+                block_members,
+                replies,
+            },
+            inputs,
+        )
+    }
+
+    /// Record a dispatched batch's metrics and reply to every member —
+    /// the shared back half of the plain and horizontally fused
+    /// dispatch paths. `dt` is the execution time attributed to this
+    /// batch: wall time for a plain dispatch, the members' own stage
+    /// seconds for a fused one.
+    fn complete_batch(&mut self, prep: PreparedBatch, results: Vec<Result<RunResult>>, dt: f64) {
+        let PreparedBatch {
+            key,
+            size,
+            block_members,
+            replies,
+            ..
+        } = prep;
         self.metrics.batches += 1;
         self.metrics.batch_size_sum += size;
         self.metrics.max_batch_size = self.metrics.max_batch_size.max(size);
@@ -1227,6 +1291,152 @@ impl Coordinator {
                     self.metrics.failures += 1;
                 }
                 self.finish(enqueued, deadline, lot, reply, res);
+            }
+        }
+    }
+
+    /// Execute one grouped batch as a multi-input dispatch, record the
+    /// per-batch metrics, and reply to every member. Consumes the
+    /// batch: explicit input tensors move into the runtime without a
+    /// copy.
+    pub(crate) fn execute_batch(&mut self, b: batch::Batch) {
+        let (prep, inputs) = self.prepare_batch(b);
+        // Injected mid-execute panic: fires after the batch consumed its
+        // requests (explicit inputs are gone — the worst case the
+        // supervisor must handle), before any result exists.
+        if self.chaos.as_ref().is_some_and(|c| c.panic_in_execute) {
+            std::panic::panic_any(engine::chaos::EXEC_PANIC_MARKER);
+        }
+        let t0 = Instant::now();
+        // Resolve once per batch key: the runtime's resolve cache makes
+        // a repeat key one read-locked probe, and the batch then runs
+        // entirely on pinned executables and slot-indexed environments.
+        let results = match self
+            .runtime
+            .resolve(&prep.key.seq, prep.key.choice.as_str(), prep.m, prep.n)
+        {
+            Ok(plan) => self.runtime.run_resolved_batch(&plan, inputs),
+            Err(e) => {
+                // A missing size or corrupt artifact fails the whole
+                // batch — every request would have hit the same artifact.
+                let msg = format!("{e:#}");
+                inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect()
+            }
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        self.complete_batch(prep, results, dt);
+    }
+
+    /// Execute a contiguous run of a turn's EDF-ordered batches as ONE
+    /// horizontally fused dispatch ([`crate::codegen::horizontal`]):
+    /// the segmentation planner decided the combined launch beats
+    /// back-to-back execution ([`planner::plan_hfuse`] emits a
+    /// multi-member segment only when its forecast wins). Per-member
+    /// accounting — queued/latency/SLO, per-seq seconds, replies, and
+    /// chaos hooks — matches [`Coordinator::execute_batch`], and
+    /// results are bit-identical by [`Runtime::run_hfused`]'s
+    /// contract; members complete in drained (EDF) order.
+    fn execute_hfused(&mut self, members: Vec<batch::Batch>, forecast: planner::HfuseForecast) {
+        debug_assert!(members.len() > 1, "singleton segments dispatch plainly");
+        // Prepare every member first: all requests' inputs are consumed
+        // before anything runs, matching execute_batch's panic window.
+        let mut prepared = Vec::with_capacity(members.len());
+        for b in members {
+            prepared.push(self.prepare_batch(b));
+        }
+        if self.chaos.as_ref().is_some_and(|c| c.panic_in_execute) {
+            std::panic::panic_any(engine::chaos::EXEC_PANIC_MARKER);
+        }
+        self.metrics.hfused_batches += prepared.len() as u64;
+        self.metrics.hfuse_launch_savings += forecast.launches_saved;
+        // Resolve each member once. A member whose artifact is missing
+        // fails all its own slots — exactly as it would unfused — while
+        // the remaining members still run fused.
+        let resolved: Vec<_> = prepared
+            .iter()
+            .map(|(p, _)| {
+                self.runtime
+                    .resolve(&p.key.seq, p.key.choice.as_str(), p.m, p.n)
+                    .map_err(|e| format!("{e:#}"))
+            })
+            .collect();
+        let mut metas = Vec::with_capacity(prepared.len());
+        let mut per_member: Vec<Option<Vec<Result<RunResult>>>> =
+            Vec::with_capacity(prepared.len());
+        let mut fused = Vec::new();
+        let mut fused_at = Vec::new();
+        for (mi, ((prep, inputs), res)) in prepared.into_iter().zip(resolved).enumerate() {
+            match res {
+                Ok(plan) => {
+                    per_member.push(None);
+                    fused_at.push(mi);
+                    fused.push((plan, inputs));
+                }
+                Err(msg) => {
+                    per_member.push(Some(inputs.iter().map(|_| Err(anyhow!("{msg}"))).collect()));
+                }
+            }
+            metas.push(prep);
+        }
+        let outcomes = self.runtime.run_hfused(fused);
+        for (mi, results) in fused_at.into_iter().zip(outcomes) {
+            per_member[mi] = Some(results);
+        }
+        for (prep, results) in metas.into_iter().zip(per_member) {
+            let results = results.expect("every member has results");
+            // The combined dispatch interleaves members on this thread,
+            // so each member is billed its own stage seconds — wall
+            // time would charge every member the whole turn.
+            let dt: f64 = results
+                .iter()
+                .filter_map(|r| r.as_ref().ok().map(|r| r.seconds))
+                .sum();
+            self.complete_batch(prep, results, dt);
+        }
+    }
+
+    /// The paper-level plan — kernels, geometry, traffic — that the
+    /// horizontal-fusion forecast prices a batch key with: the cached
+    /// baseline decomposition for `Cublas` keys, the planner's best
+    /// searched plan at the padded size for `Fused` keys. Memoized per
+    /// key (FIFO-bounded); a key that cannot be planned memoizes `None`
+    /// and its batches simply stay unfused.
+    fn hfuse_seq_plan(&mut self, key: &batch::BatchKey) -> Option<Arc<SeqPlan>> {
+        let memo = (key.seq.clone(), key.m, key.n, key.choice);
+        if let Some(plan) = self.hfuse_plans.get(&memo) {
+            return plan.clone();
+        }
+        let built = self.build_hfuse_plan(&key.seq, key.m, key.n, key.choice);
+        while self.hfuse_order.len() >= Self::FORECAST_CAP {
+            if let Some(old) = self.hfuse_order.pop_front() {
+                self.hfuse_plans.remove(&old);
+            }
+        }
+        self.hfuse_order.push_back(memo.clone());
+        self.hfuse_plans.insert(memo, built.clone());
+        built
+    }
+
+    fn build_hfuse_plan(
+        &mut self,
+        seq: &str,
+        m: usize,
+        n: usize,
+        choice: PlanChoice,
+    ) -> Option<Arc<SeqPlan>> {
+        self.ensure_planning_entry(seq).ok()?;
+        let entry = &self.space_cache[seq];
+        match choice {
+            PlanChoice::Cublas => Some(Arc::new(entry.baseline.clone())),
+            PlanChoice::Fused => {
+                let planned = planner::plan_space(
+                    &entry.prog,
+                    &entry.space,
+                    &self.ctx.db,
+                    ProblemSize::new(m, n),
+                    &PlannerConfig::default(),
+                );
+                Some(Arc::new(planned.best))
             }
         }
     }
@@ -1528,8 +1738,69 @@ impl Coordinator {
             self.finish(req.enqueued, req.deadline, req.lot, req.reply, Err(err));
         }
         batch::order_edf(&mut batches);
-        for b in batches {
-            self.execute_batch(b);
+        self.dispatch_turn(batches);
+    }
+
+    /// Dispatch a turn's EDF-ordered batches: when horizontal fusion is
+    /// on and the turn drained several groups, segment the order with
+    /// [`planner::plan_hfuse`] — contiguous segments only, so EDF
+    /// order (and therefore SLO behavior and reply order) is exactly
+    /// what back-to-back dispatch produces — and execute each winning
+    /// segment as one combined launch. Everything else dispatches as
+    /// before, one batch at a time.
+    fn dispatch_turn(&mut self, batches: Vec<batch::Batch>) {
+        if !self.hfuse || batches.len() < 2 {
+            for b in batches {
+                self.execute_batch(b);
+            }
+            return;
+        }
+        // Price each batch's plan first (memoized per padded key). A
+        // batch whose plan is unavailable — unknown sequence, planning
+        // failure — is never fused but still executes normally.
+        let plans: Vec<Option<Arc<SeqPlan>>> = batches
+            .iter()
+            .map(|b| self.hfuse_seq_plan(&b.key))
+            .collect();
+        let cfg = PlannerConfig {
+            beam: self.hfuse_beam,
+            ..PlannerConfig::default()
+        };
+        // Segment maximal runs of priceable batches. plan_hfuse emits a
+        // multi-member segment only when its combined forecast beats
+        // back-to-back launches, so every fusion is forecast-justified.
+        let mut segments: Vec<(usize, Option<planner::HfuseForecast>)> = Vec::new();
+        let mut i = 0;
+        while i < batches.len() {
+            if plans[i].is_none() {
+                segments.push((1, None));
+                i += 1;
+                continue;
+            }
+            let mut j = i;
+            while j < batches.len() && plans[j].is_some() {
+                j += 1;
+            }
+            let members: Vec<(&SeqPlan, ProblemSize)> = (i..j)
+                .map(|k| {
+                    let plan = plans[k].as_deref().expect("run covers Some plans only");
+                    (plan, ProblemSize::new(batches[k].key.m, batches[k].key.n))
+                })
+                .collect();
+            for g in planner::plan_hfuse(&members, &self.ctx.db, &self.ctx.dev, &cfg) {
+                segments.push((g.range.len(), Some(g.forecast)));
+            }
+            i = j;
+        }
+        let mut rest = batches.into_iter();
+        for (len, forecast) in segments {
+            let members: Vec<batch::Batch> = rest.by_ref().take(len).collect();
+            if members.len() == 1 {
+                self.execute_batch(members.into_iter().next().expect("len == 1"));
+            } else {
+                let f = forecast.expect("multi-member segments carry a forecast");
+                self.execute_hfused(members, f);
+            }
         }
     }
 
@@ -1598,6 +1869,8 @@ impl Coordinator {
     pub(crate) fn serve_session(&mut self, rx: &mpsc::Receiver<Msg>, cfg: &EngineConfig) {
         self.pipeline_quota = cfg.pipeline_quota;
         self.split_gather = cfg.split_gather;
+        self.hfuse = cfg.hfuse;
+        self.hfuse_beam = cfg.hfuse_beam;
         let mut closing = false;
         while !closing {
             let first = match rx.recv() {
@@ -2286,6 +2559,181 @@ mod tests {
         // generous deadline is not a miss
         assert_eq!(coord.metrics.deadline_requests, 1);
         assert_eq!(coord.metrics.slo_misses, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Explicit-input request for a registered pipeline at m=32,
+    /// returning the ticket receiver alongside.
+    fn pipeline_request(
+        seq: &str,
+        n: usize,
+        inputs: BTreeMap<String, Tensor>,
+        deadline: Option<Duration>,
+    ) -> (Request, mpsc::Receiver<Result<RunResult>>) {
+        let (rtx, rrx) = mpsc::channel();
+        let now = Instant::now();
+        let r = Request {
+            seq: seq.into(),
+            m: 32,
+            n,
+            inputs: RequestInputs::Explicit(inputs),
+            variant: None,
+            enqueued: now,
+            deadline: deadline.map(|d| now + d),
+            priority: 0,
+            attempts: 0,
+            pinned: false,
+            lot: None,
+            split: None,
+            split_block: false,
+            admission: None,
+            reply: Reply::new(rtx, None),
+        };
+        (r, rrx)
+    }
+
+    /// Coordinator over a stub catalog with both exemplar pipelines
+    /// registered: the interpreter-backed resolved plans execute for
+    /// real, so fused and plain dispatch paths produce actual bits.
+    fn pipeline_coordinator(dir: &Path) -> Coordinator {
+        let mut c = Coordinator::new(Arc::new(Context::new()), dir).unwrap();
+        c.register_pipeline("amx", pipelines::examples::ADD_MUL_EXP).unwrap();
+        c.register_pipeline("q8", pipelines::examples::QUANTIZE_INT8).unwrap();
+        c
+    }
+
+    /// The tentpole acceptance property: a drained turn executed with
+    /// horizontal fusion on is bit-identical — per request, per output
+    /// tensor — to the same turn executed batch-by-batch with fusion
+    /// off, and to the offline reference interpretation. Turn members
+    /// are randomized over sequences, sizes and therefore batch keys
+    /// and plans; a final deterministic launch-bound pair checks that
+    /// fusion actually fires and reports its launch savings.
+    #[test]
+    fn hfused_turns_are_bit_identical_to_back_to_back() {
+        let dir = stub_catalog("hfuseprop", &["waxpby"], false);
+        let mut fused = pipeline_coordinator(&dir);
+        let mut plain = pipeline_coordinator(&dir);
+        plain.hfuse = false;
+        // independent offline compile — shares nothing with the coordinators
+        let ctx = Context::new();
+        let amx = pipelines::compile("amx", pipelines::examples::ADD_MUL_EXP, &ctx.lib).unwrap();
+        let q8 = pipelines::compile("q8", pipelines::examples::QUANTIZE_INT8, &ctx.lib).unwrap();
+        crate::util::proptest::check("hfused turn matches back-to-back bitwise", 8, |g| {
+            let mut turn_fused = Vec::new();
+            let mut turn_plain = Vec::new();
+            let mut expected = Vec::new();
+            for _ in 0..g.usize(2, 5) {
+                let (name, c) = if g.bool() { ("amx", &amx) } else { ("q8", &q8) };
+                let n = *g.choose(&[256usize, 1024, 65536]);
+                let seed = g.usize(0, 1 << 16) as u64;
+                let inputs = c.pipeline.synth_inputs(32, n, seed).unwrap();
+                let (rf, rxf) = pipeline_request(name, n, inputs.clone(), None);
+                let (rp, rxp) = pipeline_request(name, n, inputs.clone(), None);
+                turn_fused.push(rf);
+                turn_plain.push(rp);
+                expected.push((name, c, n, seed, inputs, rxf, rxp));
+            }
+            fused.run_turn(turn_fused);
+            plain.run_turn(turn_plain);
+            for (name, c, n, seed, inputs, rxf, rxp) in expected {
+                let f = rxf.try_recv().expect("fused turn replied").expect("executes");
+                let p = rxp.try_recv().expect("plain turn replied").expect("executes");
+                assert_eq!(f.variant, p.variant, "{name} n={n}: same plan either way");
+                let offline = c.pipeline.run_offline(&f.variant, 32, n, &inputs).unwrap();
+                for &v in &c.pipeline.program.outputs {
+                    let out = &c.pipeline.program.var(v).name;
+                    assert_eq!(
+                        f.env.get(out),
+                        p.env.get(out),
+                        "{name} n={n} seed={seed}: fused '{out}' must match back-to-back bits"
+                    );
+                    assert_eq!(
+                        f.env.get(out),
+                        offline.get(out),
+                        "{name} n={n} seed={seed}: fused '{out}' must match offline bits"
+                    );
+                }
+            }
+        });
+        assert_eq!(fused.metrics.failures, 0);
+        assert_eq!(plain.metrics.failures, 0);
+        assert_eq!(fused.metrics.requests, plain.metrics.requests);
+        assert_eq!(plain.metrics.hfused_batches, 0, "knob off must never fuse");
+        // Deterministic crossover: two launch-bound batches of the same
+        // pipeline at different sizes (distinct batch keys, matching
+        // kernel geometry → interference floor) must share one combined
+        // dispatch and bank the elided launches.
+        let before = fused.metrics.hfused_batches;
+        let a = amx.pipeline.synth_inputs(32, 256, 1).unwrap();
+        let b = amx.pipeline.synth_inputs(32, 1024, 2).unwrap();
+        let (ra, rxa) = pipeline_request("amx", 256, a, None);
+        let (rb, rxb) = pipeline_request("amx", 1024, b, None);
+        fused.run_turn(vec![ra, rb]);
+        assert!(rxa.try_recv().unwrap().is_ok());
+        assert!(rxb.try_recv().unwrap().is_ok());
+        assert_eq!(
+            fused.metrics.hfused_batches,
+            before + 2,
+            "launch-bound pair must fuse into one combined dispatch"
+        );
+        assert!(
+            fused.metrics.hfuse_launch_savings > 0,
+            "a fused dispatch elides at least one launch"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Fusing never reorders an urgent batch behind loose ones: the
+    /// segmentation is contiguous over the EDF order (flattened
+    /// segments ARE the EDF order — unit-asserted in the planner), so
+    /// the urgent request's SLO accounting is identical with fusion on
+    /// and off, and every reply still arrives.
+    #[test]
+    fn hfuse_keeps_edf_order_and_slo_accounting() {
+        let dir = stub_catalog("hfuseslo", &["waxpby"], false);
+        let ctx = Context::new();
+        let amx = pipelines::compile("amx", pipelines::examples::ADD_MUL_EXP, &ctx.lib).unwrap();
+        let q8 = pipelines::compile("q8", pipelines::examples::QUANTIZE_INT8, &ctx.lib).unwrap();
+        let turn = |coord: &mut Coordinator| {
+            // Submitted loose-first: EDF ordering must hoist the urgent
+            // batch to the front, fused or not.
+            let (r1, rx1) = pipeline_request(
+                "q8",
+                1024,
+                q8.pipeline.synth_inputs(32, 1024, 3).unwrap(),
+                Some(Duration::from_secs(3600)),
+            );
+            let (r2, rx2) = pipeline_request(
+                "amx",
+                65536,
+                amx.pipeline.synth_inputs(32, 65536, 4).unwrap(),
+                None,
+            );
+            let (r3, rx3) = pipeline_request(
+                "amx",
+                256,
+                amx.pipeline.synth_inputs(32, 256, 5).unwrap(),
+                Some(Duration::from_secs(30)),
+            );
+            coord.run_turn(vec![r1, r2, r3]);
+            for rx in [rx1, rx2, rx3] {
+                assert!(rx.try_recv().expect("turn replied").is_ok());
+            }
+        };
+        let mut fused = pipeline_coordinator(&dir);
+        let mut plain = pipeline_coordinator(&dir);
+        plain.hfuse = false;
+        turn(&mut fused);
+        turn(&mut plain);
+        for m in [&fused.metrics, &plain.metrics] {
+            assert_eq!(m.requests, 3);
+            assert_eq!(m.failures, 0);
+            assert_eq!(m.batches, 3, "every source batch is accounted");
+            assert_eq!(m.deadline_requests, 2, "both deadline carriers accounted");
+            assert_eq!(m.slo_misses, 0, "generous deadlines met fused or not");
+            assert_eq!(m.latency.count(), 3);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

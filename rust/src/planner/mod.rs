@@ -68,6 +68,15 @@
 //! ever gains cross-kernel terms (launch overlap, cache interference),
 //! separability breaks and the beam becomes the knob trading exactness
 //! for search cost — the structure is already in place.
+//!
+//! That break happens on the serve path: horizontal fusion
+//! ([`crate::codegen::horizontal`]) prices *combined* launches whose
+//! cost depends on which kernels share the grid, so [`forecast_hfuse`]
+//! cannot decompose per member. [`plan_hfuse`] instead solves the
+//! contiguous-segmentation problem over a turn's EDF-ordered batches,
+//! and there [`PlannerConfig::beam`] caps the widest fused segment
+//! priced — the promised exactness-vs-cost knob, documented on
+//! [`plan_hfuse`] and exercised by its tests.
 
 pub mod cost;
 pub mod search;
@@ -75,7 +84,8 @@ pub mod shard;
 
 pub use cost::{part_key, CostCache, ImplKey};
 pub use search::{
-    forecast_split, forecast_variants, plan, plan_space, rank_top_k, Planned, PlannerConfig,
-    PlannerStats, RankedCombo, SplitForecast, VariantForecast,
+    forecast_hfuse, forecast_split, forecast_variants, plan, plan_hfuse, plan_space, rank_top_k,
+    HfuseForecast, HfuseGroup, Planned, PlannerConfig, PlannerStats, RankedCombo, SplitForecast,
+    VariantForecast,
 };
 pub use shard::{chunk_ranges, plan_space_sharded, ShardEval};

@@ -5,18 +5,19 @@
 //! one combination per partition.
 
 use super::cost;
+use crate::codegen::horizontal;
 use crate::fusion::space::Space;
 use crate::fusion::{enumerate_fusions, ImplAxes};
 use crate::graph::DepGraph;
 use crate::ir::elem::ProblemSize;
-use crate::ir::plan::SeqPlan;
+use crate::ir::plan::{KernelPlan, SeqPlan};
 use crate::ir::program::Program;
 use crate::library::Library;
 use crate::predict::RoutineDb;
 use crate::sim::multi::{simulate_seq_multi, Interconnect};
 use crate::sim::DeviceModel;
 use std::cmp::{Ordering, Reverse};
-use std::collections::{BTreeSet, BinaryHeap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
 /// Search knobs.
 #[derive(Clone, Debug)]
@@ -179,6 +180,148 @@ pub fn forecast_split(
         .map(|g| simulate_seq_multi(dev, link, g as u32, &planned.best, p, 1.0).seconds)
         .collect();
     SplitForecast { seconds }
+}
+
+/// Forecast of horizontally fusing a run of a turn's batch groups into
+/// one combined launch sequence ([`crate::codegen::horizontal`]) versus
+/// launching them back-to-back. Unlike [`VariantForecast`], the two
+/// sides here differ by *cross-kernel* terms: launch-overhead savings
+/// on the fused side, occupancy/cache-interference penalties from the
+/// padded combined geometry on every fragment
+/// ([`crate::predict::hfuse_interference`]).
+#[derive(Clone, Copy, Debug)]
+pub struct HfuseForecast {
+    /// Predicted seconds of the combined launches (compute inflated by
+    /// interference, plus the reduced launch count's overhead).
+    pub fused: f64,
+    /// Predicted seconds of launching every member's kernels in order
+    /// (compute at standalone occupancy, plus every launch's overhead).
+    pub back_to_back: f64,
+    /// Kernel launches the combination saves.
+    pub launches_saved: u64,
+}
+
+impl HfuseForecast {
+    /// Fusing must *strictly* beat back-to-back to be chosen — ties and
+    /// NaN/infinite forecasts keep the batches separate, which is
+    /// always safe.
+    pub fn wins(&self) -> bool {
+        self.fused.is_finite() && self.fused < self.back_to_back
+    }
+}
+
+/// One segment of a turn's EDF-ordered batch list chosen by
+/// [`plan_hfuse`]: the half-open index range it covers (in the input's
+/// order — fusing never reorders across segments) and its forecast.
+/// `range.len() > 1` only when the forecast strictly wins.
+#[derive(Clone, Debug)]
+pub struct HfuseGroup {
+    pub range: std::ops::Range<usize>,
+    pub forecast: HfuseForecast,
+}
+
+/// Price fusing `members` into one combined launch sequence vs
+/// back-to-back. Pure planning: no codegen artifact is produced, only
+/// the combined footprint per stage for the interference terms.
+pub fn forecast_hfuse(
+    members: &[(&SeqPlan, ProblemSize)],
+    db: &RoutineDb,
+    dev: &DeviceModel,
+) -> HfuseForecast {
+    let total_launches: u64 = members.iter().map(|(sp, _)| sp.kernels.len() as u64).sum();
+    let back_to_back: f64 = members
+        .iter()
+        .map(|&(sp, p)| crate::predict::predict_seq(db, sp, p))
+        .sum::<f64>()
+        + crate::predict::launch_seconds(dev, total_launches);
+    let Ok(h) = horizontal::fuse_seqs(members) else {
+        // unfusable (empty member, no kernels): never wins
+        return HfuseForecast {
+            fused: f64::INFINITY,
+            back_to_back,
+            launches_saved: 0,
+        };
+    };
+    let fused = h
+        .kernels
+        .iter()
+        .map(|hk| {
+            let footprint = hk.footprint();
+            let parts: Vec<(&KernelPlan, ProblemSize)> =
+                hk.fragments.iter().map(|f| (&f.plan, f.p)).collect();
+            crate::predict::predict_hfused_stage(db, dev, &footprint, &parts)
+        })
+        .sum::<f64>()
+        + crate::predict::launch_seconds(dev, h.kernels.len() as u64);
+    HfuseForecast {
+        fused,
+        back_to_back,
+        launches_saved: h.launches_saved,
+    }
+}
+
+/// Segment an EDF-ordered list of batch groups into fused runs.
+///
+/// Cross-kernel terms break the additivity that makes [`plan_space`]
+/// exact: the cost of a fused segment depends on *which* members share
+/// the grid, so segments must be priced jointly. Fusion is restricted
+/// to contiguous runs of the input (preserving EDF order by
+/// construction), and the optimal contiguous segmentation is found by
+/// dynamic programming over segment ends. `PlannerConfig::beam` is the
+/// exactness-vs-cost knob on this serve path: it caps the widest
+/// segment priced, bounding the work at O(n·beam) forecasts —
+/// `beam: None` prices every contiguous segment (exact),
+/// `beam: Some(1)` never fuses. A single-member segment is charged its
+/// own launches, so any returned multi-member group strictly beat
+/// running its members separately (`forecast.wins()` holds).
+pub fn plan_hfuse(
+    members: &[(&SeqPlan, ProblemSize)],
+    db: &RoutineDb,
+    dev: &DeviceModel,
+    cfg: &PlannerConfig,
+) -> Vec<HfuseGroup> {
+    let n = members.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let cap = cfg.beam.unwrap_or(n).clamp(1, n);
+    let mut seg: BTreeMap<(usize, usize), HfuseForecast> = BTreeMap::new();
+    for i in 0..n {
+        for j in (i + 1)..=(i + cap).min(n) {
+            seg.insert((i, j), forecast_hfuse(&members[i..j], db, dev));
+        }
+    }
+    // best[j] = cheapest forecast seconds to dispatch members[..j];
+    // prev[j] = start index of the last segment in that optimum. Widths
+    // are tried narrow-first with strict improvement, so ties keep
+    // batches separate (deterministic, and safe under forecast error).
+    let mut best = vec![f64::INFINITY; n + 1];
+    let mut prev = vec![0usize; n + 1];
+    best[0] = 0.0;
+    for j in 1..=n {
+        for i in (j.saturating_sub(cap)..j).rev() {
+            let c = best[i] + seg[&(i, j)].fused;
+            if c < best[j] {
+                best[j] = c;
+                prev[j] = i;
+            }
+        }
+    }
+    let mut bounds = Vec::new();
+    let mut j = n;
+    while j > 0 {
+        let i = prev[j];
+        bounds.push((i, j));
+        j = i;
+    }
+    bounds.reverse();
+    bounds
+        .into_iter()
+        .map(|(i, j)| HfuseGroup {
+            range: i..j,
+            forecast: seg[&(i, j)],
+        })
+        .collect()
 }
 
 /// Run the pruned planner and predict the baseline on the same
@@ -540,5 +683,175 @@ mod tests {
             },
         );
         assert_eq!(beamed[0].predicted, planned.predicted);
+    }
+
+    /// Best (possibly fused) plan of a small script at a size.
+    fn planned_seq(src: &str, name: &str, p: ProblemSize) -> SeqPlan {
+        let lib = Library::standard();
+        let prog = compile_script(name, src, &lib).unwrap();
+        let graph = DepGraph::build(&prog, &lib);
+        let db = RoutineDb::calibrate(&DeviceModel::gtx480(), &lib);
+        let mut planned = plan(
+            &prog,
+            &lib,
+            &graph,
+            &db,
+            &ImplAxes::minimal(),
+            p,
+            &PlannerConfig::default(),
+        );
+        planned.best.seq = name.into();
+        planned.best
+    }
+
+    const SCAL: &str = "vector<N> x, y; input x; y = sscal(x, alpha=2.0); return y;";
+
+    #[test]
+    fn hfuse_forecast_wins_for_identical_small_kernels() {
+        // Two small BLAS-1 groups with identical geometry: zero
+        // interference penalty, one launch saved — fusing must win by
+        // exactly the launch-side savings.
+        let (_, _, _, db) = setup(SCAL);
+        let dev = DeviceModel::gtx480();
+        let sp = planned_seq(SCAL, "scal", ProblemSize::new(1, 65536));
+        let p = ProblemSize::new(1, 65536);
+        let f = forecast_hfuse(&[(&sp, p), (&sp, p)], &db, &dev);
+        assert!(f.wins(), "fused {} vs b2b {}", f.fused, f.back_to_back);
+        assert_eq!(f.launches_saved, sp.kernels.len() as u64);
+        let saved = f.back_to_back - f.fused;
+        let launch_side = crate::predict::launch_seconds(&dev, 2 * sp.kernels.len() as u64)
+            - crate::predict::launch_seconds(&dev, sp.kernels.len() as u64);
+        assert!(
+            (saved - launch_side).abs() < 1e-12,
+            "identical geometry saves exactly the launch overhead: {saved} vs {launch_side}"
+        );
+    }
+
+    #[test]
+    fn hfuse_forecast_single_member_is_a_wash() {
+        let (_, _, _, db) = setup(SCAL);
+        let dev = DeviceModel::gtx480();
+        let sp = planned_seq(SCAL, "scal", ProblemSize::new(1, 4096));
+        let f = forecast_hfuse(&[(&sp, ProblemSize::new(1, 4096))], &db, &dev);
+        assert!(!f.wins(), "a singleton never strictly wins");
+        assert_eq!(f.launches_saved, 0);
+        assert!((f.fused - f.back_to_back).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hfuse_wins_is_nan_and_tie_safe() {
+        let tie = HfuseForecast {
+            fused: 1.0,
+            back_to_back: 1.0,
+            launches_saved: 1,
+        };
+        assert!(!tie.wins());
+        let nan = HfuseForecast {
+            fused: f64::NAN,
+            back_to_back: 1.0,
+            launches_saved: 1,
+        };
+        assert!(!nan.wins());
+        let inf = HfuseForecast {
+            fused: f64::INFINITY,
+            back_to_back: 1.0,
+            launches_saved: 0,
+        };
+        assert!(!inf.wins());
+        let win = HfuseForecast {
+            fused: 0.5,
+            back_to_back: 1.0,
+            launches_saved: 1,
+        };
+        assert!(win.wins());
+    }
+
+    #[test]
+    fn plan_hfuse_beam_one_never_fuses() {
+        let (_, _, _, db) = setup(SCAL);
+        let dev = DeviceModel::gtx480();
+        let sp = planned_seq(SCAL, "scal", ProblemSize::new(1, 65536));
+        let p = ProblemSize::new(1, 65536);
+        let members = vec![(&sp, p), (&sp, p), (&sp, p)];
+        let groups = plan_hfuse(
+            &members,
+            &db,
+            &dev,
+            &PlannerConfig {
+                beam: Some(1),
+                threads: 1,
+            },
+        );
+        assert_eq!(groups.len(), 3);
+        for (i, g) in groups.iter().enumerate() {
+            assert_eq!(g.range, i..i + 1);
+        }
+    }
+
+    #[test]
+    fn plan_hfuse_exact_matches_brute_force_and_beam_only_costs() {
+        let (_, _, _, db) = setup(SCAL);
+        let dev = DeviceModel::gtx480();
+        let small = planned_seq(SCAL, "scal", ProblemSize::new(1, 4096));
+        let big = planned_seq(BICGK, "bicgk", ProblemSize::square(4096));
+        let members: Vec<(&SeqPlan, ProblemSize)> = vec![
+            (&small, ProblemSize::new(1, 4096)),
+            (&big, ProblemSize::square(4096)),
+            (&small, ProblemSize::new(1, 4096)),
+            (&small, ProblemSize::new(1, 4096)),
+        ];
+        let cost_of = |groups: &[HfuseGroup]| -> f64 {
+            groups.iter().map(|g| g.forecast.fused).sum()
+        };
+        let exact = plan_hfuse(&members, &db, &dev, &PlannerConfig::default());
+        // segments cover the input contiguously, in order
+        let mut next = 0;
+        for g in &exact {
+            assert_eq!(g.range.start, next);
+            next = g.range.end;
+        }
+        assert_eq!(next, members.len());
+        // every fused (multi-member) segment strictly won its forecast
+        for g in &exact {
+            if g.range.len() > 1 {
+                assert!(g.forecast.wins());
+            }
+        }
+        // brute force over all 2^(n-1) contiguous segmentations
+        let n = members.len();
+        let mut brute = f64::INFINITY;
+        for mask in 0..(1u32 << (n - 1)) {
+            let mut total = 0.0;
+            let mut start = 0;
+            for j in 1..=n {
+                let boundary = j == n || mask & (1 << (j - 1)) != 0;
+                if boundary {
+                    total += forecast_hfuse(&members[start..j], &db, &dev).fused;
+                    start = j;
+                }
+            }
+            brute = brute.min(total);
+        }
+        let exact_cost = cost_of(&exact);
+        assert!(
+            (exact_cost - brute).abs() <= 1e-15 * brute.max(1.0),
+            "DP {exact_cost} vs brute {brute}"
+        );
+        // a narrower beam may only cost, never gain
+        for beam in 1..=n {
+            let beamed = plan_hfuse(
+                &members,
+                &db,
+                &dev,
+                &PlannerConfig {
+                    beam: Some(beam),
+                    threads: 1,
+                },
+            );
+            assert!(
+                cost_of(&beamed) >= exact_cost - 1e-15 * exact_cost.max(1.0),
+                "beam {beam} beat exact"
+            );
+        }
     }
 }

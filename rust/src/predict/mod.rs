@@ -349,6 +349,63 @@ pub fn predict_seq(db: &RoutineDb, plan: &SeqPlan, p: ProblemSize) -> f64 {
         .sum()
 }
 
+// ----- Cross-kernel cost terms (horizontal fusion) ----------------------
+//
+// These break the per-kernel additivity `predict_seq` relies on: the cost
+// of a combined launch depends on *which* kernels share the grid, because
+// padding the block geometry to the widest fragment and sizing shared
+// memory / registers to the max can lower occupancy for every fragment.
+// The planner therefore treats horizontal pairing as a separate
+// segmentation problem (see `planner::forecast_hfuse`), with
+// `PlannerConfig::beam` bounding how many pairings are priced.
+
+/// Multiplicative slowdown a member kernel suffers inside a combined
+/// launch whose padded resource footprint is `combined` (see
+/// `codegen::horizontal::HKernel::footprint`): the ratio of the
+/// bandwidth it achieves alone to the bandwidth at the combined
+/// occupancy, floored at 1 — sharing a launch never speeds the
+/// memory pipeline up, it can only cost occupancy and cache locality.
+pub fn hfuse_interference(dev: &DeviceModel, member: &KernelPlan, combined: &KernelPlan) -> f64 {
+    let occ_alone = dev.occupancy(member).occupancy;
+    let occ_combined = dev.occupancy(combined).occupancy;
+    let bw_alone = dev.effective_bandwidth(occ_alone, member.barriers_per_iter);
+    let bw_combined = dev.effective_bandwidth(occ_combined, member.barriers_per_iter);
+    if bw_combined <= 0.0 || bw_combined.is_nan() {
+        return f64::INFINITY;
+    }
+    (bw_alone / bw_combined).max(1.0)
+}
+
+/// Predicted runtime of one combined (horizontally fused) launch: each
+/// member's standalone prediction inflated by its interference penalty.
+/// The fragments occupy disjoint block ranges of one grid, but on a
+/// bandwidth-bound device they drain one shared memory pipeline, so
+/// fragment times add — the win over back-to-back comes from the saved
+/// launch overheads and driver gaps, not from overlap.
+pub fn predict_hfused_stage(
+    db: &RoutineDb,
+    dev: &DeviceModel,
+    combined: &KernelPlan,
+    members: &[(&KernelPlan, ProblemSize)],
+) -> f64 {
+    members
+        .iter()
+        .map(|&(k, p)| predict_kernel(db, k, p) * hfuse_interference(dev, k, combined))
+        .sum()
+}
+
+/// Launch-side seconds of issuing `launches` kernels back-to-back:
+/// per-launch overhead plus the driver gap between consecutive
+/// launches. This is the term `predict_seq` deliberately ignores; the
+/// horizontal-fusion forecast must not, because saved launches are the
+/// entire upside of combining small kernels.
+pub fn launch_seconds(dev: &DeviceModel, launches: u64) -> f64 {
+    if launches == 0 {
+        return 0.0;
+    }
+    launches as f64 * dev.launch_overhead + (launches - 1) as f64 * dev.kernel_gap
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -591,5 +648,90 @@ mod tests {
         let t_small = simulate_kernel(&dev, &micro_plan(f, r, 1, 4, 0), p_ref).seconds;
         let t_big = simulate_kernel(&dev, &micro_plan(f, r, 1, 4, 12288), p_ref).seconds;
         assert!(t_big >= t_small);
+    }
+
+    fn footprint_plan(threads: (u32, u32), smem_words: u32, regs: u32) -> KernelPlan {
+        KernelPlan {
+            name: "hf".into(),
+            members: vec![],
+            grid: GridPlan {
+                depth: 1,
+                block: threads,
+                instances_per_block: 1,
+                iters: 1,
+                iter_dim: IterDim::Elem,
+            },
+            smem_words,
+            regs_per_thread: regs,
+            smem_slots: vec![],
+            steps: vec![],
+            instances: Poly2::n(1.0 / 32.0),
+            traffic: Traffic::default(),
+            flops: Poly2::ZERO,
+            compute_efficiency: 1.0,
+            barriers_per_iter: 0,
+        }
+    }
+
+    #[test]
+    fn hfuse_interference_floors_at_one_for_matching_geometry() {
+        let dev = DeviceModel::gtx480();
+        let k = footprint_plan((128, 1), 256, 16);
+        // combined footprint identical to the member: no penalty
+        let pen = hfuse_interference(&dev, &k, &k);
+        assert!((pen - 1.0).abs() < 1e-12, "penalty {pen}");
+    }
+
+    #[test]
+    fn hfuse_interference_penalizes_occupancy_loss() {
+        let dev = DeviceModel::gtx480();
+        let member = footprint_plan((128, 1), 256, 16);
+        // combined launch padded to a fat fragment: 20 KiB smem caps the
+        // SM at one resident block, strangling the member's bandwidth
+        let combined = footprint_plan((32, 16), 5 * 1024, 40);
+        let pen = hfuse_interference(&dev, &member, &combined);
+        assert!(pen > 1.0, "mismatched geometry must cost: {pen}");
+        // and the penalty is never a speedup, whichever way round
+        assert!(hfuse_interference(&dev, &combined, &member) >= 1.0);
+    }
+
+    #[test]
+    fn hfused_stage_cost_adds_members_with_penalties() {
+        let (dev, lib, db) = db();
+        let src = "vector<N> x, y; input x; y = sscal(x, alpha=2.0); return y;";
+        let prog = compile_script("t", src, &lib).unwrap();
+        let singles: Vec<FusionImpl> = prog
+            .call_ids()
+            .map(|c| FusionImpl {
+                fusion: Fusion::singleton(c, &prog, &lib),
+                order: vec![c],
+                variant: vec![0],
+                ipb: 4,
+                iters: 1,
+                iter_dim: crate::ir::plan::IterDim::Elem,
+            })
+            .collect();
+        let plan = codegen::compile_seq(&prog, &lib, &singles, "u");
+        let k = &plan.kernels[0];
+        let p = ProblemSize::new(1, 65536);
+        let alone = predict_kernel(&db, k, p);
+        // identical fragments share a launch: cost ≈ 2× one fragment
+        let two = predict_hfused_stage(&db, &dev, k, &[(k, p), (k, p)]);
+        assert!((two - 2.0 * alone).abs() < 1e-12 * two.max(1.0), "{two} vs {alone}");
+        // a hostile combined footprint only ever raises the cost
+        let fat = footprint_plan((32, 16), 5 * 1024, 40);
+        let strained = predict_hfused_stage(&db, &dev, &fat, &[(k, p), (k, p)]);
+        assert!(strained >= two);
+    }
+
+    #[test]
+    fn launch_seconds_counts_overheads_and_gaps() {
+        let dev = DeviceModel::gtx480();
+        assert_eq!(launch_seconds(&dev, 0), 0.0);
+        assert_eq!(launch_seconds(&dev, 1), dev.launch_overhead);
+        let three = launch_seconds(&dev, 3);
+        assert!((three - (3.0 * dev.launch_overhead + 2.0 * dev.kernel_gap)).abs() < 1e-18);
+        // saving a launch saves overhead + gap — the hfuse upside
+        assert!(launch_seconds(&dev, 3) > launch_seconds(&dev, 2));
     }
 }

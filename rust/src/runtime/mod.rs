@@ -684,6 +684,95 @@ impl Runtime {
         self.run_resolved(&r, inputs)
     }
 
+    /// Execute several *different* resolved plans as one horizontally
+    /// fused dispatch ([`crate::codegen::horizontal`]): combined stage
+    /// `s` runs stage `s` of every member's environments, in member
+    /// order, before any member advances to stage `s + 1` — the stub's
+    /// semantics of a block-range-dispatched combined launch, whose
+    /// fragments all complete before the next combined launch begins.
+    /// Members shorter than the longest sit out the remaining stages.
+    ///
+    /// Results are bit-identical to running each member alone
+    /// ([`Runtime::run_resolved_batch`]): members bind disjoint
+    /// environments and stages only read/write their own slots, so the
+    /// interleaving cannot be observed. Per-environment failures fail
+    /// only that slot; later stages of a failed environment are
+    /// skipped. `RunResult::seconds` of each slot sums its *own* stage
+    /// seconds (unlike `run_bound`'s wall clock — other fragments'
+    /// stages interleave on this thread and must not be billed to it).
+    pub fn run_hfused(
+        &self,
+        members: Vec<(Arc<ResolvedSeq>, Vec<BTreeMap<String, Tensor>>)>,
+    ) -> Vec<Vec<Result<RunResult>>> {
+        struct Lane {
+            member: usize,
+            env: Option<SlotEnv>,
+            err: Option<anyhow::Error>,
+            stats: Vec<StageStats>,
+            seconds: f64,
+        }
+        let mut resolved: Vec<Arc<ResolvedSeq>> = Vec::with_capacity(members.len());
+        let mut counts: Vec<usize> = Vec::with_capacity(members.len());
+        let mut lanes: Vec<Lane> = Vec::new();
+        for (mi, (r, inputs)) in members.into_iter().enumerate() {
+            counts.push(inputs.len());
+            for input in inputs {
+                lanes.push(Lane {
+                    member: mi,
+                    env: Some(r.plan.bind_owned(input)),
+                    err: None,
+                    stats: Vec::with_capacity(r.stage_count()),
+                    seconds: 0.0,
+                });
+            }
+            resolved.push(r);
+        }
+        let max_stages = resolved.iter().map(|r| r.stage_count()).max().unwrap_or(0);
+        for s in 0..max_stages {
+            for lane in &mut lanes {
+                let r = &resolved[lane.member];
+                if lane.err.is_some() || s >= r.stage_count() {
+                    continue;
+                }
+                let st = &r.plan.stages()[s];
+                let env = lane.env.as_mut().expect("env present until failure");
+                let res = match &r.exes[s] {
+                    StageExe::Pjrt(e) => self.run_stage_slots(st, e, env),
+                    StageExe::Interp(i) => self.run_stage_interp(st, i, env),
+                };
+                match res {
+                    Ok(secs) => {
+                        lane.seconds += secs;
+                        lane.stats.push(StageStats {
+                            key: st.entry.key.clone(),
+                            seconds: secs,
+                        });
+                    }
+                    Err(e) => {
+                        lane.err = Some(e);
+                        lane.env = None;
+                    }
+                }
+            }
+        }
+        let mut out: Vec<Vec<Result<RunResult>>> =
+            counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+        for lane in lanes {
+            let r = &resolved[lane.member];
+            let res = match lane.err {
+                Some(e) => Err(e),
+                None => Ok(RunResult {
+                    env: r.plan.materialize(lane.env.expect("unfailed lane keeps its env")),
+                    stages: lane.stats,
+                    seconds: lane.seconds,
+                    variant: r.plan.variant.clone(),
+                }),
+            };
+            out[lane.member].push(res);
+        }
+        out
+    }
+
     /// Execute all stages of a sequence variant for several independent
     /// input sets in one dispatch — [`Runtime::resolve`] once, then
     /// [`Runtime::run_resolved_batch`]. A failed resolve (missing size,
@@ -755,6 +844,45 @@ mod tests {
         }
         assert_eq!(fused.stages.len(), 1, "fused BiCGK must be one kernel");
         assert_eq!(cublas.stages.len(), 2);
+    }
+
+    #[test]
+    fn hfused_dispatch_is_bit_identical_to_back_to_back() {
+        let Some(rt) = runtime() else { return };
+        let (m, n) = (256, 256);
+        let ra = rt.resolve("bicgk", "fused", m, n).unwrap();
+        let rb = rt.resolve("bicgk", "cublas", m, n).unwrap();
+        let ia = inputs_for(&rt, "bicgk", "fused", m, n);
+        let ib = inputs_for(&rt, "bicgk", "cublas", m, n);
+        let solo_a = rt.run_resolved_batch(&ra, vec![ia.clone(), ia.clone()]);
+        let solo_b = rt.run_resolved_batch(&rb, vec![ib.clone()]);
+        // one combined dispatch over both members (plus a lane with no
+        // inputs, which must fail alone without poisoning the others)
+        let combined = rt.run_hfused(vec![
+            (ra.clone(), vec![ia.clone(), ia]),
+            (rb.clone(), vec![ib, BTreeMap::new()]),
+        ]);
+        assert_eq!(combined.len(), 2);
+        assert!(combined[1][1].is_err(), "empty lane must fail alone");
+        for (solo, fused) in [
+            (&solo_a[..], &combined[0][..]),
+            (&solo_b[..], &combined[1][..1]),
+        ] {
+            assert_eq!(solo.len(), fused.len());
+            for (s, c) in solo.iter().zip(fused.iter()) {
+                let (s, c) = (s.as_ref().unwrap(), c.as_ref().unwrap());
+                assert_eq!(s.variant, c.variant);
+                assert_eq!(s.stages.len(), c.stages.len());
+                assert_eq!(s.env.len(), c.env.len());
+                for (k, t) in &s.env {
+                    let u = &c.env[k];
+                    assert_eq!(t.dims, u.dims, "{k}");
+                    for (a, b) in t.data.iter().zip(&u.data) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{k}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -179,10 +179,18 @@ impl Histogram {
     /// first non-empty bucket (0 for the first bucket), a lower bound
     /// on the minimum — not the first bucket's upper edge, which would
     /// overstate the min by a bucket width.
+    ///
+    /// `q` is clamped into `[0, 1]` *before* the rank computation; a
+    /// NaN `q` clamps to 0 (the lower-edge answer). Without the clamp a
+    /// NaN slipped past the `q <= 0.0` test (NaN comparisons are
+    /// false), poisoned the rank as `NaN.ceil() as u64`, and the cast's
+    /// saturate-to-0 happened to return whatever bucket the scan hit
+    /// first — deterministic by accident, not by contract.
     pub fn quantile(&self, q: f64) -> Option<f64> {
         if self.count == 0 {
             return None;
         }
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
         if q <= 0.0 {
             let i = self
                 .counts
@@ -191,7 +199,7 @@ impl Histogram {
                 .expect("count > 0 implies a non-empty bucket");
             return Some(if i == 0 { 0.0 } else { self.bounds[i - 1] });
         }
-        let target = (q.min(1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
         let mut seen = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
@@ -276,13 +284,15 @@ mod tests {
     }
 
     /// q-quantile of a sorted sample vector by the same ⌈q·n⌉ rank rule
-    /// the histogram approximates (q=0 → the minimum).
+    /// the histogram approximates (q=0 → the minimum), with the same
+    /// clamp discipline: NaN and q < 0 answer like q=0, q > 1 like q=1.
     fn reference_quantile(sorted: &[f64], q: f64) -> f64 {
         assert!(!sorted.is_empty());
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
         if q <= 0.0 {
             return sorted[0];
         }
-        let rank = (q.min(1.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+        let rank = (q * sorted.len() as f64).ceil().max(1.0) as usize;
         sorted[rank - 1]
     }
 
@@ -307,20 +317,44 @@ mod tests {
             h.record(s);
         }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        for q in [0.0, 0.5, 0.99, 1.0] {
+        for q in [-1.0, 0.0, f64::NAN, 0.5, 0.99, 1.0, 2.0] {
             let truth = reference_quantile(&samples, q);
             let (lo, hi) = default_grid_bucket(truth);
             let got = h.quantile(q).unwrap();
             // The histogram answer must bracket the true quantile's
             // bucket: q=0 reports that bucket's lower edge, q>0 its
-            // upper edge (clamped to the observed max).
-            if q <= 0.0 {
+            // upper edge (clamped to the observed max). Out-of-range
+            // and NaN q clamp to the nearest in-range answer on both
+            // sides of the comparison.
+            if q.is_nan() || q <= 0.0 {
                 assert_eq!(got, lo, "q={q}: lower edge of min's bucket");
             } else {
                 assert_eq!(got, hi.min(h.max()), "q={q}");
                 assert!(got >= truth.min(h.max()), "q={q}: never understates");
             }
         }
+    }
+
+    #[test]
+    fn quantile_clamps_out_of_range_and_nan_q() {
+        let mut samples: Vec<f64> = (0..50)
+            .map(|i| 1e-6 * (1.0 + (i as f64 * 53.0) % 311.0))
+            .collect();
+        let mut h = Histogram::default();
+        for &s in &samples {
+            h.record(s);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // q < 0 clamps to 0: the lower edge of the minimum's bucket.
+        assert_eq!(h.quantile(-1.0), h.quantile(0.0));
+        let (lo, _) = default_grid_bucket(samples[0]);
+        assert_eq!(h.quantile(-1.0), Some(lo), "q=-1 is the min's lower edge");
+        // NaN clamps to the same deterministic lower-edge answer — never
+        // a NaN-poisoned rank.
+        assert_eq!(h.quantile(f64::NAN), h.quantile(0.0));
+        // q > 1 clamps to 1: the observed max, same as q=1.
+        assert_eq!(h.quantile(2.0), h.quantile(1.0));
+        assert!(h.quantile(2.0).unwrap() <= h.max());
     }
 
     #[test]
